@@ -1,0 +1,211 @@
+//! Figure 3: the motivating measurements.
+//!
+//!     cargo run --release --example fig3 [-- a|b|c|d]   (default: all)
+//!
+//! (a) Top-k accuracy of the early-exit heads per layer n ∈ {1,2,3,4}
+//! (b) verification iteration time vs token tree size × batch size
+//! (c) iteration time vs sequence length (fixed tree size)
+//! (d) average acceptance length per dataset profile
+//!
+//! Writes artifacts/reports/fig3.md.
+
+use anyhow::Result;
+
+use propd::bench::harness::{load_prompts, run_trace, RunSpec};
+use propd::bench::Table;
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::runtime::Runtime;
+use propd::workload::PromptSet;
+
+fn part_a(rt: &Runtime, prompts: &PromptSet, md: &mut String) -> Result<()> {
+    let size = rt.manifest.default_size.clone();
+    let layers = rt.manifest.model(&size)?.early_layers.clone();
+    let ks = [1usize, 2, 5, 10, 20, 50];
+
+    let mut headers = vec!["layer".to_string()];
+    headers.extend(ks.iter().map(|k| format!("top-{k}")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table =
+        Table::new("Fig 3a: early-head top-k accuracy per layer", &hrefs);
+
+    for &n in &layers {
+        // Generate text with an AR engine, probing the early head over the
+        // committed tokens every few steps.
+        let mut cfg = EngineConfig::new(&size, EngineKind::Autoregressive);
+        cfg.max_batch = 4;
+        cfg.prune_layer = n;
+        let mut engine = Engine::new(rt, cfg)?;
+        for p in prompts.profile("chatgpt")?.iter().take(4) {
+            engine.submit(p, 48);
+        }
+        let mut ranks: Vec<usize> = Vec::new();
+        let mut steps = 0;
+        while engine.step()? {
+            steps += 1;
+            if steps % 12 == 0 && engine.active_count() > 0 {
+                ranks.extend(engine.probe_early_ranks(n)?);
+            }
+        }
+        if ranks.is_empty() {
+            anyhow::bail!("no probe samples for layer {n}");
+        }
+        let mut cells = vec![n.to_string()];
+        for &k in &ks {
+            let hits = ranks.iter().filter(|&&r| r < k).count();
+            cells.push(format!("{:.1}%",
+                               100.0 * hits as f64 / ranks.len() as f64));
+        }
+        eprintln!("[fig3a] layer {n}: {} samples", ranks.len());
+        table.row(cells);
+    }
+    println!("{}", table.render());
+    md.push_str(&table.render_markdown());
+    md.push('\n');
+    println!("paper shape: accuracy rises steeply with k; deeper early \
+              layers are more accurate.\n");
+    Ok(())
+}
+
+fn part_b(rt: &Runtime, prompts: &PromptSet, md: &mut String) -> Result<()> {
+    let size = rt.manifest.default_size.clone();
+    let buckets = rt.manifest.tree_buckets.clone();
+    let batches = [1usize, 4, 16];
+
+    let mut headers = vec!["tree size".to_string()];
+    headers.extend(batches.iter().map(|b| format!("BS={b} (ms)")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Fig 3b: verification iteration time vs tree size",
+        &hrefs,
+    );
+
+    let mut rows: Vec<Vec<String>> =
+        buckets.iter().map(|t| vec![t.to_string()]).collect();
+    for &b in &batches {
+        // Engine with b active requests paused mid-generation.
+        let mut cfg = EngineConfig::new(&size, EngineKind::ProPD);
+        cfg.max_batch = b;
+        let mut engine = Engine::new(rt, cfg)?;
+        for p in prompts.profile("chatgpt")?.iter().take(b) {
+            engine.submit(p, 512); // big budget: stays active
+        }
+        for _ in 0..3 {
+            engine.step()?; // prefill + warm caches
+        }
+        for (ti, &t) in buckets.iter().enumerate() {
+            let mut total = 0.0;
+            const REPS: usize = 5;
+            engine.probe_verify_time(t)?; // warm compile
+            for _ in 0..REPS {
+                let (_, _, tot) = engine.probe_verify_time(t)?;
+                total += tot;
+            }
+            let ms = 1e3 * total / REPS as f64;
+            eprintln!("[fig3b] BS={b} t={t}: {ms:.2} ms");
+            rows[ti].push(format!("{ms:.2}"));
+        }
+    }
+    for r in rows {
+        table.row(r);
+    }
+    println!("{}", table.render());
+    md.push_str(&table.render_markdown());
+    md.push('\n');
+    println!("paper shape: iteration time ≈ linear in tree size; slope \
+              grows with batch size.\n");
+    Ok(())
+}
+
+fn part_c(rt: &Runtime, prompts: &PromptSet, md: &mut String) -> Result<()> {
+    let size = rt.manifest.default_size.clone();
+    let mut table = Table::new(
+        "Fig 3c: verification iteration time vs sequence length (BS=4, t=32)",
+        &["seq len", "iter (ms)"],
+    );
+    let mut cfg = EngineConfig::new(&size, EngineKind::ProPD);
+    cfg.max_batch = 4;
+    let mut engine = Engine::new(rt, cfg)?;
+    for p in prompts.profile("chatgpt")?.iter().take(4) {
+        engine.submit(p, 512);
+    }
+    engine.step()?;
+    let checkpoints = [64usize, 128, 192, 256, 320, 384];
+    let mut ci = 0;
+    while ci < checkpoints.len() {
+        let mean_seq = engine.mean_seq_len();
+        if mean_seq >= checkpoints[ci] as f64 {
+            engine.probe_verify_time(32)?;
+            let mut total = 0.0;
+            const REPS: usize = 5;
+            for _ in 0..REPS {
+                total += engine.probe_verify_time(32)?.2;
+            }
+            let ms = 1e3 * total / REPS as f64;
+            eprintln!("[fig3c] seq≈{:.0}: {ms:.2} ms", mean_seq);
+            table.row(vec![format!("{:.0}", mean_seq),
+                           format!("{ms:.2}")]);
+            ci += 1;
+            continue;
+        }
+        if !engine.step()? {
+            break;
+        }
+    }
+    println!("{}", table.render());
+    md.push_str(&table.render_markdown());
+    md.push('\n');
+    println!("paper shape: iteration time grows with sequence length.\n");
+    Ok(())
+}
+
+fn part_d(rt: &Runtime, prompts: &PromptSet, md: &mut String) -> Result<()> {
+    let size = rt.manifest.default_size.clone();
+    let mut table = Table::new(
+        "Fig 3d: average acceptance length per dataset (ProPD, BS=4)",
+        &["dataset", "AccLength", "tok/s"],
+    );
+    for profile in propd::workload::PROFILES {
+        let mut e = EngineConfig::new(&size, EngineKind::ProPD);
+        e.max_batch = 4;
+        let mut spec = RunSpec::new(e, profile);
+        spec.n_requests = 12;
+        let out = run_trace(rt, prompts, &spec)?;
+        eprintln!("[fig3d] {profile}: acc {:.2}", out.accept_len);
+        table.row(vec![
+            profile.to_string(),
+            format!("{:.2}", out.accept_len),
+            format!("{:.1}", out.tokens_per_second),
+        ]);
+    }
+    println!("{}", table.render());
+    md.push_str(&table.render_markdown());
+    md.push('\n');
+    println!("paper shape: acceptance length differs across datasets.\n");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let which: Vec<String> = std::env::args().skip(1).collect();
+    let all = which.is_empty();
+    let dir = propd::artifacts_dir(None);
+    let rt = Runtime::load(&dir)?;
+    let prompts = load_prompts(&dir);
+    let mut md = String::from("# Fig 3 — motivation measurements\n\n");
+    if all || which.iter().any(|w| w == "a") {
+        part_a(&rt, &prompts, &mut md)?;
+    }
+    if all || which.iter().any(|w| w == "b") {
+        part_b(&rt, &prompts, &mut md)?;
+    }
+    if all || which.iter().any(|w| w == "c") {
+        part_c(&rt, &prompts, &mut md)?;
+    }
+    if all || which.iter().any(|w| w == "d") {
+        part_d(&rt, &prompts, &mut md)?;
+    }
+    let report_dir = dir.join("reports");
+    std::fs::create_dir_all(&report_dir)?;
+    std::fs::write(report_dir.join("fig3.md"), md)?;
+    println!("wrote {}", report_dir.join("fig3.md").display());
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Figure 7: inference speed (tokens/s) of autoregressive / BPD / Medusa /
+//! ProPD across model sizes, datasets, and batch sizes.
+//!
+//!     cargo run --release --example fig7 [-- --quick|--full]
+//!
+//! `--quick` restricts to the default size and batches {1,4,16};
+//! default sweeps all sizes × profiles × batches {1,4,16} × 4 engines;
+//! `--full` uses batches {1,2,4,8,16}.
+//! Output: one table per (size, profile) — the paper's bar groups — plus a
+//! markdown dump to artifacts/reports/fig7.md.
+
+use anyhow::Result;
+
+use propd::bench::harness::{load_prompts, requests_for_batch, run_trace,
+                            RunSpec};
+use propd::bench::Table;
+use propd::engine::{EngineConfig, EngineKind};
+use propd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let full = args.iter().any(|a| a == "--full");
+
+    let dir = propd::artifacts_dir(None);
+    let rt = Runtime::load(&dir)?;
+    let prompts = load_prompts(&dir);
+
+    let sizes: Vec<String> = if quick {
+        vec![rt.manifest.default_size.clone()]
+    } else {
+        rt.manifest.sizes.keys().cloned().collect()
+    };
+    let batches: Vec<usize> =
+        if full { vec![1, 2, 4, 8, 16] } else { vec![1, 4, 16] };
+    let engines = [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ];
+    let profiles = ["mtbench", "chatgpt", "alpaca"];
+
+    let mut md = String::from("# Fig 7 — inference speed (tok/s)\n\n");
+    for size in &sizes {
+        for profile in profiles {
+            let mut table = Table::new(
+                &format!("Fig 7: size={size} dataset={profile} (tok/s)"),
+                &["batch", "autoregressive", "bpd", "medusa", "propd"],
+            );
+            for &b in &batches {
+                let mut cells = vec![b.to_string()];
+                for kind in engines {
+                    let mut e = EngineConfig::new(size, kind);
+                    e.max_batch = b;
+                    let mut spec = RunSpec::new(e, profile);
+                    spec.n_requests = requests_for_batch(b);
+                    spec.max_new_tokens = Some(32);
+                    let out = run_trace(&rt, &prompts, &spec)?;
+                    cells.push(format!("{:.1}", out.tokens_per_second));
+                    eprintln!(
+                        "[fig7] {size}/{profile} b={b} {}: {:.1} tok/s \
+                         (acc {:.2}, steps {})",
+                        kind.as_str(), out.tokens_per_second,
+                        out.accept_len, out.steps
+                    );
+                }
+                table.row(cells);
+            }
+            println!("{}", table.render());
+            md.push_str(&table.render_markdown());
+            md.push('\n');
+        }
+    }
+    let report_dir = dir.join("reports");
+    std::fs::create_dir_all(&report_dir)?;
+    std::fs::write(report_dir.join("fig7.md"), md)?;
+    println!("wrote {}", report_dir.join("fig7.md").display());
+    Ok(())
+}

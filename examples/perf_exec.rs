@@ -1,0 +1,25 @@
+//! Isolate raw PJRT execute cost vs input-prep cost (perf-pass diagnostic).
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::runtime::Runtime;
+
+fn main() {
+    let dir = propd::artifacts_dir(None);
+    let rt = Runtime::load(&dir).unwrap();
+    let mut cfg = EngineConfig::new("m", EngineKind::ProPD);
+    cfg.max_batch = 1;
+    let mut engine = Engine::new(&rt, cfg).unwrap();
+    engine.submit("user: Explain how the scheduler reduces the latency of \
+                   every request.\nassistant:", 400);
+    engine.step().unwrap();
+    engine.probe_verify_time(64).unwrap(); // warm compile
+    let mut early = 0.0;
+    let mut late = 0.0;
+    const N: usize = 20;
+    for _ in 0..N {
+        let (e, l, _) = engine.probe_verify_time(64).unwrap();
+        early += e;
+        late += l;
+    }
+    println!("probe (incl. prep): early {:.1}ms late {:.1}ms",
+             1e3 * early / N as f64, 1e3 * late / N as f64);
+}

@@ -1,0 +1,27 @@
+use propd::bench::harness::{load_prompts, run_trace, RunSpec};
+use propd::engine::{EngineConfig, EngineKind};
+use propd::runtime::Runtime;
+
+fn main() {
+    let dir = propd::artifacts_dir(None);
+    let rt = Runtime::load(&dir).unwrap();
+    let prompts = load_prompts(&dir);
+    for b in [1usize, 4, 8] {
+        let mut e = EngineConfig::new("m", EngineKind::ProPD);
+        e.max_batch = b;
+        let mut spec = RunSpec::new(e, "chatgpt");
+        spec.n_requests = b * 3;
+        spec.max_new_tokens = Some(32);
+        let out = run_trace(&rt, &prompts, &spec).unwrap();
+        let r = &out.report;
+        println!(
+            "b={b}: tok/s {:.1} | step {:.1}ms = early {:.1} + late {:.1} + host {:.1} (ms) | acc {:.2} tree {:.1}→{:.1}",
+            out.tokens_per_second,
+            1e3 * r["step_time_mean_s"],
+            1e3 * r["early_time_mean_s"],
+            1e3 * r["late_time_mean_s"],
+            1e3 * r["host_time_mean_s"],
+            out.accept_len, r["tree_size_mean"], r["pruned_size_mean"],
+        );
+    }
+}

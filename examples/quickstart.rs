@@ -1,0 +1,54 @@
+//! Quickstart: load the artifacts, build a ProPD engine, serve one batch of
+//! prompts, and print the generations plus the estimator state.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` to have been run once.
+
+use anyhow::Result;
+
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dir = propd::artifacts_dir(None);
+    let rt = Runtime::load(&dir)?;
+    println!("loaded manifest: {} artifacts, sizes {:?}",
+             rt.manifest.artifacts.len(),
+             rt.manifest.sizes.keys().collect::<Vec<_>>());
+
+    let mut cfg = EngineConfig::new("m", EngineKind::ProPD);
+    cfg.max_batch = 4;
+    let mut engine = Engine::new(&rt, cfg)?;
+    let n = engine.precompile()?;
+    println!("precompiled {n} executables (one-time startup cost)");
+
+    let prompts = [
+        "user: Explain how the scheduler reduces the latency of every \
+         request.\nassistant:",
+        "user: List three reasons why the token tree prunes the candidate \
+         sequences.\nassistant:",
+        "user: Summarize how the batch engine balances the decoding \
+         throughput.\nassistant:",
+        "user: Describe how a cache hierarchy predicts the iteration \
+         time.\nassistant:",
+    ];
+    for p in prompts {
+        engine.submit(p, 48);
+    }
+    let done = engine.run_to_completion()?;
+    for c in &done {
+        println!("\n=== request {} ({} tokens, {} steps, {:.2}s)",
+                 c.id, c.tokens.len(), c.steps, c.latency_seconds);
+        println!("{}[{}]", c.prompt, c.text.trim_end());
+    }
+
+    let r = engine.metrics.report();
+    println!("\n-- engine metrics --");
+    println!("tokens/s          {:.2}", r["tokens_per_second"]);
+    println!("mean accept len   {:.2}", r["accept_len_mean"]);
+    println!("mean prune rate   {:.2}", r["prune_rate_mean"]);
+    println!("mean tree size    {:.1}", r["tree_size_mean"]);
+    println!("{}", engine.estimator_snapshot());
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Serving demo: spin up the JSON-lines TCP server on an ephemeral port,
+//! fire concurrent client requests at it, and report latency/throughput.
+//!
+//!     cargo run --release --example serve_demo
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use propd::config::ServingConfig;
+use propd::engine::EngineKind;
+use propd::runtime::Runtime;
+use propd::server::protocol::{parse_completion, render_request};
+use propd::util::stats;
+
+fn main() -> Result<()> {
+    let dir = propd::artifacts_dir(None);
+
+    // Server thread owns the runtime + engine (PJRT types are !Send).
+    let mut cfg = ServingConfig::default_for("m", EngineKind::ProPD);
+    cfg.server.addr = "127.0.0.1:0".into(); // ephemeral port
+    cfg.engine.max_batch = 4;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let rt = Runtime::load(&dir).expect("artifacts (run `make artifacts`)");
+        propd::server::serve(&cfg, &rt, Some(ready_tx)).expect("serve");
+    });
+    let addr = ready_rx.recv()?;
+    println!("server up on {addr}");
+
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 3;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let stream = TcpStream::connect(addr)?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut writer = stream;
+            let mut lats = Vec::new();
+            for i in 0..PER_CLIENT {
+                let prompt = format!(
+                    "user: Explain how client {c} request {i} verifies the \
+                     candidate sequences.\nassistant:"
+                );
+                writer.write_all(
+                    format!("{}\n", render_request(&prompt, 32)).as_bytes(),
+                )?;
+                writer.flush()?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                let (_, text, lat) = parse_completion(line.trim())?;
+                assert!(!text.is_empty());
+                lats.push(lat);
+            }
+            Ok(lats)
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} requests in {:.2}s wall ({:.2} req/s)",
+        all.len(),
+        wall,
+        all.len() as f64 / wall
+    );
+    println!(
+        "request latency: mean {:.3}s  median {:.3}s  max {:.3}s",
+        stats::mean(&all),
+        stats::median(&all),
+        all.iter().cloned().fold(0.0, f64::max)
+    );
+    // Server thread is left running; the process exits here (demo only —
+    // `propd serve` is the long-running entry point).
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Table 1: average ProPD speedup over autoregressive decoding per model
+//! size and batch size (the paper reports 1.33-1.95×).
+//!
+//!     cargo run --release --example table1 [-- --full]
+//!
+//! Speedup = ProPD tok/s ÷ autoregressive tok/s, averaged over the three
+//! dataset profiles.  Writes artifacts/reports/table1.md.
+
+use anyhow::Result;
+
+use propd::bench::harness::{load_prompts, requests_for_batch, run_trace,
+                            RunSpec};
+use propd::bench::{fmt_ratio, Table};
+use propd::engine::{EngineConfig, EngineKind};
+use propd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let dir = propd::artifacts_dir(None);
+    let rt = Runtime::load(&dir)?;
+    let prompts = load_prompts(&dir);
+
+    let batches: Vec<usize> = vec![1, 2, 4, 8, 16];
+    // Default: one representative profile; --full averages all three as
+    // the paper does (3× the runtime).
+    let profiles: &[&str] = if full {
+        &["mtbench", "chatgpt", "alpaca"]
+    } else {
+        &["chatgpt"]
+    };
+    let sizes: Vec<String> = rt.manifest.sizes.keys().cloned().collect();
+
+    let mut headers: Vec<String> = vec!["size".into()];
+    headers.extend(batches.iter().map(|b| format!("BS={b}")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Table 1: ProPD speedup vs autoregressive decoding",
+        &hrefs,
+    );
+
+    for size in &sizes {
+        let mut cells = vec![size.clone()];
+        for &b in &batches {
+            let mut prop_v = 0.0;
+            let mut ar_v = 0.0;
+            for profile in profiles {
+                for kind in
+                    [EngineKind::ProPD, EngineKind::Autoregressive]
+                {
+                    let mut e = EngineConfig::new(size, kind);
+                    e.max_batch = b;
+                    let mut spec = RunSpec::new(e, profile);
+                    spec.n_requests = requests_for_batch(b);
+                    spec.max_new_tokens = Some(32);
+                    let out = run_trace(&rt, &prompts, &spec)?;
+                    match kind {
+                        EngineKind::ProPD => prop_v += out.tokens_per_second,
+                        _ => ar_v += out.tokens_per_second,
+                    }
+                }
+            }
+            eprintln!(
+                "[table1] {size} BS={b}: propd {prop_v:.1} vs ar {ar_v:.1}"
+            );
+            cells.push(fmt_ratio(prop_v, ar_v));
+        }
+        table.row(cells);
+    }
+    println!("{}", table.render());
+    let report_dir = dir.join("reports");
+    std::fs::create_dir_all(&report_dir)?;
+    std::fs::write(report_dir.join("table1.md"), table.render_markdown())?;
+    println!("wrote {}", report_dir.join("table1.md").display());
+    println!(
+        "\npaper shape: speedup > 1 everywhere, highest at small batch \
+         (paper: 1.33-1.95×)."
+    );
+    Ok(())
+}

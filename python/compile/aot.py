@@ -1,0 +1,250 @@
+"""AOT pipeline: lower every serving entry point to HLO *text* and emit the
+artifact manifest the Rust runtime consumes.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Artifacts are specialized to static (batch, tree-size) buckets; the Rust
+batcher pads to the nearest bucket.  Layout:
+
+    artifacts/
+      manifest.json                 — the global contract with rust/
+      prompts.json                  — eval prompts per dataset profile
+      <size>/weights.{npz,bin,json} — trained parameters
+      <size>/<entry>_....hlo.txt    — one HLO module per entry/bucket
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, Iterable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .config import (BATCH_BUCKETS, DEFAULT_PRUNE_LAYER, DEFAULT_SIZE,
+                     REDUCED_BATCH_BUCKETS, REDUCED_TREE_BUCKETS, SIZES,
+                     TREE_BUCKETS, ModelConfig)
+from .model import (decode, param_list, param_order, prefill, verify_early,
+                    verify_late)
+from .train import ensure_params, export_weights_bin
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def kv_spec(cfg: ModelConfig, b: int):
+    return spec((cfg.n_layers, 2, b, cfg.max_seq, cfg.n_heads, cfg.head_dim))
+
+
+# ---------------------------------------------------------------------------
+# Artifact grid
+# ---------------------------------------------------------------------------
+
+def artifact_specs(cfg: ModelConfig, full_grid: bool) -> Iterable[Dict]:
+    """Yield one record per artifact to lower for this model size."""
+    bb = BATCH_BUCKETS if full_grid else REDUCED_BATCH_BUCKETS
+    tb = TREE_BUCKETS if full_grid else REDUCED_TREE_BUCKETS
+    nd = (DEFAULT_PRUNE_LAYER if DEFAULT_PRUNE_LAYER in cfg.early_layers
+          else cfg.early_layers[-1])
+
+    for b in bb:
+        yield dict(entry="prefill", b=b, t=None, n=None,
+                   dyn=[("tokens", spec((b, cfg.max_prompt), I32)),
+                        ("prompt_len", spec((b,), I32))],
+                   outputs=["logits", "medusa", "block_kv"])
+        yield dict(entry="decode", b=b, t=None, n=None,
+                   dyn=[("tok", spec((b,), I32)),
+                        ("seq_len", spec((b,), I32)),
+                        ("kv", kv_spec(cfg, b))],
+                   outputs=["logits", "medusa", "col_kv"])
+
+    # verify stages: default prune layer over the whole (b, t) grid, plus the
+    # Table-2 layer sweep (n ∈ early_layers) at BS=4 for the default size.
+    sweeps = [(nd, b, t) for b in bb for t in tb]
+    if full_grid:
+        for n in cfg.early_layers:
+            if n == nd:
+                continue
+            sweeps += [(n, 4, 64)]                      # early stage input
+            sweeps += [(n, 4, t) for t in tb]           # late-stage buckets
+    seen = set()
+    for (n, b, t) in sweeps:
+        for stage in ("verify_early", "verify_late"):
+            key = (stage, n, b, t)
+            if key in seen:
+                continue
+            seen.add(key)
+            if stage == "verify_early":
+                dyn = [("tree_tok", spec((b, t), I32)),
+                       ("tree_pos", spec((b, t), I32)),
+                       ("tree_mask", spec((b, t, t))),
+                       ("seq_len", spec((b,), I32)),
+                       ("kv", kv_spec(cfg, b))]
+                outs = ["hidden", "early_logits", "tree_kv"]
+            else:
+                dyn = [("hidden", spec((b, t, cfg.d_model))),
+                       ("tree_pos", spec((b, t), I32)),
+                       ("tree_mask", spec((b, t, t))),
+                       ("seq_len", spec((b,), I32)),
+                       ("kv", kv_spec(cfg, b))]
+                outs = ["logits", "medusa", "tree_kv"]
+            yield dict(entry=stage, b=b, t=t, n=n, dyn=dyn, outputs=outs)
+
+
+def artifact_key(size: str, rec: Dict) -> str:
+    parts = [rec["entry"]]
+    if rec["n"] is not None:
+        parts.append(f"n{rec['n']}")
+    parts.append(f"b{rec['b']}")
+    if rec["t"] is not None:
+        parts.append(f"t{rec['t']}")
+    return f"{size}/" + "_".join(parts)
+
+
+def lower_artifact(cfg: ModelConfig, params, rec: Dict) -> str:
+    """Lower one entry point; params are passed as a sorted list so the HLO
+    parameter order is [weights..., dynamic inputs...]."""
+    names = param_order(params)
+
+    def as_dict(plist):
+        return dict(zip(names, plist))
+
+    entry = rec["entry"]
+    if entry == "prefill":
+        f = lambda pl, tokens, prompt_len: prefill(cfg, as_dict(pl), tokens,
+                                                   prompt_len)
+    elif entry == "decode":
+        f = lambda pl, tok, seq_len, kv: decode(cfg, as_dict(pl), tok,
+                                                seq_len, kv)
+    elif entry == "verify_early":
+        n = rec["n"]
+        f = lambda pl, *dyn: verify_early(cfg, as_dict(pl), n, *dyn)
+    elif entry == "verify_late":
+        n = rec["n"]
+        f = lambda pl, *dyn: verify_late(cfg, as_dict(pl), n, *dyn)
+    else:
+        raise ValueError(entry)
+
+    param_specs = [spec(p.shape, p.dtype) for p in param_list(params)]
+    dyn_specs = [s for (_, s) in rec["dyn"]]
+    # keep_unused: every entry point takes the FULL parameter list even when
+    # it does not read some tensors (e.g. prefill never touches the early
+    # heads) — the rust runtime passes one uniform argument convention.
+    lowered = jax.jit(f, keep_unused=True).lower(param_specs, *dyn_specs)
+    return to_hlo_text(lowered)
+
+
+def dtype_str(dtype) -> str:
+    name = jnp.dtype(dtype).name
+    return {"float32": "f32", "int32": "i32"}[name]
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def build(artifacts_dir: str, sizes: Sequence[str], force: bool = False,
+          train_steps: int | None = None, log=print) -> Dict:
+    os.makedirs(artifacts_dir, exist_ok=True)
+    manifest: Dict = {
+        "format_version": 1,
+        "kv_layout": "[L, 2, b, S, H, Dh]",
+        "batch_buckets": BATCH_BUCKETS,
+        "tree_buckets": TREE_BUCKETS,
+        "default_prune_layer": DEFAULT_PRUNE_LAYER,
+        "default_size": DEFAULT_SIZE,
+        "sizes": {},
+        "artifacts": [],
+    }
+
+    for size in sizes:
+        cfg = SIZES[size]
+        manifest["sizes"][size] = cfg.to_json()
+        kwargs = {} if train_steps is None else {"steps": train_steps}
+        params = ensure_params(cfg, artifacts_dir, log=log, **kwargs)
+        export_weights_bin(params, os.path.join(artifacts_dir, size))
+        full = size == DEFAULT_SIZE
+        names = param_order(params)
+        pmeta = [{"name": n, "shape": list(params[n].shape), "dtype": "f32"}
+                 for n in names]
+
+        for rec in artifact_specs(cfg, full_grid=full):
+            key = artifact_key(size, rec)
+            path = os.path.join(artifacts_dir, key + ".hlo.txt")
+            entry_meta = {
+                "key": key,
+                "path": key + ".hlo.txt",
+                "size": size,
+                "entry": rec["entry"],
+                "batch": rec["b"],
+                "tree": rec["t"],
+                "n_layer": rec["n"],
+                "params": pmeta,
+                "inputs": [{"name": nm, "shape": list(s.shape),
+                            "dtype": dtype_str(s.dtype)}
+                           for nm, s in rec["dyn"]],
+                "outputs": rec["outputs"],
+            }
+            manifest["artifacts"].append(entry_meta)
+            if os.path.exists(path) and not force:
+                continue
+            t0 = time.time()
+            text = lower_artifact(cfg, params, rec)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w") as fh:
+                fh.write(text)
+            log(f"[aot] {key}: {len(text)/1e6:.2f} MB in "
+                f"{time.time()-t0:.1f}s")
+
+    # Eval prompts per dataset profile (the rust workload generator reads
+    # these; question-only prompts per the paper's setup).
+    prompts_path = os.path.join(artifacts_dir, "prompts.json")
+    if not os.path.exists(prompts_path) or force:
+        prompts = {p: data.make_prompts(seed=99, profile=p, n=200)
+                   for p in data.PROFILES}
+        with open(prompts_path, "w") as fh:
+            json.dump(prompts, fh)
+
+    with open(os.path.join(artifacts_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    log(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory")
+    ap.add_argument("--sizes", default="m,s,l")
+    ap.add_argument("--train-steps", type=int, default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    sizes = [s for s in args.sizes.split(",") if s]
+    for s in sizes:
+        if s not in SIZES:
+            sys.exit(f"unknown size {s!r}; have {sorted(SIZES)}")
+    build(args.out, sizes, force=args.force, train_steps=args.train_steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Model/AOT configuration shared by the L2 model, the trainer and aot.py.
+
+Three model sizes stand in for the paper's Vicuna 7b/13b/33b (see
+DESIGN.md §Substitutions).  All shapes here are baked into the AOT
+artifacts; the rust coordinator reads them back from manifest.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description for one model size."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int = 256
+    max_seq: int = 512        # S: KV-cache capacity
+    max_prompt: int = 128     # P: prefill bucket
+    n_medusa: int = 4         # M: medusa heads (predict t+2 .. t+1+M)
+    early_layers: Tuple[int, ...] = (1, 2, 3, 4)  # candidate pruning layers n
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d  # qkvo + swiglu + 2 norms
+        heads = (self.n_medusa * (d * d + d * v)
+                 + len(self.early_layers) * (d * v + d))
+        return v * d + L * per_layer + d + d * v + heads
+
+    def to_json(self) -> Dict:
+        out = dataclasses.asdict(self)
+        out["head_dim"] = self.head_dim
+        out["param_count"] = self.param_count()
+        return out
+
+
+# The paper evaluates Vicuna 7b / 13b / 33b.  These tiny stand-ins keep the
+# same *relative* scaling (layers and width grow together) so Fig 7 / Table 1
+# sweeps over "model size" remain meaningful on the CPU PJRT client.
+SIZES: Dict[str, ModelConfig] = {
+    "s": ModelConfig(name="s", n_layers=6, d_model=96, n_heads=4, d_ff=384),
+    "m": ModelConfig(name="m", n_layers=8, d_model=128, n_heads=4, d_ff=512),
+    "l": ModelConfig(name="l", n_layers=10, d_model=160, n_heads=4, d_ff=640),
+}
+
+DEFAULT_SIZE = "m"
+
+# Bucketed dynamism: every AOT artifact is specialized to one (batch, tree)
+# combination.  The rust batcher pads up to the nearest bucket.
+BATCH_BUCKETS: List[int] = [1, 2, 4, 8, 16]
+TREE_BUCKETS: List[int] = [4, 8, 16, 32, 64]
+# Default early-pruning layer (paper: layer 4 of 32 ≈ 12.5%; here 2 of 8).
+DEFAULT_PRUNE_LAYER = 2
+
+# Sizes other than the default get a reduced artifact grid to bound
+# `make artifacts` time; the full grid exists for the default size.
+REDUCED_BATCH_BUCKETS: List[int] = [1, 2, 4, 8, 16]
+REDUCED_TREE_BUCKETS: List[int] = [8, 32, 64]
+
+
+def bucket_for(value: int, buckets: List[int]) -> int:
+    """Smallest bucket >= value (last bucket if value exceeds all)."""
+    for b in buckets:
+        if value <= b:
+            return b
+    return buckets[-1]
+
+
+def dumps(cfg: ModelConfig) -> str:
+    return json.dumps(cfg.to_json(), indent=2)

@@ -1,0 +1,134 @@
+"""Deterministic synthetic conversational corpus.
+
+The paper evaluates on question prompts from MT-Bench, ChatGPT-Prompts and
+Alpaca.  Those datasets matter to ProPD only through (a) the prompt/output
+length mix and (b) how predictable the generated text is (which drives the
+medusa-head acceptance probabilities).  We synthesize three profile-matched
+corpora from a template grammar:
+
+- ``mtbench``  — long multi-sentence questions, long answers.
+- ``chatgpt``  — instruction-style prompts ("act as ..."), medium answers.
+- ``alpaca``   — short imperative tasks, short answers.
+
+Text is byte-level (vocab 256).  Everything is seeded and reproducible; the
+rust workload generator (rust/src/workload) mirrors the prompt distributions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from typing import List, Tuple
+
+SUBJECTS = [
+    "the model", "a distributed system", "the scheduler", "an interpreter",
+    "the database", "a compiler", "the network stack", "a cache hierarchy",
+    "the operating system", "a token tree", "the batch engine", "a web server",
+]
+VERBS = [
+    "improves", "reduces", "schedules", "verifies", "accepts", "prunes",
+    "generates", "balances", "estimates", "predicts", "decodes", "routes",
+]
+OBJECTS = [
+    "the latency of every request", "the memory bandwidth pressure",
+    "the number of accepted tokens", "the verification overhead",
+    "the candidate sequences", "the attention mask", "the kv cache pages",
+    "the batch composition", "the iteration time", "the decoding throughput",
+]
+CONNECTORS = [
+    "because", "so that", "while", "whenever", "although", "and therefore",
+]
+QUESTION_STEMS = {
+    "mtbench": [
+        "Compose a detailed explanation of how {s} {v} {o} {c} {s2} {v2} {o2}.",
+        "Compare and contrast how {s} {v} {o} with the way {s2} {v2} {o2}, and discuss the trade offs.",
+        "Imagine {s} {v} {o}. Describe the consequences when {s2} {v2} {o2}.",
+    ],
+    "chatgpt": [
+        "Act as an expert and explain why {s} {v} {o}.",
+        "I want you to describe how {s} {v} {o} {c} {s2} {v2} {o2}.",
+        "Pretend you maintain {s}. Explain how it {v} {o}.",
+    ],
+    "alpaca": [
+        "Explain how {s} {v} {o}.",
+        "List three reasons why {s} {v} {o}.",
+        "Summarize how {s} {v} {o}.",
+    ],
+}
+ANSWER_TEMPLATES = [
+    "In practice {s} {v} {o} {c} {s2} {v2} {o2}.",
+    "First, {s} {v} {o}. Second, {s2} {v2} {o2}.",
+    "The key idea is that {s} {v} {o}.",
+    "Note that {s} {v} {o}, {c} {s2} {v2} {o2}.",
+    "As a result, {s} {v} {o}.",
+]
+# Target mean sentence counts (prompt, answer) per profile — shapes the
+# prompt/output length mix that Fig 3d / Fig 7 depend on.
+PROFILE_LENGTHS = {"mtbench": (2, 8), "chatgpt": (1, 5), "alpaca": (1, 3)}
+PROFILES = ("mtbench", "chatgpt", "alpaca")
+
+
+def _fill(rng: np.random.Generator, template: str) -> str:
+    def pick(xs):
+        return xs[rng.integers(0, len(xs))]
+
+    return template.format(
+        s=pick(SUBJECTS), v=pick(VERBS), o=pick(OBJECTS), c=pick(CONNECTORS),
+        s2=pick(SUBJECTS), v2=pick(VERBS), o2=pick(OBJECTS),
+    )
+
+
+def make_example(rng: np.random.Generator, profile: str) -> Tuple[str, str]:
+    """One (prompt, answer) pair in the chat framing the model is trained on."""
+    p_sents, a_sents = PROFILE_LENGTHS[profile]
+    n_p = max(1, int(rng.poisson(p_sents)))
+    n_a = max(1, int(rng.poisson(a_sents)))
+    prompt = " ".join(_fill(rng, QUESTION_STEMS[profile][rng.integers(0, len(QUESTION_STEMS[profile]))])
+                      for _ in range(n_p))
+    answer = " ".join(_fill(rng, ANSWER_TEMPLATES[rng.integers(0, len(ANSWER_TEMPLATES))])
+                      for _ in range(n_a))
+    return prompt, answer
+
+
+def render_chat(prompt: str, answer: str) -> str:
+    return f"user: {prompt}\nassistant: {answer}\n\n"
+
+
+def make_corpus(seed: int, n_examples: int, profile_mix=None) -> str:
+    """Concatenated chat transcripts, deterministic in seed."""
+    rng = np.random.default_rng(seed)
+    mix = profile_mix or {p: 1.0 for p in PROFILES}
+    names = list(mix)
+    probs = np.array([mix[n] for n in names], dtype=np.float64)
+    probs /= probs.sum()
+    parts: List[str] = []
+    for _ in range(n_examples):
+        profile = names[rng.choice(len(names), p=probs)]
+        parts.append(render_chat(*make_example(rng, profile)))
+    return "".join(parts)
+
+
+def corpus_tokens(seed: int, n_examples: int) -> np.ndarray:
+    text = make_corpus(seed, n_examples)
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def make_prompts(seed: int, profile: str, n: int, max_bytes: int = 120) -> List[str]:
+    """Evaluation prompts for one dataset profile (question-only, per paper)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        prompt, _ = make_example(rng, profile)
+        out.append(f"user: {prompt[:max_bytes]}\nassistant:")
+    return out
+
+
+def batch_iterator(tokens: np.ndarray, batch: int, seq: int, seed: int):
+    """Infinite iterator of (x, y) next-token training batches."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    assert n > 0, "corpus too small for the requested sequence length"
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        x = np.stack([tokens[s: s + seq] for s in starts])
+        y = np.stack([tokens[s + 1: s + seq + 1] for s in starts])
+        yield x, y

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest (python/tests/test_kernel.py)
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels match
+these implementations to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q, k, v, mask):
+    """Masked attention over a [past ‖ tree] key sequence.
+
+    Args:
+      q:    [b, h, t, dh]   queries (the tree tokens)
+      k:    [b, h, skv, dh] keys   (past context ‖ tree tokens)
+      v:    [b, h, skv, dh] values
+      mask: [b, t, skv]     additive mask (0 = attend, large negative = not);
+                            shared across heads.  Every query row must keep at
+                            least one attendable key.
+    Returns:
+      [b, h, t, dh]
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = scores + mask[:, None, :, :].astype(jnp.float32)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP oracle: x [..., d]; w_gate/w_up [d, f]; w_down [f, d]."""
+    x32 = x.astype(jnp.float32)
+    g = x32 @ w_gate.astype(jnp.float32)
+    u = x32 @ w_up.astype(jnp.float32)
+    h = (g / (1.0 + jnp.exp(-g))) * u  # silu(g) * u
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) / jnp.sqrt(var + eps) * w).astype(x.dtype)

@@ -1,0 +1,127 @@
+"""Pallas tree-attention kernel — the verification-phase hot spot (L1).
+
+Token-tree verification evaluates every node of the speculative token tree
+against the full past context in one pass.  Each tree node (query) may attend
+(a) all committed past tokens and (b) its *ancestors inside the tree* — the
+branching structure the paper handles with tree attention masks (Fig 2c).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CUDA concerns
+(threadblock tiling over the KV sequence, masks resident on-device) become a
+flash-style online-softmax schedule: the `t ≤ 64` tree queries form a single
+VMEM-resident block; keys/values stream through VMEM in `block_k`-sized tiles;
+the additive mask tile streams with them.  The two matmuls per tile
+(`[t,dh]x[dh,block_k]` and `[t,block_k]x[block_k,dh]`) are the MXU work.
+
+The kernel MUST run with ``interpret=True`` here: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  Numerics are validated
+against ``ref.tree_attention_ref``; TPU performance is estimated analytically
+in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e9
+
+
+def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block_k: int):
+    """One (batch, head) grid cell: online-softmax over KV tiles.
+
+    Block shapes as seen by the kernel:
+      q_ref    [t, dh]       — whole query block in VMEM
+      k_ref    [skv, dh]     — streamed in `block_k` tiles below
+      v_ref    [skv, dh]
+      mask_ref [t, skv]      — additive, shared across heads
+      o_ref    [t, dh]
+    """
+    t, dh = q_ref.shape
+    skv = k_ref.shape[0]
+    assert skv % block_k == 0, "caller pads skv to a multiple of block_k"
+    n_tiles = skv // block_k
+
+    q = q_ref[...].astype(jnp.float32) * (1.0 / (dh ** 0.5))
+
+    def tile(i, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        mask = mask_ref[:, pl.ds(i * block_k, block_k)].astype(jnp.float32)
+        s = q @ k.T + mask                          # [t, block_k]  (MXU)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))    # running max
+        p = jnp.exp(s - m_new[:, None])             # [t, block_k]
+        scale = jnp.exp(m_i - m_new)
+        l_new = l_i * scale + p.sum(axis=-1)
+        acc = acc * scale[:, None] + p @ v          # [t, dh]       (MXU)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((t, dh), jnp.float32)
+    m0 = jnp.full((t,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, n_tiles, tile, (acc0, m0, l0))
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+def tree_attention(q, k, v, mask, *, block_k: int = DEFAULT_BLOCK_K,
+                   interpret: bool = True):
+    """Tree attention: softmax(q·kᵀ/√dh + mask)·v with a [past‖tree] KV.
+
+    Args:
+      q:    [b, h, t, dh]
+      k:    [b, h, skv, dh]
+      v:    [b, h, skv, dh]
+      mask: [b, t, skv] additive f32 (0 attend / NEG_INF not); every query row
+            must keep at least one attendable key (pad queries attend self).
+      block_k: KV tile size (the HBM→VMEM streaming granularity on TPU).
+      interpret: must stay True on the CPU PJRT path.
+
+    Returns: [b, h, t, dh] with q's dtype.
+    """
+    b, h, t, dh = q.shape
+    skv = k.shape[2]
+    block_k = min(block_k, skv)
+    pad = (-skv) % block_k
+    if pad:
+        # Pad KV with masked-out slots; mask NEG_INF keeps them inert.
+        kpad = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        k = jnp.pad(k, kpad)
+        v = jnp.pad(v, kpad)
+        mask = jnp.pad(mask, [(0, 0), (0, 0), (0, pad)],
+                       constant_values=NEG_INF)
+        skv += pad
+
+    kernel = functools.partial(_tree_attn_kernel, block_k=block_k)
+    grid = (b, h)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, skv, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, skv, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, t, skv), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, mask)
+
+
+def vmem_bytes(t: int, dh: int, skv: int, block_k: int,
+               dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid cell (perf-pass estimate).
+
+    q + o + acc ([t,dh] each), one K/V tile ([block_k,dh] each), one mask tile
+    ([t,block_k]) and the [t] softmax carries.
+    """
+    return dtype_bytes * (3 * t * dh + 2 * block_k * dh + t * block_k + 3 * t)
+
+
+def mxu_flops(t: int, dh: int, skv: int) -> int:
+    """MXU flop count for one (b,h) cell: two matmuls per KV tile."""
+    return 2 * t * skv * dh * 2

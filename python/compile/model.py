@@ -1,0 +1,359 @@
+"""L2 — the JAX model: a RoPE/SwiGLU/RMSNorm transformer with Medusa heads
+and early-exit heads, split into an *early stage* (layers ``0..n``) and a
+*late stage* (layers ``n..L``) so the Rust coordinator can prune the token
+tree between the two stages (ProPD §4.1).
+
+Everything here is build-time Python: ``aot.py`` lowers the entry points at
+the bottom of this file to HLO text once; the Rust runtime executes them via
+PJRT.  Parameters are a *flat* ``dict[str, Array]`` — sorted key order is the
+argument-passing convention recorded in ``manifest.json``.
+
+KV-cache layout (the contract with ``rust/src/kvcache``):
+    kv: [L, 2, b, S, H, Dh]   (2 = keys, values)
+Entry points never write the cache in-graph; they return compact new-KV
+blocks and the coordinator commits accepted tokens host-side.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kernels.tree_attention import tree_attention, NEG_INF
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Flat parameter dict.  Layer weights are stacked on a leading L dim so
+    the forward pass can ``lax.scan`` over layers (keeps the HLO small)."""
+    rng = np.random.default_rng(seed)
+    L, d, f, v = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    M, E = cfg.n_medusa, len(cfg.early_layers)
+
+    def norm(*shape, scale=None):
+        s = scale if scale is not None else 0.02
+        return jnp.asarray(rng.normal(0.0, s, size=shape), jnp.float32)
+
+    return {
+        "embed": norm(v, d),
+        "layers.ln1": jnp.ones((L, d), jnp.float32),
+        "layers.wqkv": norm(L, d, 3 * d),
+        "layers.wo": norm(L, d, d, scale=0.02 / np.sqrt(2 * L)),
+        "layers.ln2": jnp.ones((L, d), jnp.float32),
+        "layers.wg": norm(L, d, f),
+        "layers.wu": norm(L, d, f),
+        "layers.wd": norm(L, f, d, scale=0.02 / np.sqrt(2 * L)),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "lm_head": norm(d, v),
+        "medusa.w1": norm(M, d, d),
+        "medusa.w2": norm(M, d, v),
+        "early.ln": jnp.ones((E, d), jnp.float32),
+        "early.w": norm(E, d, v),
+    }
+
+
+def param_order(params: Params):
+    return sorted(params.keys())
+
+
+def param_list(params: Params):
+    return [params[k] for k in param_order(params)]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) / jnp.sqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding.  x: [b, t, h, dh]; positions: [b, t] int32."""
+    b, t, h, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]   # [b, t, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention_ref(q, k, v, mask):
+    """jnp attention used on the training path (fast to trace/compile)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale + mask[:, None]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v)
+
+
+def _layer(cfg: ModelConfig, lw, x, kv_past, positions, mask, use_pallas):
+    """One transformer block over a t-token block.
+
+    lw: per-layer weight dict slices.  kv_past: None (no context) or
+    [2, b, S, H, Dh].  mask: [b, t, S+t] (with past) or [b, t, t].
+    Returns (x_out, (k_blk, v_blk)) with k/v_blk [b, t, H, Dh].
+    """
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    xn = rmsnorm(x, lw["ln1"], cfg.norm_eps)
+    qkv = xn @ lw["wqkv"]                        # [b, t, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = rope(q.reshape(b, t, h, dh), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, t, h, dh), positions, cfg.rope_theta)
+    v = v.reshape(b, t, h, dh)
+
+    if kv_past is not None:
+        k_all = jnp.concatenate([kv_past[0], k], axis=1)   # [b, S+t, H, Dh]
+        v_all = jnp.concatenate([kv_past[1], v], axis=1)
+    else:
+        k_all, v_all = k, v
+
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k_all.transpose(0, 2, 1, 3)
+    vh = v_all.transpose(0, 2, 1, 3)
+    if use_pallas:
+        attn = tree_attention(qh, kh, vh, mask)
+    else:
+        attn = attention_ref(qh, kh, vh, mask)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + attn @ lw["wo"]
+
+    xn = rmsnorm(x, lw["ln2"], cfg.norm_eps)
+    g = xn @ lw["wg"]
+    x = x + ((g * jax.nn.sigmoid(g)) * (xn @ lw["wu"])) @ lw["wd"]
+    return x, (k, v)
+
+
+_LAYER_KEYS = ("ln1", "wqkv", "wo", "ln2", "wg", "wu", "wd")
+
+
+def run_layers(cfg: ModelConfig, params: Params, x, kv, positions, mask,
+               l0: int, l1: int, use_pallas: bool):
+    """Scan layers [l0, l1) over a t-token block.
+
+    kv: [L, 2, b, S, H, Dh] or None.  Returns (x, block_kv) with block_kv
+    [l1-l0, 2, b, t, H, Dh] — the new keys/values of the block tokens.
+    """
+    stacked = {k: params[f"layers.{k}"][l0:l1] for k in _LAYER_KEYS}
+    kv_slice = None if kv is None else kv[l0:l1]
+
+    def body(x, per_layer):
+        lw, kv_l = per_layer
+        # kv_l: [2, b, S, H, Dh] or None
+        x, (k_blk, v_blk) = _layer(cfg, lw, x, kv_l, positions, mask,
+                                   use_pallas)
+        return x, jnp.stack([k_blk, v_blk])      # [2, b, t, H, Dh]
+
+    if kv_slice is None:
+        x, block_kv = jax.lax.scan(lambda c, lw: body(c, (lw, None)),
+                                   x, stacked)
+    else:
+        x, block_kv = jax.lax.scan(body, x, (stacked, kv_slice))
+    return x, block_kv
+
+
+def past_mask(seq_len, t: int, S: int):
+    """[b, t, S] additive mask admitting past positions < seq_len."""
+    pos = jnp.arange(S, dtype=jnp.int32)[None, None, :]
+    ok = pos < seq_len[:, None, None]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32) * jnp.ones(
+        (1, t, 1), jnp.float32)
+
+
+def causal_len_mask(prompt_len, t: int):
+    """[b, t, t] causal mask, limited to positions < prompt_len.
+
+    Padded queries (pos >= prompt_len) still attend themselves so softmax
+    rows stay finite; their outputs are never read.
+    """
+    i = jnp.arange(t, dtype=jnp.int32)
+    causal = i[None, :, None] >= i[None, None, :]
+    valid_key = i[None, None, :] < prompt_len[:, None, None]
+    ok = causal & (valid_key | (i[None, :, None] == i[None, None, :]))
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def medusa_logits(cfg: ModelConfig, params: Params, hidden):
+    """Medusa heads on final-norm hidden states.  hidden [..., d] →
+    [..., M, V].  Head i predicts the token at offset i+2 from the hidden's
+    own position (LM head predicts offset 1)."""
+    w1, w2 = params["medusa.w1"], params["medusa.w2"]   # [M,d,d], [M,d,V]
+    hproj = jnp.einsum("...d,mde->...me", hidden, w1)
+    hres = jax.nn.silu(hproj) + hidden[..., None, :]
+    return jnp.einsum("...me,mev->...mv", hres, w2)
+
+
+def early_logits(cfg: ModelConfig, params: Params, hidden, n_layer: int):
+    """Early-exit head attached after LLM layer ``n_layer``."""
+    e = cfg.early_layers.index(n_layer)
+    xn = rmsnorm(hidden, params["early.ln"][e], cfg.norm_eps)
+    return xn @ params["early.w"][e]
+
+
+def final_logits(cfg: ModelConfig, params: Params, hidden):
+    xn = rmsnorm(hidden, params["ln_f"], cfg.norm_eps)
+    return xn @ params["lm_head"], xn
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points (AOT-lowered; see aot.py)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Params, tokens, prompt_len):
+    """Prompt prefill for freshly admitted requests (no past context).
+
+    tokens [b, P] int32 (padded), prompt_len [b] int32.
+    Returns (logits [b,V] at the last prompt token, medusa [b,M,V],
+    block_kv [L, 2, b, P, H, Dh]).
+    """
+    b, P = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None], (b, P))
+    mask = causal_len_mask(prompt_len, P)
+    x, block_kv = run_layers(cfg, params, x, None, positions, mask,
+                             0, cfg.n_layers, use_pallas=False)
+    last = jnp.clip(prompt_len - 1, 0, P - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None].astype(jnp.int32),
+                                 axis=1)[:, 0]          # [b, d]
+    logits, xn = final_logits(cfg, params, x_last)
+    med = medusa_logits(cfg, params, xn)
+    return logits, med, block_kv
+
+
+def decode(cfg: ModelConfig, params: Params, tok, seq_len, kv):
+    """Single-token autoregressive decode step (the AR baseline).
+
+    tok [b] int32; seq_len [b] int32 (the token's position); kv cache input.
+    Returns (logits [b,V], medusa [b,M,V], col_kv [L,2,b,1,H,Dh]).
+    """
+    b = tok.shape[0]
+    S = kv.shape[3]
+    x = params["embed"][tok][:, None, :]                 # [b, 1, d]
+    positions = seq_len[:, None]
+    mask = jnp.concatenate(
+        [past_mask(seq_len, 1, S), jnp.zeros((b, 1, 1), jnp.float32)],
+        axis=-1)
+    x, block_kv = run_layers(cfg, params, x, kv, positions, mask,
+                             0, cfg.n_layers, use_pallas=True)
+    logits, xn = final_logits(cfg, params, x[:, 0])
+    med = medusa_logits(cfg, params, xn)
+    return logits, med, block_kv
+
+
+def verify_early(cfg: ModelConfig, params: Params, n_layer: int,
+                 tree_tok, tree_pos, tree_mask, seq_len, kv):
+    """Early stage of tree verification: layers [0, n) + the early head.
+
+    tree_tok/tree_pos [b, t] int32; tree_mask [b, t, t] additive f32
+    (ancestor structure, from rust/src/tree); seq_len [b].
+    Returns (hidden [b,t,d], early_logits [b,t,V],
+    tree_kv [n, 2, b, t, H, Dh]).
+    """
+    b, t = tree_tok.shape
+    S = kv.shape[3]
+    x = params["embed"][tree_tok]
+    mask = jnp.concatenate([past_mask(seq_len, t, S), tree_mask], axis=-1)
+    x, block_kv = run_layers(cfg, params, x, kv, tree_pos, mask,
+                             0, n_layer, use_pallas=True)
+    elog = early_logits(cfg, params, x, n_layer)
+    return x, elog, block_kv
+
+
+def verify_late(cfg: ModelConfig, params: Params, n_layer: int,
+                hidden, tree_pos, tree_mask, seq_len, kv):
+    """Late stage of tree verification: layers [n, L) on the *pruned* tree.
+
+    hidden [b, t', d] — the early-stage hidden states compacted by the
+    coordinator's branch elimination; masks/positions likewise compacted.
+    Returns (logits [b,t',V], medusa [b,t',M,V],
+    tree_kv [L-n, 2, b, t', H, Dh]).
+    """
+    b, t = hidden.shape[:2]
+    S = kv.shape[3]
+    mask = jnp.concatenate([past_mask(seq_len, t, S), tree_mask], axis=-1)
+    x, block_kv = run_layers(cfg, params, hidden, kv, tree_pos, mask,
+                             n_layer, cfg.n_layers, use_pallas=True)
+    logits, xn = final_logits(cfg, params, x)
+    med = medusa_logits(cfg, params, xn)
+    return logits, med, block_kv
+
+
+# ---------------------------------------------------------------------------
+# Training forward (full-sequence causal; used by train.py and tests)
+# ---------------------------------------------------------------------------
+
+def train_forward(cfg: ModelConfig, params: Params, tokens):
+    """tokens [b, T] → (lm_logits [b,T,V], medusa [b,T,M,V],
+    early {n: [b,T,V]})."""
+    b, T = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (b, T))
+    i = jnp.arange(T)
+    mask = jnp.where(i[None, :, None] >= i[None, None, :], 0.0, NEG_INF)
+    mask = jnp.broadcast_to(mask, (b, T, T)).astype(jnp.float32)
+
+    stacked = {k: params[f"layers.{k}"] for k in _LAYER_KEYS}
+    early_out = {}
+    # Unrolled loop (not scan) so we can tap early-layer hidden states.
+    for l in range(cfg.n_layers):
+        lw = {k: stacked[k][l] for k in _LAYER_KEYS}
+        x, _ = _layer(cfg, lw, x, None, positions, mask, use_pallas=False)
+        if (l + 1) in cfg.early_layers:
+            early_out[l + 1] = early_logits(cfg, params, x, l + 1)
+    logits, xn = final_logits(cfg, params, x)
+    med = medusa_logits(cfg, params, xn)
+    return logits, med, early_out
+
+
+def loss_fn(cfg: ModelConfig, params: Params, x, y,
+            medusa_weight: float = 0.2, early_weight: float = 0.2):
+    """Joint loss: LM next-token + medusa offsets + early-exit heads."""
+    logits, med, early = train_forward(cfg, params, x)
+
+    def xent(lg, tgt):
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        return -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+
+    lm = xent(logits, y).mean()
+    aux = 0.0
+    T = x.shape[1]
+    for m in range(cfg.n_medusa):
+        off = m + 1                       # head m predicts y shifted by m+1
+        lg = med[:, : T - off, m, :]
+        tgt = y[:, off:]
+        aux = aux + medusa_weight * xent(lg, tgt).mean()
+    for n, lg in early.items():
+        aux = aux + early_weight * xent(lg, y).mean()
+    return lm + aux, {"lm": lm}
+
+
+# ---------------------------------------------------------------------------
+# Entry-point table for aot.py
+# ---------------------------------------------------------------------------
+
+def entrypoints(cfg: ModelConfig):
+    """Name → (fn(params, *dynamic), dynamic-arg spec builder).
+
+    Used by aot.py; the dynamic-arg specs define the static shapes baked
+    into each artifact.
+    """
+    return {
+        "prefill": prefill,
+        "decode": decode,
+        "verify_early": verify_early,
+        "verify_late": verify_late,
+    }

@@ -1,0 +1,159 @@
+"""Build-time trainer for the tiny stand-in LLMs (see DESIGN.md
+§Substitutions).
+
+Trains the trunk + medusa heads + early-exit heads jointly on the synthetic
+conversational corpus, then caches parameters as ``artifacts/<size>/weights.npz``
+(reused by aot.py) and exports the rust-readable ``weights.bin`` +
+``weights.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .config import ModelConfig, SIZES
+from .model import Params, init_params, loss_fn, param_order
+
+DEFAULT_STEPS = int(os.environ.get("PROPD_TRAIN_STEPS", "400"))
+DEFAULT_BATCH = 8
+DEFAULT_SEQ = 128
+CORPUS_SEED = 1234
+CORPUS_EXAMPLES = 4000
+
+
+def adamw_init(params: Params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params: Params, grads: Params, state, lr: float,
+                 b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        m = b1 * state["m"][k] + (1 - b1) * grads[k]
+        v = b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k])
+        mhat = m / (1 - b1 ** t.astype(jnp.float32))
+        vhat = v / (1 - b2 ** t.astype(jnp.float32))
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        decay = 0.0 if k.endswith(("ln1", "ln2", "ln_f", ".ln")) else wd
+        new_p[k] = params[k] - lr * (upd + decay * params[k])
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def train(cfg: ModelConfig, steps: int = DEFAULT_STEPS,
+          batch: int = DEFAULT_BATCH, seq: int = DEFAULT_SEQ,
+          lr: float = 3e-3, seed: int = 0, log_every: int = 50,
+          log=print) -> Tuple[Params, Dict]:
+    """Train one model size; returns (params, history)."""
+    tokens = data.corpus_tokens(CORPUS_SEED, CORPUS_EXAMPLES)
+    it = data.batch_iterator(tokens, batch, seq, seed=seed + 7)
+    params = init_params(cfg, seed)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, x, y), has_aux=True)(params)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss, aux["lm"]
+
+    opt = adamw_init(params)
+    hist = {"loss": [], "lm": []}
+    t0 = time.time()
+    for i in range(steps):
+        x, y = next(it)
+        params, opt, loss, lm = step(params, opt,
+                                     jnp.asarray(x), jnp.asarray(y))
+        if i % log_every == 0 or i == steps - 1:
+            l, m = float(loss), float(lm)
+            hist["loss"].append(l)
+            hist["lm"].append(m)
+            log(f"[train/{cfg.name}] step {i:4d} loss {l:.4f} "
+                f"lm {m:.4f} ({time.time()-t0:.1f}s)")
+    hist["steps"] = steps
+    hist["wallclock_s"] = time.time() - t0
+    return params, hist
+
+
+# ---------------------------------------------------------------------------
+# Caching + export
+# ---------------------------------------------------------------------------
+
+def weights_npz_path(artifacts_dir: str, size: str) -> str:
+    return os.path.join(artifacts_dir, size, "weights.npz")
+
+
+def save_params(params: Params, path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> Params:
+    raw = np.load(path)
+    return {k: jnp.asarray(raw[k]) for k in raw.files}
+
+
+def ensure_params(cfg: ModelConfig, artifacts_dir: str,
+                  steps: int = DEFAULT_STEPS, log=print) -> Params:
+    """Load cached trained weights or train now."""
+    path = weights_npz_path(artifacts_dir, cfg.name)
+    if os.path.exists(path):
+        log(f"[train/{cfg.name}] using cached {path}")
+        return load_params(path)
+    params, hist = train(cfg, steps=steps, log=log)
+    save_params(params, path)
+    with open(os.path.join(os.path.dirname(path), "train_history.json"),
+              "w") as f:
+        json.dump(hist, f, indent=2)
+    return params
+
+
+def export_weights_bin(params: Params, out_dir: str) -> Dict:
+    """weights.bin (little-endian f32, concatenated in sorted-name order) +
+    weights.json manifest — the format rust/src/runtime/weights.rs reads."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name in param_order(params):
+            arr = np.ascontiguousarray(np.asarray(params[name]),
+                                       dtype="<f4")
+            f.write(arr.tobytes())
+            entries.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": "f32",
+                "offset_bytes": offset,
+                "size_bytes": arr.nbytes,
+            })
+            offset += arr.nbytes
+    meta = {"params": entries, "total_bytes": offset}
+    with open(os.path.join(out_dir, "weights.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", default="m", choices=sorted(SIZES))
+    ap.add_argument("--steps", type=int, default=DEFAULT_STEPS)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    cfg = SIZES[args.size]
+    params = ensure_params(cfg, args.artifacts, steps=args.steps)
+    export_weights_bin(params, os.path.join(args.artifacts, args.size))
+
+
+if __name__ == "__main__":
+    main()

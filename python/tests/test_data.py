@@ -1,0 +1,61 @@
+"""Synthetic corpus/workload generator tests (determinism + profile shape)."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+def test_corpus_deterministic():
+    a = data.make_corpus(seed=5, n_examples=20)
+    b = data.make_corpus(seed=5, n_examples=20)
+    assert a == b
+
+
+def test_corpus_seed_sensitivity():
+    assert data.make_corpus(seed=5, n_examples=20) != \
+        data.make_corpus(seed=6, n_examples=20)
+
+
+def test_corpus_is_ascii_bytes():
+    toks = data.corpus_tokens(seed=1, n_examples=50)
+    assert toks.dtype == np.int32
+    assert toks.min() >= 0 and toks.max() < 256
+
+
+def test_chat_framing_present():
+    text = data.make_corpus(seed=2, n_examples=10)
+    assert "user: " in text and "assistant: " in text
+
+
+@pytest.mark.parametrize("profile", data.PROFILES)
+def test_profiles_produce_prompts(profile):
+    prompts = data.make_prompts(seed=3, profile=profile, n=25)
+    assert len(prompts) == 25
+    assert all(p.endswith("assistant:") for p in prompts)
+    assert len(set(prompts)) > 10          # diverse
+
+
+def test_profile_length_ordering():
+    """mtbench prompts are longest, alpaca shortest (the paper's dataset
+    mix drives Fig 3d / Fig 7)."""
+    means = {}
+    for p in data.PROFILES:
+        qs = [len(data.make_example(np.random.default_rng(i), p)[0])
+              for i in range(200)]
+        means[p] = np.mean(qs)
+    assert means["mtbench"] > means["chatgpt"] > means["alpaca"]
+
+
+def test_batch_iterator_shapes_and_shift():
+    toks = data.corpus_tokens(seed=1, n_examples=100)
+    it = data.batch_iterator(toks, batch=4, seq=16, seed=0)
+    x, y = next(it)
+    assert x.shape == (4, 16) and y.shape == (4, 16)
+    # y is x shifted by one within the corpus
+    np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+
+def test_batch_iterator_too_small_corpus_raises():
+    with pytest.raises(AssertionError):
+        next(data.batch_iterator(np.arange(4, dtype=np.int32), 1, 16, 0))

@@ -1,0 +1,73 @@
+"""Trainer smoke tests on a micro model (fast, no cached artifacts needed)."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import train as T
+from compile.config import ModelConfig
+from compile.model import init_params, param_order
+
+MICRO = ModelConfig(name="micro", n_layers=2, d_model=16, n_heads=2,
+                    d_ff=32, max_seq=32, max_prompt=8, early_layers=(1,))
+
+
+def test_train_reduces_loss():
+    _, hist = T.train(MICRO, steps=30, batch=4, seq=32, lr=5e-3,
+                      log=lambda *a, **k: None, log_every=29)
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+def test_adamw_moves_params():
+    params = init_params(MICRO, 0)
+    grads = {k: jnp.ones_like(v) for k, v in params.items()}
+    opt = T.adamw_init(params)
+    new, opt2 = T.adamw_update(params, grads, opt, lr=1e-2)
+    assert int(opt2["t"]) == 1
+    for k in params:
+        assert not np.allclose(np.asarray(new[k]), np.asarray(params[k]))
+
+
+def test_save_load_roundtrip(tmp_path):
+    params = init_params(MICRO, 0)
+    path = str(tmp_path / "sub" / "weights.npz")
+    T.save_params(params, path)
+    loaded = T.load_params(path)
+    assert set(loaded) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(loaded[k]),
+                                      np.asarray(params[k]))
+
+
+def test_export_weights_bin_layout(tmp_path):
+    """weights.bin must be the sorted-name concatenation of little-endian
+    f32 — the exact contract rust/src/runtime/weights.rs relies on."""
+    params = init_params(MICRO, 0)
+    meta = T.export_weights_bin(params, str(tmp_path))
+    names = [e["name"] for e in meta["params"]]
+    assert names == param_order(params)
+    blob = open(tmp_path / "weights.bin", "rb").read()
+    assert len(blob) == meta["total_bytes"]
+    off = 0
+    for e in meta["params"]:
+        assert e["offset_bytes"] == off
+        arr = np.frombuffer(blob, dtype="<f4", count=e["size_bytes"] // 4,
+                            offset=off).reshape(e["shape"])
+        np.testing.assert_array_equal(arr, np.asarray(params[e["name"]]))
+        off += e["size_bytes"]
+    # json on disk matches returned meta
+    disk = json.load(open(tmp_path / "weights.json"))
+    assert disk == meta
+
+
+def test_ensure_params_caches(tmp_path):
+    logs = []
+    p1 = T.ensure_params(MICRO, str(tmp_path), steps=3, log=logs.append)
+    p2 = T.ensure_params(MICRO, str(tmp_path), steps=3, log=logs.append)
+    assert any("cached" in l for l in logs)
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+    assert os.path.exists(tmp_path / "micro" / "train_history.json")

@@ -1,0 +1,154 @@
+//! Component microbenchmarks for the L3 hot paths (harness = false; the
+//! offline mirror has no criterion, so these use propd::bench::Bencher).
+//!
+//!     cargo bench --bench components
+//!
+//! Covers: tree construction (§4.2), mask build + subsample (§4.1 impl
+//! optimization), pruning membership, acceptance walk, regression fit,
+//! KV batch assembly, input packing.  No artifacts required.
+
+use propd::bench::{bench_header, Bencher};
+use propd::estimator::{AcceptanceTracker, PerfModel};
+use propd::kvcache::{KvCache, KvGeometry};
+use propd::tree::builder::HeadCandidates;
+use propd::tree::{accept_path, prune_tree, TokenTree, TreeBuilder, TreeMask};
+use propd::util::rng::Rng;
+
+fn cands(heads: usize, ranks: usize) -> HeadCandidates {
+    (0..heads)
+        .map(|h| {
+            (0..ranks)
+                .map(|k| {
+                    (
+                        (h * 100 + k) as u32,
+                        0.7f64.powi(h as i32 + 1) * 0.6f64.powi(k as i32),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn random_logits(rng: &mut Rng, rows: usize, vocab: usize) -> Vec<f32> {
+    (0..rows * vocab).map(|_| rng.f64() as f32).collect()
+}
+
+fn main() {
+    let b = Bencher::new(5, 50);
+    let mut results = Vec::new();
+    let mut rng = Rng::new(7);
+
+    // ---- dynamic tree generation (§4.2.3 planner input) ----
+    let c = cands(4, 8);
+    let builder = TreeBuilder::new(8);
+    results.push(b.run("tree_build_64", || {
+        std::hint::black_box(builder.build(1, &c, 64));
+    }));
+    results.push(b.run("gain_curve_64", || {
+        std::hint::black_box(builder.gain_curve(&c, 64));
+    }));
+
+    // ---- mask build vs subsample (§4.1 impl optimization) ----
+    let tree = builder.build(1, &c, 64);
+    results.push(b.run("mask_build_64", || {
+        std::hint::black_box(TreeMask::build(&tree, 64));
+    }));
+    let mask = TreeMask::build(&tree, 64);
+    let keep: Vec<usize> = (0..tree.len()).step_by(2).collect();
+    let keep = {
+        let mut k = keep;
+        if k.first() != Some(&0) {
+            k.insert(0, 0);
+        }
+        k
+    };
+    results.push(b.run("mask_subsample_64_to_32", || {
+        std::hint::black_box(mask.subsample(&keep, 32));
+    }));
+    let mut dense = vec![0f32; 64 * 64];
+    results.push(b.run("mask_write_dense_64", || {
+        mask.write_dense(&mut dense);
+        std::hint::black_box(&dense);
+    }));
+
+    // ---- early pruning (§4.1) ----
+    let vocab = 256;
+    let logits = random_logits(&mut rng, 64, vocab);
+    results.push(b.run("prune_tree_64_k16", || {
+        std::hint::black_box(prune_tree(&tree, &logits, vocab, 16));
+    }));
+
+    // ---- acceptance walk ----
+    results.push(b.run("accept_path_64", || {
+        std::hint::black_box(accept_path(&tree, &logits, vocab));
+    }));
+
+    // ---- §4.2.1 regression ----
+    let mut perf = PerfModel::default();
+    for i in 0..200 {
+        perf.record([4, 8, 16, 32, 64][i % 5], 0.001 * (i % 5 + 1) as f64);
+    }
+    results.push(b.run("perf_model_fit", || {
+        std::hint::black_box(perf.fit());
+    }));
+    results.push(b.run("perf_model_record", || {
+        perf.record(32, 0.003);
+    }));
+
+    // ---- §4.2.2 tracker ----
+    let mut tracker = AcceptanceTracker::new(4, 8, 0.05);
+    results.push(b.run("tracker_record", || {
+        tracker.record(2, Some(1));
+    }));
+    let tokens: Vec<Vec<u32>> = (0..4)
+        .map(|h| (0..8).map(|k| (h * 8 + k) as u32).collect())
+        .collect();
+    results.push(b.run("tracker_candidates", || {
+        std::hint::black_box(tracker.candidates(&tokens));
+    }));
+
+    // ---- KV batch assembly (the host-side copy the §Perf pass tracks) ----
+    let geom = KvGeometry { layers: 8, max_seq: 512, heads: 4, head_dim: 32 };
+    let mut kv = KvCache::new(geom, 8);
+    let lanes: Vec<usize> = (0..8).map(|_| kv.acquire().unwrap()).collect();
+    let mut out =
+        vec![0f32; geom.layers * 2 * 8 * geom.max_seq * geom.col()];
+    results.push(b.run("kv_batch_assemble_b8_(34MB)", || {
+        kv.write_batch(&lanes, &mut out);
+        std::hint::black_box(&out);
+    }));
+    let blk = vec![0f32; geom.layers * 2 * 8 * 64 * geom.col()];
+    results.push(b.run("kv_commit_5cols", || {
+        kv.commit_columns(
+            lanes[0],
+            &blk,
+            (geom.layers, 8, 64),
+            0,
+            0,
+            &[(0, 10), (1, 11), (2, 12), (3, 13), (4, 14)],
+        );
+    }));
+
+    // ---- input packing ----
+    let trees: Vec<TokenTree> =
+        (0..8).map(|_| builder.build(1, &c, 64)).collect();
+    let trefs: Vec<&TokenTree> = trees.iter().collect();
+    results.push(b.run("pack_tree_tokens_b8_t64", || {
+        std::hint::black_box(propd::engine::inputs::pack_tree_tokens(
+            &trefs, 64,
+        ));
+    }));
+    let masks: Vec<TreeMask> =
+        trees.iter().map(|t| TreeMask::build(t, 64)).collect();
+    let mrefs: Vec<&TreeMask> = masks.iter().collect();
+    results.push(b.run("pack_tree_masks_b8_t64", || {
+        std::hint::black_box(propd::engine::inputs::pack_tree_masks(
+            &mrefs, 64,
+        ));
+    }));
+
+    println!("{}", bench_header());
+    for r in &results {
+        println!("{}", r.summary());
+    }
+}

@@ -1,0 +1,68 @@
+//! End-to-end engine benchmarks over real artifacts (harness = false).
+//!
+//!     cargo bench --bench end_to_end
+//!
+//! One row per engine: serving throughput (the Fig 7 / Table 1 substrate),
+//! acceptance length (Table 2 substrate) and step-latency percentiles.
+//! Skips gracefully when `artifacts/` is missing.
+
+use propd::bench::harness::{load_prompts, run_trace, RunSpec};
+use propd::bench::Table;
+use propd::engine::{EngineConfig, EngineKind};
+use propd::runtime::Runtime;
+
+fn main() {
+    let dir = propd::artifacts_dir(None);
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!(
+                "end_to_end bench skipped: {e:#} (run `make artifacts`)"
+            );
+            return;
+        }
+    };
+    let prompts = load_prompts(&dir);
+    let size = rt.manifest.default_size.clone();
+
+    let mut table = Table::new(
+        "end-to-end engine throughput (default size, BS=4, chatgpt)",
+        &["engine", "tok/s", "accept len", "step p50 (ms)",
+          "step p99 (ms)", "steps"],
+    );
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        let mut e = EngineConfig::new(&size, kind);
+        e.max_batch = 4;
+        let mut spec = RunSpec::new(e, "chatgpt");
+        spec.n_requests = 12;
+        spec.max_new_tokens = Some(32);
+        match run_trace(&rt, &prompts, &spec) {
+            Ok(out) => {
+                table.row(vec![
+                    kind.as_str().into(),
+                    format!("{:.1}", out.tokens_per_second),
+                    format!("{:.2}", out.accept_len),
+                    format!("{:.2}", 1e3 * out.report["step_time_p50_s"]),
+                    format!("{:.2}", 1e3 * out.report["step_time_p99_s"]),
+                    out.steps.to_string(),
+                ]);
+            }
+            Err(e) => {
+                table.row(vec![
+                    kind.as_str().into(),
+                    format!("error: {e:#}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+}

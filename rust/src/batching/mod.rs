@@ -1,0 +1,189 @@
+//! Request-queue / admission layer used by the server front-end.
+//!
+//! The engine performs continuous batching internally (free lane → admit);
+//! this module provides what sits in front of it: a bounded FCFS queue
+//! with backpressure, arrival accounting, and the bucket-padding policy
+//! helpers shared with the engines.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+
+use crate::engine::Completion;
+
+/// A queued inference call: prompt + budget + a channel for the result.
+pub struct QueuedRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub respond: Option<Sender<Completion>>,
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct QueueStats {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub drained: u64,
+    pub high_watermark: usize,
+}
+
+/// Bounded MPMC FCFS queue (mutex + condvar; std-only).
+pub struct RequestQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+struct QueueInner {
+    items: VecDeque<QueuedRequest>,
+    stats: QueueStats,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        RequestQueue {
+            inner: Mutex::new(QueueInner {
+                items: VecDeque::new(),
+                stats: QueueStats::default(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking submit; `Err` = backpressure (queue full) or closed.
+    pub fn submit(&self, req: QueuedRequest) -> Result<(), QueuedRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.capacity {
+            g.stats.rejected += 1;
+            return Err(req);
+        }
+        g.items.push_back(req);
+        g.stats.submitted += 1;
+        let len = g.items.len();
+        g.stats.high_watermark = g.stats.high_watermark.max(len);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Drain up to `max` requests; blocks until at least one is available
+    /// (or the queue is closed → returns empty).
+    pub fn drain_blocking(&self, max: usize) -> Vec<QueuedRequest> {
+        let mut g = self.inner.lock().unwrap();
+        while g.items.is_empty() && !g.closed {
+            g = self.cv.wait(g).unwrap();
+        }
+        self.drain_locked(&mut g, max)
+    }
+
+    /// Drain without blocking (engine loop between steps).
+    pub fn drain_now(&self, max: usize) -> Vec<QueuedRequest> {
+        let mut g = self.inner.lock().unwrap();
+        self.drain_locked(&mut g, max)
+    }
+
+    fn drain_locked(
+        &self,
+        g: &mut QueueInner,
+        max: usize,
+    ) -> Vec<QueuedRequest> {
+        let n = max.min(g.items.len());
+        let out: Vec<QueuedRequest> = g.items.drain(..n).collect();
+        g.stats.drained += out.len() as u64;
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Close: subsequent submits fail; blocked drains return.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(p: &str) -> QueuedRequest {
+        QueuedRequest {
+            prompt: p.into(),
+            max_new_tokens: 8,
+            respond: None,
+        }
+    }
+
+    #[test]
+    fn fcfs_order() {
+        let q = RequestQueue::new(4);
+        q.submit(req("a")).map_err(|_| ()).unwrap();
+        q.submit(req("b")).map_err(|_| ()).unwrap();
+        let drained = q.drain_now(10);
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].prompt, "a");
+        assert_eq!(drained[1].prompt, "b");
+        assert_eq!(q.stats().drained, 2);
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let q = RequestQueue::new(1);
+        assert!(q.submit(req("a")).is_ok());
+        assert!(q.submit(req("b")).is_err());
+        assert_eq!(q.stats().rejected, 1);
+        assert_eq!(q.stats().high_watermark, 1);
+    }
+
+    #[test]
+    fn drain_respects_max() {
+        let q = RequestQueue::new(8);
+        for i in 0..5 {
+            q.submit(req(&i.to_string())).map_err(|_| ()).unwrap();
+        }
+        assert_eq!(q.drain_now(2).len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn close_unblocks_and_rejects() {
+        let q = Arc::new(RequestQueue::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.drain_blocking(1).len());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), 0);
+        assert!(q.submit(req("x")).is_err());
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn blocking_drain_gets_item() {
+        let q = Arc::new(RequestQueue::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let got = q2.drain_blocking(4);
+            got.len()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.submit(req("a")).map_err(|_| ()).unwrap();
+        assert_eq!(h.join().unwrap(), 1);
+    }
+}

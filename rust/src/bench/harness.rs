@@ -1,0 +1,136 @@
+//! Experiment harness: run an engine over a workload trace and collect the
+//! numbers the paper reports (tok/s, acceptance length, prune rate, ...).
+//!
+//! Used by every `examples/fig*.rs` / `examples/table*.rs` driver so all
+//! experiments share one measurement methodology: closed-loop offline
+//! serving (all requests queued up front — the paper's setting), engine
+//! busy-time as the denominator for throughput.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::engine::{Engine, EngineConfig};
+use crate::runtime::Runtime;
+use crate::workload::{generate_trace, PromptSet, TraceConfig};
+
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub engine: EngineConfig,
+    pub profile: String,
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Cap output length (None = profile default budget).
+    pub max_new_tokens: Option<usize>,
+    /// Safety valve for sweeps: stop after this many engine steps.
+    pub max_steps: Option<u64>,
+    /// Run a short unmeasured prelude first so XLA executable compilation
+    /// and estimator cold-start don't pollute the measurement.
+    pub warmup: bool,
+}
+
+impl RunSpec {
+    pub fn new(engine: EngineConfig, profile: &str) -> Self {
+        RunSpec {
+            engine,
+            profile: profile.to_string(),
+            n_requests: 8,
+            seed: 17,
+            max_new_tokens: None,
+            max_steps: None,
+            warmup: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub tokens: u64,
+    pub busy_seconds: f64,
+    pub tokens_per_second: f64,
+    pub accept_len: f64,
+    pub prune_rate: f64,
+    pub tree_size_mean: f64,
+    pub steps: u64,
+    pub completions: usize,
+    pub report: BTreeMap<String, f64>,
+}
+
+/// Run one engine configuration over a deterministic trace.
+pub fn run_trace(
+    rt: &Runtime,
+    prompts: &PromptSet,
+    spec: &RunSpec,
+) -> Result<RunOutcome> {
+    if spec.warmup {
+        // Unmeasured prelude on a throwaway engine: compiles the (batch,
+        // tree) executables this configuration will touch and primes the
+        // estimators' cold start.
+        let mut w = Engine::new(rt, spec.engine.clone())?;
+        w.precompile()?;
+        let wt = generate_trace(
+            prompts,
+            &TraceConfig {
+                profile: spec.profile.clone(),
+                n_requests: spec.engine.max_batch.min(4),
+                rate: None,
+                seed: spec.seed ^ 0xdead,
+                max_new_tokens: Some(12),
+            },
+        )?;
+        for r in &wt {
+            w.submit(&r.prompt, r.max_new_tokens);
+        }
+        w.run_to_completion()?;
+    }
+    let mut engine = Engine::new(rt, spec.engine.clone())?;
+    let trace_cfg = TraceConfig {
+        profile: spec.profile.clone(),
+        n_requests: spec.n_requests,
+        rate: None,
+        seed: spec.seed,
+        max_new_tokens: spec.max_new_tokens,
+    };
+    let trace = generate_trace(prompts, &trace_cfg)?;
+    for r in &trace {
+        engine.submit(&r.prompt, r.max_new_tokens);
+    }
+    let mut completions = 0usize;
+    loop {
+        if let Some(cap) = spec.max_steps {
+            if engine.metrics.steps >= cap {
+                break;
+            }
+        }
+        if !engine.step()? {
+            break;
+        }
+        completions += engine.take_completions().len();
+    }
+    completions += engine.take_completions().len();
+    let report = engine.metrics.report();
+    Ok(RunOutcome {
+        tokens: engine.metrics.tokens_generated,
+        busy_seconds: engine.metrics.busy_seconds,
+        tokens_per_second: engine.metrics.tokens_per_second(),
+        accept_len: engine.metrics.mean_accept_len(),
+        prune_rate: engine.metrics.mean_prune_rate(),
+        tree_size_mean: report["tree_size_mean"],
+        steps: engine.metrics.steps,
+        completions,
+        report,
+    })
+}
+
+/// Load the prompt set, falling back to the synthetic pool when
+/// `prompts.json` is absent (keeps drivers runnable mid-build).
+pub fn load_prompts(artifacts: &std::path::Path) -> PromptSet {
+    PromptSet::load(artifacts)
+        .unwrap_or_else(|_| PromptSet::synthetic(64))
+}
+
+/// Sizing heuristic shared by the drivers: enough requests to keep the
+/// target batch busy for a few refill waves.
+pub fn requests_for_batch(batch: usize) -> usize {
+    (batch * 3).max(4)
+}

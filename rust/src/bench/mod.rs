@@ -1,0 +1,230 @@
+//! Bench harness utilities (std-only: the offline mirror has no criterion).
+//!
+//! - [`Bencher`]: warmup + timed iterations with mean/median/stddev.
+//! - [`Table`]: aligned text tables matching the paper's row layout; also
+//!   renders markdown for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 { 1.0 / self.mean_s } else { 0.0 }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12} {:>12} {:>12} {:>8}",
+            self.name,
+            format_secs(self.mean_s),
+            format_secs(self.median_s),
+            format_secs(self.min_s),
+            self.iters
+        )
+    }
+}
+
+pub fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, iters: 20 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters }
+    }
+
+    /// Time `f` (which must do one unit of work per call).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: stats::mean(&samples),
+            median_s: stats::median(&samples),
+            stddev_s: stats::stddev(&samples),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
+    }
+}
+
+pub fn bench_header() -> String {
+    format!(
+        "{:<40} {:>12} {:>12} {:>12} {:>8}",
+        "benchmark", "mean", "median", "min", "iters"
+    )
+}
+
+/// Aligned text table with an optional markdown rendering.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>()
+                .join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// `fmt_ratio(a, b)` → "1.73×" style speedup cells.
+pub fn fmt_ratio(num: f64, den: f64) -> String {
+    if den <= 0.0 {
+        "n/a".into()
+    } else {
+        format!("{:.2}×", num / den)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_positive_time() {
+        let b = Bencher::new(1, 5);
+        let r = b.run("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn format_secs_units() {
+        assert!(format_secs(2.0).ends_with(" s"));
+        assert!(format_secs(2e-3).ends_with(" ms"));
+        assert!(format_secs(2e-6).ends_with(" µs"));
+        assert!(format_secs(2e-10).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned_and_markdown() {
+        let mut t = Table::new("Demo", &["model", "tok/s"]);
+        t.row(vec!["7b".into(), "42.1".into()]);
+        t.row(vec!["13b-long".into(), "7.0".into()]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("13b-long"));
+        let md = t.render_markdown();
+        assert!(md.starts_with("### Demo"));
+        assert!(md.contains("| 7b | 42.1 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(fmt_ratio(3.0, 2.0), "1.50×");
+        assert_eq!(fmt_ratio(1.0, 0.0), "n/a");
+    }
+}
+pub mod harness;

@@ -1,0 +1,202 @@
+//! Serving configuration: a TOML-subset file format + CLI overrides.
+//!
+//! The offline crate mirror has no `toml`/`serde`, so this module parses
+//! the subset the launcher needs: `[section]` headers, `key = value` pairs
+//! with string/int/float/bool/flat-array values, `#` comments.  Every key
+//! is addressed as `section.key`; CLI `--set section.key=value` overrides
+//! file values.  See `configs/*.toml` for examples.
+
+pub mod toml_lite;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::{EngineConfig, EngineKind};
+use toml_lite::TomlValue;
+
+/// Top-level launcher configuration.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub artifacts: String,
+    pub engine: EngineConfig,
+    pub server: ServerConfig,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub max_queue: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:8321".into(), max_queue: 256 }
+    }
+}
+
+impl ServingConfig {
+    pub fn default_for(size: &str, kind: EngineKind) -> Self {
+        ServingConfig {
+            artifacts: crate::DEFAULT_ARTIFACTS.into(),
+            engine: EngineConfig::new(size, kind),
+            server: ServerConfig::default(),
+        }
+    }
+
+    /// Load from a TOML-subset file, then apply `--set k=v` overrides.
+    pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Self> {
+        let mut map = match path {
+            Some(p) => toml_lite::parse_file(p)?,
+            None => BTreeMap::new(),
+        };
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad override {ov:?}"))?;
+            map.insert(k.trim().to_string(), toml_lite::parse_scalar(v.trim())?);
+        }
+        Self::from_map(&map)
+    }
+
+    pub fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self> {
+        let gets = |k: &str| map.get(k).map(|v| v.as_str_lossy());
+        let get_us = |k: &str, d: usize| -> Result<usize> {
+            match map.get(k) {
+                Some(v) => v.as_usize().with_context(|| k.to_string()),
+                None => Ok(d),
+            }
+        };
+        let get_f = |k: &str, d: f64| -> Result<f64> {
+            match map.get(k) {
+                Some(v) => v.as_f64().with_context(|| k.to_string()),
+                None => Ok(d),
+            }
+        };
+        let get_b = |k: &str, d: bool| -> Result<bool> {
+            match map.get(k) {
+                Some(v) => v.as_bool().with_context(|| k.to_string()),
+                None => Ok(d),
+            }
+        };
+
+        let size = gets("engine.size").unwrap_or_else(|| "m".into());
+        let kind_s = gets("engine.kind").unwrap_or_else(|| "propd".into());
+        let kind = EngineKind::parse(&kind_s)
+            .ok_or_else(|| anyhow::anyhow!("unknown engine.kind {kind_s:?}"))?;
+        let mut e = EngineConfig::new(&size, kind);
+        e.early_prune = get_b("engine.early_prune", e.early_prune)?;
+        e.dynamic_tree = get_b("engine.dynamic_tree", e.dynamic_tree)?;
+        e.prune_layer = get_us("engine.prune_layer", e.prune_layer)?;
+        e.prune_top_k = get_us("engine.prune_top_k", e.prune_top_k)?;
+        e.static_tree_size =
+            get_us("engine.static_tree_size", e.static_tree_size)?;
+        e.max_rank = get_us("engine.max_rank", e.max_rank)?;
+        e.accept_alpha = get_f("engine.accept_alpha", e.accept_alpha)?;
+        e.perf_alpha = get_f("engine.perf_alpha", e.perf_alpha)?;
+        e.perf_lambda = get_f("engine.perf_lambda", e.perf_lambda)?;
+        e.max_batch = get_us("engine.max_batch", e.max_batch)?;
+        e.max_new_tokens =
+            get_us("engine.max_new_tokens", e.max_new_tokens)?;
+        e.planner.replan_interval =
+            get_us("planner.replan_interval",
+                   e.planner.replan_interval as usize)? as u64;
+        e.planner.seq_drift = get_f("planner.seq_drift",
+                                    e.planner.seq_drift)?;
+        e.validate()?;
+
+        let server = ServerConfig {
+            addr: gets("server.addr")
+                .unwrap_or_else(|| ServerConfig::default().addr),
+            max_queue: get_us("server.max_queue", 256)?,
+        };
+        let artifacts = gets("artifacts.dir")
+            .unwrap_or_else(|| crate::DEFAULT_ARTIFACTS.into());
+        if server.max_queue == 0 {
+            bail!("server.max_queue must be >= 1");
+        }
+        Ok(ServingConfig { artifacts, engine: e, server })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_file() {
+        let c = ServingConfig::load(None, &[]).unwrap();
+        assert_eq!(c.engine.size, "m");
+        assert_eq!(c.engine.kind, EngineKind::ProPD);
+        assert!(c.engine.early_prune);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = ServingConfig::load(
+            None,
+            &[
+                "engine.kind=medusa".into(),
+                "engine.static_tree_size=16".into(),
+                "engine.max_batch=4".into(),
+                "server.addr=\"0.0.0.0:9\"".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.engine.kind, EngineKind::Medusa);
+        assert_eq!(c.engine.static_tree_size, 16);
+        assert_eq!(c.engine.max_batch, 4);
+        assert_eq!(c.server.addr, "0.0.0.0:9");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("propd-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("serve.toml");
+        std::fs::write(
+            &p,
+            r#"
+# example config
+[engine]
+size = "m"
+kind = "propd"
+prune_top_k = 32
+accept_alpha = 0.1
+early_prune = true
+
+[server]
+addr = "127.0.0.1:7777"
+max_queue = 8
+"#,
+        )
+        .unwrap();
+        let c = ServingConfig::load(Some(&p), &[]).unwrap();
+        assert_eq!(c.engine.prune_top_k, 32);
+        assert!((c.engine.accept_alpha - 0.1).abs() < 1e-12);
+        assert_eq!(c.server.addr, "127.0.0.1:7777");
+        assert_eq!(c.server.max_queue, 8);
+        // override beats file
+        let c2 = ServingConfig::load(Some(&p),
+                                     &["engine.prune_top_k=4".into()])
+            .unwrap();
+        assert_eq!(c2.engine.prune_top_k, 4);
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        assert!(ServingConfig::load(None, &["engine.kind=warp".into()])
+            .is_err());
+    }
+
+    #[test]
+    fn invalid_engine_values_rejected() {
+        assert!(ServingConfig::load(
+            None,
+            &["engine.static_tree_size=0".into()]
+        )
+        .is_err());
+    }
+}

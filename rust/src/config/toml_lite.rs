@@ -1,0 +1,198 @@
+//! TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//! Values: quoted strings, booleans, integers, floats, flat arrays.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str_lossy(&self) -> String {
+        match self {
+            TomlValue::Str(s) => s.clone(),
+            TomlValue::Int(i) => i.to_string(),
+            TomlValue::Float(f) => f.to_string(),
+            TomlValue::Bool(b) => b.to_string(),
+            TomlValue::Arr(_) => "<array>".into(),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            v => bail!("expected non-negative integer, got {v:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            v => bail!("expected number, got {v:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            v => bail!("expected bool, got {v:?}"),
+        }
+    }
+
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        match self {
+            TomlValue::Arr(items) => {
+                items.iter().map(|v| v.as_usize()).collect()
+            }
+            v => bail!("expected array, got {v:?}"),
+        }
+    }
+}
+
+/// Parse one scalar (or flat array) value.
+pub fn parse_scalar(s: &str) -> Result<TomlValue> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string {s:?}");
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array {s:?}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let items = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(parse_scalar)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    // Bare identifiers count as strings (engine kinds etc. read naturally).
+    if s.chars().all(|c| c.is_alphanumeric() || "._-:/".contains(c)) {
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Parse a document into a flat `section.key → value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // Only strip comments outside quotes (values here never contain
+            // '#' inside strings in practice; keep it simple but safe-ish).
+            Some(i) if !raw[..i].contains('"')
+                || raw[..i].matches('"').count() % 2 == 0 => &raw[..i],
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: bad section header {line:?}", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            anyhow!("line {}: expected key = value, got {line:?}",
+                    lineno + 1)
+        })?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let val = parse_scalar(v)
+            .with_context(|| format!("line {}", lineno + 1))?;
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+pub fn parse_file(path: &Path) -> Result<BTreeMap<String, TomlValue>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse_scalar("42").unwrap(), TomlValue::Int(42));
+        assert_eq!(parse_scalar("-3").unwrap(), TomlValue::Int(-3));
+        assert_eq!(parse_scalar("0.5").unwrap(), TomlValue::Float(0.5));
+        assert_eq!(parse_scalar("true").unwrap(), TomlValue::Bool(true));
+        assert_eq!(
+            parse_scalar("\"hi there\"").unwrap(),
+            TomlValue::Str("hi there".into())
+        );
+        assert_eq!(parse_scalar("propd").unwrap(),
+                   TomlValue::Str("propd".into()));
+        assert_eq!(
+            parse_scalar("[1, 2, 3]").unwrap().as_usize_vec().unwrap(),
+            vec![1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn document() {
+        let m = parse(
+            "top = 1\n[a]\nx = 2  # comment\ny = \"z\"\n\n[b.c]\nflag = false\n",
+        )
+        .unwrap();
+        assert_eq!(m["top"], TomlValue::Int(1));
+        assert_eq!(m["a.x"], TomlValue::Int(2));
+        assert_eq!(m["a.y"], TomlValue::Str("z".into()));
+        assert_eq!(m["b.c.flag"], TomlValue::Bool(false));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[oops\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse_scalar("\"open").is_err());
+        assert!(parse_scalar("[1,").is_err());
+        assert!(parse_scalar("a b").is_err());
+    }
+
+    #[test]
+    fn conversions() {
+        assert!(TomlValue::Int(-1).as_usize().is_err());
+        assert_eq!(TomlValue::Int(3).as_f64().unwrap(), 3.0);
+        assert!(TomlValue::Str("x".into()).as_bool().is_err());
+    }
+}

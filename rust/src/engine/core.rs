@@ -1,0 +1,439 @@
+//! The engine driver: admission, prefill, the step loop, retirement.
+//!
+//! Continuous batching: new requests are admitted (prefilled) whenever a
+//! lane is free; every step runs the whole active set through one batched
+//! entry-point call, padded up to the nearest batch bucket.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::requests::{Completion, ReqState, RequestSpec};
+use super::{EngineConfig, EngineKind};
+use crate::estimator::{AcceptanceTracker, PerfModel, Planner};
+use crate::kvcache::{KvCache, KvGeometry};
+use crate::manifest::{Entry, ModelMeta};
+use crate::metrics::EngineMetrics;
+use crate::runtime::Runtime;
+use crate::tokenizer::ByteTokenizer;
+use crate::tree::accept::argmax;
+use crate::tree::TreeBuilder;
+
+pub struct Engine<'rt> {
+    pub cfg: EngineConfig,
+    pub(super) rt: &'rt Runtime,
+    pub(super) model: ModelMeta,
+    /// Tree-size buckets actually covered by this size's artifact grid
+    /// (reduced-grid sizes have fewer buckets than the global list).
+    pub(super) tree_buckets: Vec<usize>,
+    /// Post-pruning (verify_late) size buckets available.
+    pub(super) late_buckets: Vec<usize>,
+    /// Batch buckets covered for this (size, prune_layer) — the Table-2
+    /// layer-sweep artifacts exist only at BS=4, so non-default layers pad
+    /// up to that batch.
+    pub(super) batch_buckets: Vec<usize>,
+    pub(super) kv: KvCache,
+    pub(super) tokenizer: ByteTokenizer,
+    pub(super) queue: VecDeque<RequestSpec>,
+    pub(super) active: Vec<ReqState>,
+    pub(super) done: Vec<Completion>,
+    pub(super) tracker: AcceptanceTracker,
+    pub(super) perf: PerfModel,
+    pub(super) planner: Planner,
+    pub(super) builder: TreeBuilder,
+    pub metrics: EngineMetrics,
+    pub(super) clock: Instant,
+    /// Reusable batch-KV assembly scratch (§Perf: zero-alloc hot loop).
+    pub(super) kv_scratch: Vec<f32>,
+    next_id: u64,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let model = rt.manifest.model(&cfg.size)?.clone();
+        if cfg.kind.uses_tree()
+            && !model.early_layers.contains(&cfg.prune_layer)
+        {
+            bail!(
+                "prune_layer {} not in model early_layers {:?}",
+                cfg.prune_layer,
+                model.early_layers
+            );
+        }
+        // Discover the (batch, tree) grid the artifacts actually cover for
+        // this size + prune layer.  Early buckets size the generated tree;
+        // late buckets size the post-pruning stage; batch buckets are those
+        // where BOTH stages exist.
+        let mut tree_buckets: Vec<usize> = Vec::new();
+        let mut late_buckets: Vec<usize> = Vec::new();
+        let mut batch_buckets: Vec<usize> = Vec::new();
+        if cfg.kind.uses_tree() {
+            for a in &rt.manifest.artifacts {
+                if a.size != cfg.size || a.n_layer != Some(cfg.prune_layer) {
+                    continue;
+                }
+                match a.entry {
+                    Entry::VerifyEarly => {
+                        tree_buckets.push(a.tree.unwrap_or(0));
+                    }
+                    Entry::VerifyLate => {
+                        late_buckets.push(a.tree.unwrap_or(0));
+                    }
+                    _ => {}
+                }
+            }
+            for &b in &rt.manifest.batch_buckets {
+                let early_ok = rt.manifest.artifacts.iter().any(|a| {
+                    a.size == cfg.size
+                        && a.entry == Entry::VerifyEarly
+                        && a.n_layer == Some(cfg.prune_layer)
+                        && a.batch == b
+                });
+                let late_ok = rt.manifest.artifacts.iter().any(|a| {
+                    a.size == cfg.size
+                        && a.entry == Entry::VerifyLate
+                        && a.n_layer == Some(cfg.prune_layer)
+                        && a.batch == b
+                });
+                if early_ok && late_ok {
+                    batch_buckets.push(b);
+                }
+            }
+            tree_buckets.sort_unstable();
+            tree_buckets.dedup();
+            late_buckets.sort_unstable();
+            late_buckets.dedup();
+            if tree_buckets.is_empty() || batch_buckets.is_empty() {
+                bail!(
+                    "no verify artifacts for size {} at prune layer {}",
+                    cfg.size,
+                    cfg.prune_layer
+                );
+            }
+        } else {
+            batch_buckets = rt.manifest.batch_buckets.clone();
+        }
+        if tree_buckets.is_empty() {
+            tree_buckets = rt.manifest.tree_buckets.clone();
+        }
+        if late_buckets.is_empty() {
+            late_buckets = tree_buckets.clone();
+        }
+        if cfg.max_batch > *batch_buckets.last().unwrap() {
+            bail!(
+                "max_batch {} exceeds largest covered batch bucket {}",
+                cfg.max_batch,
+                batch_buckets.last().unwrap()
+            );
+        }
+        let planner_cfg = crate::estimator::planner::PlannerConfig {
+            buckets: tree_buckets.clone(),
+            ..cfg.planner.clone()
+        };
+        let kv = KvCache::new(KvGeometry::of(&model), cfg.max_batch);
+        Ok(Engine {
+            tree_buckets,
+            late_buckets,
+            batch_buckets,
+            tracker: AcceptanceTracker::new(
+                model.n_medusa,
+                cfg.max_rank,
+                cfg.accept_alpha,
+            ),
+            perf: PerfModel::new(cfg.perf_alpha, cfg.perf_lambda),
+            planner: Planner::new(planner_cfg, model.max_seq),
+            builder: TreeBuilder::new(cfg.max_rank),
+            kv,
+            model,
+            rt,
+            cfg,
+            tokenizer: ByteTokenizer,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            metrics: EngineMetrics::default(),
+            clock: Instant::now(),
+            kv_scratch: Vec::new(),
+            next_id: 1,
+        })
+    }
+
+    pub fn model(&self) -> &ModelMeta {
+        &self.model
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock.elapsed().as_secs_f64()
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn submit(&mut self, prompt: &str, max_new_tokens: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let arrival = self.now();
+        self.queue.push_back(RequestSpec {
+            id,
+            prompt: prompt.to_string(),
+            max_new_tokens,
+            arrival,
+        });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    /// Requests currently holding a KV slot (mid-generation).
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Mean committed sequence length over active requests (0 when idle).
+    pub fn mean_seq_len(&self) -> f64 {
+        if self.active.is_empty() {
+            return 0.0;
+        }
+        self.active.iter().map(|r| r.seq_len()).sum::<usize>() as f64
+            / self.active.len() as f64
+    }
+
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Run until every submitted request completes; returns completions.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while self.step()? {}
+        Ok(self.take_completions())
+    }
+
+    /// One engine iteration.  Returns false when idle.
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit().context("admission")?;
+        if self.active.is_empty() {
+            return Ok(false);
+        }
+        let t0 = Instant::now();
+        match self.cfg.kind {
+            EngineKind::Autoregressive => self.step_autoregressive()?,
+            _ => self.step_tree()?,
+        }
+        self.metrics.busy_seconds += t0.elapsed().as_secs_f64();
+        self.metrics.steps += 1;
+        self.retire();
+        Ok(true)
+    }
+
+    /// Admit queued requests into free lanes (batched prefill).
+    fn admit(&mut self) -> Result<()> {
+        let free = self.cfg.max_batch.saturating_sub(self.active.len());
+        if free == 0 || self.queue.is_empty() {
+            return Ok(());
+        }
+        let n = free.min(self.queue.len());
+        let specs: Vec<RequestSpec> =
+            (0..n).map(|_| self.queue.pop_front().unwrap()).collect();
+        self.prefill(specs)
+    }
+
+    /// Batched prefill of newly admitted requests.
+    fn prefill(&mut self, specs: Vec<RequestSpec>) -> Result<()> {
+        use super::inputs::pack_prompts;
+        let started = self.now();
+        let prompts: Vec<Vec<u32>> = specs
+            .iter()
+            .map(|s| self.tokenizer.encode(&s.prompt))
+            .collect();
+        let b_real = specs.len();
+        let b = self.rt.manifest.batch_bucket(b_real);
+        // Pad the prompt list by repeating the first prompt (dummy lanes).
+        let mut padded = prompts.clone();
+        while padded.len() < b {
+            padded.push(prompts[0].clone());
+        }
+        let (toks, lens, kept) = pack_prompts(&padded, &self.model);
+        let outs = self
+            .rt
+            .run(&self.cfg.size, Entry::Prefill, None, b, None,
+                 &[toks, lens])
+            .context("prefill")?;
+        let logits = &outs[0]; // [b, V]
+        let medusa = &outs[1]; // [b, M, V]
+        let block_kv = &outs[2]; // [L, 2, b, P, H, Dh]
+        let v = self.model.vocab;
+        let m_heads = self.model.n_medusa;
+        let p_bucket = self.model.max_prompt;
+        for (lane, spec) in specs.into_iter().enumerate() {
+            let slot = self.kv.acquire().context("kv slots")?;
+            let plen = kept[lane];
+            // Commit the prompt's KV columns (positions 0..plen).
+            let pairs: Vec<(usize, usize)> =
+                (0..plen).map(|j| (j, j)).collect();
+            self.kv.commit_columns(
+                slot,
+                block_kv.as_f32(),
+                (self.model.n_layers, b, p_bucket),
+                0,
+                lane,
+                &pairs,
+            );
+            let row = logits.f32_chunk(lane * v, v);
+            let pending_root = argmax(row) as u32;
+            let medusa_rows =
+                medusa.f32_chunk(lane * m_heads * v, m_heads * v).to_vec();
+            let mut req = ReqState {
+                id: spec.id,
+                prompt: spec.prompt,
+                prompt_len: plen,
+                tokens: prompts[lane][prompts[lane].len() - plen..].to_vec(),
+                slot,
+                pending_root,
+                medusa_rows,
+                ledger: VecDeque::new(),
+                max_new_tokens: spec.max_new_tokens,
+                steps: 0,
+                arrival: spec.arrival,
+                started,
+                done: false,
+            };
+            req.remember_prediction(v);
+            self.metrics.queue_delay.record(started - req.arrival);
+            self.metrics.prefills += 1;
+            self.active.push(req);
+        }
+        Ok(())
+    }
+
+    /// Maximum tokens a request may still hold (keeps trees in range).
+    pub(super) fn room(&self, req: &ReqState) -> usize {
+        let hard = self.model.max_seq.saturating_sub(req.seq_len() + 2 + 64);
+        let budget =
+            req.max_new_tokens.saturating_sub(req.generated());
+        hard.min(budget)
+    }
+
+    /// Mark a request done when budget/stop/capacity is reached.
+    pub(super) fn check_done(&mut self, idx: usize) {
+        let req = &mut self.active[idx];
+        let gen = req.generated();
+        let stop = self.tokenizer.is_stop(req.generated_tokens());
+        let capacity =
+            req.seq_len() + 2 + 64 >= self.model.max_seq;
+        if gen >= req.max_new_tokens || stop || capacity {
+            req.done = true;
+        }
+    }
+
+    /// Move finished requests out of the active set.
+    fn retire(&mut self) {
+        let now = self.now();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].done {
+                let req = self.active.swap_remove(i);
+                self.kv.release(req.slot);
+                let text =
+                    self.tokenizer.decode(req.generated_tokens());
+                self.metrics.requests_completed += 1;
+                self.metrics
+                    .request_latency
+                    .record(now - req.arrival);
+                self.done.push(Completion {
+                    id: req.id,
+                    prompt: req.prompt,
+                    text,
+                    tokens: req.tokens[req.prompt_len..].to_vec(),
+                    steps: req.steps,
+                    latency_seconds: now - req.arrival,
+                    queue_seconds: req.started - req.arrival,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Compile every executable this engine configuration can touch
+    /// (standard serving practice: pay XLA compilation at startup, never
+    /// on the request path).  Idempotent; executables are cached in the
+    /// runtime and shared across engines.
+    pub fn precompile(&mut self) -> Result<usize> {
+        let maxb = crate::manifest::bucket_for(
+            self.cfg.max_batch,
+            &self.batch_buckets,
+        );
+        let mut compiled = 0usize;
+        let bb: Vec<usize> = self
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b <= maxb)
+            .collect();
+        // prefill/decode cover the manifest's full batch grid.
+        for &b in self.rt.manifest.batch_buckets.clone().iter()
+            .filter(|&&b| b <= self.rt.manifest.batch_bucket(self.cfg.max_batch))
+        {
+            let key =
+                crate::manifest::Manifest::key_for(&self.cfg.size,
+                                                   Entry::Prefill, None, b,
+                                                   None);
+            self.rt.executable(&key)?;
+            compiled += 1;
+            if self.cfg.kind == EngineKind::Autoregressive {
+                let key = crate::manifest::Manifest::key_for(
+                    &self.cfg.size, Entry::Decode, None, b, None);
+                self.rt.executable(&key)?;
+                compiled += 1;
+            }
+        }
+        if self.cfg.kind.uses_tree() {
+            let n = self.cfg.prune_layer;
+            for &b in &bb {
+                for &t in &self.tree_buckets.clone() {
+                    let key = crate::manifest::Manifest::key_for(
+                        &self.cfg.size, Entry::VerifyEarly, Some(n), b,
+                        Some(t));
+                    if self.rt.manifest.by_key(&key).is_ok() {
+                        self.rt.executable(&key)?;
+                        compiled += 1;
+                    }
+                }
+                for &t in &self.late_buckets.clone() {
+                    let key = crate::manifest::Manifest::key_for(
+                        &self.cfg.size, Entry::VerifyLate, Some(n), b,
+                        Some(t));
+                    if self.rt.manifest.by_key(&key).is_ok() {
+                        self.rt.executable(&key)?;
+                        compiled += 1;
+                    }
+                }
+            }
+        }
+        Ok(compiled)
+    }
+
+    /// Fitted iteration-time model (β0, β1) — §4.2.1 diagnostics.
+    pub fn perf_fit(&self) -> (f64, f64) {
+        self.perf.fit()
+    }
+
+    /// Acceptance-tracker update count — §4.2.2 diagnostics.
+    pub fn tracker_updates(&self) -> u64 {
+        self.tracker.updates()
+    }
+
+    /// Diagnostic snapshot of the estimators (used by `propd inspect`).
+    pub fn estimator_snapshot(&self) -> String {
+        let (b0, b1) = self.perf.fit();
+        format!(
+            "perf: T_est(i) = {b0:.6} + {b1:.6}·i over {} sizes; \
+             tracker updates: {}; planner replans: {}",
+            self.perf.observations(),
+            self.tracker.updates(),
+            self.planner.replans(),
+        )
+    }
+}

@@ -1,0 +1,227 @@
+//! Batched input assembly for the entry points (zero surprises, heavily
+//! tested: every tensor layout here must match `python/compile/model.py`).
+
+use crate::manifest::ModelMeta;
+use crate::runtime::literal::{HostTensor, NEG_INF};
+use crate::tree::{TokenTree, TreeMask};
+
+/// Pack per-lane token trees into `tree_tok [b, t]` (i32).
+/// Padding nodes repeat the lane's root token at the root position so they
+/// stay in-vocabulary and in-range; their outputs are never read.
+pub fn pack_tree_tokens(trees: &[&TokenTree], t_bucket: usize) -> HostTensor {
+    let b = trees.len();
+    let mut out = vec![0i32; b * t_bucket];
+    for (lane, tree) in trees.iter().enumerate() {
+        let root = tree.node(0).token as i32;
+        for j in 0..t_bucket {
+            out[lane * t_bucket + j] = if j < tree.len() {
+                tree.node(j).token as i32
+            } else {
+                root
+            };
+        }
+    }
+    HostTensor::i32(vec![b, t_bucket], out)
+}
+
+/// Pack positions `tree_pos [b, t]`: node depth offsets from each lane's
+/// committed length; padding nodes sit at the root position.
+pub fn pack_tree_positions(
+    trees: &[&TokenTree],
+    seq_lens: &[usize],
+    t_bucket: usize,
+) -> HostTensor {
+    let b = trees.len();
+    let mut out = vec![0i32; b * t_bucket];
+    for (lane, tree) in trees.iter().enumerate() {
+        let base = seq_lens[lane];
+        for j in 0..t_bucket {
+            out[lane * t_bucket + j] = if j < tree.len() {
+                (base + tree.node(j).depth) as i32
+            } else {
+                base as i32
+            };
+        }
+    }
+    HostTensor::i32(vec![b, t_bucket], out)
+}
+
+/// Pack dense additive masks `tree_mask [b, t, t]` from per-lane bitset
+/// masks (already padded to `t_bucket`).
+pub fn pack_tree_masks(masks: &[&TreeMask], t_bucket: usize) -> HostTensor {
+    let b = masks.len();
+    let mut out = vec![NEG_INF; b * t_bucket * t_bucket];
+    for (lane, m) in masks.iter().enumerate() {
+        debug_assert_eq!(m.bucket(), t_bucket);
+        m.write_dense(&mut out[lane * t_bucket * t_bucket
+            ..(lane + 1) * t_bucket * t_bucket]);
+    }
+    HostTensor::f32(vec![b, t_bucket, t_bucket], out)
+}
+
+/// `seq_len [b]` i32.
+pub fn pack_seq_lens(seq_lens: &[usize]) -> HostTensor {
+    HostTensor::i32(
+        vec![seq_lens.len()],
+        seq_lens.iter().map(|&s| s as i32).collect(),
+    )
+}
+
+/// Compact the early-stage hidden states `[b, t, d]` into `[b, t', d]`
+/// per-lane gathers (`keeps[lane]` = surviving original indices).  Pad rows
+/// are zeros (masked to self-attention; outputs ignored).
+pub fn compact_hidden(
+    hidden: &HostTensor,
+    keeps: &[Vec<usize>],
+    t_prime: usize,
+) -> HostTensor {
+    let (b, t, d) = (hidden.shape[0], hidden.shape[1], hidden.shape[2]);
+    assert_eq!(b, keeps.len());
+    let src = hidden.as_f32();
+    let mut out = vec![0f32; b * t_prime * d];
+    for (lane, keep) in keeps.iter().enumerate() {
+        debug_assert!(keep.len() <= t_prime);
+        for (nj, &oj) in keep.iter().enumerate() {
+            debug_assert!(oj < t);
+            let s = (lane * t + oj) * d;
+            let o = (lane * t_prime + nj) * d;
+            out[o..o + d].copy_from_slice(&src[s..s + d]);
+        }
+    }
+    HostTensor::f32(vec![b, t_prime, d], out)
+}
+
+/// Pack prompts into `tokens [b, P]` + `prompt_len [b]` for prefill.
+/// Prompts longer than P are truncated from the LEFT (keep the recent
+/// context), matching common serving practice.
+pub fn pack_prompts(
+    prompts: &[Vec<u32>],
+    meta: &ModelMeta,
+) -> (HostTensor, HostTensor, Vec<usize>) {
+    let b = prompts.len();
+    let p_max = meta.max_prompt;
+    let mut toks = vec![0i32; b * p_max];
+    let mut lens = vec![0i32; b];
+    let mut kept: Vec<usize> = Vec::with_capacity(b);
+    for (lane, p) in prompts.iter().enumerate() {
+        let start = p.len().saturating_sub(p_max);
+        let slice = &p[start..];
+        for (j, &tok) in slice.iter().enumerate() {
+            toks[lane * p_max + j] = tok as i32;
+        }
+        lens[lane] = slice.len() as i32;
+        kept.push(slice.len());
+    }
+    (
+        HostTensor::i32(vec![b, p_max], toks),
+        HostTensor::i32(vec![b], lens),
+        kept,
+    )
+}
+
+/// Ranked top-R token ids of each medusa head from row-major [M, V] logits.
+pub fn medusa_top_tokens(rows: &[f32], vocab: usize, r: usize) -> Vec<Vec<u32>> {
+    let m = rows.len() / vocab;
+    let mut out = Vec::with_capacity(m);
+    for h in 0..m {
+        let row = &rows[h * vocab..(h + 1) * vocab];
+        let mut idx: Vec<u32> = (0..vocab as u32).collect();
+        idx.sort_by(|&a, &b| {
+            row[b as usize]
+                .partial_cmp(&row[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(r);
+        out.push(idx);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::TokenTree;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 4,
+            n_heads: 2,
+            head_dim: 2,
+            d_ff: 8,
+            vocab: 16,
+            max_seq: 32,
+            max_prompt: 8,
+            n_medusa: 2,
+            early_layers: vec![1],
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn tokens_padded_with_root() {
+        let t1 = TokenTree::chain(&[5, 6]);
+        let t2 = TokenTree::chain(&[9]);
+        let packed = pack_tree_tokens(&[&t1, &t2], 4);
+        assert_eq!(packed.shape, vec![2, 4]);
+        assert_eq!(packed.as_i32(), &[5, 6, 5, 5, 9, 9, 9, 9]);
+    }
+
+    #[test]
+    fn positions_use_depth_offsets() {
+        let t1 = TokenTree::chain(&[5, 6, 7]);
+        let packed = pack_tree_positions(&[&t1], &[10], 4);
+        assert_eq!(packed.as_i32(), &[10, 11, 12, 10]);
+    }
+
+    #[test]
+    fn masks_dense_layout() {
+        let t1 = TokenTree::chain(&[5, 6]);
+        let m = TreeMask::build(&t1, 2);
+        let packed = pack_tree_masks(&[&m], 2);
+        assert_eq!(packed.shape, vec![1, 2, 2]);
+        assert_eq!(packed.as_f32(), &[0.0, NEG_INF, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn compact_hidden_gathers_rows() {
+        // b=1, t=3, d=2; keep rows [0, 2] into t'=3
+        let h = HostTensor::f32(vec![1, 3, 2],
+                                vec![1., 2., 3., 4., 5., 6.]);
+        let out = compact_hidden(&h, &[vec![0, 2]], 3);
+        assert_eq!(out.as_f32(), &[1., 2., 5., 6., 0., 0.]);
+    }
+
+    #[test]
+    fn prompts_pad_and_left_truncate() {
+        let m = meta();
+        let long: Vec<u32> = (0..12).collect(); // > max_prompt = 8
+        let (toks, lens, kept) = pack_prompts(&[vec![1, 2], long], &m);
+        assert_eq!(toks.shape, vec![2, 8]);
+        assert_eq!(&toks.as_i32()[..3], &[1, 2, 0]);
+        assert_eq!(lens.as_i32(), &[2, 8]);
+        // left-truncated: keeps tokens 4..12
+        assert_eq!(&toks.as_i32()[8..11], &[4, 5, 6]);
+        assert_eq!(kept, vec![2, 8]);
+    }
+
+    #[test]
+    fn medusa_top_tokens_ranked() {
+        let vocab = 4;
+        let rows = vec![
+            0.1, 0.9, 0.5, 0.2, // head 0: 1, 2, 3, 0
+            1.0, 0.0, 0.0, 2.0, // head 1: 3, 0, 1, 2
+        ];
+        let tops = medusa_top_tokens(&rows, vocab, 2);
+        assert_eq!(tops, vec![vec![1, 2], vec![3, 0]]);
+    }
+
+    #[test]
+    fn medusa_top_tokens_deterministic_on_ties() {
+        let rows = vec![1.0f32; 4];
+        let tops = medusa_top_tokens(&rows, 4, 3);
+        assert_eq!(tops[0], vec![0, 1, 2]);
+    }
+}

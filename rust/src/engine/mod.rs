@@ -1,0 +1,201 @@
+//! Decode engines.
+//!
+//! Four engines share one substrate (prefill, KV management, batched entry-
+//! point execution) and differ in how they speculate:
+//!
+//! - [`EngineKind::Autoregressive`] — one `decode` call per token (baseline).
+//! - [`EngineKind::Bpd`] — blockwise parallel decoding: a single chain of
+//!   the heads' top-1 predictions (k = 1), verified in one pass.
+//! - [`EngineKind::Medusa`] — static token tree (fixed shape from a
+//!   canonical head profile), tree attention verification.
+//! - [`EngineKind::ProPD`] — Medusa plus the paper's two contributions,
+//!   individually toggleable for the Table-3 ablation: **early pruning**
+//!   (§4.1) and **dynamic token tree generation** (§4.2).
+//!
+//! All verification engines run the same two-stage artifact pair
+//! (`verify_early` at the pruning layer n, then `verify_late`); the
+//! non-pruning engines simply keep every node between the stages, so the
+//! baselines pay the identical substrate costs and comparisons isolate the
+//! algorithm.
+
+pub mod core;
+pub mod inputs;
+pub mod probe;
+pub mod requests;
+pub mod step_ar;
+pub mod step_tree;
+
+pub use core::Engine;
+pub use requests::{Completion, ReqState, RequestSpec};
+
+use crate::estimator::planner::PlannerConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Autoregressive,
+    Bpd,
+    Medusa,
+    ProPD,
+}
+
+impl EngineKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineKind::Autoregressive => "autoregressive",
+            EngineKind::Bpd => "bpd",
+            EngineKind::Medusa => "medusa",
+            EngineKind::ProPD => "propd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "autoregressive" | "ar" => EngineKind::Autoregressive,
+            "bpd" => EngineKind::Bpd,
+            "medusa" => EngineKind::Medusa,
+            "propd" => EngineKind::ProPD,
+            _ => return None,
+        })
+    }
+
+    pub fn uses_tree(&self) -> bool {
+        !matches!(self, EngineKind::Autoregressive)
+    }
+}
+
+/// Engine configuration (see `config/` for file loading + CLI overrides).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub size: String,
+    pub kind: EngineKind,
+    /// §4.1 early pruning (ProPD component 1; Table-3 ablation toggle).
+    pub early_prune: bool,
+    /// §4.2 dynamic token tree generation (component 2; ablation toggle).
+    pub dynamic_tree: bool,
+    /// Pruning layer n (must be in the model's `early_layers`).
+    pub prune_layer: usize,
+    /// Pruning Top-k retention parameter.
+    pub prune_top_k: usize,
+    /// Tree size when dynamic generation is off (Medusa baseline & ablation).
+    pub static_tree_size: usize,
+    /// Highest medusa rank considered while building trees.
+    pub max_rank: usize,
+    /// EWMA factor α for the acceptance tracker (§4.2.2).
+    pub accept_alpha: f64,
+    /// EWMA factor α for the iteration-time model (§4.2.1).
+    pub perf_alpha: f64,
+    /// Recency decay λ for the regression weights (§4.2.1).
+    pub perf_lambda: f64,
+    pub planner: PlannerConfig,
+    /// Maximum concurrent requests (bounded by the KV slot pool).
+    pub max_batch: usize,
+    /// Default per-request generation budget.
+    pub max_new_tokens: usize,
+}
+
+impl EngineConfig {
+    pub fn new(size: &str, kind: EngineKind) -> Self {
+        EngineConfig {
+            size: size.to_string(),
+            kind,
+            early_prune: kind == EngineKind::ProPD,
+            dynamic_tree: kind == EngineKind::ProPD,
+            prune_layer: 2,
+            prune_top_k: 16,
+            static_tree_size: 32,
+            max_rank: 8,
+            accept_alpha: 0.05,
+            perf_alpha: 0.2,
+            perf_lambda: 0.05,
+            planner: PlannerConfig::default(),
+            max_batch: 8,
+            max_new_tokens: 64,
+        }
+    }
+
+    /// The Table-3 ablation rows: (early_prune, dynamic_tree) toggles on a
+    /// ProPD engine.
+    pub fn ablation(size: &str, early: bool, dynamic: bool) -> Self {
+        let mut c = Self::new(size, EngineKind::ProPD);
+        c.early_prune = early;
+        c.dynamic_tree = dynamic;
+        c
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::bail;
+        if self.static_tree_size == 0 || self.static_tree_size > 64 {
+            bail!("static_tree_size must be in 1..=64");
+        }
+        if self.max_rank == 0 {
+            bail!("max_rank must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.accept_alpha)
+            || !(0.0..=1.0).contains(&self.perf_alpha)
+        {
+            bail!("alphas must be in [0,1]");
+        }
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Per-step statistics surfaced to metrics and the bench harness.
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub batch: usize,
+    pub tree_size: usize,
+    pub pruned_size: usize,
+    pub accepted: Vec<usize>,
+    pub iter_seconds: f64,
+    pub tokens_committed: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [
+            EngineKind::Autoregressive,
+            EngineKind::Bpd,
+            EngineKind::Medusa,
+            EngineKind::ProPD,
+        ] {
+            assert_eq!(EngineKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(EngineKind::parse("ar"), Some(EngineKind::Autoregressive));
+        assert_eq!(EngineKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn defaults_enable_propd_components_only_for_propd() {
+        let c = EngineConfig::new("m", EngineKind::Medusa);
+        assert!(!c.early_prune && !c.dynamic_tree);
+        let c = EngineConfig::new("m", EngineKind::ProPD);
+        assert!(c.early_prune && c.dynamic_tree);
+    }
+
+    #[test]
+    fn validate_catches_bad_values() {
+        let mut c = EngineConfig::new("m", EngineKind::ProPD);
+        assert!(c.validate().is_ok());
+        c.static_tree_size = 0;
+        assert!(c.validate().is_err());
+        c.static_tree_size = 128;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::new("m", EngineKind::ProPD);
+        c.accept_alpha = 2.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn ablation_rows() {
+        let c = EngineConfig::ablation("m", true, false);
+        assert!(c.early_prune && !c.dynamic_tree);
+        assert_eq!(c.kind, EngineKind::ProPD);
+    }
+}

@@ -1,0 +1,175 @@
+//! Measurement probes used by the figure drivers (not on the serving path).
+
+use anyhow::{bail, Result};
+
+use super::core::Engine;
+use super::inputs::{pack_seq_lens, pack_tree_masks, pack_tree_positions,
+                    pack_tree_tokens};
+use crate::estimator::acceptance::rank_of;
+use crate::manifest::Entry;
+use crate::tree::{TokenTree, TreeMask};
+
+impl<'rt> Engine<'rt> {
+    /// Fig 3a probe: for every *active* request, feed its most recent
+    /// committed tokens through `verify_early` at layer `n_layer` as a
+    /// degenerate chain tree and record, per chain position, the rank the
+    /// early head assigns to the *actual* next token.
+    ///
+    /// Requires the layer-sweep artifacts (`verify_early_n{n}_b4_t64`,
+    /// emitted for the default size); call with exactly ≤ 4 active
+    /// requests.
+    pub fn probe_early_ranks(&mut self, n_layer: usize)
+        -> Result<Vec<usize>> {
+        const B: usize = 4;
+        const T: usize = 64;
+        if self.active.is_empty() {
+            bail!("probe requires active requests");
+        }
+        if self.active.len() > B {
+            bail!("probe supports at most {B} active requests");
+        }
+        let v = self.model.vocab;
+
+        // Chain = the last ≤T committed tokens *excluding* the final one
+        // (each chain position predicts its successor, which must be
+        // committed so we can score it).
+        let mut chains: Vec<Vec<u32>> = Vec::new();
+        let mut starts: Vec<usize> = Vec::new();
+        for req in &self.active {
+            let n_tok = req.tokens.len();
+            if n_tok < 2 {
+                chains.push(vec![req.tokens[0]]);
+                starts.push(0);
+                continue;
+            }
+            let take = T.min(n_tok - 1);
+            let start = n_tok - 1 - take;
+            chains.push(req.tokens[start..n_tok - 1].to_vec());
+            starts.push(start);
+        }
+
+        let trees: Vec<TokenTree> =
+            chains.iter().map(|c| TokenTree::chain(c)).collect();
+        let masks: Vec<TreeMask> =
+            trees.iter().map(|t| TreeMask::build(t, T)).collect();
+        // The chain re-processes committed positions: attention over the
+        // past must stop where the chain starts, so seq_len = start.
+        let mut sl: Vec<usize> = starts.clone();
+        let mut tr: Vec<&TokenTree> = trees.iter().collect();
+        let mut mr: Vec<&TreeMask> = masks.iter().collect();
+        let mut lanes: Vec<usize> =
+            self.active.iter().map(|r| r.slot).collect();
+        while tr.len() < B {
+            tr.push(&trees[0]);
+            mr.push(&masks[0]);
+            sl.push(starts[0]);
+            lanes.push(lanes[0]);
+        }
+
+        let inputs = [
+            pack_tree_tokens(&tr, T),
+            pack_tree_positions(&tr, &sl, T),
+            pack_tree_masks(&mr, T),
+            pack_seq_lens(&sl),
+            self.kv.batch_tensor(&lanes),
+        ];
+        let outs = self.rt.run(
+            &self.cfg.size,
+            Entry::VerifyEarly,
+            Some(n_layer),
+            B,
+            Some(T),
+            &inputs,
+        )?;
+        let early_logits = &outs[1]; // [B, T, V]
+
+        let mut ranks = Vec::new();
+        for (lane, req) in self.active.iter().enumerate() {
+            let chain = &chains[lane];
+            for (j, _) in chain.iter().enumerate() {
+                // early head at chain position j predicts the token at
+                // absolute position starts[lane] + j + 1.
+                let actual =
+                    req.tokens[starts[lane] + j + 1] as usize;
+                let row = early_logits
+                    .f32_chunk((lane * T + j) * v, v);
+                ranks.push(rank_of(row, actual));
+            }
+        }
+        Ok(ranks)
+    }
+
+    /// Fig 3b/3c probe: one tree-verification iteration (early+late, no
+    /// pruning) at a forced tree size, returning (early_s, late_s, total_s).
+    /// Uses the current active set; does NOT commit anything.
+    pub fn probe_verify_time(&mut self, t_bucket: usize)
+        -> Result<(f64, f64, f64)> {
+        use std::time::Instant;
+        if self.active.is_empty() {
+            bail!("probe requires active requests");
+        }
+        let b = self.rt.manifest.batch_bucket(self.active.len());
+        let n = self.cfg.prune_layer;
+        let d = self.model.d_model;
+
+        let trees: Vec<TokenTree> = self
+            .active
+            .iter()
+            .map(|r| {
+                // synthetic full chain of repeated pending root
+                let toks = vec![r.pending_root; t_bucket];
+                TokenTree::chain(&toks)
+            })
+            .collect();
+        let masks: Vec<TreeMask> =
+            trees.iter().map(|t| TreeMask::build(t, t_bucket)).collect();
+        let mut sl: Vec<usize> =
+            self.active.iter().map(|r| r.seq_len()).collect();
+        let mut tr: Vec<&TokenTree> = trees.iter().collect();
+        let mut mr: Vec<&TreeMask> = masks.iter().collect();
+        let mut lanes: Vec<usize> =
+            self.active.iter().map(|r| r.slot).collect();
+        while tr.len() < b {
+            tr.push(&trees[0]);
+            mr.push(&masks[0]);
+            sl.push(sl[0]);
+            lanes.push(lanes[0]);
+        }
+        let kv = self.kv.batch_tensor(&lanes);
+        let t0 = Instant::now();
+        let early = self.rt.run(
+            &self.cfg.size,
+            Entry::VerifyEarly,
+            Some(n),
+            b,
+            Some(t_bucket),
+            &[
+                pack_tree_tokens(&tr, t_bucket),
+                pack_tree_positions(&tr, &sl, t_bucket),
+                pack_tree_masks(&mr, t_bucket),
+                pack_seq_lens(&sl),
+                kv.clone(),
+            ],
+        )?;
+        let early_s = t0.elapsed().as_secs_f64();
+        let hidden = early[0].clone();
+        debug_assert_eq!(hidden.shape, vec![b, t_bucket, d]);
+        let t1 = Instant::now();
+        let _late = self.rt.run(
+            &self.cfg.size,
+            Entry::VerifyLate,
+            Some(n),
+            b,
+            Some(t_bucket),
+            &[
+                hidden,
+                pack_tree_positions(&tr, &sl, t_bucket),
+                pack_tree_masks(&mr, t_bucket),
+                pack_seq_lens(&sl),
+                kv,
+            ],
+        )?;
+        let late_s = t1.elapsed().as_secs_f64();
+        Ok((early_s, late_s, t0.elapsed().as_secs_f64()))
+    }
+}

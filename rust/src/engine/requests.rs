@@ -1,0 +1,208 @@
+//! Per-request state tracked by the engines.
+
+use std::collections::VecDeque;
+
+use crate::tokenizer::Token;
+
+/// What a client submits.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// Submission timestamp (seconds, engine clock) for latency metrics.
+    pub arrival: f64,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt: String,
+    pub text: String,
+    pub tokens: Vec<Token>,
+    pub steps: u64,
+    pub latency_seconds: f64,
+    pub queue_seconds: f64,
+}
+
+/// One outstanding medusa prediction set, waiting for ground truth.
+///
+/// medusa head h's row predicts the token at absolute position
+/// `base_pos + h`; once decoding commits that position we can score the
+/// head (rank of the actual token) and update the acceptance tracker.
+#[derive(Debug, Clone)]
+pub struct PendingPrediction {
+    pub base_pos: usize,
+    /// Row-major [M, V] medusa logits.
+    pub rows: Vec<f32>,
+    pub vocab: usize,
+    pub resolved: Vec<bool>,
+}
+
+/// Live request state inside an engine.
+#[derive(Debug)]
+pub struct ReqState {
+    pub id: u64,
+    pub prompt: String,
+    pub prompt_len: usize,
+    /// Committed tokens (prompt + generated); KV exists for all of them.
+    pub tokens: Vec<Token>,
+    /// KV slot index.
+    pub slot: usize,
+    /// The certain next token (greedy argmax after `tokens`); becomes the
+    /// next tree root / decode input.  Its KV is NOT yet committed.
+    pub pending_root: Token,
+    /// Medusa logits at the current tip, row-major [M, V].
+    pub medusa_rows: Vec<f32>,
+    /// Prediction ledger for acceptance-tracker updates (§4.2.2).
+    pub ledger: VecDeque<PendingPrediction>,
+    pub max_new_tokens: usize,
+    pub steps: u64,
+    pub arrival: f64,
+    pub started: f64,
+    pub done: bool,
+}
+
+impl ReqState {
+    pub fn generated(&self) -> usize {
+        self.tokens.len().saturating_sub(self.prompt_len)
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn generated_tokens(&self) -> &[Token] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    /// Push a fresh medusa prediction set into the ledger (capped).
+    pub fn remember_prediction(&mut self, vocab: usize) {
+        const CAP: usize = 8;
+        if self.medusa_rows.is_empty() {
+            return;
+        }
+        let n_heads = self.medusa_rows.len() / vocab;
+        self.ledger.push_back(PendingPrediction {
+            // heads predict positions after the pending root: tokens.len()
+            // is the root's position, so head h predicts tokens.len()+1+h.
+            base_pos: self.tokens.len() + 1,
+            rows: self.medusa_rows.clone(),
+            vocab,
+            resolved: vec![false; n_heads],
+        });
+        while self.ledger.len() > CAP {
+            self.ledger.pop_front();
+        }
+    }
+
+    /// Resolve ledger entries against now-committed tokens; calls
+    /// `update(head, rank_of_actual)` for each newly determined position.
+    pub fn resolve_predictions(
+        &mut self,
+        mut update: impl FnMut(usize, usize),
+    ) {
+        let committed = self.tokens.len();
+        for p in self.ledger.iter_mut() {
+            let n_heads = p.resolved.len();
+            for h in 0..n_heads {
+                let pos = p.base_pos + h;
+                if p.resolved[h] || pos >= committed {
+                    continue;
+                }
+                let actual = self.tokens[pos] as usize;
+                let row = &p.rows[h * p.vocab..(h + 1) * p.vocab];
+                let rank = crate::estimator::acceptance::rank_of(row, actual);
+                update(h, rank);
+                p.resolved[h] = true;
+            }
+        }
+        while matches!(self.ledger.front(),
+                       Some(p) if p.resolved.iter().all(|&r| r)) {
+            self.ledger.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> ReqState {
+        ReqState {
+            id: 1,
+            prompt: "p".into(),
+            prompt_len: 3,
+            tokens: vec![1, 2, 3],
+            slot: 0,
+            pending_root: 7,
+            medusa_rows: Vec::new(),
+            ledger: VecDeque::new(),
+            max_new_tokens: 10,
+            steps: 0,
+            arrival: 0.0,
+            started: 0.0,
+            done: false,
+        }
+    }
+
+    #[test]
+    fn generated_counts_after_prompt() {
+        let mut r = req();
+        assert_eq!(r.generated(), 0);
+        r.tokens.push(9);
+        assert_eq!(r.generated(), 1);
+        assert_eq!(r.generated_tokens(), &[9]);
+    }
+
+    #[test]
+    fn ledger_resolution() {
+        let mut r = req();
+        let vocab = 4;
+        // 2 heads; head 0 ranks token 2 best, head 1 ranks token 0 best.
+        r.medusa_rows = vec![
+            0.0, 0.0, 9.0, 0.0, // head 0
+            9.0, 0.0, 0.0, 0.0, // head 1
+        ];
+        r.remember_prediction(vocab);
+        // predictions are for positions 4 (head 0) and 5 (head 1)
+        let mut updates = Vec::new();
+        r.resolve_predictions(|h, rank| updates.push((h, rank)));
+        assert!(updates.is_empty(), "nothing committed yet");
+        // commit positions 3,4: root at 3 = token 7, pos 4 = token 2 (hit!)
+        r.tokens.extend([7, 2]);
+        r.resolve_predictions(|h, rank| updates.push((h, rank)));
+        assert_eq!(updates, vec![(0, 0)]);
+        // commit pos 5 = token 3 (head 1 ranked it below token 0 → rank>0)
+        r.tokens.push(3);
+        r.resolve_predictions(|h, rank| updates.push((h, rank)));
+        assert_eq!(updates.len(), 2);
+        assert_eq!(updates[1].0, 1);
+        assert!(updates[1].1 > 0);
+        assert!(r.ledger.is_empty(), "fully resolved entries are dropped");
+    }
+
+    #[test]
+    fn ledger_is_capped() {
+        let mut r = req();
+        r.medusa_rows = vec![0.0; 2 * 4];
+        for _ in 0..20 {
+            r.remember_prediction(4);
+        }
+        assert!(r.ledger.len() <= 8);
+    }
+
+    #[test]
+    fn resolve_never_double_counts() {
+        let mut r = req();
+        let vocab = 4;
+        r.medusa_rows = vec![0.0, 1.0, 2.0, 3.0];
+        r.remember_prediction(vocab);
+        r.tokens.extend([7, 1]);
+        let mut count = 0;
+        r.resolve_predictions(|_, _| count += 1);
+        r.resolve_predictions(|_, _| count += 1);
+        assert_eq!(count, 1);
+    }
+}

@@ -1,0 +1,95 @@
+//! Autoregressive baseline step: one `decode` call commits one token per
+//! request per iteration.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::core::Engine;
+use crate::manifest::Entry;
+use crate::runtime::literal::HostTensor;
+use crate::runtime::registry::DynArg;
+use crate::tree::accept::argmax;
+
+impl<'rt> Engine<'rt> {
+    pub(super) fn step_autoregressive(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let b_real = self.active.len();
+        let b = self.rt.manifest.batch_bucket(b_real);
+
+        // Lane layout: active requests first, dummy lanes repeat lane 0.
+        let mut lanes: Vec<usize> =
+            self.active.iter().map(|r| r.slot).collect();
+        while lanes.len() < b {
+            lanes.push(lanes[0]);
+        }
+        let mut toks = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        for (i, req) in self.active.iter().enumerate() {
+            toks[i] = req.pending_root as i32;
+            lens[i] = req.seq_len() as i32;
+        }
+        for i in b_real..b {
+            toks[i] = toks[0];
+            lens[i] = lens[0];
+        }
+        let g = self.kv.geometry();
+        let kv_shape = [g.layers, 2, b, g.max_seq, g.heads, g.head_dim];
+        let kv_elems: usize = kv_shape.iter().product();
+        let mut scratch = std::mem::take(&mut self.kv_scratch);
+        scratch.resize(kv_elems, 0.0);
+        self.kv.write_batch_prefix(&lanes, &mut scratch[..kv_elems]);
+        let kv_buf = self.rt.upload_f32(&scratch[..kv_elems], &kv_shape)?;
+        self.kv_scratch = scratch;
+        let host_ready = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let key = crate::manifest::Manifest::key_for(
+            &self.cfg.size, Entry::Decode, None, b, None);
+        let tok_t = HostTensor::i32(vec![b], toks);
+        let len_t = HostTensor::i32(vec![b], lens);
+        let outs = self
+            .rt
+            .executable(&key)?
+            .run_mixed(&[
+                DynArg::Host(&tok_t),
+                DynArg::Host(&len_t),
+                DynArg::Buf(&kv_buf),
+            ])
+            .context("decode")?;
+        let exec = t1.elapsed().as_secs_f64();
+
+        let logits = &outs[0]; // [b, V]
+        let col_kv = &outs[2]; // [L, 2, b, 1, H, Dh]
+        let v = self.model.vocab;
+        let layers = self.model.n_layers;
+        for i in 0..b_real {
+            let req = &mut self.active[i];
+            let pos = req.seq_len();
+            let committed = req.pending_root;
+            self.kv.commit_columns(
+                req.slot,
+                col_kv.as_f32(),
+                (layers, b, 1),
+                0,
+                i,
+                &[(0, pos)],
+            );
+            req.tokens.push(committed);
+            let row = logits.f32_chunk(i * v, v);
+            req.pending_root = argmax(row) as u32;
+            req.steps += 1;
+            self.metrics.tokens_generated += 1;
+            self.metrics.accept_len.record(1.0);
+        }
+        for i in 0..b_real {
+            self.check_done(i);
+        }
+        let total = t0.elapsed().as_secs_f64();
+        self.metrics.step_time.record(total);
+        self.metrics.late_time.record(exec);
+        self.metrics.host_time.record(host_ready + (total - host_ready - exec));
+        self.metrics.tree_size.record(1.0);
+        Ok(())
+    }
+}

@@ -1,0 +1,356 @@
+//! The tree-verification step shared by BPD / Medusa / ProPD.
+//!
+//! Per iteration:
+//! 1. **Generate** one token tree per request — dynamically sized via the
+//!    §4.2 planner (ProPD) or statically (baselines / ablation).
+//! 2. **verify_early**: layers `0..n` + the early head.
+//! 3. **Prune** (§4.1, if enabled): Top-k membership against the early
+//!    head, branch elimination, mask *subsampling*, hidden compaction.
+//! 4. **verify_late**: layers `n..L` on the surviving nodes.
+//! 5. **Accept** the greedy path, commit its KV columns, update the
+//!    acceptance tracker and the iteration-time model.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::core::Engine;
+use super::inputs::{
+    compact_hidden, medusa_top_tokens, pack_seq_lens, pack_tree_masks,
+    pack_tree_positions, pack_tree_tokens,
+};
+use super::EngineKind;
+use crate::manifest::Entry;
+use crate::runtime::registry::DynArg;
+use crate::tree::accept::accept_path;
+use crate::tree::builder::static_head_profile;
+use crate::tree::prune::prune_tree;
+use crate::tree::{TokenTree, TreeMask};
+
+impl<'rt> Engine<'rt> {
+    /// Pick this iteration's (initial) tree-size bucket.
+    fn plan_tree_size(&mut self, batch: usize) -> usize {
+        let mean_seq = self.active.iter().map(|r| r.seq_len()).sum::<usize>()
+            as f64
+            / self.active.len().max(1) as f64;
+        if self.cfg.dynamic_tree {
+            // Gain curve from the *tracked* acceptance probabilities; token
+            // ids are irrelevant for sizing.
+            let fake_tokens: Vec<Vec<u32>> = (0..self.model.n_medusa)
+                .map(|_| (0..self.cfg.max_rank as u32).collect())
+                .collect();
+            let cands = self.tracker.candidates(&fake_tokens);
+            let max_bucket = *self.tree_buckets.last().unwrap_or(&64);
+            let curve = self.builder.gain_curve(&cands, max_bucket);
+            self.planner.plan(batch, mean_seq, &curve, &self.perf)
+        } else {
+            let bucket = crate::manifest::bucket_for(
+                self.cfg.static_tree_size.max(1),
+                &self.tree_buckets,
+            );
+            self.planner.force(bucket, batch, mean_seq);
+            bucket
+        }
+    }
+
+    /// Build one request's token tree for this iteration.
+    fn build_tree(&self, req_idx: usize, t_bucket: usize) -> TokenTree {
+        let req = &self.active[req_idx];
+        let v = self.model.vocab;
+        let root = req.pending_root;
+        // Cap the tree by the request's remaining budget (no point
+        // speculating past max_new_tokens).
+        let room = self.room(req) + 1;
+        let size = t_bucket.min(room.max(1));
+        match self.cfg.kind {
+            EngineKind::Bpd => {
+                // Chain of each head's top-1 (k=1 blockwise decoding).
+                let tops =
+                    medusa_top_tokens(&req.medusa_rows, v, 1);
+                let mut chain = vec![root];
+                for t in tops.iter().take(size.saturating_sub(1)) {
+                    chain.push(t[0]);
+                }
+                TokenTree::chain(&chain)
+            }
+            EngineKind::Medusa => {
+                // Static tree: fixed canonical profile (shape independent
+                // of runtime stats), tokens from the current medusa heads.
+                let tops = medusa_top_tokens(
+                    &req.medusa_rows,
+                    v,
+                    self.cfg.max_rank,
+                );
+                let profile = static_head_profile(
+                    self.model.n_medusa,
+                    self.cfg.max_rank,
+                );
+                let cands: Vec<Vec<(u32, f64)>> = profile
+                    .iter()
+                    .enumerate()
+                    .map(|(h, ranks)| {
+                        ranks
+                            .iter()
+                            .enumerate()
+                            .filter(|&(k, _)| k < tops[h].len())
+                            .map(|(k, &(_, p))| (tops[h][k], p))
+                            .collect()
+                    })
+                    .collect();
+                self.builder.build(root, &cands, size)
+            }
+            EngineKind::ProPD => {
+                let tops = medusa_top_tokens(
+                    &req.medusa_rows,
+                    v,
+                    self.cfg.max_rank,
+                );
+                let cands = self.tracker.candidates(&tops);
+                self.builder.build(root, &cands, size)
+            }
+            EngineKind::Autoregressive => unreachable!(),
+        }
+    }
+
+    pub(super) fn step_tree(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let b_real = self.active.len();
+        let b = crate::manifest::bucket_for(b_real, &self.batch_buckets);
+        let n = self.cfg.prune_layer;
+        let size = self.cfg.size.clone();
+        let v = self.model.vocab;
+        let layers = self.model.n_layers;
+        let m_heads = self.model.n_medusa;
+
+        // ------------------------------------------------- 1. generation
+        let t_bucket = self.plan_tree_size(b);
+        let trees: Vec<TokenTree> = (0..b_real)
+            .map(|i| self.build_tree(i, t_bucket))
+            .collect();
+        let masks: Vec<TreeMask> =
+            trees.iter().map(|t| TreeMask::build(t, t_bucket)).collect();
+        let seq_lens_real: Vec<usize> =
+            self.active.iter().map(|r| r.seq_len()).collect();
+
+        // Dummy lanes replicate lane 0.
+        let mut tr: Vec<&TokenTree> = trees.iter().collect();
+        let mut mr: Vec<&TreeMask> = masks.iter().collect();
+        let mut sl = seq_lens_real.clone();
+        let mut lanes: Vec<usize> =
+            self.active.iter().map(|r| r.slot).collect();
+        while tr.len() < b {
+            tr.push(&trees[0]);
+            mr.push(&masks[0]);
+            sl.push(seq_lens_real[0]);
+            lanes.push(lanes[0]);
+        }
+
+        let tree_tok = pack_tree_tokens(&tr, t_bucket);
+        let tree_pos = pack_tree_positions(&tr, &sl, t_bucket);
+        let tree_mask = pack_tree_masks(&mr, t_bucket);
+        let seq_len_t = pack_seq_lens(&sl);
+        // The KV tensor is shared by both stages: assembled into a
+        // reusable scratch buffer and uploaded ONCE per step as a device
+        // buffer passed to both calls (§Perf iterations 2-3).
+        let g = self.kv.geometry();
+        let kv_shape =
+            [g.layers, 2, b, g.max_seq, g.heads, g.head_dim];
+        let kv_elems: usize = kv_shape.iter().product();
+        let mut scratch = std::mem::take(&mut self.kv_scratch);
+        scratch.resize(kv_elems, 0.0);
+        self.kv.write_batch_prefix(&lanes, &mut scratch[..kv_elems]);
+        let kv_buf = self.rt.upload_f32(&scratch[..kv_elems], &kv_shape)?;
+        self.kv_scratch = scratch;
+        let host_prep = t0.elapsed().as_secs_f64();
+
+        // ------------------------------------------------ 2. early stage
+        let t1 = Instant::now();
+        let early_key = crate::manifest::Manifest::key_for(
+            &size, Entry::VerifyEarly, Some(n), b, Some(t_bucket));
+        let early_outs = self
+            .rt
+            .executable(&early_key)?
+            .run_mixed(&[
+                DynArg::Host(&tree_tok),
+                DynArg::Host(&tree_pos),
+                DynArg::Host(&tree_mask),
+                DynArg::Host(&seq_len_t),
+                DynArg::Buf(&kv_buf),
+            ])
+            .context("verify_early")?;
+        let early_secs = t1.elapsed().as_secs_f64();
+        let hidden = &early_outs[0]; // [b, t, d]
+        let early_logits = &early_outs[1]; // [b, t, V]
+        let tree_kv_early = &early_outs[2]; // [n, 2, b, t, H, Dh]
+
+        // ---------------------------------------------------- 3. pruning
+        let th = Instant::now();
+        let (pruned, keeps): (Vec<TokenTree>, Vec<Vec<usize>>) = if self
+            .cfg
+            .early_prune
+        {
+            let mut ptrees = Vec::with_capacity(b_real);
+            let mut keeps = Vec::with_capacity(b_real);
+            for (i, tree) in trees.iter().enumerate() {
+                let rows =
+                    early_logits.f32_chunk(i * t_bucket * v, tree.len() * v);
+                let out = prune_tree(tree, rows, v, self.cfg.prune_top_k);
+                ptrees.push(out.tree);
+                keeps.push(out.keep);
+            }
+            (ptrees, keeps)
+        } else {
+            (
+                trees.clone(),
+                trees.iter().map(|t| (0..t.len()).collect()).collect(),
+            )
+        };
+        let max_kept = pruned.iter().map(|t| t.len()).max().unwrap_or(1);
+        let tp_bucket =
+            crate::manifest::bucket_for(max_kept, &self.late_buckets);
+        // Subsample cached masks (§4.1) instead of rebuilding.
+        let pmasks: Vec<TreeMask> = masks
+            .iter()
+            .zip(&keeps)
+            .map(|(m, k)| m.subsample(k, tp_bucket))
+            .collect();
+        let hidden_c = compact_hidden(hidden, &pad_keeps(&keeps, b), tp_bucket);
+        let mut ptr: Vec<&TokenTree> = pruned.iter().collect();
+        let mut pmr: Vec<&TreeMask> = pmasks.iter().collect();
+        while ptr.len() < b {
+            ptr.push(&pruned[0]);
+            pmr.push(&pmasks[0]);
+        }
+        let ppos = pack_tree_positions(&ptr, &sl, tp_bucket);
+        let pmask = pack_tree_masks(&pmr, tp_bucket);
+        let pseq = pack_seq_lens(&sl);
+        let host_mid = th.elapsed().as_secs_f64();
+
+        // ------------------------------------------------- 4. late stage
+        let t2 = Instant::now();
+        let late_key = crate::manifest::Manifest::key_for(
+            &size, Entry::VerifyLate, Some(n), b, Some(tp_bucket));
+        let late_outs = self
+            .rt
+            .executable(&late_key)?
+            .run_mixed(&[
+                DynArg::Host(&hidden_c),
+                DynArg::Host(&ppos),
+                DynArg::Host(&pmask),
+                DynArg::Host(&pseq),
+                DynArg::Buf(&kv_buf),
+            ])
+            .context("verify_late")?;
+        let late_secs = t2.elapsed().as_secs_f64();
+        let logits = &late_outs[0]; // [b, t', V]
+        let medusa = &late_outs[1]; // [b, t', M, V]
+        let tree_kv_late = &late_outs[2]; // [L-n, 2, b, t', H, Dh]
+
+        // ------------------------------------------- 5. accept + commit
+        let t3 = Instant::now();
+        let mut committed_total = 0usize;
+        for i in 0..b_real {
+            let ptree = &pruned[i];
+            let rows = logits.f32_chunk(i * tp_bucket * v, ptree.len() * v);
+            let mut res = accept_path(ptree, rows, v);
+            // Respect the generation budget: truncate over-acceptance.
+            let room = self.room(&self.active[i]) ;
+            if res.path.len() > room.max(1) {
+                res.path.truncate(room.max(1));
+                res.tokens.truncate(room.max(1));
+                let last = *res.path.last().unwrap();
+                let row = logits.f32_chunk(
+                    (i * tp_bucket + last) * v, v);
+                res.bonus = crate::tree::accept::argmax(row) as u32;
+            }
+            let base_pos = self.active[i].seq_len();
+            // KV commits: early layers use original indices, late layers
+            // use pruned indices.
+            let pairs_early: Vec<(usize, usize)> = res
+                .path
+                .iter()
+                .enumerate()
+                .map(|(d, &pi)| (keeps[i][pi], base_pos + d))
+                .collect();
+            let pairs_late: Vec<(usize, usize)> = res
+                .path
+                .iter()
+                .enumerate()
+                .map(|(d, &pi)| (pi, base_pos + d))
+                .collect();
+            let slot = self.active[i].slot;
+            self.kv.commit_columns(
+                slot,
+                tree_kv_early.as_f32(),
+                (n, b, t_bucket),
+                0,
+                i,
+                &pairs_early,
+            );
+            self.kv.commit_columns(
+                slot,
+                tree_kv_late.as_f32(),
+                (layers - n, b, tp_bucket),
+                n,
+                i,
+                &pairs_late,
+            );
+            // Book-keeping.
+            let deepest = *res.path.last().unwrap();
+            let med_rows = medusa
+                .f32_chunk(
+                    (i * tp_bucket + deepest) * m_heads * v,
+                    m_heads * v,
+                )
+                .to_vec();
+            let accept_len = res.path.len();
+            {
+                let req = &mut self.active[i];
+                req.tokens.extend(&res.tokens);
+                req.pending_root = res.bonus;
+                req.medusa_rows = med_rows;
+                req.steps += 1;
+                req.remember_prediction(v);
+            }
+            // Acceptance-tracker updates from resolved ledger entries.
+            let mut updates: Vec<(usize, usize)> = Vec::new();
+            self.active[i]
+                .resolve_predictions(|h, rank| updates.push((h, rank)));
+            for (h, rank) in updates {
+                self.tracker.record(h, Some(rank));
+            }
+            committed_total += accept_len;
+            self.metrics.accept_len.record(accept_len as f64);
+            self.metrics.tokens_generated += accept_len as u64;
+            let t_live = trees[i].len().max(1);
+            self.metrics
+                .prune_rate
+                .record(1.0 - (pruned[i].len() as f64 / t_live as f64));
+            self.check_done(i);
+        }
+        let host_post = t3.elapsed().as_secs_f64();
+
+        // ----------------------------------- 6. estimator + metrics upkeep
+        let total = t0.elapsed().as_secs_f64();
+        self.perf.record(t_bucket, total);
+        self.metrics.step_time.record(total);
+        self.metrics.early_time.record(early_secs);
+        self.metrics.late_time.record(late_secs);
+        self.metrics
+            .host_time
+            .record(host_prep + host_mid + host_post);
+        self.metrics.tree_size.record(t_bucket as f64);
+        self.metrics.pruned_size.record(tp_bucket as f64);
+        let _ = committed_total;
+        Ok(())
+    }
+}
+
+/// Pad the keep lists out to the batch bucket (dummy lanes reuse lane 0).
+fn pad_keeps(keeps: &[Vec<usize>], b: usize) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = keeps.to_vec();
+    while out.len() < b {
+        out.push(keeps[0].clone());
+    }
+    out
+}

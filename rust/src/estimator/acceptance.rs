@@ -1,0 +1,186 @@
+//! Acceptance-probability estimation (§4.2.2).
+//!
+//! For each medusa head h the tracker maintains `P_h^k`: the EWMA
+//! probability that the *actual* decoded token at head h's offset lies
+//! within the head's Top-k predictions:
+//!
+//! ```text
+//! P_h^k ← (1-α)·P_h^k + α·1(x ∈ TopK_k(head h))
+//! ```
+//!
+//! The per-rank marginal is `p_h^k = P_h^k − P_h^{k-1}` — the probability
+//! that the rank-k candidate specifically is the actual token.  These
+//! marginals feed the tree builder's path products `l(seq) = Π p_h^{k_h}`.
+
+use crate::tree::builder::HeadCandidates;
+
+#[derive(Debug, Clone)]
+pub struct AcceptanceTracker {
+    alpha: f64,
+    /// cumulative[h][k] = P_h^{k+1} (probability actual ∈ top-(k+1)).
+    cumulative: Vec<Vec<f64>>,
+    updates: u64,
+}
+
+impl AcceptanceTracker {
+    /// `n_heads` medusa heads, ranks tracked up to `max_rank`.
+    /// Initial estimates decay with head index and rank — mildly optimistic
+    /// priors so cold-start trees are not degenerate.
+    pub fn new(n_heads: usize, max_rank: usize, alpha: f64) -> Self {
+        let cumulative = (0..n_heads)
+            .map(|h| {
+                let mut acc = 0.0;
+                (0..max_rank)
+                    .map(|k| {
+                        acc += 0.5_f64.powi(h as i32 + 1)
+                            * 0.5_f64.powi(k as i32);
+                        acc.min(1.0)
+                    })
+                    .collect()
+            })
+            .collect();
+        AcceptanceTracker { alpha, cumulative, updates: 0 }
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.cumulative.len()
+    }
+
+    pub fn max_rank(&self) -> usize {
+        self.cumulative.first().map_or(0, |c| c.len())
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Record one realized outcome for head `h`: the actual token's rank in
+    /// the head's prediction (`None` = not within `max_rank`).
+    pub fn record(&mut self, head: usize, actual_rank: Option<usize>) {
+        let a = self.alpha;
+        self.updates += 1;
+        for k in 0..self.cumulative[head].len() {
+            let hit = matches!(actual_rank, Some(r) if r <= k);
+            let p = &mut self.cumulative[head][k];
+            *p = (1.0 - a) * *p + a * if hit { 1.0 } else { 0.0 };
+        }
+    }
+
+    /// `P_h^k` (cumulative top-k hit probability; k is 1-based).
+    pub fn cumulative_p(&self, head: usize, k: usize) -> f64 {
+        assert!(k >= 1);
+        self.cumulative[head][(k - 1).min(self.cumulative[head].len() - 1)]
+    }
+
+    /// Marginal `p_h^k = P_h^k − P_h^{k-1}` for 0-based rank `k`.
+    pub fn marginal(&self, head: usize, rank: usize) -> f64 {
+        let c = &self.cumulative[head];
+        if rank >= c.len() {
+            return 0.0;
+        }
+        let hi = c[rank];
+        let lo = if rank == 0 { 0.0 } else { c[rank - 1] };
+        (hi - lo).max(0.0)
+    }
+
+    /// Assemble builder candidates: `tokens[h]` are the medusa head h's
+    /// ranked token ids (from the current tip's medusa logits); probs come
+    /// from the tracked marginals.
+    pub fn candidates(&self, tokens: &[Vec<u32>]) -> HeadCandidates {
+        tokens
+            .iter()
+            .enumerate()
+            .map(|(h, ts)| {
+                ts.iter()
+                    .enumerate()
+                    .map(|(k, &tok)| (tok, self.marginal(h, k)))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Rank of `token` within `row` under strictly-greater counting (matches
+/// `prune::in_top_k` semantics): rank 0 = argmax.
+pub fn rank_of(row: &[f32], token: usize) -> usize {
+    let x = row[token];
+    row.iter().filter(|&&v| v > x).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cumulative_is_monotone_in_k() {
+        let t = AcceptanceTracker::new(4, 8, 0.1);
+        for h in 0..4 {
+            for k in 2..=8 {
+                assert!(t.cumulative_p(h, k) >= t.cumulative_p(h, k - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn record_converges_to_hit_rate() {
+        let mut t = AcceptanceTracker::new(1, 4, 0.05);
+        // actual is always rank 1 → P^1 → 0, P^2.. → 1
+        for _ in 0..400 {
+            t.record(0, Some(1));
+        }
+        assert!(t.cumulative_p(0, 1) < 0.05);
+        assert!(t.cumulative_p(0, 2) > 0.95);
+        assert!(t.marginal(0, 1) > 0.9);
+        assert!(t.marginal(0, 0) < 0.05);
+    }
+
+    #[test]
+    fn misses_drive_probs_down() {
+        let mut t = AcceptanceTracker::new(1, 4, 0.1);
+        for _ in 0..200 {
+            t.record(0, None);
+        }
+        for k in 1..=4 {
+            assert!(t.cumulative_p(0, k) < 0.01);
+        }
+    }
+
+    #[test]
+    fn marginals_sum_to_cumulative() {
+        let mut t = AcceptanceTracker::new(2, 6, 0.2);
+        let mut state = 7u64;
+        for _ in 0..300 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let r = (state >> 33) % 8;
+            t.record(0, if r < 6 { Some(r as usize) } else { None });
+        }
+        let total: f64 = (0..6).map(|k| t.marginal(0, k)).sum();
+        assert!((total - t.cumulative_p(0, 6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn candidates_pairs_tokens_with_marginals() {
+        let t = AcceptanceTracker::new(2, 4, 0.1);
+        let cands =
+            t.candidates(&[vec![10, 11, 12], vec![20, 21, 22]]);
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0][0].0, 10);
+        assert!((cands[0][0].1 - t.marginal(0, 0)).abs() < 1e-12);
+        assert!((cands[1][2].1 - t.marginal(1, 2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_of_semantics() {
+        let row = [0.5f32, 3.0, 2.0, 3.0];
+        assert_eq!(rank_of(&row, 1), 0); // ties share the best rank
+        assert_eq!(rank_of(&row, 3), 0);
+        assert_eq!(rank_of(&row, 2), 2);
+        assert_eq!(rank_of(&row, 0), 3);
+    }
+
+    #[test]
+    fn out_of_range_rank_is_zero_marginal() {
+        let t = AcceptanceTracker::new(1, 4, 0.1);
+        assert_eq!(t.marginal(0, 99), 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Runtime estimators driving dynamic token tree generation (§4.2).
+//!
+//! - [`perf_model`]: verification-overhead estimation — per-tree-size EWMA
+//!   of iteration time plus a recency-weighted linear regression
+//!   `T_est(i) = β0 + β1·i` (§4.2.1).
+//! - [`acceptance`]: per-head per-rank acceptance probability tracking
+//!   `P_h^k` via EWMA of top-k hit indicators (§4.2.2).
+//! - [`planner`]: combines both to pick the tree size maximizing
+//!   `v = l(i) / T_est(i)`, re-planning only when decoding conditions
+//!   change significantly (§4.2.3).
+
+pub mod acceptance;
+pub mod perf_model;
+pub mod planner;
+
+pub use acceptance::AcceptanceTracker;
+pub use perf_model::PerfModel;
+pub use planner::{Planner, PlannerConfig};

@@ -1,0 +1,188 @@
+//! Verification-overhead estimation (§4.2.1).
+//!
+//! Observation 2 of the paper: verification iteration time scales linearly
+//! with token tree size (for a given batch size / sequence-length regime).
+//! The model here is exactly the paper's:
+//!
+//! 1. per-size EWMA:      `T_perf[i] ← (1-α)·T_perf[i] + α·t_i`
+//! 2. recency weights:    `W_i = exp(-λ·o_i)` with `o_i` = updates since
+//!                        size i was last observed
+//! 3. weighted least squares over observed sizes:
+//!    `β̂0, β̂1 = argmin Σ W_i (T_perf[i] - (β0 + β1·i))²`, solved in closed
+//!    form — "negligible latency".
+
+#[derive(Debug, Clone)]
+struct SizeStat {
+    size: usize,
+    t_perf: f64,
+    /// Global update counter value when this size was last observed.
+    last_update: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    alpha: f64,
+    lambda: f64,
+    stats: Vec<SizeStat>,
+    clock: u64,
+}
+
+impl PerfModel {
+    pub fn new(alpha: f64, lambda: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha) && lambda >= 0.0);
+        PerfModel { alpha, lambda, stats: Vec::new(), clock: 0 }
+    }
+
+    /// Record one verification iteration of tree size `size` taking
+    /// `seconds`.
+    pub fn record(&mut self, size: usize, seconds: f64) {
+        self.clock += 1;
+        match self.stats.iter_mut().find(|s| s.size == size) {
+            Some(s) => {
+                s.t_perf = (1.0 - self.alpha) * s.t_perf + self.alpha * seconds;
+                s.last_update = self.clock;
+            }
+            None => self.stats.push(SizeStat {
+                size,
+                t_perf: seconds,
+                last_update: self.clock,
+            }),
+        }
+    }
+
+    pub fn observations(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// Closed-form weighted regression over the observed sizes.
+    /// Returns (β0, β1); falls back gracefully with < 2 distinct sizes.
+    pub fn fit(&self) -> (f64, f64) {
+        match self.stats.len() {
+            0 => (0.0, 0.0),
+            1 => {
+                // One point: assume pure linearity through the origin-ish —
+                // all mass on the slope so larger trees estimate ∝ size.
+                let s = &self.stats[0];
+                (0.0, s.t_perf / s.size.max(1) as f64)
+            }
+            _ => {
+                let (mut sw, mut sx, mut sy, mut sxx, mut sxy) =
+                    (0.0, 0.0, 0.0, 0.0, 0.0);
+                for s in &self.stats {
+                    let o = (self.clock - s.last_update) as f64;
+                    let w = (-self.lambda * o).exp();
+                    let x = s.size as f64;
+                    sw += w;
+                    sx += w * x;
+                    sy += w * s.t_perf;
+                    sxx += w * x * x;
+                    sxy += w * x * s.t_perf;
+                }
+                let denom = sw * sxx - sx * sx;
+                if denom.abs() < 1e-12 {
+                    // Degenerate (all weight on one size effectively).
+                    let s = &self.stats[self.stats.len() - 1];
+                    return (0.0, s.t_perf / s.size.max(1) as f64);
+                }
+                let b1 = (sw * sxy - sx * sy) / denom;
+                let b0 = (sy - b1 * sx) / sw;
+                (b0, b1)
+            }
+        }
+    }
+
+    /// Estimated iteration time for tree size `size`:
+    /// `T_est(i) = β0 + β1·i`, floored at a small positive epsilon.
+    pub fn estimate(&self, size: usize) -> f64 {
+        let (b0, b1) = self.fit();
+        (b0 + b1 * size as f64).max(1e-9)
+    }
+
+    /// Most recent EWMA for an exact size, if observed.
+    pub fn observed(&self, size: usize) -> Option<f64> {
+        self.stats.iter().find(|s| s.size == size).map(|s| s.t_perf)
+    }
+}
+
+impl Default for PerfModel {
+    fn default() -> Self {
+        // α matches the paper's stabilizing EWMA; λ gives ~e-fold decay
+        // every 20 updates so stale sizes stop steering the fit.
+        PerfModel::new(0.2, 0.05)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_linear_relationship() {
+        let mut m = PerfModel::new(0.5, 0.0);
+        for _ in 0..8 {
+            for &i in &[4usize, 8, 16, 32, 64] {
+                m.record(i, 1.0 + 0.25 * i as f64);
+            }
+        }
+        let (b0, b1) = m.fit();
+        assert!((b0 - 1.0).abs() < 0.05, "b0={b0}");
+        assert!((b1 - 0.25).abs() < 0.01, "b1={b1}");
+        assert!((m.estimate(48) - 13.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn ewma_converges_after_shift() {
+        let mut m = PerfModel::new(0.3, 0.0);
+        for _ in 0..50 {
+            m.record(8, 2.0);
+        }
+        assert!((m.observed(8).unwrap() - 2.0).abs() < 1e-6);
+        for _ in 0..50 {
+            m.record(8, 4.0); // regime change (e.g. batch grew)
+        }
+        assert!((m.observed(8).unwrap() - 4.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ewma_damps_outliers() {
+        let mut m = PerfModel::new(0.1, 0.0);
+        for _ in 0..20 {
+            m.record(8, 1.0);
+        }
+        m.record(8, 100.0); // one abnormal t_i
+        let v = m.observed(8).unwrap();
+        assert!(v < 12.0, "outlier over-weighted: {v}");
+    }
+
+    #[test]
+    fn recency_weights_prefer_fresh_sizes() {
+        let mut m = PerfModel::new(1.0, 0.5);
+        // Old regime: times were huge.
+        m.record(4, 100.0);
+        m.record(8, 200.0);
+        // New regime: only sizes 16/32 observed recently, fast.
+        for _ in 0..30 {
+            m.record(16, 1.6);
+            m.record(32, 3.2);
+        }
+        // Estimate at 64 should extrapolate the *fresh* slope (~0.1/unit)
+        // rather than the stale 25/unit slope.
+        let est = m.estimate(64);
+        assert!(est < 10.0, "stale sizes dominated: {est}");
+    }
+
+    #[test]
+    fn single_observation_scales_proportionally() {
+        let mut m = PerfModel::default();
+        m.record(16, 4.0);
+        assert!((m.estimate(32) - 8.0).abs() < 1e-9);
+        assert!(m.estimate(1) > 0.0);
+    }
+
+    #[test]
+    fn empty_model_is_safe() {
+        let m = PerfModel::default();
+        assert!(m.estimate(16) > 0.0);
+        assert_eq!(m.observations(), 0);
+    }
+}

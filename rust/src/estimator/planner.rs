@@ -1,0 +1,251 @@
+//! Tree-size planning (§4.2.3): pick the tree-size bucket maximizing
+//! `v(i) = l(i) / T_est(i)` — expected accepted tokens per second.
+//!
+//! Per the paper, the planner is NOT invoked every iteration; it re-plans
+//! when the batch size changes, when the aggregate sequence length has
+//! drifted significantly, or after a fixed re-plan interval (so the perf
+//! model's fresh observations keep steering).  Between re-plans the cached
+//! decision is used, making its steady-state cost zero.
+
+use super::perf_model::PerfModel;
+
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Re-plan when |seq_len - last_seq_len| / max_seq exceeds this.
+    pub seq_drift: f64,
+    /// Re-plan at least every this many steps.
+    pub replan_interval: u64,
+    /// Tree-size buckets available in the artifact grid (sorted).
+    pub buckets: Vec<usize>,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            seq_drift: 0.125,
+            replan_interval: 32,
+            buckets: vec![4, 8, 16, 32, 64],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Planner {
+    cfg: PlannerConfig,
+    cached: Option<usize>,
+    last_batch: usize,
+    last_seq: f64,
+    max_seq: usize,
+    steps_since_plan: u64,
+    replans: u64,
+}
+
+impl Planner {
+    pub fn new(cfg: PlannerConfig, max_seq: usize) -> Self {
+        Planner {
+            cfg,
+            cached: None,
+            last_batch: 0,
+            last_seq: 0.0,
+            max_seq,
+            steps_since_plan: 0,
+            replans: 0,
+        }
+    }
+
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    /// Does the current condition require a fresh plan?
+    pub fn needs_replan(&self, batch: usize, mean_seq: f64) -> bool {
+        if self.cached.is_none() || batch != self.last_batch {
+            return true;
+        }
+        if self.steps_since_plan >= self.cfg.replan_interval {
+            return true;
+        }
+        (mean_seq - self.last_seq).abs() / self.max_seq as f64
+            > self.cfg.seq_drift
+    }
+
+    /// Choose the tree-size bucket.  `gain_curve[i]` = expected acceptance
+    /// length of the best tree of size i+1 (from
+    /// `TreeBuilder::gain_curve`); `perf` supplies `T_est`.
+    pub fn plan(
+        &mut self,
+        batch: usize,
+        mean_seq: f64,
+        gain_curve: &[f64],
+        perf: &PerfModel,
+    ) -> usize {
+        self.steps_since_plan += 1;
+        if !self.needs_replan(batch, mean_seq) {
+            return self.cached.unwrap();
+        }
+        // Exploration: the §4.2.1 regression needs observations across
+        // sizes, and the paper explicitly avoids offline
+        // pre-characterization — so the first re-plans visit each
+        // still-unobserved bucket once before exploiting the model.
+        if let Some(&unseen) = self
+            .cfg
+            .buckets
+            .iter()
+            .find(|&&b| perf.observed(b).is_none())
+        {
+            self.cached = Some(unseen);
+            self.last_batch = batch;
+            self.last_seq = mean_seq;
+            // Re-plan again after a few steps so exploration finishes
+            // quickly (a couple of EWMA samples per bucket suffice).
+            self.steps_since_plan =
+                self.cfg.replan_interval.saturating_sub(4);
+            self.replans += 1;
+            return unseen;
+        }
+        let mut best = *self.cfg.buckets.first().expect("no buckets");
+        let mut best_v = f64::NEG_INFINITY;
+        for &b in &self.cfg.buckets {
+            let l = gain_curve
+                .get(b.min(gain_curve.len()) - 1)
+                .copied()
+                .unwrap_or(1.0);
+            let v = l / perf.estimate(b);
+            if v > best_v {
+                best_v = v;
+                best = b;
+            }
+        }
+        self.cached = Some(best);
+        self.last_batch = batch;
+        self.last_seq = mean_seq;
+        self.steps_since_plan = 0;
+        self.replans += 1;
+        best
+    }
+
+    /// Force the cached decision (static baselines / tests).
+    pub fn force(&mut self, size: usize, batch: usize, mean_seq: f64) {
+        self.cached = Some(size);
+        self.last_batch = batch;
+        self.last_seq = mean_seq;
+        self.steps_since_plan = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn perf_linear(b0: f64, b1: f64) -> PerfModel {
+        let mut m = PerfModel::new(1.0, 0.0);
+        for &i in &[4usize, 8, 16, 32, 64] {
+            m.record(i, b0 + b1 * i as f64);
+        }
+        m
+    }
+
+    /// gain curve with diminishing returns: l(i) = 1 + c·(1 - 0.9^i)
+    fn curve(c: f64, n: usize) -> Vec<f64> {
+        (1..=n).map(|i| 1.0 + c * (1.0 - 0.9f64.powi(i as i32))).collect()
+    }
+
+    #[test]
+    fn picks_small_tree_when_time_dominates() {
+        // Steep time growth + weak acceptance → small tree wins.
+        let perf = perf_linear(1.0, 10.0);
+        let mut p = Planner::new(PlannerConfig::default(), 512);
+        let t = p.plan(4, 100.0, &curve(0.3, 64), &perf);
+        assert_eq!(t, 4);
+    }
+
+    #[test]
+    fn picks_large_tree_when_time_flat() {
+        // Nearly flat time (memory-bound small batch) + strong acceptance →
+        // large tree wins.  This is the paper's BS=1 regime.
+        let perf = perf_linear(10.0, 0.001);
+        let mut p = Planner::new(PlannerConfig::default(), 512);
+        let t = p.plan(1, 100.0, &curve(3.0, 64), &perf);
+        assert_eq!(t, 64);
+    }
+
+    #[test]
+    fn caches_until_condition_changes() {
+        let perf = perf_linear(1.0, 0.5);
+        let mut p = Planner::new(PlannerConfig::default(), 512);
+        let t1 = p.plan(4, 100.0, &curve(1.0, 64), &perf);
+        let r1 = p.replans();
+        // Same conditions: cached, no replanning.
+        for _ in 0..10 {
+            assert_eq!(p.plan(4, 101.0, &curve(1.0, 64), &perf), t1);
+        }
+        assert_eq!(p.replans(), r1);
+        // Batch change forces a re-plan.
+        p.plan(8, 101.0, &curve(1.0, 64), &perf);
+        assert_eq!(p.replans(), r1 + 1);
+    }
+
+    #[test]
+    fn seq_drift_triggers_replan() {
+        let perf = perf_linear(1.0, 0.5);
+        let mut p = Planner::new(PlannerConfig::default(), 512);
+        p.plan(4, 100.0, &curve(1.0, 64), &perf);
+        let r = p.replans();
+        p.plan(4, 100.0 + 0.2 * 512.0, &curve(1.0, 64), &perf);
+        assert_eq!(p.replans(), r + 1);
+    }
+
+    #[test]
+    fn replan_interval_forces_refresh() {
+        let perf = perf_linear(1.0, 0.5);
+        let cfg = PlannerConfig { replan_interval: 5, ..Default::default() };
+        let mut p = Planner::new(cfg, 512);
+        p.plan(4, 100.0, &curve(1.0, 64), &perf);
+        let r = p.replans();
+        for _ in 0..6 {
+            p.plan(4, 100.0, &curve(1.0, 64), &perf);
+        }
+        assert!(p.replans() > r);
+    }
+
+    #[test]
+    fn crossover_moves_with_slope() {
+        // As the per-token verification cost grows (larger batch), the
+        // chosen tree size must shrink — the paper's central trade-off.
+        let mut chosen = Vec::new();
+        for slope in [0.001, 0.05, 0.3, 2.0, 20.0] {
+            let perf = perf_linear(2.0, slope);
+            let mut p = Planner::new(PlannerConfig::default(), 512);
+            chosen.push(p.plan(4, 100.0, &curve(1.5, 64), &perf));
+        }
+        for w in chosen.windows(2) {
+            assert!(w[1] <= w[0], "{chosen:?} not nonincreasing");
+        }
+        assert!(chosen[0] > *chosen.last().unwrap(), "{chosen:?}");
+    }
+}
+
+#[cfg(test)]
+mod exploration_tests {
+    use super::*;
+    use crate::estimator::perf_model::PerfModel;
+
+    #[test]
+    fn explores_unobserved_buckets_before_exploiting() {
+        let perf = PerfModel::default(); // nothing observed
+        let mut p = Planner::new(PlannerConfig::default(), 512);
+        let curve: Vec<f64> = (1..=64).map(|i| 1.0 + i as f64 * 0.01)
+            .collect();
+        let first = p.plan(4, 10.0, &curve, &perf);
+        assert!(PlannerConfig::default().buckets.contains(&first));
+        // With a perf model that has seen every bucket, planning exploits.
+        let mut seen = PerfModel::new(1.0, 0.0);
+        for &b in &PlannerConfig::default().buckets {
+            seen.record(b, 0.001 * b as f64);
+        }
+        let mut p2 = Planner::new(PlannerConfig::default(), 512);
+        let choice = p2.plan(4, 10.0, &curve, &seen);
+        // flat-ish gain + linear time → small tree maximizes v
+        assert_eq!(choice, 4);
+    }
+}

@@ -1,0 +1,382 @@
+//! KV-cache manager.
+//!
+//! The cache is the host-side source of truth: per-request *slots* hold a
+//! dense `[L, 2, S, H, Dh]` f32 buffer plus the committed length.  Each
+//! engine step assembles the batch tensor `[L, 2, b, S, H, Dh]` from the
+//! active slots (contiguous `S·H·Dh` memcpys) and commits accepted tokens
+//! back from the entry points' compact KV outputs (`block_kv` / `col_kv` /
+//! `tree_kv`).  Entry points never mutate the cache in-graph, so committing
+//! only the *accepted* tree nodes is a pure host-side index operation.
+//!
+//! On the CPU PJRT client host↔device copies are plain memcpys, so this
+//! design costs one assembly pass per step; the §Perf pass tracks it.
+
+pub mod slots;
+
+pub use slots::SlotAllocator;
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ModelMeta;
+use crate::runtime::literal::HostTensor;
+
+/// Geometry of one model size's cache.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvGeometry {
+    pub layers: usize,
+    pub max_seq: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+}
+
+impl KvGeometry {
+    pub fn of(m: &ModelMeta) -> Self {
+        KvGeometry {
+            layers: m.n_layers,
+            max_seq: m.max_seq,
+            heads: m.n_heads,
+            head_dim: m.head_dim,
+        }
+    }
+
+    /// Contiguous column width: one token's K (or V) for one layer.
+    pub fn col(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Elements in one slot buffer `[L, 2, S, H, Dh]`.
+    pub fn slot_elements(&self) -> usize {
+        self.layers * 2 * self.max_seq * self.col()
+    }
+}
+
+/// One request's cache slot.
+#[derive(Debug)]
+pub struct Slot {
+    pub seq_len: usize,
+    data: Vec<f32>, // [L, 2, S, H, Dh]
+}
+
+/// The cache: a fixed pool of slots.
+#[derive(Debug)]
+pub struct KvCache {
+    geom: KvGeometry,
+    slots: Vec<Slot>,
+    alloc: SlotAllocator,
+}
+
+impl KvCache {
+    pub fn new(geom: KvGeometry, capacity: usize) -> Self {
+        let slots = (0..capacity)
+            .map(|_| Slot { seq_len: 0, data: vec![0.0; geom.slot_elements()] })
+            .collect();
+        KvCache { geom, slots, alloc: SlotAllocator::new(capacity) }
+    }
+
+    pub fn geometry(&self) -> KvGeometry {
+        self.geom
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.alloc.free_count()
+    }
+
+    /// Acquire a fresh slot (zero-length).  Fails when the pool is empty —
+    /// admission control must bound concurrency.
+    pub fn acquire(&mut self) -> Result<usize> {
+        match self.alloc.acquire() {
+            Some(s) => {
+                self.slots[s].seq_len = 0;
+                Ok(s)
+            }
+            None => bail!("kv cache exhausted ({} slots)", self.slots.len()),
+        }
+    }
+
+    /// Release a finished request's slot (data is lazily reused; zeroing is
+    /// unnecessary because seq_len gates every read).
+    pub fn release(&mut self, slot: usize) {
+        self.alloc.release(slot);
+    }
+
+    pub fn seq_len(&self, slot: usize) -> usize {
+        self.slots[slot].seq_len
+    }
+
+    /// Assemble the batch KV tensor `[L, 2, b, S, H, Dh]` for the given
+    /// slot lanes into `out` (reused scratch; zero-alloc hot path).
+    pub fn write_batch(&self, lanes: &[usize], out: &mut [f32]) {
+        let g = &self.geom;
+        let stripe = g.max_seq * g.col(); // contiguous [S, H, Dh] block
+        let b = lanes.len();
+        assert_eq!(out.len(), g.layers * 2 * b * stripe);
+        for l in 0..g.layers {
+            for c in 0..2 {
+                for (lane, &slot) in lanes.iter().enumerate() {
+                    let src_off = (l * 2 + c) * stripe;
+                    let dst_off = ((l * 2 + c) * b + lane) * stripe;
+                    out[dst_off..dst_off + stripe].copy_from_slice(
+                        &self.slots[slot].data[src_off..src_off + stripe],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Like [`write_batch`](Self::write_batch) but copying only each
+    /// lane's committed prefix (positions ≥ seq_len are never attended —
+    /// the past mask excludes them — so stale scratch there is harmless).
+    /// §Perf: cuts the assembly memcpy by the unused fraction of S.
+    pub fn write_batch_prefix(&self, lanes: &[usize], out: &mut [f32]) {
+        let g = &self.geom;
+        let col = g.col();
+        let stripe = g.max_seq * col;
+        let b = lanes.len();
+        assert_eq!(out.len(), g.layers * 2 * b * stripe);
+        for l in 0..g.layers {
+            for c in 0..2 {
+                for (lane, &slot) in lanes.iter().enumerate() {
+                    let n = self.slots[slot].seq_len * col;
+                    let src_off = (l * 2 + c) * stripe;
+                    let dst_off = ((l * 2 + c) * b + lane) * stripe;
+                    out[dst_off..dst_off + n].copy_from_slice(
+                        &self.slots[slot].data[src_off..src_off + n],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper returning the batch tensor.
+    pub fn batch_tensor(&self, lanes: &[usize]) -> HostTensor {
+        let g = &self.geom;
+        let b = lanes.len();
+        let mut out = vec![0.0; g.layers * 2 * b * g.max_seq * g.col()];
+        self.write_batch(lanes, &mut out);
+        HostTensor::f32(
+            vec![g.layers, 2, b, g.max_seq, g.heads, g.head_dim],
+            out,
+        )
+    }
+
+    /// Commit token KV columns from an entry-point output.
+    ///
+    /// `block_kv` is `[Lsub, 2, b, T, H, Dh]` host data (layers
+    /// `layer0..layer0+Lsub`); for each `(col_idx, pos)` pair, column
+    /// `col_idx` of lane `lane` is written at sequence position `pos`.
+    /// Advances `seq_len` to `max(pos)+1` if it grows.
+    pub fn commit_columns(
+        &mut self,
+        slot: usize,
+        block_kv: &[f32],
+        dims: (usize, usize, usize), // (l_sub, b, t)
+        layer0: usize,
+        lane: usize,
+        pairs: &[(usize, usize)], // (column in block, target position)
+    ) {
+        let g = self.geom;
+        let (l_sub, b, t) = dims;
+        let col = g.col();
+        debug_assert_eq!(block_kv.len(), l_sub * 2 * b * t * col);
+        assert!(layer0 + l_sub <= g.layers);
+        let data = &mut self.slots[slot].data;
+        let mut max_pos = None::<usize>;
+        for l in 0..l_sub {
+            for c in 0..2 {
+                for &(j, pos) in pairs {
+                    debug_assert!(j < t && pos < g.max_seq);
+                    let src = (((l * 2 + c) * b + lane) * t + j) * col;
+                    let dst = (((layer0 + l) * 2 + c) * g.max_seq + pos) * col;
+                    data[dst..dst + col]
+                        .copy_from_slice(&block_kv[src..src + col]);
+                }
+            }
+        }
+        for &(_, pos) in pairs {
+            max_pos = Some(max_pos.map_or(pos, |m| m.max(pos)));
+        }
+        if let Some(m) = max_pos {
+            let s = &mut self.slots[slot].seq_len;
+            *s = (*s).max(m + 1);
+        }
+    }
+
+    /// Direct read of one committed column (tests / debugging).
+    pub fn read_column(
+        &self,
+        slot: usize,
+        layer: usize,
+        kv: usize,
+        pos: usize,
+    ) -> &[f32] {
+        let g = self.geom;
+        let col = g.col();
+        let off = ((layer * 2 + kv) * g.max_seq + pos) * col;
+        &self.slots[slot].data[off..off + col]
+    }
+
+    /// Truncate a slot (e.g. when rolling back speculative state).
+    pub fn truncate(&mut self, slot: usize, seq_len: usize) {
+        assert!(seq_len <= self.geom.max_seq);
+        self.slots[slot].seq_len = seq_len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> KvGeometry {
+        KvGeometry { layers: 2, max_seq: 8, heads: 2, head_dim: 3 }
+    }
+
+    /// Fill a fake block_kv [l_sub,2,b,t,H,Dh] where element value encodes
+    /// its (l, c, lane, col) coordinates.
+    fn block(l_sub: usize, b: usize, t: usize, col: usize) -> Vec<f32> {
+        (0..l_sub * 2 * b * t * col).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut c = KvCache::new(geom(), 2);
+        let a = c.acquire().unwrap();
+        let b = c.acquire().unwrap();
+        assert_ne!(a, b);
+        assert!(c.acquire().is_err());
+        c.release(a);
+        assert_eq!(c.free_slots(), 1);
+        let a2 = c.acquire().unwrap();
+        assert_eq!(a2, a);
+        assert_eq!(c.seq_len(a2), 0, "reacquired slot must reset length");
+    }
+
+    #[test]
+    fn commit_then_read_roundtrip() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1);
+        let s = c.acquire().unwrap();
+        let (l_sub, b, t) = (2, 1, 3);
+        let blk = block(l_sub, b, t, g.col());
+        // commit columns 0,2 at positions 4,5
+        c.commit_columns(s, &blk, (l_sub, b, t), 0, 0, &[(0, 4), (2, 5)]);
+        assert_eq!(c.seq_len(s), 6);
+        let col = g.col();
+        // layer 1, V (c=1), position 5 ← block col 2
+        let src = (((1 * 2 + 1) * b + 0) * t + 2) * col;
+        assert_eq!(c.read_column(s, 1, 1, 5), &blk[src..src + col]);
+        // untouched position stays zero
+        assert!(c.read_column(s, 0, 0, 3).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn commit_partial_layers() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1);
+        let s = c.acquire().unwrap();
+        // late-stage commit: layers [1, 2)
+        let blk = block(1, 1, 2, g.col());
+        c.commit_columns(s, &blk, (1, 1, 2), 1, 0, &[(1, 0)]);
+        let col = g.col();
+        let src = (((0 * 2 + 0) * 1 + 0) * 2 + 1) * col;
+        assert_eq!(c.read_column(s, 1, 0, 0), &blk[src..src + col]);
+        assert!(c.read_column(s, 0, 0, 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn batch_assembly_interleaves_lanes() {
+        let g = geom();
+        let mut c = KvCache::new(g, 2);
+        let s0 = c.acquire().unwrap();
+        let s1 = c.acquire().unwrap();
+        let blk0 = vec![1.0; 2 * 2 * 1 * 1 * g.col()];
+        let blk1 = vec![2.0; 2 * 2 * 1 * 1 * g.col()];
+        c.commit_columns(s0, &blk0, (2, 1, 1), 0, 0, &[(0, 0)]);
+        c.commit_columns(s1, &blk1, (2, 1, 1), 0, 0, &[(0, 0)]);
+        let t = c.batch_tensor(&[s0, s1]);
+        assert_eq!(t.shape, vec![2, 2, 2, 8, 2, 3]);
+        let data = t.as_f32();
+        let stripe = g.max_seq * g.col();
+        // lane 0 (slot s0) column 0 of layer 0 K = 1.0s
+        assert_eq!(data[0], 1.0);
+        // lane 1 (slot s1) = 2.0s at offset stripe
+        assert_eq!(data[stripe], 2.0);
+    }
+
+    #[test]
+    fn batch_matches_commits_roundtrip() {
+        // commit a recognizable column, assemble, and find it at the right
+        // offset of the [L,2,b,S,H,Dh] tensor.
+        let g = geom();
+        let mut c = KvCache::new(g, 1);
+        let s = c.acquire().unwrap();
+        let col = g.col();
+        let mut blk = vec![0.0; 2 * 2 * 1 * 1 * col];
+        for (i, x) in blk.iter_mut().enumerate() {
+            *x = i as f32 + 100.0;
+        }
+        c.commit_columns(s, &blk, (2, 1, 1), 0, 0, &[(0, 2)]);
+        let t = c.batch_tensor(&[s]);
+        let data = t.as_f32();
+        // [l=1, c=0, lane=0, pos=2, :] in [L,2,b,S,H,Dh]
+        let off = ((1 * 2 + 0) * 1 + 0) * g.max_seq * col + 2 * col;
+        let src = ((1 * 2 + 0) * 1 + 0) * col; // block t=1 j=0
+        assert_eq!(&data[off..off + col], &blk[src..src + col]);
+    }
+
+    #[test]
+    fn truncate_rolls_back() {
+        let g = geom();
+        let mut c = KvCache::new(g, 1);
+        let s = c.acquire().unwrap();
+        let blk = block(2, 1, 4, g.col());
+        c.commit_columns(s, &blk, (2, 1, 4), 0, 0,
+                         &[(0, 0), (1, 1), (2, 2)]);
+        assert_eq!(c.seq_len(s), 3);
+        c.truncate(s, 1);
+        assert_eq!(c.seq_len(s), 1);
+    }
+}
+
+#[cfg(test)]
+mod prefix_tests {
+    use super::*;
+
+    #[test]
+    fn prefix_assembly_matches_full_in_committed_region() {
+        let g = KvGeometry { layers: 2, max_seq: 8, heads: 2, head_dim: 3 };
+        let mut c = KvCache::new(g, 2);
+        let s0 = c.acquire().unwrap();
+        let s1 = c.acquire().unwrap();
+        let col = g.col();
+        let blk: Vec<f32> =
+            (0..2 * 2 * 1 * 4 * col).map(|i| i as f32).collect();
+        c.commit_columns(s0, &blk, (2, 1, 4), 0, 0,
+                         &[(0, 0), (1, 1), (2, 2)]);
+        c.commit_columns(s1, &blk, (2, 1, 4), 0, 0, &[(3, 0)]);
+        let lanes = [s0, s1];
+        let n = g.layers * 2 * 2 * g.max_seq * col;
+        let mut full = vec![0.0; n];
+        let mut prefix = vec![-7.0; n]; // poison: stale scratch simulation
+        c.write_batch(&lanes, &mut full);
+        c.write_batch_prefix(&lanes, &mut prefix);
+        let stripe = g.max_seq * col;
+        for l in 0..g.layers {
+            for cc in 0..2 {
+                for (lane, &slot) in lanes.iter().enumerate() {
+                    let len = c.seq_len(slot) * col;
+                    let off = ((l * 2 + cc) * 2 + lane) * stripe;
+                    assert_eq!(&prefix[off..off + len],
+                               &full[off..off + len]);
+                    // tail is stale poison — proving it was skipped
+                    assert!(prefix[off + len..off + stripe]
+                        .iter()
+                        .all(|&x| x == -7.0));
+                }
+            }
+        }
+    }
+}

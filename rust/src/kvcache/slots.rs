@@ -1,0 +1,73 @@
+//! Slot allocator: a tiny LIFO free list with occupancy accounting.
+
+#[derive(Debug)]
+pub struct SlotAllocator {
+    free: Vec<usize>,
+    in_use: Vec<bool>,
+}
+
+impl SlotAllocator {
+    pub fn new(capacity: usize) -> Self {
+        SlotAllocator {
+            free: (0..capacity).rev().collect(),
+            in_use: vec![false; capacity],
+        }
+    }
+
+    pub fn acquire(&mut self) -> Option<usize> {
+        let s = self.free.pop()?;
+        self.in_use[s] = true;
+        Some(s)
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        assert!(self.in_use[slot], "double release of slot {slot}");
+        self.in_use[slot] = false;
+        self.free.push(slot);
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_count(&self) -> usize {
+        self.in_use.len() - self.free.len()
+    }
+
+    pub fn is_used(&self, slot: usize) -> bool {
+        self.in_use[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifo_reuse() {
+        let mut a = SlotAllocator::new(3);
+        let s0 = a.acquire().unwrap();
+        assert_eq!(s0, 0);
+        let s1 = a.acquire().unwrap();
+        a.release(s0);
+        assert_eq!(a.acquire().unwrap(), s0);
+        assert_eq!(a.used_count(), 2);
+        assert!(a.is_used(s1));
+    }
+
+    #[test]
+    fn exhaustion() {
+        let mut a = SlotAllocator::new(1);
+        assert!(a.acquire().is_some());
+        assert!(a.acquire().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut a = SlotAllocator::new(1);
+        let s = a.acquire().unwrap();
+        a.release(s);
+        a.release(s);
+    }
+}

@@ -1,0 +1,44 @@
+//! ProPD — dynamic token tree pruning and generation for LLM parallel
+//! decoding (Zhong et al., 2024), reproduced as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! Layer map (see DESIGN.md):
+//! - L3 (this crate): serving coordinator — batching, KV cache, token-tree
+//!   generation/pruning/acceptance, estimators, metrics, server, CLI.
+//! - L2 (`python/compile/model.py`): the transformer + medusa/early heads,
+//!   AOT-lowered to HLO text per (batch, tree) bucket.
+//! - L1 (`python/compile/kernels/`): the Pallas tree-attention kernel.
+//!
+//! Python never runs at serving time: [`runtime::Runtime`] loads the HLO
+//! artifacts and executes them through the PJRT CPU client.
+
+pub mod batching;
+pub mod bench;
+pub mod config;
+pub mod engine;
+pub mod estimator;
+pub mod jsonio;
+pub mod kvcache;
+pub mod manifest;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod tree;
+pub mod util;
+pub mod workload;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Resolve the artifacts directory: explicit arg > $PROPD_ARTIFACTS >
+/// ./artifacts.
+pub fn artifacts_dir(explicit: Option<&str>) -> std::path::PathBuf {
+    if let Some(p) = explicit {
+        return p.into();
+    }
+    if let Ok(p) = std::env::var("PROPD_ARTIFACTS") {
+        return p.into();
+    }
+    DEFAULT_ARTIFACTS.into()
+}

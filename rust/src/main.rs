@@ -1,0 +1,166 @@
+//! `propd` — the launcher CLI.
+//!
+//!   propd serve    [--config f.toml] [--set k=v]...    run the TCP server
+//!   propd generate [--prompt "..."] [--set k=v]...     one-shot generation
+//!   propd inspect  [--artifacts dir]                   manifest summary
+//!   propd selftest [--set k=v]...                      tiny end-to-end run
+//!
+//! (The offline crate mirror has no clap; argument parsing is hand-rolled.)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use propd::config::ServingConfig;
+use propd::engine::{Engine, EngineKind};
+use propd::runtime::Runtime;
+
+struct Args {
+    cmd: String,
+    config: Option<PathBuf>,
+    sets: Vec<String>,
+    prompt: Option<String>,
+    artifacts: Option<String>,
+    max_new: usize,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut a = Args {
+        cmd,
+        config: None,
+        sets: Vec::new(),
+        prompt: None,
+        artifacts: None,
+        max_new: 64,
+    };
+    while let Some(flag) = it.next() {
+        let mut val = |name: &str| -> Result<String> {
+            it.next().ok_or_else(|| anyhow::anyhow!("{name} needs a value"))
+        };
+        match flag.as_str() {
+            "--config" => a.config = Some(PathBuf::from(val("--config")?)),
+            "--set" => {
+                let v = val("--set")?;
+                a.sets.push(v);
+            }
+            "--prompt" => a.prompt = Some(val("--prompt")?),
+            "--artifacts" => a.artifacts = Some(val("--artifacts")?),
+            "--max-new" => {
+                a.max_new = val("--max-new")?.parse().context("--max-new")?
+            }
+            "--engine" => {
+                let v = val("--engine")?;
+                a.sets.push(format!("engine.kind={v}"));
+            }
+            "--size" => {
+                let v = val("--size")?;
+                a.sets.push(format!("engine.size={v}"));
+            }
+            other => bail!("unknown flag {other:?} (try `propd help`)"),
+        }
+    }
+    Ok(a)
+}
+
+fn load(cfg: &ServingConfig, artifacts: Option<&str>) -> Result<Runtime> {
+    let dir = propd::artifacts_dir(artifacts.or(Some(&cfg.artifacts)));
+    Runtime::load(&dir).with_context(|| {
+        format!(
+            "loading artifacts from {} (run `make artifacts` first?)",
+            dir.display()
+        )
+    })
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "serve" => {
+            let cfg = ServingConfig::load(args.config.as_deref(),
+                                          &args.sets)?;
+            let rt = load(&cfg, args.artifacts.as_deref())?;
+            propd::server::serve(&cfg, &rt, None)
+        }
+        "generate" => {
+            let cfg = ServingConfig::load(args.config.as_deref(),
+                                          &args.sets)?;
+            let rt = load(&cfg, args.artifacts.as_deref())?;
+            let mut engine = Engine::new(&rt, cfg.engine.clone())?;
+            engine.precompile()?;
+            let prompt = args.prompt.unwrap_or_else(|| {
+                "user: Explain how the scheduler reduces the latency of \
+                 every request.\nassistant:"
+                    .to_string()
+            });
+            engine.submit(&prompt, args.max_new);
+            let done = engine.run_to_completion()?;
+            for c in done {
+                println!("--- request {} ({} tokens, {} steps, {:.3}s)",
+                         c.id, c.tokens.len(), c.steps, c.latency_seconds);
+                println!("{}{}", c.prompt, c.text);
+            }
+            println!("{}", engine.estimator_snapshot());
+            let report = engine.metrics.report();
+            println!(
+                "tok/s={:.2} accept_len={:.2} prune_rate={:.2}",
+                report["tokens_per_second"],
+                report["accept_len_mean"],
+                report["prune_rate_mean"]
+            );
+            Ok(())
+        }
+        "inspect" => {
+            let dir = propd::artifacts_dir(args.artifacts.as_deref());
+            let m = propd::manifest::Manifest::load(&dir)?;
+            println!("artifacts root: {}", m.root.display());
+            println!("sizes:");
+            for (name, s) in &m.sizes {
+                println!(
+                    "  {name}: {} layers, d={}, {} heads, vocab {}, \
+                     {} params",
+                    s.n_layers, s.d_model, s.n_heads, s.vocab,
+                    s.param_count
+                );
+            }
+            println!("batch buckets: {:?}", m.batch_buckets);
+            println!("tree buckets:  {:?}", m.tree_buckets);
+            println!("artifacts: {}", m.artifacts.len());
+            Ok(())
+        }
+        "selftest" => {
+            let mut sets = args.sets.clone();
+            sets.push("engine.max_new_tokens=16".into());
+            let cfg = ServingConfig::load(args.config.as_deref(), &sets)?;
+            let rt = load(&cfg, args.artifacts.as_deref())?;
+            for kind in ["autoregressive", "medusa", "propd"] {
+                let mut e_cfg = cfg.engine.clone();
+                e_cfg.kind = EngineKind::parse(kind).unwrap();
+                let mut engine = Engine::new(&rt, e_cfg)?;
+                engine.submit(
+                    "user: Explain how the model verifies the candidate \
+                     sequences.\nassistant:",
+                    16,
+                );
+                let done = engine.run_to_completion()?;
+                println!(
+                    "[selftest/{kind}] {} tokens in {} steps",
+                    done[0].tokens.len(),
+                    done[0].steps
+                );
+            }
+            println!("selftest OK");
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "propd — ProPD parallel-decoding server\n\
+                 usage: propd <serve|generate|inspect|selftest> \
+                 [--config f.toml] [--set k=v] [--engine kind] [--size s] \
+                 [--prompt p] [--max-new n] [--artifacts dir]"
+            );
+            Ok(())
+        }
+    }
+}

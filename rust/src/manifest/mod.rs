@@ -1,0 +1,408 @@
+//! Artifact manifest — the build-time contract emitted by
+//! `python/compile/aot.py` and consumed by the runtime.
+//!
+//! `manifest.json` enumerates every AOT-lowered HLO module with its static
+//! shapes (model size, batch bucket, tree bucket, prune layer), the model
+//! architecture per size, and the parameter-passing convention (weights in
+//! sorted-name order, then dynamic inputs).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::{self, Value};
+
+/// Element type of an artifact input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// One named tensor (input or weight) with its static shape.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(TensorMeta {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_usize_vec()?,
+            dtype: DType::parse(v.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// Which serving entry point an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Entry {
+    Prefill,
+    Decode,
+    VerifyEarly,
+    VerifyLate,
+}
+
+impl Entry {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "prefill" => Entry::Prefill,
+            "decode" => Entry::Decode,
+            "verify_early" => Entry::VerifyEarly,
+            "verify_late" => Entry::VerifyLate,
+            other => bail!("unknown entry {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Entry::Prefill => "prefill",
+            Entry::Decode => "decode",
+            Entry::VerifyEarly => "verify_early",
+            Entry::VerifyLate => "verify_late",
+        }
+    }
+}
+
+/// Metadata for one AOT-lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub key: String,
+    pub path: String,
+    pub size: String,
+    pub entry: Entry,
+    pub batch: usize,
+    pub tree: Option<usize>,
+    pub n_layer: Option<usize>,
+    pub params: Vec<TensorMeta>,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<String>,
+}
+
+/// Model architecture for one size (mirrors python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub max_prompt: usize,
+    pub n_medusa: usize,
+    pub early_layers: Vec<usize>,
+    pub param_count: usize,
+}
+
+impl ModelMeta {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(ModelMeta {
+            name: v.get("name")?.as_str()?.to_string(),
+            n_layers: v.get("n_layers")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            max_seq: v.get("max_seq")?.as_usize()?,
+            max_prompt: v.get("max_prompt")?.as_usize()?,
+            n_medusa: v.get("n_medusa")?.as_usize()?,
+            early_layers: v.get("early_layers")?.as_usize_vec()?,
+            param_count: v.get("param_count")?.as_usize()?,
+        })
+    }
+
+    /// KV-cache tensor shape for one batch lane set: [L, 2, b, S, H, Dh].
+    pub fn kv_shape(&self, batch: usize) -> [usize; 6] {
+        [self.n_layers, 2, batch, self.max_seq, self.n_heads, self.head_dim]
+    }
+
+    pub fn kv_elements(&self, batch: usize) -> usize {
+        self.kv_shape(batch).iter().product()
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub batch_buckets: Vec<usize>,
+    pub tree_buckets: Vec<usize>,
+    pub default_prune_layer: usize,
+    pub default_size: String,
+    pub sizes: BTreeMap<String, ModelMeta>,
+    pub artifacts: Vec<ArtifactMeta>,
+    index: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let v = jsonio::parse_file(&artifacts_dir.join("manifest.json"))?;
+        Self::from_value(artifacts_dir.to_path_buf(), &v)
+    }
+
+    pub fn from_value(root: PathBuf, v: &Value) -> Result<Self> {
+        let mut sizes = BTreeMap::new();
+        for (name, sv) in v.get("sizes")?.as_obj()? {
+            sizes.insert(name.clone(), ModelMeta::parse(sv)?);
+        }
+        let mut artifacts = Vec::new();
+        let mut index = BTreeMap::new();
+        for av in v.get("artifacts")?.as_arr()? {
+            let art = ArtifactMeta {
+                key: av.get("key")?.as_str()?.to_string(),
+                path: av.get("path")?.as_str()?.to_string(),
+                size: av.get("size")?.as_str()?.to_string(),
+                entry: Entry::parse(av.get("entry")?.as_str()?)?,
+                batch: av.get("batch")?.as_usize()?,
+                tree: av.opt("tree").map(|t| t.as_usize()).transpose()?,
+                n_layer: av.opt("n_layer").map(|t| t.as_usize()).transpose()?,
+                params: av
+                    .get("params")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorMeta::parse)
+                    .collect::<Result<_>>()?,
+                inputs: av
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorMeta::parse)
+                    .collect::<Result<_>>()?,
+                outputs: av.get("outputs")?.as_string_vec()?,
+            };
+            index.insert(art.key.clone(), artifacts.len());
+            artifacts.push(art);
+        }
+        Ok(Manifest {
+            root,
+            batch_buckets: v.get("batch_buckets")?.as_usize_vec()?,
+            tree_buckets: v.get("tree_buckets")?.as_usize_vec()?,
+            default_prune_layer: v.get("default_prune_layer")?.as_usize()?,
+            default_size: v.get("default_size")?.as_str()?.to_string(),
+            sizes,
+            artifacts,
+            index,
+        })
+    }
+
+    pub fn model(&self, size: &str) -> Result<&ModelMeta> {
+        self.sizes
+            .get(size)
+            .ok_or_else(|| anyhow!("unknown model size {size:?}"))
+    }
+
+    pub fn by_key(&self, key: &str) -> Result<&ArtifactMeta> {
+        self.index
+            .get(key)
+            .map(|&i| &self.artifacts[i])
+            .ok_or_else(|| anyhow!("no artifact {key:?} in manifest"))
+    }
+
+    /// Canonical artifact key (matches aot.artifact_key in python).
+    pub fn key_for(
+        size: &str,
+        entry: Entry,
+        n: Option<usize>,
+        b: usize,
+        t: Option<usize>,
+    ) -> String {
+        let mut parts = vec![entry.as_str().to_string()];
+        if let Some(n) = n {
+            parts.push(format!("n{n}"));
+        }
+        parts.push(format!("b{b}"));
+        if let Some(t) = t {
+            parts.push(format!("t{t}"));
+        }
+        format!("{size}/{}", parts.join("_"))
+    }
+
+    /// Look up an artifact by semantic coordinates.
+    pub fn find(
+        &self,
+        size: &str,
+        entry: Entry,
+        n: Option<usize>,
+        b: usize,
+        t: Option<usize>,
+    ) -> Result<&ArtifactMeta> {
+        let key = Self::key_for(size, entry, n, b, t);
+        self.by_key(&key).with_context(|| {
+            format!("artifact grid does not cover (size={size}, \
+                     entry={}, n={n:?}, b={b}, t={t:?})", entry.as_str())
+        })
+    }
+
+    /// Smallest bucket >= value (clamps to the largest bucket).
+    pub fn batch_bucket(&self, b: usize) -> usize {
+        bucket_for(b, &self.batch_buckets)
+    }
+
+    pub fn tree_bucket(&self, t: usize) -> usize {
+        bucket_for(t, &self.tree_buckets)
+    }
+
+    /// The (batch, tree) grid available for a size/entry/n combination —
+    /// what the dynamic tree planner may choose from.
+    pub fn available_tree_buckets(
+        &self,
+        size: &str,
+        n: usize,
+        b: usize,
+    ) -> Vec<usize> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.size == size
+                    && a.entry == Entry::VerifyEarly
+                    && a.n_layer == Some(n)
+                    && a.batch == b
+            })
+            .filter_map(|a| a.tree)
+            .collect()
+    }
+
+    pub fn weights_path(&self, size: &str) -> PathBuf {
+        self.root.join(size).join("weights.bin")
+    }
+
+    pub fn weights_meta_path(&self, size: &str) -> PathBuf {
+        self.root.join(size).join("weights.json")
+    }
+
+    pub fn artifact_path(&self, art: &ArtifactMeta) -> PathBuf {
+        self.root.join(&art.path)
+    }
+}
+
+pub fn bucket_for(value: usize, buckets: &[usize]) -> usize {
+    for &b in buckets {
+        if value <= b {
+            return b;
+        }
+    }
+    *buckets.last().expect("empty bucket list")
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    /// A small synthetic manifest used across the rust test suite.
+    pub fn test_manifest_json() -> String {
+        r#"{
+ "format_version": 1,
+ "kv_layout": "[L, 2, b, S, H, Dh]",
+ "batch_buckets": [1, 2, 4],
+ "tree_buckets": [4, 8],
+ "default_prune_layer": 1,
+ "default_size": "micro",
+ "sizes": {
+  "micro": {"name": "micro", "n_layers": 2, "d_model": 16, "n_heads": 2,
+            "head_dim": 8, "d_ff": 32, "vocab": 256, "max_seq": 32,
+            "max_prompt": 8, "n_medusa": 4, "early_layers": [1],
+            "rope_theta": 10000.0, "norm_eps": 1e-5, "param_count": 12345}
+ },
+ "artifacts": [
+  {"key": "micro/decode_b1", "path": "micro/decode_b1.hlo.txt",
+   "size": "micro", "entry": "decode", "batch": 1, "tree": null,
+   "n_layer": null,
+   "params": [{"name": "embed", "shape": [256, 16], "dtype": "f32"}],
+   "inputs": [{"name": "tok", "shape": [1], "dtype": "i32"},
+              {"name": "seq_len", "shape": [1], "dtype": "i32"},
+              {"name": "kv", "shape": [2, 2, 1, 32, 2, 8], "dtype": "f32"}],
+   "outputs": ["logits", "medusa", "col_kv"]},
+  {"key": "micro/verify_early_n1_b1_t4",
+   "path": "micro/verify_early_n1_b1_t4.hlo.txt",
+   "size": "micro", "entry": "verify_early", "batch": 1, "tree": 4,
+   "n_layer": 1, "params": [],
+   "inputs": [{"name": "tree_tok", "shape": [1, 4], "dtype": "i32"}],
+   "outputs": ["hidden", "early_logits", "tree_kv"]}
+ ]
+}"#
+        .to_string()
+    }
+
+    pub fn test_manifest() -> Manifest {
+        let v = jsonio::parse(&test_manifest_json()).unwrap();
+        Manifest::from_value(PathBuf::from("/tmp/propd-test"), &v).unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = test_manifest();
+        assert_eq!(m.batch_buckets, vec![1, 2, 4]);
+        assert_eq!(m.default_size, "micro");
+        let model = m.model("micro").unwrap();
+        assert_eq!(model.n_layers, 2);
+        assert_eq!(model.kv_shape(3), [2, 2, 3, 32, 2, 8]);
+    }
+
+    #[test]
+    fn key_roundtrip() {
+        let m = test_manifest();
+        let a = m
+            .find("micro", Entry::VerifyEarly, Some(1), 1, Some(4))
+            .unwrap();
+        assert_eq!(a.key, "micro/verify_early_n1_b1_t4");
+        let d = m.find("micro", Entry::Decode, None, 1, None).unwrap();
+        assert_eq!(d.outputs, vec!["logits", "medusa", "col_kv"]);
+    }
+
+    #[test]
+    fn missing_artifact_is_context_error() {
+        let m = test_manifest();
+        let err = m
+            .find("micro", Entry::Prefill, None, 9, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("prefill"), "{err}");
+    }
+
+    #[test]
+    fn buckets() {
+        let m = test_manifest();
+        assert_eq!(m.batch_bucket(1), 1);
+        assert_eq!(m.batch_bucket(3), 4);
+        assert_eq!(m.batch_bucket(99), 4);
+        assert_eq!(m.tree_bucket(5), 8);
+    }
+
+    #[test]
+    fn available_tree_buckets() {
+        let m = test_manifest();
+        assert_eq!(m.available_tree_buckets("micro", 1, 1), vec![4]);
+        assert!(m.available_tree_buckets("micro", 2, 1).is_empty());
+    }
+
+    #[test]
+    fn tensor_meta_elements() {
+        let t = TensorMeta {
+            name: "x".into(),
+            shape: vec![2, 3, 4],
+            dtype: DType::F32,
+        };
+        assert_eq!(t.elements(), 24);
+    }
+}

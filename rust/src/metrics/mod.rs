@@ -1,0 +1,109 @@
+//! Serving metrics: per-step and per-request accounting, plus report
+//! rendering for the bench harness and EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    /// Wall-clock spent inside engine steps (s).
+    pub step_time: Summary,
+    /// Time spent in the verify_early stage (s).
+    pub early_time: Summary,
+    /// Time spent in the verify_late stage (s).
+    pub late_time: Summary,
+    /// Host-side overhead per step: everything but entry-point execution.
+    pub host_time: Summary,
+    /// Accepted tokens per request per step (the paper's AccLength).
+    pub accept_len: Summary,
+    /// Tree size chosen per step (initial, pre-pruning).
+    pub tree_size: Summary,
+    /// Post-pruning tree size per step.
+    pub pruned_size: Summary,
+    /// Fraction of nodes eliminated by early pruning per step.
+    pub prune_rate: Summary,
+    /// Request latency (submit → completion) in seconds.
+    pub request_latency: Summary,
+    /// Queueing delay before prefill (s).
+    pub queue_delay: Summary,
+    pub steps: u64,
+    pub tokens_generated: u64,
+    pub requests_completed: u64,
+    pub prefills: u64,
+    /// Engine wall-clock while at least one request was active (s).
+    pub busy_seconds: f64,
+}
+
+impl EngineMetrics {
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.busy_seconds <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.busy_seconds
+        }
+    }
+
+    pub fn mean_accept_len(&self) -> f64 {
+        self.accept_len.mean()
+    }
+
+    pub fn mean_prune_rate(&self) -> f64 {
+        self.prune_rate.mean()
+    }
+
+    /// Render a flat key→value report (stable keys; json/markdown-friendly).
+    pub fn report(&self) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        m.insert("steps".into(), self.steps as f64);
+        m.insert("tokens_generated".into(), self.tokens_generated as f64);
+        m.insert("requests_completed".into(),
+                 self.requests_completed as f64);
+        m.insert("tokens_per_second".into(), self.tokens_per_second());
+        m.insert("busy_seconds".into(), self.busy_seconds);
+        m.insert("step_time_mean_s".into(), self.step_time.mean());
+        m.insert("step_time_p50_s".into(), self.step_time.p50());
+        m.insert("step_time_p99_s".into(), self.step_time.p99());
+        m.insert("early_time_mean_s".into(), self.early_time.mean());
+        m.insert("late_time_mean_s".into(), self.late_time.mean());
+        m.insert("host_time_mean_s".into(), self.host_time.mean());
+        m.insert("accept_len_mean".into(), self.accept_len.mean());
+        m.insert("tree_size_mean".into(), self.tree_size.mean());
+        m.insert("pruned_size_mean".into(), self.pruned_size.mean());
+        m.insert("prune_rate_mean".into(), self.prune_rate.mean());
+        m.insert("request_latency_mean_s".into(),
+                 self.request_latency.mean());
+        m.insert("request_latency_p99_s".into(), self.request_latency.p99());
+        m.insert("queue_delay_mean_s".into(), self.queue_delay.mean());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_per_second() {
+        let mut m = EngineMetrics::default();
+        m.tokens_generated = 100;
+        m.busy_seconds = 4.0;
+        assert_eq!(m.tokens_per_second(), 25.0);
+        m.busy_seconds = 0.0;
+        assert_eq!(m.tokens_per_second(), 0.0);
+    }
+
+    #[test]
+    fn report_has_stable_keys() {
+        let m = EngineMetrics::default();
+        let r = m.report();
+        for k in [
+            "tokens_per_second",
+            "accept_len_mean",
+            "prune_rate_mean",
+            "step_time_p99_s",
+        ] {
+            assert!(r.contains_key(k), "missing {k}");
+        }
+    }
+}

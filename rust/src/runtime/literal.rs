@@ -1,0 +1,195 @@
+//! Host-side tensors and conversions to/from XLA literals/buffers.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::{DType, TensorMeta};
+
+/// Additive-mask "minus infinity" — matches python kernels (NEG_INF).
+pub const NEG_INF: f32 = -1e9;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense row-major host tensor (f32 or i32 — the only dtypes in the
+/// artifact contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: HostData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: HostData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: HostData::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: HostData::F32(vec![0.0; n]) }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            HostData::F32(_) => DType::F32,
+            HostData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            HostData::F32(v) => v,
+            HostData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            HostData::I32(v) => v,
+            HostData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            HostData::F32(v) => v,
+            HostData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Shape/dtype check against a manifest input spec.
+    pub fn check(&self, spec: &TensorMeta) -> Result<()> {
+        if self.shape != spec.shape {
+            bail!(
+                "input {:?}: shape {:?} != expected {:?}",
+                spec.name, self.shape, spec.shape
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!("input {:?}: dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    /// Upload to a device buffer.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match &self.data {
+            HostData::F32(v) => client
+                .buffer_from_host_buffer::<f32>(v, &self.shape, None),
+            HostData::I32(v) => client
+                .buffer_from_host_buffer::<i32>(v, &self.shape, None),
+        };
+        buf.map_err(|e| anyhow::anyhow!("buffer upload failed: {e:?}"))
+    }
+
+    /// Download a literal into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let ty = lit
+            .ty()
+            .map_err(|e| anyhow::anyhow!("literal type: {e:?}"))?;
+        match ty {
+            xla::ElementType::F32 => {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("literal read: {e:?}"))?;
+                Ok(HostTensor::f32(dims, v))
+            }
+            xla::ElementType::S32 => {
+                let v = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal read: {e:?}"))?;
+                Ok(HostTensor::i32(dims, v))
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+
+    /// Row (last-dimension slice) accessor for 2-D+ f32 tensors: returns
+    /// the `row`-th chunk of length `row_len` starting at a flat offset.
+    pub fn f32_chunk(&self, offset: usize, len: usize) -> &[f32] {
+        &self.as_f32()[offset..offset + len]
+    }
+}
+
+/// Indexing helper: flat offset of `idx` in a row-major `shape`.
+pub fn flat_index(shape: &[usize], idx: &[usize]) -> usize {
+    debug_assert_eq!(shape.len(), idx.len());
+    let mut off = 0;
+    for (d, (&s, &i)) in shape.iter().zip(idx).enumerate() {
+        debug_assert!(i < s, "index {i} out of bounds for dim {d} ({s})");
+        off = off * s + i;
+    }
+    off
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        let t = HostTensor::i32(vec![4], vec![1, 2, 3, 4]);
+        assert_eq!(t.as_i32(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn check_against_spec() {
+        let spec = TensorMeta {
+            name: "x".into(),
+            shape: vec![2, 3],
+            dtype: DType::F32,
+        };
+        assert!(HostTensor::zeros_f32(vec![2, 3]).check(&spec).is_ok());
+        assert!(HostTensor::zeros_f32(vec![3, 2]).check(&spec).is_err());
+        assert!(HostTensor::i32(vec![2, 3], vec![0; 6]).check(&spec).is_err());
+    }
+
+    #[test]
+    fn flat_index_row_major() {
+        assert_eq!(flat_index(&[2, 3, 4], &[0, 0, 0]), 0);
+        assert_eq!(flat_index(&[2, 3, 4], &[1, 2, 3]), 23);
+        assert_eq!(flat_index(&[2, 3, 4], &[0, 1, 2]), 6);
+    }
+
+    #[test]
+    fn roundtrip_through_literal() {
+        // Requires the PJRT-independent literal API only.
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = xla::Literal::vec1(t.as_f32()).reshape(&[2, 2]).unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_roundtrip_through_literal() {
+        let t = HostTensor::i32(vec![3], vec![7, -1, 2]);
+        let lit = xla::Literal::vec1(t.as_i32());
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

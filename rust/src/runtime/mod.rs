@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-lowered HLO-text artifacts and executes them
+//! on the CPU PJRT client.  This is the only module that touches the `xla`
+//! crate; everything above it works with [`literal::HostTensor`].
+//!
+//! Weights are uploaded to device buffers once per model size and reused via
+//! `execute_b` on every call (Python never runs at serving time).
+
+pub mod literal;
+pub mod registry;
+pub mod weights;
+
+pub use literal::{HostData, HostTensor};
+pub use registry::{Executable, Runtime};
+pub use weights::Weights;

@@ -1,0 +1,233 @@
+//! Executable registry: lazy-compiles HLO-text artifacts on the PJRT CPU
+//! client, caches compiled executables and per-size weight device buffers.
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::manifest::{ArtifactMeta, Entry, Manifest};
+use crate::runtime::literal::HostTensor;
+use crate::runtime::weights::Weights;
+
+/// One compiled entry point plus its manifest metadata and the pre-uploaded
+/// weight buffers it expects as leading arguments.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Rc<Vec<xla::PjRtBuffer>>,
+    pub compile_seconds: f64,
+}
+
+/// A dynamic argument: host data uploaded per call, or an already-resident
+/// device buffer (e.g. the KV tensor shared by verify_early/verify_late —
+/// uploading it once per step instead of per stage is a §Perf win).
+pub enum DynArg<'a> {
+    Host(&'a HostTensor),
+    Buf(&'a xla::PjRtBuffer),
+}
+
+impl Executable {
+    /// Execute with the given dynamic inputs (weights are prepended
+    /// automatically).  Returns the output tensors in manifest order.
+    pub fn run(&self, dyn_inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let args: Vec<DynArg> = dyn_inputs.iter().map(DynArg::Host).collect();
+        self.run_mixed(&args)
+    }
+
+    /// Like [`run`](Self::run) but accepting pre-uploaded device buffers.
+    /// Shape checking applies to host args; buffer args are trusted (XLA
+    /// still validates at execute time).
+    pub fn run_mixed(&self, dyn_inputs: &[DynArg]) -> Result<Vec<HostTensor>> {
+        if dyn_inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: got {} dynamic inputs, expected {}",
+                self.meta.key,
+                dyn_inputs.len(),
+                self.meta.inputs.len()
+            );
+        }
+        for (t, spec) in dyn_inputs.iter().zip(&self.meta.inputs) {
+            if let DynArg::Host(t) = t {
+                t.check(spec).with_context(|| self.meta.key.clone())?;
+            }
+        }
+        let client = self.exe.client();
+        let mut uploaded: Vec<xla::PjRtBuffer> =
+            Vec::with_capacity(dyn_inputs.len());
+        // PjRtBuffer isn't Clone; execute_b borrows, so build a slice of
+        // refs (weights first, then dynamic args in manifest order).
+        for t in dyn_inputs {
+            if let DynArg::Host(t) = t {
+                uploaded.push(t.to_buffer(client)?);
+            }
+        }
+        let mut arg_refs: Vec<&xla::PjRtBuffer> =
+            self.weight_bufs.iter().collect();
+        let mut up = uploaded.iter();
+        for t in dyn_inputs {
+            match t {
+                DynArg::Host(_) => arg_refs.push(up.next().unwrap()),
+                DynArg::Buf(b) => arg_refs.push(b),
+            }
+        }
+        let out = self
+            .exe
+            .execute_b(&arg_refs)
+            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.meta.key))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: readback failed: {e:?}", self.meta.key))?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: tuple unpack failed: {e:?}", self.meta.key))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.meta.key,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+    }
+}
+
+/// The runtime: PJRT client + manifest + executable/weights caches.
+///
+/// Single-threaded by design (the PJRT wrapper types hold raw pointers);
+/// each engine thread owns its own `Runtime`.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<String, Rc<Executable>>>,
+    weights: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    host_weights: RefCell<HashMap<String, Rc<Weights>>>,
+    pub compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            exes: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            host_weights: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Host-side copy of a size's weights (used by tests / inspection).
+    pub fn host_weights(&self, size: &str) -> Result<Rc<Weights>> {
+        if let Some(w) = self.host_weights.borrow().get(size) {
+            return Ok(w.clone());
+        }
+        let w = Rc::new(Weights::load(
+            &self.manifest.weights_path(size),
+            &self.manifest.weights_meta_path(size),
+        )?);
+        self.host_weights
+            .borrow_mut()
+            .insert(size.to_string(), w.clone());
+        Ok(w)
+    }
+
+    /// Device-resident weight buffers for a size (uploaded once).
+    fn weight_buffers(&self, size: &str) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
+        if let Some(b) = self.weights.borrow().get(size) {
+            return Ok(b.clone());
+        }
+        let host = self.host_weights(size)?;
+        let bufs: Vec<xla::PjRtBuffer> = host
+            .tensors
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<Result<_>>()?;
+        let rc = Rc::new(bufs);
+        self.weights
+            .borrow_mut()
+            .insert(size.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Fetch (compiling on first use) the executable for an artifact key.
+    pub fn executable(&self, key: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.exes.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.by_key(key)?.clone();
+        let path = self.manifest.artifact_path(&meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("{key}: HLO parse failed: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("{key}: XLA compile failed: {e:?}"))?;
+        let compile_seconds = t0.elapsed().as_secs_f64();
+        self.compile_log
+            .borrow_mut()
+            .push((key.to_string(), compile_seconds));
+        let weight_bufs = self.weight_buffers(&meta.size)?;
+        let rc = Rc::new(Executable { meta, exe, weight_bufs, compile_seconds });
+        self.exes.borrow_mut().insert(key.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host tensor to a device buffer (for reuse across calls).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        t.to_buffer(&self.client)
+    }
+
+    /// Upload a raw f32 slice (zero-copy on the rust side: the engine's
+    /// reusable KV scratch goes straight to the device buffer).
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize])
+        -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, shape, None)
+            .map_err(|e| anyhow!("buffer upload failed: {e:?}"))
+    }
+
+    /// Semantic lookup + compile + run in one call.
+    pub fn run(
+        &self,
+        size: &str,
+        entry: Entry,
+        n: Option<usize>,
+        b: usize,
+        t: Option<usize>,
+        dyn_inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let key = Manifest::key_for(size, entry, n, b, t);
+        self.executable(&key)?.run(dyn_inputs)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+}
+
+// NOTE: integration tests that exercise real artifacts live in
+// rust/tests/integration.rs (they skip when artifacts/ is absent).

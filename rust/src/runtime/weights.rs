@@ -1,0 +1,167 @@
+//! Trained-parameter loading: `weights.bin` (little-endian f32, sorted-name
+//! concatenation) + `weights.json` (offsets/shapes), as exported by
+//! `python/compile/train.py::export_weights_bin`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio;
+use crate::runtime::literal::HostTensor;
+
+/// One model size's parameters, in artifact argument order (sorted names).
+#[derive(Debug)]
+pub struct Weights {
+    pub names: Vec<String>,
+    pub tensors: Vec<HostTensor>,
+    pub total_bytes: usize,
+}
+
+impl Weights {
+    pub fn load(bin_path: &Path, meta_path: &Path) -> Result<Self> {
+        let meta = jsonio::parse_file(meta_path)?;
+        let blob = std::fs::read(bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+        let total = meta.get("total_bytes")?.as_usize()?;
+        if blob.len() != total {
+            bail!(
+                "weights.bin is {} bytes, manifest says {total}",
+                blob.len()
+            );
+        }
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let mut expected_offset = 0usize;
+        for e in meta.get("params")?.as_arr()? {
+            let name = e.get("name")?.as_str()?.to_string();
+            let shape = e.get("shape")?.as_usize_vec()?;
+            let dtype = e.get("dtype")?.as_str()?;
+            if dtype != "f32" {
+                bail!("param {name}: unsupported dtype {dtype}");
+            }
+            let offset = e.get("offset_bytes")?.as_usize()?;
+            let size = e.get("size_bytes")?.as_usize()?;
+            if offset != expected_offset {
+                bail!("param {name}: non-contiguous offset");
+            }
+            let n: usize = shape.iter().product();
+            if n * 4 != size {
+                bail!("param {name}: size/shape mismatch");
+            }
+            let bytes = blob
+                .get(offset..offset + size)
+                .ok_or_else(|| anyhow::anyhow!("param {name}: out of range"))?;
+            let mut data = vec![0f32; n];
+            for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            names.push(name);
+            tensors.push(HostTensor::f32(shape, data));
+            expected_offset = offset + size;
+        }
+        // Argument convention: sorted-name order.
+        let mut sorted = names.clone();
+        sorted.sort();
+        if sorted != names {
+            bail!("weights.json params are not in sorted-name order");
+        }
+        Ok(Weights { names, tensors, total_bytes: total })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&HostTensor> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.tensors[i])
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.elements()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(dir: &Path, params: &[(&str, Vec<usize>, Vec<f32>)]) {
+        let mut bin = Vec::new();
+        let mut entries = Vec::new();
+        for (name, shape, data) in params {
+            let offset = bin.len();
+            for x in data {
+                bin.extend_from_slice(&x.to_le_bytes());
+            }
+            entries.push(format!(
+                r#"{{"name":"{name}","shape":[{}],"dtype":"f32","offset_bytes":{offset},"size_bytes":{}}}"#,
+                shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","),
+                data.len() * 4
+            ));
+        }
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::File::create(dir.join("weights.bin"))
+            .unwrap()
+            .write_all(&bin)
+            .unwrap();
+        std::fs::write(
+            dir.join("weights.json"),
+            format!(
+                r#"{{"params":[{}],"total_bytes":{}}}"#,
+                entries.join(","),
+                bin.len()
+            ),
+        )
+        .unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("propd-wtest-{tag}-{}",
+            std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = tmpdir("rt");
+        write_fixture(
+            &d,
+            &[
+                ("a", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+                ("b", vec![3], vec![-1.0, 0.5, 2.5]),
+            ],
+        );
+        let w =
+            Weights::load(&d.join("weights.bin"), &d.join("weights.json"))
+                .unwrap();
+        assert_eq!(w.names, vec!["a", "b"]);
+        assert_eq!(w.by_name("b").unwrap().as_f32(), &[-1.0, 0.5, 2.5]);
+        assert_eq!(w.param_count(), 7);
+    }
+
+    #[test]
+    fn rejects_unsorted_names() {
+        let d = tmpdir("unsorted");
+        write_fixture(
+            &d,
+            &[("b", vec![1], vec![0.0]), ("a", vec![1], vec![0.0])],
+        );
+        let err =
+            Weights::load(&d.join("weights.bin"), &d.join("weights.json"))
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("sorted"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_blob() {
+        let d = tmpdir("trunc");
+        write_fixture(&d, &[("a", vec![4], vec![1.0, 2.0, 3.0, 4.0])]);
+        // truncate
+        let blob = std::fs::read(d.join("weights.bin")).unwrap();
+        std::fs::write(d.join("weights.bin"), &blob[..8]).unwrap();
+        assert!(Weights::load(&d.join("weights.bin"),
+                              &d.join("weights.json")).is_err());
+    }
+}

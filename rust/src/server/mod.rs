@@ -1,0 +1,154 @@
+//! Serving front-end: a JSON-lines TCP server on top of the engine loop.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"prompt": "user: ...\nassistant:", "max_new_tokens": 64}
+//!   ← {"id": 3, "text": "...", "latency_s": 0.42, "steps": 11}
+//!
+//! Threading model: the engine (and its PJRT runtime, which holds raw
+//! pointers) lives on ONE thread; acceptor/connection threads communicate
+//! through the bounded [`RequestQueue`].  (The environment's crate mirror
+//! has no tokio; std threads + blocking sockets implement the same
+//! architecture.)
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::batching::{QueuedRequest, RequestQueue};
+use crate::config::ServingConfig;
+use crate::engine::{Completion, Engine};
+use crate::runtime::Runtime;
+
+pub use protocol::{parse_request, render_completion};
+
+/// Shared server state handed to connection threads.
+pub struct Shared {
+    pub queue: RequestQueue,
+    pub shutdown: AtomicBool,
+}
+
+/// Run the serving loop until `shutdown` is set and all work drains.
+/// The caller provides the engine (owning thread = this thread).
+pub fn engine_loop(engine: &mut Engine, shared: &Shared) -> Result<u64> {
+    let mut in_flight: Vec<(u64, mpsc::Sender<Completion>)> = Vec::new();
+    let mut served = 0u64;
+    loop {
+        // Pull new work (blocking only when fully idle).
+        let free = engine.cfg.max_batch.saturating_sub(engine.pending());
+        let new = if engine.pending() == 0 && !shutdown_ready(shared) {
+            shared.queue.drain_blocking(free.max(1))
+        } else {
+            shared.queue.drain_now(free)
+        };
+        for q in new {
+            let id = engine.submit(&q.prompt, q.max_new_tokens);
+            if let Some(tx) = q.respond {
+                in_flight.push((id, tx));
+            }
+        }
+        let progressed = engine.step()?;
+        for c in engine.take_completions() {
+            served += 1;
+            if let Some(pos) =
+                in_flight.iter().position(|(id, _)| *id == c.id)
+            {
+                let (_, tx) = in_flight.swap_remove(pos);
+                let _ = tx.send(c); // receiver may have hung up
+            }
+        }
+        if !progressed && shutdown_ready(shared) && shared.queue.is_empty() {
+            return Ok(served);
+        }
+    }
+}
+
+fn shutdown_ready(shared: &Shared) -> bool {
+    shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed()
+}
+
+/// Handle one client connection: parse request lines, enqueue, reply.
+pub fn handle_connection(stream: TcpStream, shared: &Shared) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) if !l.trim().is_empty() => l,
+            Ok(_) => continue,
+            Err(_) => break,
+        };
+        let reply = match parse_request(&line) {
+            Ok((prompt, max_new)) => {
+                let (tx, rx) = mpsc::channel();
+                let queued = QueuedRequest {
+                    prompt,
+                    max_new_tokens: max_new,
+                    respond: Some(tx),
+                };
+                match shared.queue.submit(queued) {
+                    Ok(()) => match rx.recv() {
+                        Ok(c) => render_completion(&c),
+                        Err(_) => protocol::render_error("engine shut down"),
+                    },
+                    Err(_) => protocol::render_error("queue full"),
+                }
+            }
+            Err(e) => protocol::render_error(&format!("bad request: {e}")),
+        };
+        if writer
+            .write_all(format!("{reply}\n").as_bytes())
+            .and_then(|_| writer.flush())
+            .is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Bind + serve until ctrl-c-ish shutdown (used by `propd serve`).
+/// `ready` is signalled with the bound address once listening.
+pub fn serve(
+    cfg: &ServingConfig,
+    rt: &Runtime,
+    ready: Option<mpsc::Sender<std::net::SocketAddr>>,
+) -> Result<()> {
+    let mut engine = Engine::new(rt, cfg.engine.clone())?;
+    let n = engine.precompile()?;
+    eprintln!("propd: precompiled {n} executables");
+    let shared = Arc::new(Shared {
+        queue: RequestQueue::new(cfg.server.max_queue),
+        shutdown: AtomicBool::new(false),
+    });
+    let listener = TcpListener::bind(&cfg.server.addr)
+        .with_context(|| format!("binding {}", cfg.server.addr))?;
+    let addr = listener.local_addr()?;
+    eprintln!("propd: serving on {addr} (engine={}, size={})",
+              cfg.engine.kind.as_str(), cfg.engine.size);
+    if let Some(tx) = ready {
+        let _ = tx.send(addr);
+    }
+    let accept_shared = shared.clone();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let sh = accept_shared.clone();
+                    std::thread::spawn(move || handle_connection(s, &sh));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    engine_loop(&mut engine, &shared)?;
+    Ok(())
+}

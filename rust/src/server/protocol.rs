@@ -1,0 +1,111 @@
+//! JSON-lines wire protocol.
+
+use anyhow::{Context, Result};
+
+use crate::engine::Completion;
+use crate::jsonio::{self, num, obj, s};
+
+/// Parse `{"prompt": ..., "max_new_tokens": ...}` → (prompt, budget).
+pub fn parse_request(line: &str) -> Result<(String, usize)> {
+    let v = jsonio::parse(line).context("request json")?;
+    let prompt = v.get("prompt")?.as_str()?.to_string();
+    let max_new = match v.opt("max_new_tokens") {
+        Some(n) => n.as_usize()?,
+        None => 64,
+    };
+    if prompt.is_empty() {
+        anyhow::bail!("empty prompt");
+    }
+    if max_new == 0 || max_new > 4096 {
+        anyhow::bail!("max_new_tokens out of range");
+    }
+    Ok((prompt, max_new))
+}
+
+pub fn render_completion(c: &Completion) -> String {
+    jsonio::to_string(&obj(vec![
+        ("id", num(c.id as f64)),
+        ("text", s(&c.text)),
+        ("tokens", num(c.tokens.len() as f64)),
+        ("steps", num(c.steps as f64)),
+        ("latency_s", num(c.latency_seconds)),
+        ("queue_s", num(c.queue_seconds)),
+    ]))
+}
+
+pub fn render_error(msg: &str) -> String {
+    jsonio::to_string(&obj(vec![("error", s(msg))]))
+}
+
+/// Client-side helpers (used by serve_demo and tests).
+pub fn parse_completion(line: &str) -> Result<(u64, String, f64)> {
+    let v = jsonio::parse(line)?;
+    if let Some(e) = v.opt("error") {
+        anyhow::bail!("server error: {}", e.as_str().unwrap_or("?"));
+    }
+    Ok((
+        v.get("id")?.as_usize()? as u64,
+        v.get("text")?.as_str()?.to_string(),
+        v.get("latency_s")?.as_f64()?,
+    ))
+}
+
+pub fn render_request(prompt: &str, max_new: usize) -> String {
+    jsonio::to_string(&obj(vec![
+        ("prompt", s(prompt)),
+        ("max_new_tokens", num(max_new as f64)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let line = render_request("user: hi\nassistant:", 32);
+        let (p, n) = parse_request(&line).unwrap();
+        assert_eq!(p, "user: hi\nassistant:");
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    fn request_default_budget() {
+        let (_, n) = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    fn request_validation() {
+        assert!(parse_request(r#"{"prompt": ""}"#).is_err());
+        assert!(parse_request(r#"{"max_new_tokens": 4}"#).is_err());
+        assert!(
+            parse_request(r#"{"prompt": "x", "max_new_tokens": 0}"#).is_err()
+        );
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn completion_roundtrip() {
+        let c = Completion {
+            id: 9,
+            prompt: "p".into(),
+            text: "answer\n".into(),
+            tokens: vec![1, 2, 3],
+            steps: 4,
+            latency_seconds: 0.5,
+            queue_seconds: 0.1,
+        };
+        let line = render_completion(&c);
+        let (id, text, lat) = parse_completion(&line).unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(text, "answer\n");
+        assert!((lat - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_rendering() {
+        let e = render_error("queue full");
+        assert!(parse_completion(&e).is_err());
+    }
+}

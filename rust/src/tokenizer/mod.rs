@@ -1,0 +1,66 @@
+//! Byte-level tokenizer (vocab 256) matching the python training corpus.
+//!
+//! The stand-in models are trained on raw UTF-8 bytes, so tokenization is
+//! the identity on bytes.  The stop convention mirrors the corpus framing:
+//! an assistant turn ends at a double newline (`\n\n`).
+
+pub const VOCAB: usize = 256;
+
+/// Token id type used across the coordinator.
+pub type Token = u32;
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<Token> {
+        text.as_bytes().iter().map(|&b| b as Token).collect()
+    }
+
+    pub fn decode(&self, tokens: &[Token]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xff) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// True when the generated suffix hit the stop sequence.
+    pub fn is_stop(&self, tokens: &[Token]) -> bool {
+        tokens.len() >= 2
+            && tokens[tokens.len() - 1] == b'\n' as Token
+            && tokens[tokens.len() - 2] == b'\n' as Token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "user: hello\nassistant:";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn encode_is_bytes() {
+        let t = ByteTokenizer;
+        assert_eq!(t.encode("ab"), vec![97, 98]);
+    }
+
+    #[test]
+    fn non_ascii_is_lossy_but_total() {
+        let t = ByteTokenizer;
+        let s = "é";
+        let toks = t.encode(s);
+        assert_eq!(toks.len(), 2); // utf-8 bytes
+        assert_eq!(t.decode(&toks), s);
+    }
+
+    #[test]
+    fn stop_detection() {
+        let t = ByteTokenizer;
+        assert!(t.is_stop(&t.encode("done.\n\n")));
+        assert!(!t.is_stop(&t.encode("done.\n")));
+        assert!(!t.is_stop(&[]));
+    }
+}

@@ -1,0 +1,174 @@
+//! Greedy-path acceptance: compare the full model's logits at every tree
+//! node against the tree's children and accept the longest matching path.
+//!
+//! Verification is exact under greedy decoding: an accepted token at depth
+//! d+1 is accepted iff it equals the argmax of the model's logits at its
+//! parent — precisely the token autoregressive decoding would have emitted.
+//! The model's logits at the deepest accepted node additionally give one
+//! "bonus" token for free (it is the greedy next token after the accepted
+//! path), which becomes the next step's tree root.
+
+use super::node::TokenTree;
+use crate::tokenizer::Token;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceptResult {
+    /// Indices (into the verified tree) of the accepted path, root first.
+    pub path: Vec<usize>,
+    /// The accepted tokens themselves (== tokens of `path`).
+    pub tokens: Vec<Token>,
+    /// Greedy next token after the accepted path (next step's root).
+    pub bonus: Token,
+}
+
+impl AcceptResult {
+    /// Number of tokens committed this step (paper's "acceptance length"
+    /// counts the tree-accepted tokens; the bonus comes on top, exactly as
+    /// a Medusa step always emits ≥ 1 token).
+    pub fn accept_len(&self) -> usize {
+        self.path.len()
+    }
+}
+
+#[inline]
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Walk the tree from the root, following the model's greedy choices.
+///
+/// `logits` is row-major `[tree_bucket, vocab]` for one request; row i is
+/// the full model's next-token distribution *after* tree node i.
+pub fn accept_path(
+    tree: &TokenTree,
+    logits: &[f32],
+    vocab: usize,
+) -> AcceptResult {
+    debug_assert!(logits.len() >= tree.len() * vocab);
+    let mut path = vec![0usize];
+    let mut tokens = vec![tree.node(0).token];
+    let mut cur = 0usize;
+    loop {
+        let row = &logits[cur * vocab..(cur + 1) * vocab];
+        let want = argmax(row) as Token;
+        // At most one child can match the greedy token.
+        let next = tree
+            .children(cur)
+            .into_iter()
+            .find(|&c| tree.node(c).token == want);
+        match next {
+            Some(c) => {
+                path.push(c);
+                tokens.push(want);
+                cur = c;
+            }
+            None => {
+                return AcceptResult { path, tokens, bonus: want };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::{TokenTree, TreeNode};
+
+    fn tree() -> TokenTree {
+        // root(5) -> {a(10), c(20)}; a -> b(11)
+        TokenTree::from_nodes(vec![
+            TreeNode { token: 5, parent: None, depth: 0, rank: 0, path_prob: 1.0 },
+            TreeNode { token: 10, parent: Some(0), depth: 1, rank: 0, path_prob: 0.6 },
+            TreeNode { token: 20, parent: Some(0), depth: 1, rank: 1, path_prob: 0.3 },
+            TreeNode { token: 11, parent: Some(1), depth: 2, rank: 0, path_prob: 0.4 },
+        ])
+    }
+
+    fn logits_with_argmax(rows: &[(usize, usize)], vocab: usize, t: usize)
+        -> Vec<f32> {
+        let mut lg = vec![0.0f32; t * vocab];
+        for &(r, v) in rows {
+            lg[r * vocab + v] = 10.0;
+        }
+        lg
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    #[test]
+    fn accepts_full_chain() {
+        let t = tree();
+        // root row → 10, node-1 row → 11, node-3 row → 42 (bonus)
+        let lg = logits_with_argmax(&[(0, 10), (1, 11), (3, 42)], 64, 4);
+        let r = accept_path(&t, &lg, 64);
+        assert_eq!(r.path, vec![0, 1, 3]);
+        assert_eq!(r.tokens, vec![5, 10, 11]);
+        assert_eq!(r.bonus, 42);
+        assert_eq!(r.accept_len(), 3);
+    }
+
+    #[test]
+    fn takes_sibling_branch() {
+        let t = tree();
+        let lg = logits_with_argmax(&[(0, 20), (2, 7)], 64, 4);
+        let r = accept_path(&t, &lg, 64);
+        assert_eq!(r.path, vec![0, 2]);
+        assert_eq!(r.bonus, 7);
+    }
+
+    #[test]
+    fn no_match_accepts_root_only() {
+        let t = tree();
+        let lg = logits_with_argmax(&[(0, 63)], 64, 4);
+        let r = accept_path(&t, &lg, 64);
+        assert_eq!(r.path, vec![0]);
+        assert_eq!(r.tokens, vec![5]);
+        assert_eq!(r.bonus, 63);
+        assert_eq!(r.accept_len(), 1);
+    }
+
+    #[test]
+    fn root_only_tree() {
+        let t = TokenTree::root_only(9);
+        let lg = logits_with_argmax(&[(0, 3)], 16, 1);
+        let r = accept_path(&t, &lg, 16);
+        assert_eq!(r.path, vec![0]);
+        assert_eq!(r.bonus, 3);
+    }
+
+    #[test]
+    fn equivalence_with_autoregressive_greedy() {
+        // Acceptance must reproduce AR greedy: simulate a model whose greedy
+        // choice after token x is (x*7+1) % vocab and check the accepted
+        // sequence is exactly the AR rollout.
+        let vocab = 64usize;
+        let next = |x: Token| -> Token { ((x * 7 + 1) % vocab as u32) as Token };
+        // Build a chain tree that matches the AR rollout for 3 steps then
+        // diverges.
+        let root: Token = 5;
+        let t1 = next(root);
+        let t2 = next(t1);
+        let wrong = (t2 + 1) % vocab as u32;
+        let tree = TokenTree::chain(&[root, t1, t2, wrong]);
+        let mut lg = vec![0.0f32; 4 * vocab];
+        for i in 0..4 {
+            let tok = tree.node(i).token;
+            lg[i * vocab + next(tok) as usize] = 9.0;
+        }
+        let r = accept_path(&tree, &lg, vocab);
+        assert_eq!(r.tokens, vec![root, t1, t2]);
+        assert_eq!(r.bonus, next(t2));
+    }
+}

@@ -1,0 +1,153 @@
+//! Tree-attention masks, cached and *subsampled* rather than regenerated.
+//!
+//! The paper's Implementation Optimization (§4.1): after branch elimination
+//! a fresh attention mask is needed for the surviving nodes; regenerating it
+//! from scratch (and shipping it CPU→GPU) was the bottleneck, so ProPD
+//! caches the mask and *subsamples* it by index.  Here the mask lives as a
+//! `u64`-bitset per row; subsampling is a bit-gather, and the dense f32
+//! tensor the runtime uploads is written into a caller-provided scratch
+//! buffer so the hot loop never allocates.
+
+use super::node::TokenTree;
+use crate::runtime::literal::NEG_INF;
+
+/// Ancestor bitset mask for a token tree, padded to a static bucket size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeMask {
+    /// Row i = attendable-node bitset for node i.  Rows past `live` are
+    /// padding rows that attend only themselves (keeps softmax finite).
+    rows: Vec<u64>,
+    live: usize,
+}
+
+impl TreeMask {
+    /// Build from a tree, padded up to `bucket` rows.
+    pub fn build(tree: &TokenTree, bucket: usize) -> Self {
+        assert!(tree.len() <= bucket && bucket <= 64);
+        let mut rows = tree.ancestor_bits();
+        for i in tree.len()..bucket {
+            rows.push(1u64 << i); // pad rows: self-attention only
+        }
+        TreeMask { rows, live: tree.len() }
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn row(&self, i: usize) -> u64 {
+        self.rows[i]
+    }
+
+    /// Subsample the cached mask to the surviving node indices (sorted,
+    /// `keep[0] == 0`), re-padding to `bucket`.  This is the §4.1 mask
+    /// optimization: O(t'·t') bit-gather, no rebuild from the tree.
+    pub fn subsample(&self, keep: &[usize], bucket: usize) -> Self {
+        assert!(keep.len() <= bucket && bucket <= 64);
+        let mut rows = Vec::with_capacity(bucket);
+        for (_new_i, &old_i) in keep.iter().enumerate() {
+            let old_row = self.rows[old_i];
+            let mut row = 0u64;
+            for (new_j, &old_j) in keep.iter().enumerate() {
+                if old_row >> old_j & 1 == 1 {
+                    row |= 1 << new_j;
+                }
+            }
+            rows.push(row);
+        }
+        for i in keep.len()..bucket {
+            rows.push(1u64 << i);
+        }
+        TreeMask { rows, live: keep.len() }
+    }
+
+    /// Write the dense additive f32 mask ([bucket, bucket], row-major) into
+    /// `out` (len = bucket²).  0.0 = attend, NEG_INF = don't.
+    pub fn write_dense(&self, out: &mut [f32]) {
+        let t = self.rows.len();
+        assert_eq!(out.len(), t * t);
+        for (i, &row) in self.rows.iter().enumerate() {
+            for j in 0..t {
+                out[i * t + j] =
+                    if row >> j & 1 == 1 { 0.0 } else { NEG_INF };
+            }
+        }
+    }
+
+    /// Allocating variant (tests / cold paths).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let t = self.rows.len();
+        let mut out = vec![0.0; t * t];
+        self.write_dense(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::{TokenTree, TreeNode};
+
+    fn tree() -> TokenTree {
+        TokenTree::from_nodes(vec![
+            TreeNode { token: 1, parent: None, depth: 0, rank: 0, path_prob: 1.0 },
+            TreeNode { token: 2, parent: Some(0), depth: 1, rank: 0, path_prob: 0.5 },
+            TreeNode { token: 3, parent: Some(0), depth: 1, rank: 1, path_prob: 0.4 },
+            TreeNode { token: 4, parent: Some(1), depth: 2, rank: 0, path_prob: 0.25 },
+        ])
+    }
+
+    #[test]
+    fn build_pads_with_self_rows() {
+        let m = TreeMask::build(&tree(), 8);
+        assert_eq!(m.bucket(), 8);
+        assert_eq!(m.live(), 4);
+        assert_eq!(m.row(0), 0b0001);
+        assert_eq!(m.row(3), 0b1011);
+        assert_eq!(m.row(5), 1 << 5);
+    }
+
+    #[test]
+    fn dense_matches_bits() {
+        let m = TreeMask::build(&tree(), 4);
+        let d = m.to_dense();
+        assert_eq!(d[0 * 4 + 0], 0.0);
+        assert_eq!(d[0 * 4 + 1], NEG_INF);
+        assert_eq!(d[3 * 4 + 0], 0.0);
+        assert_eq!(d[3 * 4 + 1], 0.0);
+        assert_eq!(d[3 * 4 + 2], NEG_INF);
+        assert_eq!(d[3 * 4 + 3], 0.0);
+    }
+
+    #[test]
+    fn subsample_equals_rebuild() {
+        // Pruning node 2: subsampled mask == mask rebuilt from compacted
+        // tree.  This is the correctness claim behind the §4.1 optimization.
+        let t = tree();
+        let m = TreeMask::build(&t, 8);
+        let keep = vec![0, 1, 3];
+        let sub = m.subsample(&keep, 4);
+        let (compacted, _) = t.compact(&keep);
+        let rebuilt = TreeMask::build(&compacted, 4);
+        assert_eq!(sub, rebuilt);
+    }
+
+    #[test]
+    fn subsample_identity() {
+        let m = TreeMask::build(&tree(), 4);
+        let sub = m.subsample(&[0, 1, 2, 3], 4);
+        assert_eq!(sub, m);
+    }
+
+    #[test]
+    fn every_row_attends_self() {
+        let m = TreeMask::build(&tree(), 8);
+        for i in 0..8 {
+            assert_eq!(m.row(i) >> i & 1, 1, "row {i} must attend itself");
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Token trees — the heart of ProPD.
+//!
+//! A token tree holds speculative candidate tokens for the next few
+//! positions, organized so that common prefixes are verified once (§2,
+//! Fig 2).  This module owns:
+//!
+//! - [`node`]: the tree structure itself (topologically ordered, depth ≤
+//!   number of medusa heads, size ≤ 64 so ancestor sets fit in a `u64`).
+//! - [`mask`]: tree-attention masks as ancestor bitsets + the cached-mask
+//!   *subsampling* optimization the paper calls out (§4.1 Implementation
+//!   Optimization).
+//! - [`builder`]: **dynamic token tree generation** (§4.2) — greedy
+//!   construction maximizing expected acceptance length from the runtime
+//!   acceptance estimates.
+//! - [`prune`]: **early pruning** (§4.1) — top-k membership against the
+//!   early-exit head, branch elimination, index compaction.
+//! - [`accept`]: greedy-path acceptance against the full model's logits
+//!   (verification is exact: output always equals autoregressive greedy).
+
+pub mod accept;
+pub mod builder;
+pub mod mask;
+pub mod node;
+pub mod prune;
+
+pub use accept::{accept_path, AcceptResult};
+pub use builder::{TreeBuilder, TreeShape};
+pub use mask::TreeMask;
+pub use node::{TokenTree, TreeNode, MAX_TREE};
+pub use prune::{prune_tree, PruneOutcome};

@@ -1,0 +1,273 @@
+//! Token tree structure.
+//!
+//! Node 0 is always the *root*: the greedy next token produced by the base
+//! LM head at the previous step.  Under greedy decoding the root is certain
+//! to be accepted (it is exactly what autoregressive decoding would emit),
+//! so it contributes 1.0 to the expected acceptance length.  Nodes at depth
+//! d ≥ 1 hold candidates from medusa head d-1 (head h predicts the token at
+//! offset h+2 from the previous step's tip).
+
+use crate::tokenizer::Token;
+
+/// Maximum tree size: ancestor sets are stored as single `u64` bitsets and
+/// the AOT artifact grid tops out at 64-node trees.
+pub const MAX_TREE: usize = 64;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TreeNode {
+    pub token: Token,
+    /// Parent index; `None` only for the root (index 0).
+    pub parent: Option<usize>,
+    /// Depth in the tree; root = 0.  A node at depth d sits at sequence
+    /// position `seq_len + d`.
+    pub depth: usize,
+    /// For depth ≥ 1: which top-k rank of medusa head `depth-1` this token
+    /// came from (0-based).  Root carries rank 0.
+    pub rank: usize,
+    /// Estimated marginal acceptance probability of the *path* ending at
+    /// this node (∏ p over the path, §4.2.2); root = 1.0.
+    pub path_prob: f64,
+}
+
+/// A topologically-ordered token tree (parents always precede children).
+#[derive(Debug, Clone, Default)]
+pub struct TokenTree {
+    nodes: Vec<TreeNode>,
+}
+
+impl TokenTree {
+    /// A tree containing just the root token.
+    pub fn root_only(token: Token) -> Self {
+        TokenTree {
+            nodes: vec![TreeNode {
+                token,
+                parent: None,
+                depth: 0,
+                rank: 0,
+                path_prob: 1.0,
+            }],
+        }
+    }
+
+    /// A degenerate linear chain (the BPD baseline / test helper):
+    /// `tokens[0]` is the root, each next token a child of the previous.
+    pub fn chain(tokens: &[Token]) -> Self {
+        assert!(!tokens.is_empty() && tokens.len() <= MAX_TREE);
+        let nodes = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, &token)| TreeNode {
+                token,
+                parent: if i == 0 { None } else { Some(i - 1) },
+                depth: i,
+                rank: 0,
+                path_prob: 1.0,
+            })
+            .collect();
+        TokenTree { nodes }
+    }
+
+    pub fn from_nodes(nodes: Vec<TreeNode>) -> Self {
+        let tree = TokenTree { nodes };
+        debug_assert!(tree.validate().is_ok(), "{:?}", tree.validate());
+        tree
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, i: usize) -> &TreeNode {
+        &self.nodes[i]
+    }
+
+    pub fn nodes(&self) -> &[TreeNode] {
+        &self.nodes
+    }
+
+    pub fn tokens(&self) -> Vec<Token> {
+        self.nodes.iter().map(|n| n.token).collect()
+    }
+
+    /// Sequence positions of each node given the request's current length.
+    pub fn positions(&self, seq_len: usize) -> Vec<i32> {
+        self.nodes
+            .iter()
+            .map(|n| (seq_len + n.depth) as i32)
+            .collect()
+    }
+
+    /// Children of node `i` in index order.
+    pub fn children(&self, i: usize) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&j| self.nodes[j].parent == Some(i))
+            .collect()
+    }
+
+    /// Ancestors-and-self bitset for each node (the tree-attention mask
+    /// rows).  Index j bit set ⇔ node may attend node j.
+    pub fn ancestor_bits(&self) -> Vec<u64> {
+        let mut bits = vec![0u64; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            let parent_bits = n.parent.map(|p| bits[p]).unwrap_or(0);
+            bits[i] = parent_bits | (1u64 << i);
+        }
+        bits
+    }
+
+    /// Expected acceptance length of the whole tree: Σ path_prob over all
+    /// nodes (root contributes 1.0).  §4.2.2 / Fig 6(b).
+    pub fn expected_accept_len(&self) -> f64 {
+        self.nodes.iter().map(|n| n.path_prob).sum()
+    }
+
+    /// Maximum depth present (root-only tree → 0).
+    pub fn max_depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Keep only `keep` (sorted, must contain 0); re-index parents.
+    /// Returns the compacted tree plus the old→new index map.
+    pub fn compact(&self, keep: &[usize]) -> (TokenTree, Vec<Option<usize>>) {
+        assert!(keep.first() == Some(&0), "root must survive compaction");
+        let mut old_to_new = vec![None; self.nodes.len()];
+        for (new, &old) in keep.iter().enumerate() {
+            old_to_new[old] = Some(new);
+        }
+        let nodes = keep
+            .iter()
+            .map(|&old| {
+                let n = self.nodes[old];
+                TreeNode {
+                    parent: n.parent.map(|p| {
+                        old_to_new[p].expect(
+                            "kept node has pruned parent: prune must remove \
+                             whole subtrees",
+                        )
+                    }),
+                    ..n
+                }
+            })
+            .collect();
+        (TokenTree { nodes }, old_to_new)
+    }
+
+    /// Structural invariants (used by tests and debug assertions).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty tree".into());
+        }
+        if self.nodes.len() > MAX_TREE {
+            return Err(format!("tree too large: {}", self.nodes.len()));
+        }
+        if self.nodes[0].parent.is_some() || self.nodes[0].depth != 0 {
+            return Err("node 0 must be the depth-0 root".into());
+        }
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            let p = match n.parent {
+                Some(p) => p,
+                None => return Err(format!("node {i} has no parent")),
+            };
+            if p >= i {
+                return Err(format!("node {i} not topologically ordered"));
+            }
+            if n.depth != self.nodes[p].depth + 1 {
+                return Err(format!("node {i} depth mismatch"));
+            }
+            if !(0.0..=1.0).contains(&n.path_prob) {
+                return Err(format!("node {i} path_prob out of range"));
+            }
+            if n.path_prob > self.nodes[p].path_prob + 1e-12 {
+                return Err(format!(
+                    "node {i} path_prob exceeds its parent's"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_tree() -> TokenTree {
+        // root(10) -> a(20), c(40); a -> b(30)
+        TokenTree::from_nodes(vec![
+            TreeNode { token: 10, parent: None, depth: 0, rank: 0, path_prob: 1.0 },
+            TreeNode { token: 20, parent: Some(0), depth: 1, rank: 0, path_prob: 0.6 },
+            TreeNode { token: 40, parent: Some(0), depth: 1, rank: 1, path_prob: 0.3 },
+            TreeNode { token: 30, parent: Some(1), depth: 2, rank: 0, path_prob: 0.36 },
+        ])
+    }
+
+    #[test]
+    fn chain_structure() {
+        let t = TokenTree::chain(&[1, 2, 3]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.node(2).parent, Some(1));
+        assert_eq!(t.node(2).depth, 2);
+        assert_eq!(t.positions(10), vec![10, 11, 12]);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn ancestor_bits() {
+        let t = small_tree();
+        let bits = t.ancestor_bits();
+        assert_eq!(bits[0], 0b0001);
+        assert_eq!(bits[1], 0b0011);
+        assert_eq!(bits[2], 0b0101);
+        assert_eq!(bits[3], 0b1011);
+    }
+
+    #[test]
+    fn expected_accept_len_sums_path_probs() {
+        let t = small_tree();
+        assert!((t.expected_accept_len() - (1.0 + 0.6 + 0.3 + 0.36)).abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn compaction_reindexes_parents() {
+        let t = small_tree();
+        // prune node 2 (the 'c' branch)
+        let (c, map) = t.compact(&[0, 1, 3]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.node(2).parent, Some(1));
+        assert_eq!(c.node(2).token, 30);
+        assert_eq!(map[2], None);
+        assert_eq!(map[3], Some(2));
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "root must survive")]
+    fn compaction_requires_root() {
+        small_tree().compact(&[1, 3]);
+    }
+
+    #[test]
+    fn validate_catches_bad_order() {
+        let t = TokenTree {
+            nodes: vec![
+                TreeNode { token: 1, parent: None, depth: 0, rank: 0, path_prob: 1.0 },
+                TreeNode { token: 2, parent: Some(2), depth: 1, rank: 0, path_prob: 0.5 },
+                TreeNode { token: 3, parent: Some(0), depth: 1, rank: 0, path_prob: 0.5 },
+            ],
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn children_listing() {
+        let t = small_tree();
+        assert_eq!(t.children(0), vec![1, 2]);
+        assert_eq!(t.children(1), vec![3]);
+        assert!(t.children(3).is_empty());
+    }
+}

@@ -1,0 +1,215 @@
+//! Early pruning (§4.1): top-k membership against the early-exit head,
+//! branch elimination, and index compaction.
+//!
+//! After `verify_early` runs layers `0..n`, the early prediction head gives
+//! logits for every tree node.  A node `x_{i+1}` survives only if its token
+//! is within the Top-k of its *parent's* early prediction — otherwise the
+//! node and its whole subtree are "contextually implausible" and eliminated.
+//! The root always survives (it is the greedy token, already certain).
+//!
+//! The membership test never materializes a top-k list: token `v` is in the
+//! Top-k of a logits row iff fewer than k entries are strictly greater
+//! (ties broken toward keeping) — O(V) per queried node, no sort, no
+//! device↔host probability transfer (the paper's reason for choosing Top-k
+//! over probability-based selection).
+
+use super::mask::TreeMask;
+use super::node::TokenTree;
+
+/// Result of pruning one request's tree.
+#[derive(Debug, Clone)]
+pub struct PruneOutcome {
+    /// Surviving node indices into the *original* tree (sorted, starts at 0).
+    pub keep: Vec<usize>,
+    /// Compacted tree over the survivors.
+    pub tree: TokenTree,
+    /// old → new index map.
+    pub old_to_new: Vec<Option<usize>>,
+    /// Nodes eliminated (for metrics: the paper's "prune rate").
+    pub pruned: usize,
+}
+
+/// Is `token` within the top-k of `row` (a vocab-sized logits row)?
+#[inline]
+pub fn in_top_k(row: &[f32], token: usize, k: usize) -> bool {
+    if k == 0 {
+        return false;
+    }
+    let x = row[token];
+    let mut greater = 0usize;
+    for &v in row {
+        if v > x {
+            greater += 1;
+            if greater >= k {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Prune a token tree using the early head's logits.
+///
+/// `early_logits` is row-major `[tree_bucket, vocab]` for this request; row
+/// i corresponds to tree node i (padding rows ignored).  `k` is the Top-k
+/// retention parameter (paper sweeps 50..200 on a 32k vocab; scaled here).
+pub fn prune_tree(
+    tree: &TokenTree,
+    early_logits: &[f32],
+    vocab: usize,
+    k: usize,
+) -> PruneOutcome {
+    debug_assert!(early_logits.len() >= tree.len() * vocab);
+    let t = tree.len();
+    let mut alive = vec![false; t];
+    alive[0] = true; // root is certain
+    for i in 1..t {
+        let n = tree.node(i);
+        let p = n.parent.expect("non-root has parent");
+        // A node dies if its parent died (branch elimination) or if it
+        // fails the parent's early Top-k test.
+        if !alive[p] {
+            continue;
+        }
+        let row = &early_logits[p * vocab..(p + 1) * vocab];
+        alive[i] = in_top_k(row, n.token as usize, k);
+    }
+    let keep: Vec<usize> = (0..t).filter(|&i| alive[i]).collect();
+    let (compacted, old_to_new) = tree.compact(&keep);
+    PruneOutcome {
+        pruned: t - keep.len(),
+        keep,
+        tree: compacted,
+        old_to_new,
+    }
+}
+
+/// Subsample a cached mask for the surviving nodes (§4.1 Implementation
+/// Optimization — pairs with [`prune_tree`]).
+pub fn subsample_mask(
+    mask: &TreeMask,
+    outcome: &PruneOutcome,
+    bucket: usize,
+) -> TreeMask {
+    mask.subsample(&outcome.keep, bucket)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::{TokenTree, TreeNode};
+
+    /// root(5) -> a(10) -> b(11); root -> c(20)
+    fn tree() -> TokenTree {
+        TokenTree::from_nodes(vec![
+            TreeNode { token: 5, parent: None, depth: 0, rank: 0, path_prob: 1.0 },
+            TreeNode { token: 10, parent: Some(0), depth: 1, rank: 0, path_prob: 0.6 },
+            TreeNode { token: 20, parent: Some(0), depth: 1, rank: 1, path_prob: 0.3 },
+            TreeNode { token: 11, parent: Some(1), depth: 2, rank: 0, path_prob: 0.4 },
+        ])
+    }
+
+    /// logits with a strict ranking: token v gets score -(v as f32) except
+    /// overrides.
+    fn logits(vocab: usize, overrides: &[(usize, usize, f32)], rows: usize)
+        -> Vec<f32> {
+        let mut out = vec![0.0; rows * vocab];
+        for r in 0..rows {
+            for v in 0..vocab {
+                out[r * vocab + v] = -(v as f32);
+            }
+        }
+        for &(r, v, s) in overrides {
+            out[r * vocab + v] = s;
+        }
+        out
+    }
+
+    #[test]
+    fn in_top_k_basics() {
+        let row = [1.0, 5.0, 3.0, 2.0];
+        assert!(in_top_k(&row, 1, 1));
+        assert!(!in_top_k(&row, 2, 1));
+        assert!(in_top_k(&row, 2, 2));
+        assert!(!in_top_k(&row, 0, 3));
+        assert!(in_top_k(&row, 0, 4));
+        assert!(!in_top_k(&row, 0, 0));
+    }
+
+    #[test]
+    fn in_top_k_keeps_ties() {
+        let row = [2.0, 2.0, 2.0, 1.0];
+        // all three 2.0s count as top-1 under strictly-greater semantics
+        assert!(in_top_k(&row, 0, 1));
+        assert!(in_top_k(&row, 2, 1));
+        assert!(!in_top_k(&row, 3, 3));
+        assert!(in_top_k(&row, 3, 4));
+    }
+
+    #[test]
+    fn prune_keeps_all_with_huge_k() {
+        let t = tree();
+        let lg = logits(32, &[], 4);
+        let out = prune_tree(&t, &lg, 32, 32);
+        assert_eq!(out.keep, vec![0, 1, 2, 3]);
+        assert_eq!(out.pruned, 0);
+    }
+
+    #[test]
+    fn prune_eliminates_failed_node() {
+        let t = tree();
+        // top-2 of every row = tokens {0,1}; node tokens 10/20/11 all fail
+        let lg = logits(32, &[], 4);
+        let out = prune_tree(&t, &lg, 32, 2);
+        assert_eq!(out.keep, vec![0]);
+        assert_eq!(out.pruned, 3);
+        assert_eq!(out.tree.len(), 1);
+    }
+
+    #[test]
+    fn branch_elimination_kills_subtree() {
+        let t = tree();
+        // Make node 3's token(11) top-1 of ITS parent row 1, but kill node 1
+        // itself (root row 0 ranks token 10 low).  The whole a-branch dies
+        // even though b would individually pass.
+        let lg = logits(
+            32,
+            &[(1, 11, 100.0), (0, 20, 100.0)],
+            4,
+        );
+        let out = prune_tree(&t, &lg, 32, 1);
+        assert_eq!(out.keep, vec![0, 2]); // root + c survive
+        assert_eq!(out.tree.node(1).token, 20);
+        assert_eq!(out.old_to_new[3], None);
+    }
+
+    #[test]
+    fn prune_then_mask_subsample_consistent() {
+        let t = tree();
+        let lg = logits(32, &[(0, 10, 50.0), (1, 11, 50.0)], 4);
+        let out = prune_tree(&t, &lg, 32, 1);
+        assert_eq!(out.keep, vec![0, 1, 3]);
+        let mask = TreeMask::build(&t, 4);
+        let sub = subsample_mask(&mask, &out, 4);
+        let rebuilt = TreeMask::build(&out.tree, 4);
+        assert_eq!(sub, rebuilt);
+    }
+
+    #[test]
+    fn root_survives_even_when_k_zero_for_children() {
+        let t = tree();
+        let lg = logits(32, &[], 4);
+        let out = prune_tree(&t, &lg, 32, 0);
+        assert_eq!(out.keep, vec![0]);
+    }
+
+    #[test]
+    fn prune_rate_metric() {
+        let t = tree();
+        let lg = logits(32, &[(0, 10, 50.0)], 4);
+        let out = prune_tree(&t, &lg, 32, 1);
+        // survivors: 0, 1 (token 10 is top-1 of row 0); node 3 fails row 1;
+        // node 2 fails row 0.
+        assert_eq!(out.pruned, 2);
+    }
+}

@@ -1,0 +1,7 @@
+//! Small shared utilities: deterministic RNG, stats, timing helpers.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,203 @@
+//! Workload generation: dataset-profile prompts + arrival processes.
+//!
+//! The paper evaluates on question prompts from MT-Bench, ChatGPT-Prompts
+//! and Alpaca; the stand-in profiles (generated at build time into
+//! `artifacts/prompts.json` by `python/compile/data.py`, matched to the
+//! training corpus) differ in prompt length and answer predictability,
+//! which is what drives the per-dataset acceptance lengths (Fig 3d).
+//!
+//! The trace generator layers a Poisson arrival process and per-profile
+//! output-length budgets on top, producing deterministic request traces
+//! for the serving benchmarks.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio;
+use crate::util::rng::Rng;
+
+pub const PROFILES: [&str; 3] = ["mtbench", "chatgpt", "alpaca"];
+
+/// Per-profile generation budget (mirrors python data.PROFILE_LENGTHS —
+/// mtbench answers are longest).
+pub fn output_budget(profile: &str) -> usize {
+    match profile {
+        "mtbench" => 96,
+        "chatgpt" => 64,
+        "alpaca" => 40,
+        _ => 64,
+    }
+}
+
+/// Prompt pools loaded from `artifacts/prompts.json`.
+#[derive(Debug, Clone)]
+pub struct PromptSet {
+    pub profiles: Vec<(String, Vec<String>)>,
+}
+
+impl PromptSet {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let v = jsonio::parse_file(&artifacts_dir.join("prompts.json"))?;
+        let obj = v.as_obj()?;
+        let mut profiles = Vec::new();
+        for name in PROFILES {
+            let prompts = obj
+                .get(name)
+                .with_context(|| format!("prompts.json missing {name}"))?
+                .as_string_vec()?;
+            if prompts.is_empty() {
+                bail!("profile {name} has no prompts");
+            }
+            profiles.push((name.to_string(), prompts));
+        }
+        Ok(PromptSet { profiles })
+    }
+
+    /// Synthetic fallback used by tests (no artifacts needed).
+    pub fn synthetic(per_profile: usize) -> Self {
+        let profiles = PROFILES
+            .iter()
+            .map(|&p| {
+                let prompts = (0..per_profile)
+                    .map(|i| {
+                        format!("user: {p} question {i} about the system\n\
+                                 assistant:")
+                    })
+                    .collect();
+                (p.to_string(), prompts)
+            })
+            .collect();
+        PromptSet { profiles }
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&[String]> {
+        self.profiles
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("unknown profile {name:?}"))
+    }
+}
+
+/// One request in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival time offset in seconds from trace start.
+    pub arrival: f64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub profile: String,
+}
+
+/// Trace generator configuration.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub profile: String,
+    pub n_requests: usize,
+    /// Mean arrival rate (requests/second); `None` = all at t=0 (closed
+    /// loop / offline throughput mode, the paper's setting).
+    pub rate: Option<f64>,
+    pub seed: u64,
+    /// Override output budget (None = profile default).
+    pub max_new_tokens: Option<usize>,
+}
+
+impl TraceConfig {
+    pub fn offline(profile: &str, n: usize, seed: u64) -> Self {
+        TraceConfig {
+            profile: profile.to_string(),
+            n_requests: n,
+            rate: None,
+            seed,
+            max_new_tokens: None,
+        }
+    }
+}
+
+/// Generate a deterministic request trace.
+pub fn generate_trace(
+    prompts: &PromptSet,
+    cfg: &TraceConfig,
+) -> Result<Vec<TraceRequest>> {
+    let pool = prompts.profile(&cfg.profile)?;
+    let mut rng = Rng::new(cfg.seed);
+    let budget =
+        cfg.max_new_tokens.unwrap_or_else(|| output_budget(&cfg.profile));
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for _ in 0..cfg.n_requests {
+        if let Some(rate) = cfg.rate {
+            t += rng.exponential(rate);
+        }
+        let prompt = rng.choose(pool).clone();
+        // Jitter the budget ±25% so completion times interleave.
+        let jitter = 0.75 + 0.5 * rng.f64();
+        out.push(TraceRequest {
+            arrival: t,
+            prompt,
+            max_new_tokens: ((budget as f64 * jitter) as usize).max(4),
+            profile: cfg.profile.clone(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_set_covers_profiles() {
+        let s = PromptSet::synthetic(5);
+        for p in PROFILES {
+            assert_eq!(s.profile(p).unwrap().len(), 5);
+        }
+        assert!(s.profile("nope").is_err());
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let s = PromptSet::synthetic(10);
+        let cfg = TraceConfig::offline("alpaca", 20, 42);
+        let a = generate_trace(&s, &cfg).unwrap();
+        let b = generate_trace(&s, &cfg).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20);
+        assert!(a.iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let s = PromptSet::synthetic(10);
+        let cfg = TraceConfig {
+            rate: Some(10.0),
+            ..TraceConfig::offline("chatgpt", 50, 7)
+        };
+        let tr = generate_trace(&s, &cfg).unwrap();
+        for w in tr.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let total = tr.last().unwrap().arrival;
+        // 50 arrivals at 10/s ≈ 5s ± slack
+        assert!(total > 1.0 && total < 20.0, "total {total}");
+    }
+
+    #[test]
+    fn budgets_follow_profile_ordering() {
+        assert!(output_budget("mtbench") > output_budget("chatgpt"));
+        assert!(output_budget("chatgpt") > output_budget("alpaca"));
+    }
+
+    #[test]
+    fn budget_jitter_bounded() {
+        let s = PromptSet::synthetic(10);
+        let cfg = TraceConfig::offline("mtbench", 100, 3);
+        let tr = generate_trace(&s, &cfg).unwrap();
+        let b = output_budget("mtbench") as f64;
+        for r in &tr {
+            assert!(r.max_new_tokens as f64 >= 0.7 * b);
+            assert!(r.max_new_tokens as f64 <= 1.3 * b);
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Integration tests over the real AOT artifacts.
+//!
+//! These run `cargo test` against `artifacts/` (built by `make artifacts`);
+//! every test skips with a notice when the artifacts are absent so the
+//! unit-test suite stays runnable mid-build.
+//!
+//! The core invariant checked here is the paper's §4.1 claim: "token tree
+//! pruning will not impact the correctness of the decoding" — every engine
+//! must emit exactly the autoregressive greedy text.
+
+use std::path::PathBuf;
+
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::runtime::Runtime;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = propd::artifacts_dir(None);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+const PROMPTS: [&str; 3] = [
+    "user: Explain how the scheduler reduces the latency of every \
+     request.\nassistant:",
+    "user: List three reasons why the token tree prunes the candidate \
+     sequences.\nassistant:",
+    "user: Summarize how the batch engine balances the decoding \
+     throughput.\nassistant:",
+];
+
+fn generate(
+    rt: &Runtime,
+    mut cfg: EngineConfig,
+    prompts: &[&str],
+    max_new: usize,
+) -> Vec<String> {
+    cfg.max_batch = prompts.len().max(1);
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    for p in prompts {
+        engine.submit(p, max_new);
+    }
+    let mut done = engine.run_to_completion().expect("run");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.text).collect()
+}
+
+#[test]
+fn manifest_and_weights_load() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    assert!(!rt.manifest.artifacts.is_empty());
+    for size in rt.manifest.sizes.keys() {
+        let w = rt.host_weights(size).expect("weights");
+        let meta = rt.manifest.model(size).unwrap();
+        assert_eq!(w.param_count(), meta.param_count,
+                   "param count mismatch for size {size}");
+    }
+}
+
+#[test]
+fn all_engines_reproduce_autoregressive_greedy() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    let ar = generate(
+        &rt,
+        EngineConfig::new("m", EngineKind::Autoregressive),
+        &PROMPTS,
+        24,
+    );
+    for kind in [EngineKind::Bpd, EngineKind::Medusa, EngineKind::ProPD] {
+        let out = generate(&rt, EngineConfig::new("m", kind), &PROMPTS, 24);
+        assert_eq!(
+            out, ar,
+            "{} output diverged from autoregressive greedy",
+            kind.as_str()
+        );
+    }
+}
+
+#[test]
+fn pruning_toggles_do_not_change_output() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut texts = Vec::new();
+    for (early, dynamic) in
+        [(false, false), (true, false), (false, true), (true, true)]
+    {
+        let cfg = EngineConfig::ablation("m", early, dynamic);
+        texts.push(generate(&rt, cfg, &PROMPTS[..2], 20));
+    }
+    for t in &texts[1..] {
+        assert_eq!(*t, texts[0], "ablation toggle changed decoded text");
+    }
+}
+
+#[test]
+fn prune_layer_sweep_preserves_output() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    let base = generate(
+        &rt,
+        EngineConfig::new("m", EngineKind::Autoregressive),
+        &PROMPTS[..2],
+        16,
+    );
+    // The Table-2 sweep artifacts exist at BS=4 for the default size; use
+    // batch 2 prompts padded to bucket 4.
+    for n in [1usize, 2, 3, 4] {
+        let mut cfg = EngineConfig::new("m", EngineKind::ProPD);
+        cfg.prune_layer = n;
+        cfg.prune_top_k = 8;
+        let out = generate(&rt, cfg, &PROMPTS[..2], 16);
+        assert_eq!(out, base, "prune layer {n} changed decoded text");
+    }
+}
+
+#[test]
+fn continuous_batching_completes_all_requests() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut cfg = EngineConfig::new("m", EngineKind::ProPD);
+    cfg.max_batch = 2; // forces waves of admission
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    for i in 0..6 {
+        engine.submit(PROMPTS[i % PROMPTS.len()], 10 + i);
+    }
+    let done = engine.run_to_completion().expect("run");
+    assert_eq!(done.len(), 6);
+    for c in &done {
+        assert!(!c.tokens.is_empty());
+        assert!(c.tokens.len() <= 16);
+    }
+    assert_eq!(engine.metrics.requests_completed, 6);
+}
+
+#[test]
+fn estimators_learn_during_serving() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut cfg = EngineConfig::new("m", EngineKind::ProPD);
+    cfg.max_batch = 2;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    for p in &PROMPTS[..2] {
+        engine.submit(p, 32);
+    }
+    engine.run_to_completion().expect("run");
+    let (_b0, b1) = engine.perf_fit();
+    assert!(b1.is_finite());
+    assert!(engine.tracker_updates() > 0,
+            "acceptance tracker never updated");
+    assert!(engine.metrics.tokens_generated >= 32);
+}
+
+#[test]
+fn smaller_and_larger_sizes_serve() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    for size in ["s", "l"] {
+        if !rt.manifest.sizes.contains_key(size) {
+            continue;
+        }
+        let out = generate(
+            &rt,
+            EngineConfig::new(size, EngineKind::ProPD),
+            &PROMPTS[..1],
+            12,
+        );
+        assert_eq!(out.len(), 1);
+        assert!(!out[0].is_empty());
+    }
+}
+
+#[test]
+fn server_round_trip_over_tcp() {
+    use propd::config::ServingConfig;
+    use propd::server::protocol::{parse_completion, render_request};
+    use std::io::{BufRead, BufReader, Write};
+
+    let dir = require_artifacts!();
+    let mut cfg = ServingConfig::default_for("m", EngineKind::ProPD);
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.engine.max_batch = 2;
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let rt = Runtime::load(&dir).expect("runtime");
+        propd::server::serve(&cfg, &rt, Some(tx)).expect("serve");
+    });
+    let addr = rx.recv().expect("server ready");
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    for i in 0..2 {
+        writer
+            .write_all(
+                format!("{}\n", render_request(PROMPTS[i], 12)).as_bytes(),
+            )
+            .unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let (_, text, lat) = parse_completion(line.trim()).expect("reply");
+        assert!(!text.is_empty());
+        assert!(lat > 0.0);
+    }
+}
+
+#[test]
+fn generation_is_deterministic_across_runs() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    let a = generate(&rt, EngineConfig::new("m", EngineKind::ProPD),
+                     &PROMPTS[..2], 20);
+    let b = generate(&rt, EngineConfig::new("m", EngineKind::ProPD),
+                     &PROMPTS[..2], 20);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn max_new_tokens_is_respected() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("runtime");
+    for kind in [EngineKind::Autoregressive, EngineKind::ProPD] {
+        let out = generate(&rt, EngineConfig::new("m", kind),
+                           &PROMPTS[..1], 7);
+        // Tree engines may overshoot by at most one step's acceptance,
+        // which the engine truncates to the budget.
+        assert!(out[0].len() <= 8, "{}: {}", kind.as_str(), out[0].len());
+    }
+}

@@ -1,0 +1,488 @@
+//! Property-based tests over the coordinator invariants (std-only harness:
+//! seeded generators + many cases; the offline mirror has no proptest).
+//!
+//! Each property runs a few hundred randomized cases; failures print the
+//! case seed so they reproduce deterministically.
+
+use propd::estimator::{AcceptanceTracker, PerfModel};
+use propd::jsonio;
+use propd::kvcache::{KvCache, KvGeometry};
+use propd::manifest::bucket_for;
+use propd::tree::accept::{accept_path, argmax};
+use propd::tree::builder::HeadCandidates;
+use propd::tree::node::{TokenTree, TreeNode};
+use propd::tree::prune::{in_top_k, prune_tree};
+use propd::tree::{TreeBuilder, TreeMask};
+use propd::util::rng::Rng;
+
+const CASES: u64 = 300;
+
+/// Random head-candidate table (probabilities decaying in rank).
+fn gen_cands(rng: &mut Rng) -> HeadCandidates {
+    let heads = rng.range(1, 5);
+    (0..heads)
+        .map(|_| {
+            let ranks = rng.range(1, 9);
+            let mut p = 0.3 + 0.65 * rng.f64();
+            (0..ranks)
+                .map(|k| {
+                    p *= 0.4 + 0.55 * rng.f64();
+                    ((rng.below(256)) as u32 + k as u32 * 0, p)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Random structurally-valid token tree (topological order by
+/// construction; children of deeper parents get deeper depths).
+/// Tokens are drawn below 64 so they always fit the test vocabularies.
+fn gen_tree(rng: &mut Rng, max_nodes: usize, max_depth: usize) -> TokenTree {
+    let n = rng.range(1, max_nodes + 1);
+    let mut nodes = vec![TreeNode {
+        token: rng.below(64) as u32,
+        parent: None,
+        depth: 0,
+        rank: 0,
+        path_prob: 1.0,
+    }];
+    for i in 1..n {
+        // pick a parent whose depth < max_depth
+        let candidates: Vec<usize> = (0..i)
+            .filter(|&p| nodes[p].depth < max_depth)
+            .collect();
+        if candidates.is_empty() {
+            break;
+        }
+        let p = *rng.choose(&candidates);
+        let prob = nodes[p].path_prob * rng.f64();
+        nodes.push(TreeNode {
+            token: rng.below(64) as u32,
+            parent: Some(p),
+            depth: nodes[p].depth + 1,
+            rank: rng.below(8),
+            path_prob: prob,
+        });
+    }
+    TokenTree::from_nodes(nodes)
+}
+
+fn gen_logits(rng: &mut Rng, rows: usize, vocab: usize) -> Vec<f32> {
+    (0..rows * vocab).map(|_| (rng.f64() * 10.0) as f32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tree builder (§4.2)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_builder_trees_always_validate() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let cands = gen_cands(&mut rng);
+        let size = rng.range(1, 65);
+        let tree = TreeBuilder::new(8).build(0, &cands, size);
+        assert!(tree.validate().is_ok(), "seed {seed}: {:?}",
+                tree.validate());
+        assert!(tree.len() <= size);
+    }
+}
+
+#[test]
+fn prop_builder_expected_len_monotone_and_matches_curve() {
+    for seed in 0..CASES / 3 {
+        let mut rng = Rng::new(1000 + seed);
+        let cands = gen_cands(&mut rng);
+        let b = TreeBuilder::new(8);
+        let curve = b.gain_curve(&cands, 32);
+        let mut prev = 0.0;
+        for size in 1..=32 {
+            let e = b.build(0, &cands, size).expected_accept_len();
+            assert!(e + 1e-9 >= prev, "seed {seed} size {size}");
+            assert!((curve[size - 1] - e).abs() < 1e-9,
+                    "seed {seed} size {size}: curve {} vs {e}",
+                    curve[size - 1]);
+            prev = e;
+        }
+    }
+}
+
+#[test]
+fn prop_builder_greedy_is_optimal_among_exchanges() {
+    // Any node NOT in the tree must have gain <= every included node's
+    // gain, *provided its parent and previous-rank sibling are included*
+    // (the feasibility frontier of the greedy).
+    for seed in 0..CASES / 3 {
+        let mut rng = Rng::new(2000 + seed);
+        let cands = gen_cands(&mut rng);
+        let size = rng.range(2, 33);
+        let tree = TreeBuilder::new(8).build(0, &cands, size);
+        let min_gain = tree
+            .nodes()
+            .iter()
+            .skip(1)
+            .map(|n| n.path_prob)
+            .fold(f64::INFINITY, f64::min);
+        // frontier candidates: first child of each node, next sibling of
+        // each non-root node
+        for (i, n) in tree.nodes().iter().enumerate() {
+            let depth = n.depth + 1;
+            if depth - 1 < cands.len() {
+                let p = cands[depth - 1].first().map(|&(_, p)| p).unwrap();
+                let gain = n.path_prob * p;
+                let included = tree.nodes().iter().any(|m| {
+                    m.parent == Some(i) && m.rank == 0
+                });
+                if !included && tree.len() == size {
+                    assert!(gain <= min_gain + 1e-9,
+                            "seed {seed}: better child skipped");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Masks (§4.1 implementation optimization)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_mask_subsample_equals_rebuild() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let tree = gen_tree(&mut rng, 24, 5);
+        let bucket = bucket_for(tree.len(), &[4, 8, 16, 32]);
+        let mask = TreeMask::build(&tree, bucket);
+        // keep = random subtree-closed subset containing the root
+        let mut keep = vec![true; tree.len()];
+        for i in 1..tree.len() {
+            let parent_kept = keep[tree.node(i).parent.unwrap()];
+            keep[i] = parent_kept && rng.f64() < 0.7;
+        }
+        let keep_idx: Vec<usize> =
+            (0..tree.len()).filter(|&i| keep[i]).collect();
+        let (compacted, _) = tree.compact(&keep_idx);
+        let nb = bucket_for(compacted.len(), &[4, 8, 16, 32]);
+        assert_eq!(
+            mask.subsample(&keep_idx, nb),
+            TreeMask::build(&compacted, nb),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_mask_rows_attend_ancestors_exactly() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let tree = gen_tree(&mut rng, 32, 6);
+        let mask = TreeMask::build(&tree, 32);
+        for i in 0..tree.len() {
+            // walk ancestors
+            let mut expected = 0u64;
+            let mut cur = Some(i);
+            while let Some(c) = cur {
+                expected |= 1 << c;
+                cur = tree.node(c).parent;
+            }
+            assert_eq!(mask.row(i), expected, "seed {seed} node {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pruning (§4.1)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_prune_survivors_pass_membership_and_subtrees_die_whole() {
+    let vocab = 64;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let tree = gen_tree(&mut rng, 24, 5);
+        let logits = gen_logits(&mut rng, tree.len(), vocab);
+        let k = rng.range(1, 17);
+        let out = prune_tree(&tree, &logits, vocab, k);
+        assert!(out.tree.validate().is_ok(), "seed {seed}");
+        assert_eq!(out.pruned + out.keep.len(), tree.len());
+        // every survivor (non-root) passes the parent's top-k test
+        for (new_i, &old_i) in out.keep.iter().enumerate().skip(1) {
+            let parent_old = tree.node(old_i).parent.unwrap();
+            assert!(out.keep.contains(&parent_old),
+                    "seed {seed}: orphan survivor");
+            let row = &logits[parent_old * vocab..(parent_old + 1) * vocab];
+            assert!(
+                in_top_k(row, tree.node(old_i).token as usize, k),
+                "seed {seed}: survivor fails membership"
+            );
+            let _ = new_i;
+        }
+        // every pruned node either fails membership or has a pruned parent
+        for old_i in 1..tree.len() {
+            if out.keep.contains(&old_i) {
+                continue;
+            }
+            let parent_old = tree.node(old_i).parent.unwrap();
+            let parent_pruned = !out.keep.contains(&parent_old);
+            let row = &logits[parent_old * vocab..(parent_old + 1) * vocab];
+            let fails = !in_top_k(row, tree.node(old_i).token as usize, k);
+            assert!(parent_pruned || fails, "seed {seed}: wrongly pruned");
+        }
+    }
+}
+
+#[test]
+fn prop_prune_with_full_k_keeps_everything() {
+    let vocab = 64;
+    for seed in 0..CASES / 3 {
+        let mut rng = Rng::new(6000 + seed);
+        let tree = gen_tree(&mut rng, 16, 4);
+        let logits = gen_logits(&mut rng, tree.len(), vocab);
+        let out = prune_tree(&tree, &logits, vocab, vocab);
+        assert_eq!(out.pruned, 0, "seed {seed}");
+        assert_eq!(out.tree.len(), tree.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_accept_path_matches_argmax_walk() {
+    let vocab = 64;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let tree = gen_tree(&mut rng, 24, 5);
+        let logits = gen_logits(&mut rng, tree.len(), vocab);
+        let res = accept_path(&tree, &logits, vocab);
+        // path starts at root, each hop follows argmax
+        assert_eq!(res.path[0], 0);
+        for w in res.path.windows(2) {
+            let row = &logits[w[0] * vocab..(w[0] + 1) * vocab];
+            assert_eq!(tree.node(w[1]).token as usize, argmax(row),
+                       "seed {seed}");
+            assert_eq!(tree.node(w[1]).parent, Some(w[0]));
+        }
+        // the walk is maximal: no child of the last node matches argmax
+        let last = *res.path.last().unwrap();
+        let row = &logits[last * vocab..(last + 1) * vocab];
+        let want = argmax(row) as u32;
+        assert!(
+            !tree.children(last).iter()
+                .any(|&c| tree.node(c).token == want),
+            "seed {seed}: walk stopped early"
+        );
+        assert_eq!(res.bonus, want);
+    }
+}
+
+#[test]
+fn prop_pruning_never_extends_acceptance_beyond_unpruned() {
+    // Pruning can only remove candidate continuations, so the accepted
+    // path on the pruned tree is a prefix of the unpruned path whenever
+    // the unpruned path survives.
+    let vocab = 64;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8000 + seed);
+        let tree = gen_tree(&mut rng, 20, 5);
+        let logits = gen_logits(&mut rng, tree.len(), vocab);
+        let full = accept_path(&tree, &logits, vocab);
+        let out = prune_tree(&tree, &logits, vocab, rng.range(1, 8));
+        // compacted logits: gather surviving rows
+        let mut plogits = Vec::new();
+        for &old in &out.keep {
+            plogits.extend_from_slice(
+                &logits[old * vocab..(old + 1) * vocab]);
+        }
+        let pruned_res = accept_path(&out.tree, &plogits, vocab);
+        // map pruned path back to original indices
+        let orig: Vec<usize> =
+            pruned_res.path.iter().map(|&i| out.keep[i]).collect();
+        assert!(orig.len() <= full.path.len(), "seed {seed}");
+        assert_eq!(&full.path[..orig.len()], &orig[..], "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Estimators
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_perf_model_recovers_random_linear_laws() {
+    for seed in 0..CASES / 3 {
+        let mut rng = Rng::new(9000 + seed);
+        let b0 = rng.f64() * 5.0;
+        let b1 = 0.01 + rng.f64();
+        let mut m = PerfModel::new(0.5, 0.0);
+        for _ in 0..30 {
+            for &i in &[4usize, 8, 16, 32, 64] {
+                let noise = 1.0 + 0.01 * rng.normal();
+                m.record(i, (b0 + b1 * i as f64) * noise);
+            }
+        }
+        let (f0, f1) = m.fit();
+        assert!((f0 - b0).abs() < 0.35 + 0.05 * b0, "seed {seed}: {f0} vs {b0}");
+        assert!((f1 - b1).abs() < 0.05 + 0.05 * b1, "seed {seed}: {f1} vs {b1}");
+        for &i in &[4usize, 64, 128] {
+            assert!(m.estimate(i) > 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_tracker_cumulative_monotone_under_random_streams() {
+    for seed in 0..CASES / 3 {
+        let mut rng = Rng::new(10_000 + seed);
+        let mut t = AcceptanceTracker::new(3, 6, 0.1);
+        for _ in 0..200 {
+            let head = rng.below(3);
+            let rank = if rng.f64() < 0.2 {
+                None
+            } else {
+                Some(rng.below(8))
+            };
+            t.record(head, rank);
+        }
+        for h in 0..3 {
+            let mut prev = 0.0;
+            for k in 1..=6 {
+                let c = t.cumulative_p(h, k);
+                assert!((0.0..=1.0 + 1e-12).contains(&c), "seed {seed}");
+                assert!(c + 1e-12 >= prev, "seed {seed}");
+                prev = c;
+            }
+            let total: f64 = (0..6).map(|k| t.marginal(h, k)).sum();
+            assert!(total <= 1.0 + 1e-9, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kv_commit_then_batch_roundtrip() {
+    for seed in 0..CASES / 3 {
+        let mut rng = Rng::new(11_000 + seed);
+        let geom = KvGeometry {
+            layers: rng.range(1, 4),
+            max_seq: 16,
+            heads: rng.range(1, 3),
+            head_dim: rng.range(1, 5),
+        };
+        let mut kv = KvCache::new(geom, 3);
+        let slots: Vec<usize> =
+            (0..3).map(|_| kv.acquire().unwrap()).collect();
+        let t = rng.range(1, 5);
+        let col = geom.col();
+        // random commits per slot
+        let mut expect: Vec<Vec<(usize, usize, usize, Vec<f32>)>> =
+            vec![Vec::new(); 3];
+        for (si, &slot) in slots.iter().enumerate() {
+            let blk: Vec<f32> = (0..geom.layers * 2 * t * col)
+                .map(|_| rng.f64() as f32)
+                .collect();
+            let n_pairs = rng.range(1, t + 1);
+            let pairs: Vec<(usize, usize)> = (0..n_pairs)
+                .map(|j| (j, rng.below(geom.max_seq)))
+                .collect();
+            kv.commit_columns(slot, &blk, (geom.layers, 1, t), 0, 0,
+                              &pairs);
+            for &(j, pos) in &pairs {
+                for l in 0..geom.layers {
+                    for c in 0..2 {
+                        let src = (((l * 2 + c) * 1 + 0) * t + j) * col;
+                        expect[si].push((l, c, pos,
+                                         blk[src..src + col].to_vec()));
+                    }
+                }
+            }
+        }
+        // later pairs overwrite earlier same-position writes; read back
+        for (si, &slot) in slots.iter().enumerate() {
+            // build final expectation map
+            use std::collections::HashMap;
+            let mut last: HashMap<(usize, usize, usize), Vec<f32>> =
+                HashMap::new();
+            for (l, c, pos, v) in &expect[si] {
+                last.insert((*l, *c, *pos), v.clone());
+            }
+            for ((l, c, pos), v) in &last {
+                assert_eq!(kv.read_column(slot, *l, *c, *pos), &v[..],
+                           "seed {seed}");
+            }
+        }
+        // batch assembly matches read_column
+        let batch = kv.batch_tensor(&slots);
+        let data = batch.as_f32();
+        let stripe = geom.max_seq * col;
+        for (lane, &slot) in slots.iter().enumerate() {
+            for l in 0..geom.layers {
+                for c in 0..2 {
+                    for pos in 0..geom.max_seq {
+                        let off = ((l * 2 + c) * 3 + lane) * stripe
+                            + pos * col;
+                        assert_eq!(&data[off..off + col],
+                                   kv.read_column(slot, l, c, pos),
+                                   "seed {seed}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Misc substrates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_jsonio_roundtrip_random_documents() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> jsonio::Value {
+        use jsonio::Value;
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.f64() < 0.5),
+            2 => Value::Num((rng.below(100000) as f64) / 4.0),
+            3 => Value::Str(format!("s{}-\"é\n{}", rng.below(100),
+                                    rng.below(10))),
+            4 => Value::Arr((0..rng.below(4))
+                .map(|_| gen_value(rng, depth - 1))
+                .collect()),
+            _ => Value::Obj((0..rng.below(4))
+                .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                .collect()),
+        }
+    }
+    for seed in 0..CASES {
+        let mut rng = Rng::new(12_000 + seed);
+        let v = gen_value(&mut rng, 3);
+        let text = jsonio::to_string(&v);
+        let back = jsonio::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e} in {text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_bucket_for_invariants() {
+    let buckets = [4usize, 8, 16, 32, 64];
+    for v in 0..200 {
+        let b = bucket_for(v, &buckets);
+        assert!(buckets.contains(&b));
+        if v <= 64 {
+            assert!(b >= v);
+            // tightness: no smaller bucket also covers v
+            for &c in &buckets {
+                if c >= v {
+                    assert!(b <= c);
+                    break;
+                }
+            }
+        } else {
+            assert_eq!(b, 64);
+        }
+    }
+}
