@@ -12,21 +12,23 @@ use anyhow::Result;
 
 use propd::config::ServingConfig;
 use propd::engine::EngineKind;
-use propd::runtime::Runtime;
+use propd::runtime::RuntimeSpec;
 use propd::server::protocol::{parse_completion, render_request};
 use propd::util::stats;
 
 fn main() -> Result<()> {
     let dir = propd::artifacts_dir(None);
 
-    // Server thread owns the runtime + engine (PJRT types are !Send).
+    // Server worker threads each own their runtime + engine; this thread
+    // only talks TCP.
     let mut cfg = ServingConfig::default_for("m", EngineKind::ProPD);
     cfg.server.addr = "127.0.0.1:0".into(); // ephemeral port
+    cfg.server.replicas = 2;
     cfg.engine.max_batch = 4;
     let (ready_tx, ready_rx) = mpsc::channel();
     std::thread::spawn(move || {
-        let rt = Runtime::load(&dir).expect("artifacts (run `make artifacts`)");
-        propd::server::serve(&cfg, &rt, Some(ready_tx)).expect("serve");
+        let spec = RuntimeSpec::Artifacts(dir);
+        propd::server::serve(&cfg, &spec, Some(ready_tx)).expect("serve");
     });
     let addr = ready_rx.recv()?;
     println!("server up on {addr}");
@@ -76,6 +78,15 @@ fn main() -> Result<()> {
         stats::median(&all),
         all.iter().cloned().fold(0.0, f64::max)
     );
+    // The aggregate metrics endpoint shows how work spread over replicas.
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writer.write_all(b"{\"metrics\": true}\n")?;
+    writer.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    println!("metrics: {}", line.trim());
     // Server thread is left running; the process exits here (demo only —
     // `propd serve` is the long-running entry point).
     Ok(())

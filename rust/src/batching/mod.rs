@@ -1,9 +1,13 @@
 //! Request-queue / admission layer used by the server front-end.
 //!
 //! The engine performs continuous batching internally (free lane → admit);
-//! this module provides what sits in front of it: a bounded FCFS queue
-//! with backpressure, arrival accounting, and the bucket-padding policy
-//! helpers shared with the engines.
+//! this module provides what sits in front of it: a bounded FCFS admission
+//! queue with backpressure, and the multi-replica [`scheduler`] that routes
+//! admitted requests onto per-replica decode feeds.
+
+pub mod scheduler;
+
+pub use scheduler::{ReplicaHandle, ReplicaLoad, RoutingPolicy, Scheduler};
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;

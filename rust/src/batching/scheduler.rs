@@ -1,0 +1,313 @@
+//! Multi-replica dispatch: one shared admission queue feeding N per-replica
+//! decode queues.
+//!
+//! The serving layer separates *admission* (the bounded FCFS
+//! [`RequestQueue`](super::RequestQueue) clients submit into, with
+//! backpressure) from *decode batches* (each replica's private feed, drained
+//! by the engine's continuous-batching loop).  A scheduler thread pumps the
+//! admission queue and routes every request to a replica:
+//!
+//! - **least-loaded** (default): the replica with the most free lanes wins;
+//!   ties go to the shortest decode batch, then the lowest id.  Free lanes
+//!   are computed from dispatch-side bookkeeping ([`ReplicaLoad`]) so the
+//!   decision never waits on a worker.
+//! - **round-robin**: strict rotation (useful as a baseline and for
+//!   homogeneous offline drains).
+//!
+//! Replicas that die close their feed; the scheduler skips closed feeds and
+//! drops a request (client sees "engine shut down") only when every feed is
+//! closed.
+
+use std::cmp::Reverse;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{QueuedRequest, RequestQueue};
+
+/// How many admission-queue entries the scheduler pulls per wakeup.
+const DISPATCH_BURST: usize = 32;
+
+/// Request routing policy for the multi-replica scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    LeastLoaded,
+    RoundRobin,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "least-loaded" | "least_loaded" => Some(RoutingPolicy::LeastLoaded),
+            "round-robin" | "round_robin" => Some(RoutingPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// Dispatch-side load accounting for one replica.
+///
+/// `queued` counts requests handed to the replica's feed but not yet
+/// drained by its worker; `pending` mirrors the engine's in-flight count
+/// (queue + active lanes), published by the worker each iteration.  The
+/// split means routing decisions are instant and monotone: a dispatch
+/// raises the target's load before the next decision is made.
+#[derive(Debug, Default)]
+pub struct ReplicaLoad {
+    queued: AtomicUsize,
+    pending: AtomicUsize,
+}
+
+impl ReplicaLoad {
+    pub fn note_dispatched(&self) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn undo_dispatched(&self) {
+        self.queued.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Worker-side: `n` requests moved from the feed into the engine.
+    pub fn note_drained(&self, n: usize) {
+        self.queued.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Worker-side: engine's current in-flight count (queue + lanes).
+    pub fn set_pending(&self, n: usize) {
+        self.pending.store(n, Ordering::SeqCst);
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.queued.load(Ordering::SeqCst) + self.pending.load(Ordering::SeqCst)
+    }
+}
+
+/// Scheduler-visible handle to one replica: its feed plus load counters.
+#[derive(Clone)]
+pub struct ReplicaHandle {
+    pub id: usize,
+    /// The replica engine's lane budget (`engine.max_batch`).
+    pub max_batch: usize,
+    pub queue: Arc<RequestQueue>,
+    pub load: Arc<ReplicaLoad>,
+}
+
+impl ReplicaHandle {
+    pub fn new(id: usize, max_batch: usize, feed_capacity: usize) -> Self {
+        ReplicaHandle {
+            id,
+            max_batch,
+            queue: Arc::new(RequestQueue::new(feed_capacity.max(1))),
+            load: Arc::new(ReplicaLoad::default()),
+        }
+    }
+
+    /// Lanes this replica could fill immediately (0 when saturated).
+    pub fn free_lanes(&self) -> usize {
+        self.max_batch.saturating_sub(self.load.in_flight())
+    }
+}
+
+/// Routes admission-queue requests onto replica feeds.
+pub struct Scheduler {
+    replicas: Vec<ReplicaHandle>,
+    policy: RoutingPolicy,
+    rr: AtomicUsize,
+}
+
+impl Scheduler {
+    pub fn new(replicas: Vec<ReplicaHandle>, policy: RoutingPolicy) -> Self {
+        assert!(!replicas.is_empty(), "scheduler needs >= 1 replica");
+        Scheduler { replicas, policy, rr: AtomicUsize::new(0) }
+    }
+
+    pub fn replicas(&self) -> &[ReplicaHandle] {
+        &self.replicas
+    }
+
+    /// Pick the routing target among replicas whose feed is still open.
+    /// Returns `None` when every feed has closed.
+    pub fn pick(&self) -> Option<&ReplicaHandle> {
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let n = self.replicas.len();
+                let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                (0..n)
+                    .map(|k| &self.replicas[(start + k) % n])
+                    .find(|r| !r.queue.is_closed())
+            }
+            RoutingPolicy::LeastLoaded => self
+                .replicas
+                .iter()
+                .filter(|r| !r.queue.is_closed())
+                .min_by_key(|r| {
+                    (Reverse(r.free_lanes()), r.load.in_flight(), r.id)
+                }),
+        }
+    }
+
+    /// Route one request; blocks (with a short backoff) while every open
+    /// feed is full.  Returns false iff the request was dropped because
+    /// every feed is closed.
+    pub fn dispatch_one(&self, mut req: QueuedRequest) -> bool {
+        loop {
+            let Some(r) = self.pick() else {
+                return false; // all replicas gone; drop → client errors out
+            };
+            r.load.note_dispatched();
+            match r.queue.submit(req) {
+                Ok(()) => return true,
+                Err(back) => {
+                    r.load.undo_dispatched();
+                    req = back;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+    }
+
+    /// Pump the admission queue until it closes and drains, then close all
+    /// replica feeds (letting idle workers exit).  Returns the number of
+    /// requests dispatched.
+    pub fn run(&self, admission: &RequestQueue) -> u64 {
+        let mut dispatched = 0u64;
+        loop {
+            let batch = admission.drain_blocking(DISPATCH_BURST);
+            if batch.is_empty() {
+                break; // closed and empty
+            }
+            for req in batch {
+                if self.dispatch_one(req) {
+                    dispatched += 1;
+                }
+            }
+        }
+        for r in &self.replicas {
+            r.queue.close();
+        }
+        dispatched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(p: &str) -> QueuedRequest {
+        QueuedRequest {
+            prompt: p.into(),
+            max_new_tokens: 8,
+            respond: None,
+        }
+    }
+
+    #[test]
+    fn routing_policy_parses() {
+        assert_eq!(
+            RoutingPolicy::parse("least-loaded"),
+            Some(RoutingPolicy::LeastLoaded)
+        );
+        assert_eq!(
+            RoutingPolicy::parse("round_robin"),
+            Some(RoutingPolicy::RoundRobin)
+        );
+        assert_eq!(RoutingPolicy::parse("warp"), None);
+        assert_eq!(RoutingPolicy::LeastLoaded.as_str(), "least-loaded");
+    }
+
+    #[test]
+    fn load_accounting_round_trips() {
+        let l = ReplicaLoad::default();
+        l.note_dispatched();
+        l.note_dispatched();
+        assert_eq!(l.in_flight(), 2);
+        l.note_drained(2);
+        l.set_pending(2);
+        assert_eq!(l.in_flight(), 2);
+        l.set_pending(0);
+        assert_eq!(l.in_flight(), 0);
+    }
+
+    #[test]
+    fn least_loaded_alternates_on_fresh_replicas() {
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
+        for p in ["a", "b", "c", "d"] {
+            assert!(s.dispatch_one(req(p)));
+        }
+        // free lanes tiebreak by id: a→0, b→1 (more free), c→0, d→1.
+        let q0: Vec<String> = s.replicas()[0]
+            .queue
+            .drain_now(8)
+            .into_iter()
+            .map(|r| r.prompt)
+            .collect();
+        let q1: Vec<String> = s.replicas()[1]
+            .queue
+            .drain_now(8)
+            .into_iter()
+            .map(|r| r.prompt)
+            .collect();
+        assert_eq!(q0, vec!["a", "c"]);
+        assert_eq!(q1, vec!["b", "d"]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_shorter_decode_batch_when_no_lane_free() {
+        let handles =
+            vec![ReplicaHandle::new(0, 1, 8), ReplicaHandle::new(1, 1, 8)];
+        // Saturate both (0 free lanes), replica 0 deeper than replica 1.
+        handles[0].load.set_pending(3);
+        handles[1].load.set_pending(2);
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
+        assert_eq!(s.pick().unwrap().id, 1);
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_closed() {
+        let handles = vec![
+            ReplicaHandle::new(0, 2, 8),
+            ReplicaHandle::new(1, 2, 8),
+            ReplicaHandle::new(2, 2, 8),
+        ];
+        handles[1].queue.close();
+        let s = Scheduler::new(handles, RoutingPolicy::RoundRobin);
+        let picks: Vec<usize> =
+            (0..4).map(|_| s.pick().unwrap().id).collect();
+        assert_eq!(picks, vec![0, 2, 2, 0]);
+    }
+
+    #[test]
+    fn dispatch_drops_only_when_all_feeds_closed() {
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        handles[0].queue.close();
+        handles[1].queue.close();
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
+        assert!(!s.dispatch_one(req("x")));
+    }
+
+    #[test]
+    fn run_drains_admission_and_closes_feeds() {
+        let admission = RequestQueue::new(16);
+        for i in 0..5 {
+            admission.submit(req(&i.to_string())).map_err(|_| ()).unwrap();
+        }
+        admission.close();
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
+        assert_eq!(s.run(&admission), 5);
+        let total = s.replicas()[0].queue.len() + s.replicas()[1].queue.len();
+        assert_eq!(total, 5);
+        assert!(s.replicas().iter().all(|r| r.queue.is_closed()));
+    }
+}

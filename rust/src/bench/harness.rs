@@ -10,8 +10,10 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::engine::{Engine, EngineConfig};
-use crate::runtime::Runtime;
+use crate::config::ServingConfig;
+use crate::engine::{Completion, Engine, EngineConfig};
+use crate::metrics::AggregateSnapshot;
+use crate::runtime::{Runtime, RuntimeSpec};
 use crate::workload::{generate_trace, PromptSet, TraceConfig};
 
 #[derive(Debug, Clone)]
@@ -120,6 +122,24 @@ pub fn run_trace(
         completions,
         report,
     })
+}
+
+/// Multi-replica counterpart of [`run_trace`]: push a deterministic trace
+/// through the replica-set scheduler (N engines, one shared admission
+/// queue) and return the completions in submission order plus the
+/// aggregate metrics and per-replica served counts.
+pub fn run_replicated_trace(
+    cfg: &ServingConfig,
+    spec: &RuntimeSpec,
+    prompts: &PromptSet,
+    trace_cfg: &TraceConfig,
+) -> Result<(Vec<Completion>, AggregateSnapshot, Vec<u64>)> {
+    let trace = generate_trace(prompts, trace_cfg)?;
+    let requests: Vec<(String, usize)> = trace
+        .into_iter()
+        .map(|r| (r.prompt, r.max_new_tokens))
+        .collect();
+    crate::server::run_offline(cfg, spec, &requests)
 }
 
 /// Load the prompt set, falling back to the synthetic pool when

@@ -13,6 +13,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::batching::RoutingPolicy;
 use crate::engine::{EngineConfig, EngineKind};
 use toml_lite::TomlValue;
 
@@ -28,11 +29,20 @@ pub struct ServingConfig {
 pub struct ServerConfig {
     pub addr: String,
     pub max_queue: usize,
+    /// Engine replicas: worker threads each owning an Engine + Runtime.
+    pub replicas: usize,
+    /// How the scheduler routes admitted requests onto replicas.
+    pub routing: RoutingPolicy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:8321".into(), max_queue: 256 }
+        ServerConfig {
+            addr: "127.0.0.1:8321".into(),
+            max_queue: 256,
+            replicas: 1,
+            routing: RoutingPolicy::LeastLoaded,
+        }
     }
 }
 
@@ -106,15 +116,28 @@ impl ServingConfig {
                                     e.planner.seq_drift)?;
         e.validate()?;
 
+        let routing_s = gets("server.routing")
+            .unwrap_or_else(|| RoutingPolicy::LeastLoaded.as_str().into());
+        let routing = RoutingPolicy::parse(&routing_s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown server.routing {routing_s:?} \
+                 (expected least-loaded or round-robin)"
+            )
+        })?;
         let server = ServerConfig {
             addr: gets("server.addr")
                 .unwrap_or_else(|| ServerConfig::default().addr),
             max_queue: get_us("server.max_queue", 256)?,
+            replicas: get_us("server.replicas", 1)?,
+            routing,
         };
         let artifacts = gets("artifacts.dir")
             .unwrap_or_else(|| crate::DEFAULT_ARTIFACTS.into());
         if server.max_queue == 0 {
             bail!("server.max_queue must be >= 1");
+        }
+        if server.replicas == 0 {
+            bail!("server.replicas must be >= 1");
         }
         Ok(ServingConfig { artifacts, engine: e, server })
     }
@@ -130,6 +153,29 @@ mod tests {
         assert_eq!(c.engine.size, "m");
         assert_eq!(c.engine.kind, EngineKind::ProPD);
         assert!(c.engine.early_prune);
+        assert_eq!(c.server.replicas, 1);
+        assert_eq!(c.server.routing, RoutingPolicy::LeastLoaded);
+    }
+
+    #[test]
+    fn replica_and_routing_knobs() {
+        let c = ServingConfig::load(
+            None,
+            &[
+                "server.replicas=4".into(),
+                "server.routing=\"round-robin\"".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.server.replicas, 4);
+        assert_eq!(c.server.routing, RoutingPolicy::RoundRobin);
+        assert!(ServingConfig::load(None, &["server.replicas=0".into()])
+            .is_err());
+        assert!(ServingConfig::load(
+            None,
+            &["server.routing=\"warp\"".into()]
+        )
+        .is_err());
     }
 
     #[test]

@@ -255,9 +255,24 @@ impl<'rt> Engine<'rt> {
             let mut res = accept_path(ptree, rows, v);
             // Respect the generation budget: truncate over-acceptance.
             let room = self.room(&self.active[i]) ;
-            if res.path.len() > room.max(1) {
-                res.path.truncate(room.max(1));
-                res.tokens.truncate(room.max(1));
+            let mut cut = res.path.len().min(room.max(1));
+            // Also cut at the stop sequence: a tree step may accept past
+            // "\n\n", which autoregressive decoding would never commit,
+            // and the outputs must stay byte-identical (§4.1).
+            {
+                let mut prev =
+                    self.active[i].generated_tokens().last().copied();
+                for (l, &t) in res.tokens.iter().take(cut).enumerate() {
+                    if self.tokenizer.is_stop_step(prev, t) {
+                        cut = l + 1;
+                        break;
+                    }
+                    prev = Some(t);
+                }
+            }
+            if res.path.len() > cut {
+                res.path.truncate(cut);
+                res.tokens.truncate(cut);
                 let last = *res.path.last().unwrap();
                 let row = logits.f32_chunk(
                     (i * tp_bucket + last) * v, v);

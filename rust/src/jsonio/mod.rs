@@ -1,9 +1,9 @@
 //! Minimal JSON reader/writer (std-only).
 //!
-//! The offline crate mirror in this environment only carries the `xla`
-//! dependency closure, so `serde_json` is unavailable; this module covers
-//! exactly what the coordinator needs: parsing `manifest.json`,
-//! `weights.json`, `prompts.json` and writing metric/report files.
+//! The offline crate mirror in this environment has no `serde_json`; this
+//! module covers exactly what the coordinator needs: parsing
+//! `manifest.json`, `weights.json`, `prompts.json`, the wire protocol, and
+//! writing metric/report files.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

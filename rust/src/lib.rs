@@ -3,14 +3,19 @@
 //! Rust + JAX + Pallas serving stack.
 //!
 //! Layer map (see DESIGN.md):
-//! - L3 (this crate): serving coordinator — batching, KV cache, token-tree
-//!   generation/pruning/acceptance, estimators, metrics, server, CLI.
+//! - L3 (this crate): serving coordinator — batching + multi-replica
+//!   scheduling, KV cache, token-tree generation/pruning/acceptance,
+//!   estimators, metrics, server, CLI.
 //! - L2 (`python/compile/model.py`): the transformer + medusa/early heads,
 //!   AOT-lowered to HLO text per (batch, tree) bucket.
 //! - L1 (`python/compile/kernels/`): the Pallas tree-attention kernel.
 //!
-//! Python never runs at serving time: [`runtime::Runtime`] loads the HLO
-//! artifacts and executes them through the PJRT CPU client.
+//! Python never runs at serving time: [`runtime::Runtime`] loads the
+//! artifact manifest and executes entry points — today through the
+//! deterministic pure-Rust reference backend ([`runtime::sim`]; the
+//! offline crate mirror has no XLA/PJRT binding), with the registry API
+//! shaped so a compiled-HLO backend slots back in (DESIGN.md § Runtime
+//! backends).
 
 pub mod batching;
 pub mod bench;

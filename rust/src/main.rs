@@ -5,6 +5,10 @@
 //!   propd inspect  [--artifacts dir]                   manifest summary
 //!   propd selftest [--set k=v]...                      tiny end-to-end run
 //!
+//! `--replicas N` scales the server to N engine replicas; `--sim` swaps
+//! the artifacts runtime for the deterministic reference backend (no
+//! artifacts directory needed).
+//!
 //! (The offline crate mirror has no clap; argument parsing is hand-rolled.)
 
 use std::path::PathBuf;
@@ -13,7 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use propd::config::ServingConfig;
 use propd::engine::{Engine, EngineKind};
-use propd::runtime::Runtime;
+use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
 
 struct Args {
     cmd: String,
@@ -22,6 +26,7 @@ struct Args {
     prompt: Option<String>,
     artifacts: Option<String>,
     max_new: usize,
+    sim: bool,
 }
 
 fn parse_args() -> Result<Args> {
@@ -34,6 +39,7 @@ fn parse_args() -> Result<Args> {
         prompt: None,
         artifacts: None,
         max_new: 64,
+        sim: false,
     };
     while let Some(flag) = it.next() {
         let mut val = |name: &str| -> Result<String> {
@@ -58,13 +64,39 @@ fn parse_args() -> Result<Args> {
                 let v = val("--size")?;
                 a.sets.push(format!("engine.size={v}"));
             }
+            "--replicas" => {
+                let v = val("--replicas")?;
+                a.sets.push(format!("server.replicas={v}"));
+            }
+            "--routing" => {
+                let v = val("--routing")?;
+                a.sets.push(format!("server.routing=\"{v}\""));
+            }
+            "--sim" => a.sim = true,
             other => bail!("unknown flag {other:?} (try `propd help`)"),
         }
     }
     Ok(a)
 }
 
-fn load(cfg: &ServingConfig, artifacts: Option<&str>) -> Result<Runtime> {
+fn runtime_spec(
+    cfg: &ServingConfig,
+    artifacts: Option<&str>,
+    sim: bool,
+) -> RuntimeSpec {
+    if sim {
+        return RuntimeSpec::Sim(SimConfig::default());
+    }
+    RuntimeSpec::Artifacts(propd::artifacts_dir(
+        artifacts.or(Some(&cfg.artifacts)),
+    ))
+}
+
+fn load(cfg: &ServingConfig, artifacts: Option<&str>, sim: bool)
+    -> Result<Runtime> {
+    if sim {
+        return Ok(Runtime::sim(&SimConfig::default()));
+    }
     let dir = propd::artifacts_dir(artifacts.or(Some(&cfg.artifacts)));
     Runtime::load(&dir).with_context(|| {
         format!(
@@ -80,13 +112,14 @@ fn main() -> Result<()> {
         "serve" => {
             let cfg = ServingConfig::load(args.config.as_deref(),
                                           &args.sets)?;
-            let rt = load(&cfg, args.artifacts.as_deref())?;
-            propd::server::serve(&cfg, &rt, None)
+            let spec =
+                runtime_spec(&cfg, args.artifacts.as_deref(), args.sim);
+            propd::server::serve(&cfg, &spec, None)
         }
         "generate" => {
             let cfg = ServingConfig::load(args.config.as_deref(),
                                           &args.sets)?;
-            let rt = load(&cfg, args.artifacts.as_deref())?;
+            let rt = load(&cfg, args.artifacts.as_deref(), args.sim)?;
             let mut engine = Engine::new(&rt, cfg.engine.clone())?;
             engine.precompile()?;
             let prompt = args.prompt.unwrap_or_else(|| {
@@ -113,7 +146,11 @@ fn main() -> Result<()> {
         }
         "inspect" => {
             let dir = propd::artifacts_dir(args.artifacts.as_deref());
-            let m = propd::manifest::Manifest::load(&dir)?;
+            let m = if args.sim {
+                SimConfig::default().manifest()
+            } else {
+                propd::manifest::Manifest::load(&dir)?
+            };
             println!("artifacts root: {}", m.root.display());
             println!("sizes:");
             for (name, s) in &m.sizes {
@@ -133,7 +170,7 @@ fn main() -> Result<()> {
             let mut sets = args.sets.clone();
             sets.push("engine.max_new_tokens=16".into());
             let cfg = ServingConfig::load(args.config.as_deref(), &sets)?;
-            let rt = load(&cfg, args.artifacts.as_deref())?;
+            let rt = load(&cfg, args.artifacts.as_deref(), args.sim)?;
             for kind in ["autoregressive", "medusa", "propd"] {
                 let mut e_cfg = cfg.engine.clone();
                 e_cfg.kind = EngineKind::parse(kind).unwrap();
@@ -158,7 +195,8 @@ fn main() -> Result<()> {
                 "propd — ProPD parallel-decoding server\n\
                  usage: propd <serve|generate|inspect|selftest> \
                  [--config f.toml] [--set k=v] [--engine kind] [--size s] \
-                 [--prompt p] [--max-new n] [--artifacts dir]"
+                 [--prompt p] [--max-new n] [--artifacts dir] \
+                 [--replicas n] [--routing policy] [--sim]"
             );
             Ok(())
         }

@@ -206,6 +206,34 @@ impl Manifest {
         })
     }
 
+    /// Assemble a manifest in memory (used by the sim backend, which has
+    /// no artifacts directory to parse).
+    pub fn from_parts(
+        root: PathBuf,
+        batch_buckets: Vec<usize>,
+        tree_buckets: Vec<usize>,
+        default_prune_layer: usize,
+        default_size: String,
+        sizes: Vec<(String, ModelMeta)>,
+        artifacts: Vec<ArtifactMeta>,
+    ) -> Self {
+        let index = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.key.clone(), i))
+            .collect();
+        Manifest {
+            root,
+            batch_buckets,
+            tree_buckets,
+            default_prune_layer,
+            default_size,
+            sizes: sizes.into_iter().collect(),
+            artifacts,
+            index,
+        }
+    }
+
     pub fn model(&self, size: &str) -> Result<&ModelMeta> {
         self.sizes
             .get(size)

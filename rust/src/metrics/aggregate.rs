@@ -1,0 +1,188 @@
+//! Cross-replica metrics roll-up.
+//!
+//! Each replica worker publishes a [`ReplicaSnapshot`] of its engine's
+//! metrics into the shared [`MetricsHub`]; [`MetricsHub::aggregate`]
+//! renders the fleet view the server exposes over the wire (`{"metrics":
+//! true}` requests) and the offline drivers print.
+//!
+//! Aggregation rules: counters sum; per-step means are weighted by each
+//! replica's step count; per-request means by its completion count;
+//! `tokens_per_second` sums across replicas (they decode concurrently, so
+//! fleet throughput is the sum of per-replica rates).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::EngineMetrics;
+
+/// One replica's published state (see [`EngineMetrics::report`] for the
+/// report keys).
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaSnapshot {
+    pub replica: usize,
+    /// Requests completed and replied by this replica's worker loop.
+    pub served: u64,
+    /// Engine in-flight count (queue + active lanes) at publish time.
+    pub pending: usize,
+    pub report: BTreeMap<String, f64>,
+}
+
+/// Shared collection point for per-replica snapshots.
+#[derive(Debug)]
+pub struct MetricsHub {
+    slots: Mutex<Vec<ReplicaSnapshot>>,
+}
+
+impl MetricsHub {
+    pub fn new(replicas: usize) -> Self {
+        MetricsHub {
+            slots: Mutex::new(
+                (0..replicas)
+                    .map(|i| ReplicaSnapshot { replica: i, ..Default::default() })
+                    .collect(),
+            ),
+        }
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// Publish a replica's current state (overwrites the previous one).
+    pub fn publish(
+        &self,
+        replica: usize,
+        served: u64,
+        pending: usize,
+        metrics: &EngineMetrics,
+    ) {
+        let mut g = self.slots.lock().unwrap();
+        if replica < g.len() {
+            g[replica] = ReplicaSnapshot {
+                replica,
+                served,
+                pending,
+                report: metrics.report(),
+            };
+        }
+    }
+
+    /// Roll every replica's latest snapshot into a fleet view.
+    pub fn aggregate(&self) -> AggregateSnapshot {
+        let replicas = self.slots.lock().unwrap().clone();
+        let get = |r: &ReplicaSnapshot, k: &str| -> f64 {
+            r.report.get(k).copied().unwrap_or(0.0)
+        };
+        let sum = |k: &str| -> f64 { replicas.iter().map(|r| get(r, k)).sum() };
+        let weighted = |k: &str, w: &str| -> f64 {
+            let total_w: f64 = sum(w);
+            if total_w <= 0.0 {
+                0.0
+            } else {
+                replicas.iter().map(|r| get(r, k) * get(r, w)).sum::<f64>()
+                    / total_w
+            }
+        };
+        let mut totals = BTreeMap::new();
+        totals.insert("replicas".into(), replicas.len() as f64);
+        totals.insert(
+            "served".into(),
+            replicas.iter().map(|r| r.served as f64).sum(),
+        );
+        totals.insert(
+            "pending".into(),
+            replicas.iter().map(|r| r.pending as f64).sum(),
+        );
+        for k in ["steps", "tokens_generated", "requests_completed",
+                  "busy_seconds", "tokens_per_second"] {
+            totals.insert(k.into(), sum(k));
+        }
+        for k in ["step_time_mean_s", "accept_len_mean", "tree_size_mean",
+                  "pruned_size_mean", "prune_rate_mean"] {
+            totals.insert(k.into(), weighted(k, "steps"));
+        }
+        for k in ["request_latency_mean_s", "queue_delay_mean_s"] {
+            totals.insert(k.into(), weighted(k, "requests_completed"));
+        }
+        AggregateSnapshot { replicas, totals }
+    }
+}
+
+/// Point-in-time fleet view: per-replica snapshots + rolled-up totals.
+#[derive(Debug, Clone)]
+pub struct AggregateSnapshot {
+    pub replicas: Vec<ReplicaSnapshot>,
+    pub totals: BTreeMap<String, f64>,
+}
+
+impl AggregateSnapshot {
+    pub fn total(&self, key: &str) -> f64 {
+        self.totals.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// One-line summary for logs and demos.
+    pub fn summary(&self) -> String {
+        let served: Vec<String> =
+            self.replicas.iter().map(|r| r.served.to_string()).collect();
+        format!(
+            "replicas={} served=[{}] tok/s={:.1} steps={} accept_len={:.2}",
+            self.replicas.len(),
+            served.join(", "),
+            self.total("tokens_per_second"),
+            self.total("steps") as u64,
+            self.total("accept_len_mean"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(steps: u64, tokens: u64, busy: f64) -> EngineMetrics {
+        let mut m = EngineMetrics {
+            steps,
+            tokens_generated: tokens,
+            busy_seconds: busy,
+            ..Default::default()
+        };
+        for _ in 0..steps {
+            m.accept_len.record(tokens as f64 / steps.max(1) as f64);
+        }
+        m
+    }
+
+    #[test]
+    fn counters_sum_across_replicas() {
+        let hub = MetricsHub::new(2);
+        hub.publish(0, 3, 1, &metrics(10, 40, 2.0));
+        hub.publish(1, 5, 0, &metrics(30, 60, 2.0));
+        let agg = hub.aggregate();
+        assert_eq!(agg.total("replicas"), 2.0);
+        assert_eq!(agg.total("served"), 8.0);
+        assert_eq!(agg.total("steps"), 40.0);
+        assert_eq!(agg.total("tokens_generated"), 100.0);
+        // tok/s sums: 40/2 + 60/2 = 50.
+        assert!((agg.total("tokens_per_second") - 50.0).abs() < 1e-9);
+        // accept_len weighted by steps: (4*10 + 2*30) / 40 = 2.5.
+        assert!((agg.total("accept_len_mean") - 2.5).abs() < 1e-9);
+        assert_eq!(agg.replicas.len(), 2);
+        assert!(agg.summary().contains("served=[3, 5]"));
+    }
+
+    #[test]
+    fn empty_hub_is_all_zero() {
+        let hub = MetricsHub::new(3);
+        let agg = hub.aggregate();
+        assert_eq!(agg.total("served"), 0.0);
+        assert_eq!(agg.total("accept_len_mean"), 0.0);
+        assert_eq!(hub.replica_count(), 3);
+    }
+
+    #[test]
+    fn publish_out_of_range_is_ignored() {
+        let hub = MetricsHub::new(1);
+        hub.publish(7, 1, 0, &EngineMetrics::default());
+        assert_eq!(hub.aggregate().total("served"), 0.0);
+    }
+}

@@ -1,5 +1,9 @@
-//! Serving metrics: per-step and per-request accounting, plus report
-//! rendering for the bench harness and EXPERIMENTS.md.
+//! Serving metrics: per-step and per-request accounting, report rendering
+//! for the bench harness, and the cross-replica [`aggregate`] roll-up.
+
+pub mod aggregate;
+
+pub use aggregate::{AggregateSnapshot, MetricsHub, ReplicaSnapshot};
 
 use std::collections::BTreeMap;
 

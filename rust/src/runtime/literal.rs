@@ -1,4 +1,5 @@
-//! Host-side tensors and conversions to/from XLA literals/buffers.
+//! Host-side tensors: the dense row-major f32/i32 containers every entry
+//! point consumes and produces.
 
 use anyhow::{bail, Result};
 
@@ -83,43 +84,6 @@ impl HostTensor {
         Ok(())
     }
 
-    /// Upload to a device buffer.
-    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
-        let buf = match &self.data {
-            HostData::F32(v) => client
-                .buffer_from_host_buffer::<f32>(v, &self.shape, None),
-            HostData::I32(v) => client
-                .buffer_from_host_buffer::<i32>(v, &self.shape, None),
-        };
-        buf.map_err(|e| anyhow::anyhow!("buffer upload failed: {e:?}"))
-    }
-
-    /// Download a literal into a host tensor.
-    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit
-            .array_shape()
-            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let ty = lit
-            .ty()
-            .map_err(|e| anyhow::anyhow!("literal type: {e:?}"))?;
-        match ty {
-            xla::ElementType::F32 => {
-                let v = lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow::anyhow!("literal read: {e:?}"))?;
-                Ok(HostTensor::f32(dims, v))
-            }
-            xla::ElementType::S32 => {
-                let v = lit
-                    .to_vec::<i32>()
-                    .map_err(|e| anyhow::anyhow!("literal read: {e:?}"))?;
-                Ok(HostTensor::i32(dims, v))
-            }
-            other => bail!("unsupported output element type {other:?}"),
-        }
-    }
-
     /// Row (last-dimension slice) accessor for 2-D+ f32 tensors: returns
     /// the `row`-th chunk of length `row_len` starting at a flat offset.
     pub fn f32_chunk(&self, offset: usize, len: usize) -> &[f32] {
@@ -177,19 +141,9 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_through_literal() {
-        // Requires the PJRT-independent literal API only.
-        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let lit = xla::Literal::vec1(t.as_f32()).reshape(&[2, 2]).unwrap();
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(back, t);
-    }
-
-    #[test]
-    fn i32_roundtrip_through_literal() {
-        let t = HostTensor::i32(vec![3], vec![7, -1, 2]);
-        let lit = xla::Literal::vec1(t.as_i32());
-        let back = HostTensor::from_literal(&lit).unwrap();
-        assert_eq!(back, t);
+    fn f32_chunk_slices_rows() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.f32_chunk(3, 3), &[4., 5., 6.]);
+        assert_eq!(t.f32_chunk(1, 2), &[2., 3.]);
     }
 }

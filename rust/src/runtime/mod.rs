@@ -1,14 +1,41 @@
-//! PJRT runtime: loads the AOT-lowered HLO-text artifacts and executes them
-//! on the CPU PJRT client.  This is the only module that touches the `xla`
-//! crate; everything above it works with [`literal::HostTensor`].
+//! Runtime: loads the artifact manifest and executes entry points.
 //!
-//! Weights are uploaded to device buffers once per model size and reused via
-//! `execute_b` on every call (Python never runs at serving time).
+//! Execution currently goes through the deterministic pure-Rust reference
+//! backend ([`sim`]) because the offline crate mirror carries no XLA/PJRT
+//! binding — see DESIGN.md § Runtime backends.  The registry keeps the
+//! compiled-runtime shape (per-key executables, upload-once device
+//! buffers) so a PJRT backend can slot back in behind the same API.
+//!
+//! A `Runtime` is single-threaded by design; each engine thread (server
+//! replica) owns its own instance, built from a [`RuntimeSpec`].
 
 pub mod literal;
 pub mod registry;
+pub mod sim;
 pub mod weights;
 
+use anyhow::Result;
+
 pub use literal::{HostData, HostTensor};
-pub use registry::{Executable, Runtime};
+pub use registry::{DeviceBuffer, DynArg, Executable, Runtime};
+pub use sim::SimConfig;
 pub use weights::Weights;
+
+/// How to construct a `Runtime` — shareable across threads (each server
+/// replica materializes its own instance from the spec).
+#[derive(Debug, Clone)]
+pub enum RuntimeSpec {
+    /// Load `manifest.json` (+ weights) from an artifacts directory.
+    Artifacts(std::path::PathBuf),
+    /// Synthetic manifest + deterministic reference model; no disk I/O.
+    Sim(SimConfig),
+}
+
+impl RuntimeSpec {
+    pub fn create(&self) -> Result<Runtime> {
+        match self {
+            RuntimeSpec::Artifacts(dir) => Runtime::load(dir),
+            RuntimeSpec::Sim(cfg) => Ok(Runtime::sim(cfg)),
+        }
+    }
+}

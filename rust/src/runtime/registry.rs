@@ -1,48 +1,61 @@
-//! Executable registry: lazy-compiles HLO-text artifacts on the PJRT CPU
-//! client, caches compiled executables and per-size weight device buffers.
+//! Executable registry: resolves artifact keys to runnable entry points,
+//! caches them, and owns the per-size weight cache.
 //!
-//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos
-//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! Execution goes through the deterministic [`Sim`] reference backend (the
+//! offline crate mirror carries no XLA/PJRT binding; see DESIGN.md
+//! § Runtime backends for how a compiled-HLO backend slots back in behind
+//! the same `Executable::run_mixed` surface).  The registry keeps the
+//! compiled-runtime ergonomics — per-key executables, a compile log, and
+//! "device" buffers uploaded once and shared across calls — so the engine
+//! hot paths are already shaped for a real device runtime.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::manifest::{ArtifactMeta, Entry, Manifest};
+use crate::manifest::{ArtifactMeta, Entry, Manifest, ModelMeta};
 use crate::runtime::literal::HostTensor;
+use crate::runtime::sim::{Sim, SimConfig};
 use crate::runtime::weights::Weights;
 
-/// One compiled entry point plus its manifest metadata and the pre-uploaded
-/// weight buffers it expects as leading arguments.
+/// A "device-resident" tensor: uploaded once, reused across calls (e.g.
+/// the KV tensor shared by verify_early/verify_late — uploading it once
+/// per step instead of per stage is a §Perf win).  With the sim backend
+/// residency is plain host memory, but callers keep the upload-once
+/// discipline a real device runtime requires.
+#[derive(Debug, Clone)]
+pub struct DeviceBuffer {
+    pub tensor: HostTensor,
+}
+
+/// A dynamic argument: host data passed per call, or an already-resident
+/// device buffer.
+pub enum DynArg<'a> {
+    Host(&'a HostTensor),
+    Buf(&'a DeviceBuffer),
+}
+
+/// One runnable entry point plus its manifest metadata.
 pub struct Executable {
     pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-    weight_bufs: Rc<Vec<xla::PjRtBuffer>>,
+    model: ModelMeta,
+    sim: Sim,
     pub compile_seconds: f64,
 }
 
-/// A dynamic argument: host data uploaded per call, or an already-resident
-/// device buffer (e.g. the KV tensor shared by verify_early/verify_late —
-/// uploading it once per step instead of per stage is a §Perf win).
-pub enum DynArg<'a> {
-    Host(&'a HostTensor),
-    Buf(&'a xla::PjRtBuffer),
-}
-
 impl Executable {
-    /// Execute with the given dynamic inputs (weights are prepended
-    /// automatically).  Returns the output tensors in manifest order.
+    /// Execute with the given dynamic inputs.  Returns the output tensors
+    /// in manifest order.
     pub fn run(&self, dyn_inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let args: Vec<DynArg> = dyn_inputs.iter().map(DynArg::Host).collect();
         self.run_mixed(&args)
     }
 
     /// Like [`run`](Self::run) but accepting pre-uploaded device buffers.
-    /// Shape checking applies to host args; buffer args are trusted (XLA
-    /// still validates at execute time).
+    /// Shape checking applies to host args; buffer args are trusted.
     pub fn run_mixed(&self, dyn_inputs: &[DynArg]) -> Result<Vec<HostTensor>> {
         if dyn_inputs.len() != self.meta.inputs.len() {
             bail!(
@@ -52,89 +65,73 @@ impl Executable {
                 self.meta.inputs.len()
             );
         }
-        for (t, spec) in dyn_inputs.iter().zip(&self.meta.inputs) {
-            if let DynArg::Host(t) = t {
-                t.check(spec).with_context(|| self.meta.key.clone())?;
-            }
-        }
-        let client = self.exe.client();
-        let mut uploaded: Vec<xla::PjRtBuffer> =
+        let mut resolved: Vec<&HostTensor> =
             Vec::with_capacity(dyn_inputs.len());
-        // PjRtBuffer isn't Clone; execute_b borrows, so build a slice of
-        // refs (weights first, then dynamic args in manifest order).
-        for t in dyn_inputs {
-            if let DynArg::Host(t) = t {
-                uploaded.push(t.to_buffer(client)?);
+        for (arg, spec) in dyn_inputs.iter().zip(&self.meta.inputs) {
+            match arg {
+                DynArg::Host(t) => {
+                    t.check(spec).with_context(|| self.meta.key.clone())?;
+                    resolved.push(t);
+                }
+                DynArg::Buf(b) => resolved.push(&b.tensor),
             }
         }
-        let mut arg_refs: Vec<&xla::PjRtBuffer> =
-            self.weight_bufs.iter().collect();
-        let mut up = uploaded.iter();
-        for t in dyn_inputs {
-            match t {
-                DynArg::Host(_) => arg_refs.push(up.next().unwrap()),
-                DynArg::Buf(b) => arg_refs.push(b),
-            }
-        }
-        let out = self
-            .exe
-            .execute_b(&arg_refs)
-            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.meta.key))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{}: readback failed: {e:?}", self.meta.key))?;
-        // aot.py lowers with return_tuple=True: single tuple output.
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("{}: tuple unpack failed: {e:?}", self.meta.key))?;
-        if parts.len() != self.meta.outputs.len() {
+        let outs = self
+            .sim
+            .execute(&self.meta, &self.model, &resolved)
+            .with_context(|| self.meta.key.clone())?;
+        if outs.len() != self.meta.outputs.len() {
             bail!(
                 "{}: got {} outputs, manifest says {}",
                 self.meta.key,
-                parts.len(),
+                outs.len(),
                 self.meta.outputs.len()
             );
         }
-        parts
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect::<Result<Vec<_>>>()
+        Ok(outs)
     }
 }
 
-/// The runtime: PJRT client + manifest + executable/weights caches.
+/// The runtime: manifest + executable/weights caches + the sim executor.
 ///
-/// Single-threaded by design (the PJRT wrapper types hold raw pointers);
-/// each engine thread owns its own `Runtime`.
+/// Single-threaded by design (interior caches use `Rc`/`RefCell`, and a
+/// compiled backend's buffer types hold raw pointers); each engine thread
+/// owns its own `Runtime` — the multi-replica server constructs one per
+/// worker thread.
 pub struct Runtime {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
+    sim: Sim,
     exes: RefCell<HashMap<String, Rc<Executable>>>,
-    weights: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
     host_weights: RefCell<HashMap<String, Rc<Weights>>>,
     pub compile_log: RefCell<Vec<(String, f64)>>,
 }
 
 impl Runtime {
+    /// Load a manifest from an artifacts directory produced by
+    /// `python/compile/aot.py`.
     pub fn load(artifacts_dir: &std::path::Path) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime {
+        Ok(Self::with_manifest(manifest, SimConfig::default().seed))
+    }
+
+    /// Build a runtime over the synthetic sim manifest — no artifacts
+    /// needed; every entry point in the configured grid is executable.
+    pub fn sim(cfg: &SimConfig) -> Self {
+        Self::with_manifest(cfg.manifest(), cfg.seed)
+    }
+
+    fn with_manifest(manifest: Manifest, seed: u64) -> Self {
+        Runtime {
             manifest,
-            client,
+            sim: Sim::new(seed),
             exes: RefCell::new(HashMap::new()),
-            weights: RefCell::new(HashMap::new()),
             host_weights: RefCell::new(HashMap::new()),
             compile_log: RefCell::new(Vec::new()),
-        })
+        }
     }
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
-    }
-
-    /// Host-side copy of a size's weights (used by tests / inspection).
+    /// Host-side copy of a size's trained weights (tests / inspection;
+    /// requires an on-disk artifacts directory).
     pub fn host_weights(&self, size: &str) -> Result<Rc<Weights>> {
         if let Some(w) = self.host_weights.borrow().get(size) {
             return Ok(w.clone());
@@ -149,67 +146,53 @@ impl Runtime {
         Ok(w)
     }
 
-    /// Device-resident weight buffers for a size (uploaded once).
-    fn weight_buffers(&self, size: &str) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
-        if let Some(b) = self.weights.borrow().get(size) {
-            return Ok(b.clone());
-        }
-        let host = self.host_weights(size)?;
-        let bufs: Vec<xla::PjRtBuffer> = host
-            .tensors
-            .iter()
-            .map(|t| t.to_buffer(&self.client))
-            .collect::<Result<_>>()?;
-        let rc = Rc::new(bufs);
-        self.weights
-            .borrow_mut()
-            .insert(size.to_string(), rc.clone());
-        Ok(rc)
-    }
-
-    /// Fetch (compiling on first use) the executable for an artifact key.
+    /// Fetch (building on first use) the executable for an artifact key.
     pub fn executable(&self, key: &str) -> Result<Rc<Executable>> {
         if let Some(e) = self.exes.borrow().get(key) {
             return Ok(e.clone());
         }
-        let meta = self.manifest.by_key(key)?.clone();
-        let path = self.manifest.artifact_path(&meta);
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
-        )
-        .map_err(|e| anyhow!("{key}: HLO parse failed: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("{key}: XLA compile failed: {e:?}"))?;
+        let meta = self.manifest.by_key(key)?.clone();
+        let model = self.manifest.model(&meta.size)?.clone();
         let compile_seconds = t0.elapsed().as_secs_f64();
         self.compile_log
             .borrow_mut()
             .push((key.to_string(), compile_seconds));
-        let weight_bufs = self.weight_buffers(&meta.size)?;
-        let rc = Rc::new(Executable { meta, exe, weight_bufs, compile_seconds });
+        let rc = Rc::new(Executable {
+            meta,
+            model,
+            sim: self.sim,
+            compile_seconds,
+        });
         self.exes.borrow_mut().insert(key.to_string(), rc.clone());
         Ok(rc)
     }
 
     /// Upload a host tensor to a device buffer (for reuse across calls).
-    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        t.to_buffer(&self.client)
+    pub fn upload(&self, t: &HostTensor) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer { tensor: t.clone() })
     }
 
-    /// Upload a raw f32 slice (zero-copy on the rust side: the engine's
-    /// reusable KV scratch goes straight to the device buffer).
-    pub fn upload_f32(&self, data: &[f32], shape: &[usize])
-        -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f32>(data, shape, None)
-            .map_err(|e| anyhow!("buffer upload failed: {e:?}"))
+    /// Upload a raw f32 slice (the engine's reusable KV scratch goes
+    /// straight to the resident buffer).
+    pub fn upload_f32(
+        &self,
+        data: &[f32],
+        shape: &[usize],
+    ) -> Result<DeviceBuffer> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!(
+                "upload_f32: {} elements do not fit shape {:?}",
+                data.len(),
+                shape
+            );
+        }
+        Ok(DeviceBuffer {
+            tensor: HostTensor::f32(shape.to_vec(), data.to_vec()),
+        })
     }
 
-    /// Semantic lookup + compile + run in one call.
+    /// Semantic lookup + build + run in one call.
     pub fn run(
         &self,
         size: &str,
@@ -223,11 +206,48 @@ impl Runtime {
         self.executable(&key)?.run(dyn_inputs)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of built executables currently cached.
     pub fn compiled_count(&self) -> usize {
         self.exes.borrow().len()
     }
 }
 
-// NOTE: integration tests that exercise real artifacts live in
-// rust/tests/integration.rs (they skip when artifacts/ is absent).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_runtime_builds_and_caches_executables() {
+        let cfg = SimConfig::default();
+        let rt = Runtime::sim(&cfg);
+        let key = Manifest::key_for(&cfg.size, Entry::Decode, None, 1, None);
+        rt.executable(&key).unwrap();
+        rt.executable(&key).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        assert_eq!(rt.compile_log.borrow().len(), 1);
+    }
+
+    #[test]
+    fn run_mixed_checks_host_shapes_and_arity() {
+        let cfg = SimConfig::default();
+        let rt = Runtime::sim(&cfg);
+        let key = Manifest::key_for(&cfg.size, Entry::Decode, None, 1, None);
+        let exe = rt.executable(&key).unwrap();
+        let bad = HostTensor::i32(vec![2], vec![0, 0]); // expected [1]
+        assert!(exe.run(&[bad]).is_err()); // arity mismatch (1 of 3)
+        let tok = HostTensor::i32(vec![1], vec![65]);
+        let len = HostTensor::i32(vec![1], vec![0]);
+        let kv_spec = &exe.meta.inputs[2];
+        let kv = HostTensor::zeros_f32(kv_spec.shape.clone());
+        let outs = exe.run(&[tok, len, kv]).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].shape, vec![1, cfg.vocab]);
+    }
+
+    #[test]
+    fn upload_f32_validates_shape() {
+        let rt = Runtime::sim(&SimConfig::default());
+        assert!(rt.upload_f32(&[0.0; 6], &[2, 3]).is_ok());
+        assert!(rt.upload_f32(&[0.0; 5], &[2, 3]).is_err());
+    }
+}

@@ -1,0 +1,590 @@
+//! Deterministic pure-Rust reference backend ("sim").
+//!
+//! The offline crate mirror has no XLA/PJRT binding, so the registry
+//! executes entry points through this reference model instead of compiled
+//! HLO.  The sim is NOT a transformer: it is a deterministic oracle whose
+//! next-token distribution is a pure function of the committed token
+//! sequence, which is exactly the property the coordinator layer needs —
+//! every engine (autoregressive, BPD, Medusa, ProPD) decodes the identical
+//! greedy text, so the §4.1 "pruning does not change the output" invariant
+//! and the multi-replica byte-identity checks are end-to-end testable
+//! without artifacts or a device runtime.
+//!
+//! How the oracle stays consistent across entry points: every KV column the
+//! sim emits encodes its token in element 0, so a later call can recover
+//! the committed prefix from the KV tensor alone; tree-node contexts are
+//! recovered from the additive attention mask (ancestors = the 0.0 entries
+//! of a node's row, ordered by position).  Medusa head h emits the logits
+//! of the greedy continuation h+1 steps past the base prediction, so
+//! speculation is perfect and acceptance lengths are long — a best-case
+//! stand-in, useful for exercising the scheduler and planner hot paths.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::{
+    ArtifactMeta, DType, Entry, Manifest, ModelMeta, TensorMeta,
+};
+use crate::runtime::literal::HostTensor;
+use crate::tree::accept::argmax;
+use crate::util::rng::Rng;
+
+/// Synthetic model/grid description used to build an in-memory manifest.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Model-size name registered in the manifest (engines select by it).
+    pub size: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub max_prompt: usize,
+    pub n_medusa: usize,
+    /// Layers with an early-exit head (valid `prune_layer` values).
+    pub early_layers: Vec<usize>,
+    pub batch_buckets: Vec<usize>,
+    pub tree_buckets: Vec<usize>,
+    /// Stream seed: different seeds give different deterministic corpora.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            size: "m".to_string(),
+            n_layers: 4,
+            d_model: 16,
+            n_heads: 2,
+            head_dim: 8,
+            d_ff: 32,
+            vocab: crate::tokenizer::VOCAB,
+            max_seq: 384,
+            max_prompt: 96,
+            n_medusa: 4,
+            early_layers: vec![1, 2, 3],
+            batch_buckets: vec![1, 2, 4, 8],
+            tree_buckets: vec![4, 8, 16, 32, 64],
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn model_meta(&self) -> ModelMeta {
+        ModelMeta {
+            name: self.size.clone(),
+            n_layers: self.n_layers,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            head_dim: self.head_dim,
+            d_ff: self.d_ff,
+            vocab: self.vocab,
+            max_seq: self.max_seq,
+            max_prompt: self.max_prompt,
+            n_medusa: self.n_medusa,
+            early_layers: self.early_layers.clone(),
+            param_count: 0,
+        }
+    }
+
+    /// Assemble the full in-memory artifact grid: prefill/decode per batch
+    /// bucket, verify_early/verify_late per (layer, batch, tree) triple.
+    pub fn manifest(&self) -> Manifest {
+        let model = self.model_meta();
+        let (l, b_kv) = (self.n_layers, self.max_seq);
+        let (h, dh) = (self.n_heads, self.head_dim);
+        let mut artifacts = Vec::new();
+        let i32s = |name: &str, shape: Vec<usize>| TensorMeta {
+            name: name.to_string(),
+            shape,
+            dtype: DType::I32,
+        };
+        let f32s = |name: &str, shape: Vec<usize>| TensorMeta {
+            name: name.to_string(),
+            shape,
+            dtype: DType::F32,
+        };
+        for &b in &self.batch_buckets {
+            let kv = f32s("kv", vec![l, 2, b, b_kv, h, dh]);
+            artifacts.push(self.art(
+                Entry::Prefill,
+                None,
+                b,
+                None,
+                vec![
+                    i32s("tok", vec![b, self.max_prompt]),
+                    i32s("prompt_len", vec![b]),
+                ],
+                vec!["logits", "medusa", "block_kv"],
+            ));
+            artifacts.push(self.art(
+                Entry::Decode,
+                None,
+                b,
+                None,
+                vec![i32s("tok", vec![b]), i32s("seq_len", vec![b]), kv.clone()],
+                vec!["logits", "medusa", "col_kv"],
+            ));
+            for &n in &self.early_layers {
+                for &t in &self.tree_buckets {
+                    artifacts.push(self.art(
+                        Entry::VerifyEarly,
+                        Some(n),
+                        b,
+                        Some(t),
+                        vec![
+                            i32s("tree_tok", vec![b, t]),
+                            i32s("tree_pos", vec![b, t]),
+                            f32s("tree_mask", vec![b, t, t]),
+                            i32s("seq_len", vec![b]),
+                            kv.clone(),
+                        ],
+                        vec!["hidden", "early_logits", "tree_kv"],
+                    ));
+                    artifacts.push(self.art(
+                        Entry::VerifyLate,
+                        Some(n),
+                        b,
+                        Some(t),
+                        vec![
+                            f32s("hidden", vec![b, t, self.d_model]),
+                            i32s("tree_pos", vec![b, t]),
+                            f32s("tree_mask", vec![b, t, t]),
+                            i32s("seq_len", vec![b]),
+                            kv.clone(),
+                        ],
+                        vec!["logits", "medusa", "tree_kv"],
+                    ));
+                }
+            }
+        }
+        let default_prune_layer =
+            self.early_layers.get(self.early_layers.len() / 2).copied()
+                .unwrap_or(1);
+        Manifest::from_parts(
+            std::path::PathBuf::from("<sim>"),
+            self.batch_buckets.clone(),
+            self.tree_buckets.clone(),
+            default_prune_layer,
+            self.size.clone(),
+            vec![(self.size.clone(), model)],
+            artifacts,
+        )
+    }
+
+    fn art(
+        &self,
+        entry: Entry,
+        n: Option<usize>,
+        b: usize,
+        t: Option<usize>,
+        inputs: Vec<TensorMeta>,
+        outputs: Vec<&str>,
+    ) -> ArtifactMeta {
+        let key = Manifest::key_for(&self.size, entry, n, b, t);
+        ArtifactMeta {
+            path: format!("{key}.sim"),
+            key,
+            size: self.size.clone(),
+            entry,
+            batch: b,
+            tree: t,
+            n_layer: n,
+            params: Vec::new(),
+            inputs,
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// The executor: stateless; everything derives from `seed` + inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct Sim {
+    pub seed: u64,
+}
+
+impl Sim {
+    pub fn new(seed: u64) -> Self {
+        Sim { seed }
+    }
+
+    /// Deterministic logits row for a token context (FNV-1a fold → xoshiro
+    /// stream).  The same context always yields the same row, which is all
+    /// the greedy-consistency invariants need.
+    fn row(&self, ctx: &[u32], vocab: usize) -> Vec<f32> {
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.seed;
+        for &t in ctx {
+            h ^= t as u64 + 1;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        let mut rng = Rng::new(h);
+        (0..vocab).map(|_| (rng.f64() * 8.0) as f32).collect()
+    }
+
+    /// Base logits + medusa head rows for a context.  Head `h` carries the
+    /// logits of the greedy continuation `h+1` steps beyond the base
+    /// prediction (so its argmax is the token at offset `h+2`).
+    fn base_and_medusa(
+        &self,
+        ctx: &[u32],
+        vocab: usize,
+        heads: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let base = self.row(ctx, vocab);
+        let mut rolled = ctx.to_vec();
+        rolled.push(argmax(&base) as u32);
+        let mut medusa = Vec::with_capacity(heads * vocab);
+        for _ in 0..heads {
+            let r = self.row(&rolled, vocab);
+            rolled.push(argmax(&r) as u32);
+            medusa.extend_from_slice(&r);
+        }
+        (base, medusa)
+    }
+
+    /// Recover the committed token prefix of one lane from a KV tensor
+    /// shaped `[L, 2, b, S, H, Dh]` (element 0 of each column carries the
+    /// committed token; see module docs).
+    fn kv_prefix(
+        &self,
+        kv: &[f32],
+        b: usize,
+        s: usize,
+        col: usize,
+        lane: usize,
+        len: usize,
+        vocab: usize,
+    ) -> Vec<u32> {
+        let lane_base = lane * s * col;
+        (0..len.min(s))
+            .map(|pos| {
+                let v = kv[lane_base + pos * col];
+                (v.round().max(0.0) as usize).min(vocab - 1) as u32
+            })
+            .collect()
+    }
+
+    /// Ancestor chain (root → node, inclusive) of tree node `j` in one
+    /// lane, recovered from the dense additive mask and position row.
+    fn path_tokens(
+        node_tok: impl Fn(usize) -> u32,
+        mask_row: &[f32],
+        pos_row: &[i32],
+    ) -> Vec<u32> {
+        let mut anc: Vec<usize> = (0..mask_row.len())
+            .filter(|&i| mask_row[i] >= -0.5)
+            .collect();
+        anc.sort_by_key(|&i| pos_row[i]);
+        anc.into_iter().map(node_tok).collect()
+    }
+
+    /// Execute one entry point.  `inputs` are resolved host tensors in
+    /// manifest order; outputs follow `meta.outputs`.
+    pub fn execute(
+        &self,
+        meta: &ArtifactMeta,
+        model: &ModelMeta,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        match meta.entry {
+            Entry::Prefill => self.prefill(meta, model, inputs),
+            Entry::Decode => self.decode(meta, model, inputs),
+            Entry::VerifyEarly => self.verify_early(meta, model, inputs),
+            Entry::VerifyLate => self.verify_late(meta, model, inputs),
+        }
+    }
+
+    fn prefill(
+        &self,
+        meta: &ArtifactMeta,
+        model: &ModelMeta,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let (b, p, v, m) =
+            (meta.batch, model.max_prompt, model.vocab, model.n_medusa);
+        let (l, col) = (model.n_layers, model.n_heads * model.head_dim);
+        let toks = inputs[0].as_i32();
+        let lens = inputs[1].as_i32();
+        let mut logits = vec![0f32; b * v];
+        let mut medusa = vec![0f32; b * m * v];
+        let mut block_kv = vec![0f32; l * 2 * b * p * col];
+        for lane in 0..b {
+            let len = (lens[lane].max(0) as usize).min(p);
+            let ctx: Vec<u32> =
+                (0..len).map(|j| toks[lane * p + j] as u32).collect();
+            let (base, med) = self.base_and_medusa(&ctx, v, m);
+            logits[lane * v..(lane + 1) * v].copy_from_slice(&base);
+            medusa[lane * m * v..(lane + 1) * m * v].copy_from_slice(&med);
+            for li in 0..l {
+                for c in 0..2 {
+                    for (j, &t) in ctx.iter().enumerate() {
+                        let off = (((li * 2 + c) * b + lane) * p + j) * col;
+                        block_kv[off] = t as f32;
+                    }
+                }
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, v], logits),
+            HostTensor::f32(vec![b, m, v], medusa),
+            HostTensor::f32(
+                vec![l, 2, b, p, model.n_heads, model.head_dim],
+                block_kv,
+            ),
+        ])
+    }
+
+    fn decode(
+        &self,
+        meta: &ArtifactMeta,
+        model: &ModelMeta,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let (b, v, m) = (meta.batch, model.vocab, model.n_medusa);
+        let (l, s) = (model.n_layers, model.max_seq);
+        let col = model.n_heads * model.head_dim;
+        let toks = inputs[0].as_i32();
+        let lens = inputs[1].as_i32();
+        let kv = inputs[2].as_f32();
+        let mut logits = vec![0f32; b * v];
+        let mut medusa = vec![0f32; b * m * v];
+        let mut col_kv = vec![0f32; l * 2 * b * col];
+        for lane in 0..b {
+            let len = lens[lane].max(0) as usize;
+            let mut ctx =
+                self.kv_prefix(kv, b, s, col, lane, len, v);
+            ctx.push((toks[lane].max(0) as usize).min(v - 1) as u32);
+            let (base, med) = self.base_and_medusa(&ctx, v, m);
+            logits[lane * v..(lane + 1) * v].copy_from_slice(&base);
+            medusa[lane * m * v..(lane + 1) * m * v].copy_from_slice(&med);
+            for li in 0..l {
+                for c in 0..2 {
+                    let off = ((li * 2 + c) * b + lane) * col;
+                    col_kv[off] = toks[lane] as f32;
+                }
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, v], logits),
+            HostTensor::f32(vec![b, m, v], medusa),
+            HostTensor::f32(
+                vec![l, 2, b, 1, model.n_heads, model.head_dim],
+                col_kv,
+            ),
+        ])
+    }
+
+    fn verify_early(
+        &self,
+        meta: &ArtifactMeta,
+        model: &ModelMeta,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let b = meta.batch;
+        let t = match meta.tree {
+            Some(t) => t,
+            None => bail!("{}: verify_early without tree bucket", meta.key),
+        };
+        let n = meta.n_layer.unwrap_or(1);
+        let (v, d, s) = (model.vocab, model.d_model, model.max_seq);
+        let col = model.n_heads * model.head_dim;
+        let tt = inputs[0].as_i32();
+        let tp = inputs[1].as_i32();
+        let tm = inputs[2].as_f32();
+        let lens = inputs[3].as_i32();
+        let kv = inputs[4].as_f32();
+        let mut hidden = vec![0f32; b * t * d];
+        let mut early = vec![0f32; b * t * v];
+        let mut tree_kv = vec![0f32; n * 2 * b * t * col];
+        for lane in 0..b {
+            let len = lens[lane].max(0) as usize;
+            let prefix = self.kv_prefix(kv, b, s, col, lane, len, v);
+            let pos_row = &tp[lane * t..(lane + 1) * t];
+            for j in 0..t {
+                let mask_row = &tm[(lane * t + j) * t..(lane * t + j + 1) * t];
+                let mut ctx = prefix.clone();
+                ctx.extend(Self::path_tokens(
+                    |i| tt[lane * t + i] as u32,
+                    mask_row,
+                    pos_row,
+                ));
+                let row = self.row(&ctx, v);
+                early[(lane * t + j) * v..(lane * t + j + 1) * v]
+                    .copy_from_slice(&row);
+                hidden[(lane * t + j) * d] = tt[lane * t + j] as f32;
+                for li in 0..n {
+                    for c in 0..2 {
+                        let off = (((li * 2 + c) * b + lane) * t + j) * col;
+                        tree_kv[off] = tt[lane * t + j] as f32;
+                    }
+                }
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, t, d], hidden),
+            HostTensor::f32(vec![b, t, v], early),
+            HostTensor::f32(
+                vec![n, 2, b, t, model.n_heads, model.head_dim],
+                tree_kv,
+            ),
+        ])
+    }
+
+    fn verify_late(
+        &self,
+        meta: &ArtifactMeta,
+        model: &ModelMeta,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let b = meta.batch;
+        let t = match meta.tree {
+            Some(t) => t,
+            None => bail!("{}: verify_late without tree bucket", meta.key),
+        };
+        let n = meta.n_layer.unwrap_or(1);
+        let rest = model.n_layers.saturating_sub(n).max(1);
+        let (v, d, s, m) =
+            (model.vocab, model.d_model, model.max_seq, model.n_medusa);
+        let col = model.n_heads * model.head_dim;
+        let hid = inputs[0].as_f32();
+        let tp = inputs[1].as_i32();
+        let tm = inputs[2].as_f32();
+        let lens = inputs[3].as_i32();
+        let kv = inputs[4].as_f32();
+        let node_token = |lane: usize, i: usize| -> u32 {
+            let x = hid[(lane * t + i) * d];
+            (x.round().max(0.0) as usize).min(v - 1) as u32
+        };
+        let mut logits = vec![0f32; b * t * v];
+        let mut medusa = vec![0f32; b * t * m * v];
+        let mut tree_kv = vec![0f32; rest * 2 * b * t * col];
+        for lane in 0..b {
+            let len = lens[lane].max(0) as usize;
+            let prefix = self.kv_prefix(kv, b, s, col, lane, len, v);
+            let pos_row = &tp[lane * t..(lane + 1) * t];
+            for j in 0..t {
+                let mask_row = &tm[(lane * t + j) * t..(lane * t + j + 1) * t];
+                let mut ctx = prefix.clone();
+                ctx.extend(Self::path_tokens(
+                    |i| node_token(lane, i),
+                    mask_row,
+                    pos_row,
+                ));
+                let (base, med) = self.base_and_medusa(&ctx, v, m);
+                logits[(lane * t + j) * v..(lane * t + j + 1) * v]
+                    .copy_from_slice(&base);
+                medusa[(lane * t + j) * m * v..(lane * t + j + 1) * m * v]
+                    .copy_from_slice(&med);
+                let tok = node_token(lane, j) as f32;
+                for li in 0..rest {
+                    for c in 0..2 {
+                        let off = (((li * 2 + c) * b + lane) * t + j) * col;
+                        tree_kv[off] = tok;
+                    }
+                }
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, t, v], logits),
+            HostTensor::f32(vec![b, t, m, v], medusa),
+            HostTensor::f32(
+                vec![rest, 2, b, t, model.n_heads, model.head_dim],
+                tree_kv,
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Entry;
+
+    fn setup() -> (SimConfig, Manifest, Sim) {
+        let cfg = SimConfig::default();
+        let m = cfg.manifest();
+        let sim = Sim::new(cfg.seed);
+        (cfg, m, sim)
+    }
+
+    #[test]
+    fn manifest_covers_full_grid() {
+        let (cfg, m, _) = setup();
+        assert_eq!(m.default_size, cfg.size);
+        assert!(cfg.early_layers.contains(&m.default_prune_layer));
+        for &b in &cfg.batch_buckets {
+            m.find(&cfg.size, Entry::Prefill, None, b, None).unwrap();
+            m.find(&cfg.size, Entry::Decode, None, b, None).unwrap();
+            for &n in &cfg.early_layers {
+                for &t in &cfg.tree_buckets {
+                    m.find(&cfg.size, Entry::VerifyEarly, Some(n), b, Some(t))
+                        .unwrap();
+                    m.find(&cfg.size, Entry::VerifyLate, Some(n), b, Some(t))
+                        .unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_are_deterministic_and_context_sensitive() {
+        let (_, _, sim) = setup();
+        let a = sim.row(&[1, 2, 3], 64);
+        let b = sim.row(&[1, 2, 3], 64);
+        let c = sim.row(&[1, 2, 4], 64);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(
+            Sim::new(1).row(&[1, 2, 3], 64),
+            Sim::new(2).row(&[1, 2, 3], 64)
+        );
+    }
+
+    #[test]
+    fn decode_extends_prefill_consistently() {
+        // The greedy token decode produces after committing prefill's
+        // prediction must equal a direct oracle evaluation.
+        let (cfg, m, sim) = setup();
+        let model = m.model(&cfg.size).unwrap().clone();
+        let (v, p) = (model.vocab, model.max_prompt);
+        let prompt: Vec<i32> = vec![104, 105, 106]; // "hij"
+        let mut toks = vec![0i32; p];
+        toks[..3].copy_from_slice(&prompt);
+        let pre = m.find(&cfg.size, Entry::Prefill, None, 1, None).unwrap();
+        let t_tok = HostTensor::i32(vec![1, p], toks);
+        let t_len = HostTensor::i32(vec![1], vec![3]);
+        let outs = sim.execute(pre, &model, &[&t_tok, &t_len]).unwrap();
+        let r1 = argmax(&outs[0].as_f32()[..v]);
+        // Build the KV tensor decode expects: commit the prompt columns.
+        let col = model.n_heads * model.head_dim;
+        let s = model.max_seq;
+        let mut kv = vec![0f32; model.n_layers * 2 * s * col];
+        for (pos, &t) in prompt.iter().enumerate() {
+            for li in 0..model.n_layers {
+                for c in 0..2 {
+                    kv[((li * 2 + c) * s + pos) * col] = t as f32;
+                }
+            }
+        }
+        let dec = m.find(&cfg.size, Entry::Decode, None, 1, None).unwrap();
+        let d_tok = HostTensor::i32(vec![1], vec![r1 as i32]);
+        let d_len = HostTensor::i32(vec![1], vec![3]);
+        let d_kv = HostTensor::f32(
+            vec![model.n_layers, 2, 1, s, model.n_heads, model.head_dim],
+            kv,
+        );
+        let outs2 =
+            sim.execute(dec, &model, &[&d_tok, &d_len, &d_kv]).unwrap();
+        let r2 = argmax(&outs2[0].as_f32()[..v]);
+        // Oracle: row(prompt ++ r1) argmax.
+        let ctx: Vec<u32> =
+            prompt.iter().map(|&t| t as u32).chain([r1 as u32]).collect();
+        assert_eq!(r2, argmax(&sim.row(&ctx, v)));
+        // Medusa head 0 predicts the token after r2.
+        let med = &outs2[1].as_f32()[..v];
+        let ctx2: Vec<u32> = ctx.iter().copied().chain([r2 as u32]).collect();
+        assert_eq!(argmax(med), argmax(&sim.row(&ctx2, v)));
+    }
+}

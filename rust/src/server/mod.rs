@@ -1,16 +1,20 @@
-//! Serving front-end: a JSON-lines TCP server on top of the engine loop.
+//! Serving front-end: a JSON-lines TCP server over the replica set.
 //!
 //! Protocol (one JSON object per line):
 //!   → {"prompt": "user: ...\nassistant:", "max_new_tokens": 64}
 //!   ← {"id": 3, "text": "...", "latency_s": 0.42, "steps": 11}
+//!   → {"metrics": true}
+//!   ← {"replicas": [...], "totals": {...}}
 //!
-//! Threading model: the engine (and its PJRT runtime, which holds raw
-//! pointers) lives on ONE thread; acceptor/connection threads communicate
-//! through the bounded [`RequestQueue`].  (The environment's crate mirror
-//! has no tokio; std threads + blocking sockets implement the same
-//! architecture.)
+//! Threading model: each replica engine (and its runtime, whose caches are
+//! single-threaded) lives on ONE worker thread; a scheduler thread routes
+//! requests from the shared bounded admission queue onto per-replica decode
+//! feeds; acceptor/connection threads only touch the admission queue and
+//! the metrics hub.  (The environment's crate mirror has no tokio; std
+//! threads + blocking sockets implement the same architecture.)
 
 pub mod protocol;
+pub mod replicas;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -22,54 +26,41 @@ use anyhow::{Context, Result};
 
 use crate::batching::{QueuedRequest, RequestQueue};
 use crate::config::ServingConfig;
-use crate::engine::{Completion, Engine};
-use crate::runtime::Runtime;
+use crate::metrics::MetricsHub;
+use crate::runtime::RuntimeSpec;
 
-pub use protocol::{parse_request, render_completion};
+pub use protocol::{parse_request, render_completion, Request};
+pub use replicas::{replica_loop, run_offline, ReplicaSet};
 
 /// Shared server state handed to connection threads.
 pub struct Shared {
+    /// Admission queue: bounded FCFS with backpressure.
     pub queue: RequestQueue,
     pub shutdown: AtomicBool,
+    /// Per-replica metrics roll-up point.
+    pub hub: MetricsHub,
 }
 
-/// Run the serving loop until `shutdown` is set and all work drains.
-/// The caller provides the engine (owning thread = this thread).
-pub fn engine_loop(engine: &mut Engine, shared: &Shared) -> Result<u64> {
-    let mut in_flight: Vec<(u64, mpsc::Sender<Completion>)> = Vec::new();
-    let mut served = 0u64;
-    loop {
-        // Pull new work (blocking only when fully idle).
-        let free = engine.cfg.max_batch.saturating_sub(engine.pending());
-        let new = if engine.pending() == 0 && !shutdown_ready(shared) {
-            shared.queue.drain_blocking(free.max(1))
-        } else {
-            shared.queue.drain_now(free)
-        };
-        for q in new {
-            let id = engine.submit(&q.prompt, q.max_new_tokens);
-            if let Some(tx) = q.respond {
-                in_flight.push((id, tx));
-            }
-        }
-        let progressed = engine.step()?;
-        for c in engine.take_completions() {
-            served += 1;
-            if let Some(pos) =
-                in_flight.iter().position(|(id, _)| *id == c.id)
-            {
-                let (_, tx) = in_flight.swap_remove(pos);
-                let _ = tx.send(c); // receiver may have hung up
-            }
-        }
-        if !progressed && shutdown_ready(shared) && shared.queue.is_empty() {
-            return Ok(served);
+impl Shared {
+    pub fn new(max_queue: usize, replicas: usize) -> Self {
+        Shared {
+            queue: RequestQueue::new(max_queue),
+            shutdown: AtomicBool::new(false),
+            hub: MetricsHub::new(replicas),
         }
     }
-}
 
-fn shutdown_ready(shared: &Shared) -> bool {
-    shared.shutdown.load(Ordering::SeqCst) || shared.queue.is_closed()
+    /// Request a graceful drain: new submissions are rejected, in-flight
+    /// work completes, and [`serve`] / [`ReplicaSet::run`] return once
+    /// every replica has drained.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
 }
 
 /// Handle one client connection: parse request lines, enqueue, reply.
@@ -86,8 +77,11 @@ pub fn handle_connection(stream: TcpStream, shared: &Shared) {
             Ok(_) => continue,
             Err(_) => break,
         };
-        let reply = match parse_request(&line) {
-            Ok((prompt, max_new)) => {
+        let reply = match protocol::parse_line(&line) {
+            Ok(Request::Metrics) => {
+                protocol::render_metrics(&shared.hub.aggregate())
+            }
+            Ok(Request::Generate { prompt, max_new }) => {
                 let (tx, rx) = mpsc::channel();
                 let queued = QueuedRequest {
                     prompt,
@@ -116,24 +110,26 @@ pub fn handle_connection(stream: TcpStream, shared: &Shared) {
 }
 
 /// Bind + serve until ctrl-c-ish shutdown (used by `propd serve`).
-/// `ready` is signalled with the bound address once listening.
+/// `ready` is signalled with the bound address once listening.  Worker
+/// threads construct their own runtimes from `spec`.
 pub fn serve(
     cfg: &ServingConfig,
-    rt: &Runtime,
+    spec: &RuntimeSpec,
     ready: Option<mpsc::Sender<std::net::SocketAddr>>,
 ) -> Result<()> {
-    let mut engine = Engine::new(rt, cfg.engine.clone())?;
-    let n = engine.precompile()?;
-    eprintln!("propd: precompiled {n} executables");
-    let shared = Arc::new(Shared {
-        queue: RequestQueue::new(cfg.server.max_queue),
-        shutdown: AtomicBool::new(false),
-    });
+    let replicas = cfg.server.replicas.max(1);
+    let shared = Arc::new(Shared::new(cfg.server.max_queue, replicas));
     let listener = TcpListener::bind(&cfg.server.addr)
         .with_context(|| format!("binding {}", cfg.server.addr))?;
     let addr = listener.local_addr()?;
-    eprintln!("propd: serving on {addr} (engine={}, size={})",
-              cfg.engine.kind.as_str(), cfg.engine.size);
+    eprintln!(
+        "propd: serving on {addr} (engine={}, size={}, replicas={}, \
+         routing={})",
+        cfg.engine.kind.as_str(),
+        cfg.engine.size,
+        replicas,
+        cfg.server.routing.as_str()
+    );
     if let Some(tx) = ready {
         let _ = tx.send(addr);
     }
@@ -149,6 +145,12 @@ pub fn serve(
             }
         }
     });
-    engine_loop(&mut engine, &shared)?;
+    let set = ReplicaSet { cfg, spec };
+    let served = set.run(&shared)?;
+    eprintln!(
+        "propd: drained; served {} requests across {} replicas",
+        served.iter().sum::<u64>(),
+        served.len()
+    );
     Ok(())
 }

@@ -1,9 +1,32 @@
 //! JSON-lines wire protocol.
 
+use std::collections::BTreeMap;
+
 use anyhow::{Context, Result};
 
 use crate::engine::Completion;
-use crate::jsonio::{self, num, obj, s};
+use crate::jsonio::{self, num, obj, s, Value};
+use crate::metrics::{AggregateSnapshot, ReplicaSnapshot};
+
+/// A parsed client request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Generate { prompt: String, max_new: usize },
+    /// `{"metrics": true}` — return the aggregate replica snapshot.
+    Metrics,
+}
+
+/// Parse one request line into a [`Request`].
+pub fn parse_line(line: &str) -> Result<Request> {
+    let v = jsonio::parse(line).context("request json")?;
+    if let Some(m) = v.opt("metrics") {
+        if m.as_bool()? {
+            return Ok(Request::Metrics);
+        }
+    }
+    let (prompt, max_new) = parse_request(line)?;
+    Ok(Request::Generate { prompt, max_new })
+}
 
 /// Parse `{"prompt": ..., "max_new_tokens": ...}` → (prompt, budget).
 pub fn parse_request(line: &str) -> Result<(String, usize)> {
@@ -35,6 +58,32 @@ pub fn render_completion(c: &Completion) -> String {
 
 pub fn render_error(msg: &str) -> String {
     jsonio::to_string(&obj(vec![("error", s(msg))]))
+}
+
+fn report_value(report: &BTreeMap<String, f64>) -> Value {
+    Value::Obj(
+        report.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
+    )
+}
+
+fn replica_value(r: &ReplicaSnapshot) -> Value {
+    obj(vec![
+        ("replica", num(r.replica as f64)),
+        ("served", num(r.served as f64)),
+        ("pending", num(r.pending as f64)),
+        ("report", report_value(&r.report)),
+    ])
+}
+
+/// Render the aggregate metrics snapshot for a `{"metrics": true}` reply.
+pub fn render_metrics(agg: &AggregateSnapshot) -> String {
+    jsonio::to_string(&obj(vec![
+        (
+            "replicas",
+            Value::Arr(agg.replicas.iter().map(replica_value).collect()),
+        ),
+        ("totals", report_value(&agg.totals)),
+    ]))
 }
 
 /// Client-side helpers (used by serve_demo and tests).
@@ -107,5 +156,33 @@ mod tests {
     fn error_rendering() {
         let e = render_error("queue full");
         assert!(parse_completion(&e).is_err());
+    }
+
+    #[test]
+    fn parse_line_distinguishes_metrics_from_generate() {
+        assert_eq!(
+            parse_line(r#"{"metrics": true}"#).unwrap(),
+            Request::Metrics
+        );
+        match parse_line(r#"{"prompt": "x", "max_new_tokens": 3}"#).unwrap() {
+            Request::Generate { prompt, max_new } => {
+                assert_eq!(prompt, "x");
+                assert_eq!(max_new, 3);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(parse_line(r#"{"metrics": false}"#).is_err());
+    }
+
+    #[test]
+    fn metrics_rendering_round_trips_through_jsonio() {
+        use crate::metrics::MetricsHub;
+        let hub = MetricsHub::new(2);
+        hub.publish(0, 4, 1, &crate::metrics::EngineMetrics::default());
+        let line = render_metrics(&hub.aggregate());
+        let v = jsonio::parse(&line).unwrap();
+        assert_eq!(v.get("replicas").unwrap().as_arr().unwrap().len(), 2);
+        let totals = v.get("totals").unwrap();
+        assert_eq!(totals.get("served").unwrap().as_f64().unwrap(), 4.0);
     }
 }

@@ -1,0 +1,189 @@
+//! Replica workers and the replica-set orchestrator.
+//!
+//! Each replica is one OS thread owning its own `Runtime` + `Engine` (the
+//! runtime's caches are single-threaded by design) and draining a private
+//! decode feed.  A scheduler thread routes requests from the shared
+//! admission queue to feeds (see [`crate::batching::scheduler`]).  Every
+//! replica keeps its own planner/estimators, so the §4.2 dynamic tree-size
+//! decision adapts to *that replica's* batch size rather than a global
+//! one, and publishes metrics into the shared [`MetricsHub`].
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::batching::{QueuedRequest, ReplicaHandle, Scheduler};
+use crate::config::ServingConfig;
+use crate::engine::{Completion, Engine};
+use crate::metrics::{AggregateSnapshot, MetricsHub};
+use crate::runtime::RuntimeSpec;
+
+use super::Shared;
+
+/// Drive one replica: drain its feed, step the engine, reply, publish
+/// load + metrics.  Returns the number of requests served once the feed
+/// closes and drains.
+pub fn replica_loop(
+    engine: &mut Engine,
+    replica: &ReplicaHandle,
+    hub: &MetricsHub,
+) -> Result<u64> {
+    let mut in_flight: Vec<(u64, mpsc::Sender<Completion>)> = Vec::new();
+    let mut served = 0u64;
+    loop {
+        // Pull new work (blocking only when fully idle).
+        let free = engine.cfg.max_batch.saturating_sub(engine.pending());
+        let new = if engine.pending() == 0 {
+            replica.queue.drain_blocking(free.max(1))
+        } else {
+            replica.queue.drain_now(free)
+        };
+        if !new.is_empty() {
+            replica.load.note_drained(new.len());
+        }
+        for q in new {
+            let id = engine.submit(&q.prompt, q.max_new_tokens);
+            if let Some(tx) = q.respond {
+                in_flight.push((id, tx));
+            }
+        }
+        let progressed = engine.step()?;
+        let mut completed = false;
+        for c in engine.take_completions() {
+            served += 1;
+            completed = true;
+            if let Some(pos) =
+                in_flight.iter().position(|(id, _)| *id == c.id)
+            {
+                let (_, tx) = in_flight.swap_remove(pos);
+                let _ = tx.send(c); // receiver may have hung up
+            }
+        }
+        replica.load.set_pending(engine.pending());
+        if completed || !progressed {
+            hub.publish(replica.id, served, engine.pending(), &engine.metrics);
+        }
+        if !progressed
+            && replica.queue.is_closed()
+            && replica.queue.is_empty()
+        {
+            return Ok(served);
+        }
+    }
+}
+
+/// Closes a replica's feed when dropped — on `Err` *and* on panic
+/// unwinds — so the scheduler stops routing to a dead replica, and
+/// drains whatever was queued so those clients observe a channel hangup
+/// ("engine shut down") instead of blocking forever.  Idempotent on the
+/// normal exit path (the feed is already closed and empty).
+struct FeedGuard(ReplicaHandle);
+
+impl Drop for FeedGuard {
+    fn drop(&mut self) {
+        self.0.queue.close();
+        drop(self.0.queue.drain_now(usize::MAX));
+    }
+}
+
+/// Build one replica's runtime + engine and drive it until its feed
+/// closes and drains.
+fn run_replica(
+    spec: &RuntimeSpec,
+    ecfg: crate::engine::EngineConfig,
+    replica: &ReplicaHandle,
+    hub: &MetricsHub,
+) -> Result<u64> {
+    let rt = spec.create()?;
+    let mut engine = Engine::new(&rt, ecfg)?;
+    engine.precompile()?;
+    replica_loop(&mut engine, replica, hub)
+}
+
+/// N replicas + scheduler over one shared admission queue.
+pub struct ReplicaSet<'a> {
+    pub cfg: &'a ServingConfig,
+    pub spec: &'a RuntimeSpec,
+}
+
+impl ReplicaSet<'_> {
+    /// Run until the admission queue closes and every feed drains.
+    /// Returns per-replica served counts.  A long-running server simply
+    /// never closes the queue, so this blocks for the process lifetime.
+    pub fn run(&self, shared: &Shared) -> Result<Vec<u64>> {
+        let n = self.cfg.server.replicas.max(1);
+        let handles: Vec<ReplicaHandle> = (0..n)
+            .map(|i| {
+                ReplicaHandle::new(
+                    i,
+                    self.cfg.engine.max_batch,
+                    self.cfg.server.max_queue,
+                )
+            })
+            .collect();
+        let scheduler =
+            Scheduler::new(handles.clone(), self.cfg.server.routing);
+        std::thread::scope(|s| {
+            let mut workers = Vec::with_capacity(n);
+            for h in &handles {
+                let h = h.clone();
+                let spec = self.spec;
+                let ecfg = self.cfg.engine.clone();
+                let hub = &shared.hub;
+                workers.push(s.spawn(move || -> Result<u64> {
+                    let _guard = FeedGuard(h.clone());
+                    run_replica(spec, ecfg, &h, hub)
+                }));
+            }
+            let sched = s.spawn(|| scheduler.run(&shared.queue));
+            sched
+                .join()
+                .map_err(|_| anyhow!("scheduler thread panicked"))?;
+            let mut served = Vec::with_capacity(n);
+            for w in workers {
+                served.push(
+                    w.join()
+                        .map_err(|_| anyhow!("replica thread panicked"))??,
+                );
+            }
+            Ok(served)
+        })
+    }
+}
+
+/// Closed-loop offline run: enqueue every request up front, close the
+/// queue, drain it through the replica set, and return the completions in
+/// submission order plus the aggregate metrics and per-replica served
+/// counts.  This is the library entry the `serve_replicas` example, the
+/// bench harness, and the replica tests share.
+pub fn run_offline(
+    cfg: &ServingConfig,
+    spec: &RuntimeSpec,
+    requests: &[(String, usize)],
+) -> Result<(Vec<Completion>, AggregateSnapshot, Vec<u64>)> {
+    let n = cfg.server.replicas.max(1);
+    let capacity = cfg.server.max_queue.max(requests.len()).max(1);
+    let shared = Shared::new(capacity, n);
+    let mut rxs = Vec::with_capacity(requests.len());
+    for (prompt, max_new) in requests {
+        let (tx, rx) = mpsc::channel();
+        shared
+            .queue
+            .submit(QueuedRequest {
+                prompt: prompt.clone(),
+                max_new_tokens: *max_new,
+                respond: Some(tx),
+            })
+            .map_err(|_| anyhow!("admission queue rejected request"))?;
+        rxs.push(rx);
+    }
+    shared.queue.close();
+    let served = ReplicaSet { cfg, spec }.run(&shared)?;
+    let mut completions = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        completions.push(
+            rx.recv().map_err(|_| anyhow!("request dropped by replica"))?,
+        );
+    }
+    Ok((completions, shared.hub.aggregate(), served))
+}

@@ -28,6 +28,14 @@ impl ByteTokenizer {
             && tokens[tokens.len() - 1] == b'\n' as Token
             && tokens[tokens.len() - 2] == b'\n' as Token
     }
+
+    /// Incremental form of [`is_stop`]: would appending `next` to a
+    /// stream whose final token is `prev` (`None` = empty stream)
+    /// complete the stop sequence?  Lets callers scan token-by-token
+    /// without materializing the whole generated history.
+    pub fn is_stop_step(&self, prev: Option<Token>, next: Token) -> bool {
+        prev == Some(b'\n' as Token) && next == b'\n' as Token
+    }
 }
 
 #[cfg(test)]
@@ -62,5 +70,24 @@ mod tests {
         assert!(t.is_stop(&t.encode("done.\n\n")));
         assert!(!t.is_stop(&t.encode("done.\n")));
         assert!(!t.is_stop(&[]));
+    }
+
+    #[test]
+    fn incremental_stop_matches_batch_form() {
+        let t = ByteTokenizer;
+        // For every prefix of a stream, appending the next token via
+        // is_stop_step must agree with is_stop on the extended stream.
+        let stream = t.encode("a\nb\n\nc\n\n");
+        for i in 0..stream.len() {
+            let prev = if i == 0 { None } else { Some(stream[i - 1]) };
+            let mut extended = stream[..i].to_vec();
+            extended.push(stream[i]);
+            assert_eq!(
+                t.is_stop_step(prev, stream[i]),
+                t.is_stop(&extended),
+                "position {i}"
+            );
+        }
+        assert!(!t.is_stop_step(None, b'\n' as Token));
     }
 }

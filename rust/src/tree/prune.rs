@@ -59,7 +59,18 @@ pub fn prune_tree(
     vocab: usize,
     k: usize,
 ) -> PruneOutcome {
-    debug_assert!(early_logits.len() >= tree.len() * vocab);
+    // Real check (not debug_assert): in release builds a short logits
+    // buffer would otherwise slice out of bounds mid-loop with an opaque
+    // panic; fail fast with the actual contract instead.
+    assert!(
+        early_logits.len() >= tree.len() * vocab,
+        "prune_tree: early_logits holds {} values but the tree needs \
+         {} ({} nodes x vocab {})",
+        early_logits.len(),
+        tree.len() * vocab,
+        tree.len(),
+        vocab
+    );
     let t = tree.len();
     let mut alive = vec![false; t];
     alive[0] = true; // root is certain
@@ -201,6 +212,15 @@ mod tests {
         let lg = logits(32, &[], 4);
         let out = prune_tree(&t, &lg, 32, 0);
         assert_eq!(out.keep, vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "early_logits holds")]
+    fn short_logits_fail_fast_with_context() {
+        let t = tree();
+        // 4 nodes need 4*32 values; hand prune_tree only 3 rows.
+        let lg = logits(32, &[], 3);
+        prune_tree(&t, &lg, 32, 4);
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Summary statistics used by metrics and the bench harness.
 
-/// Streaming summary: count/mean plus a bounded reservoir for percentiles.
+use crate::util::rng::Rng;
+
+/// Streaming summary: count/mean plus a bounded reservoir for percentiles
+/// (Vitter's Algorithm R, deterministic seed — summaries reproduce).
 #[derive(Debug, Clone)]
 pub struct Summary {
     count: u64,
@@ -9,6 +12,7 @@ pub struct Summary {
     max: f64,
     samples: Vec<f64>,
     cap: usize,
+    rng: Rng,
 }
 
 impl Default for Summary {
@@ -26,6 +30,7 @@ impl Summary {
             max: f64::NEG_INFINITY,
             samples: Vec::new(),
             cap,
+            rng: Rng::new(0x5a3b_1e5e),
         }
     }
 
@@ -36,11 +41,13 @@ impl Summary {
         self.max = self.max.max(x);
         if self.samples.len() < self.cap {
             self.samples.push(x);
-        } else {
-            // Reservoir sampling keeps percentiles unbiased under overflow.
-            let idx = (self.count as usize * 2654435761) % self.cap.max(1);
-            if (self.count as usize) % 2 == 0 {
-                self.samples[idx % self.cap] = x;
+        } else if self.cap > 0 {
+            // Algorithm R: the i-th value replaces a uniform slot with
+            // probability cap/i, so every value seen so far is retained
+            // with equal probability and percentiles stay unbiased.
+            let j = self.rng.below(self.count as usize);
+            if j < self.cap {
+                self.samples[j] = x;
             }
         }
     }
@@ -157,6 +164,42 @@ mod tests {
         assert_eq!(s.count(), 10_000);
         assert!(s.samples.len() <= 64);
         assert_eq!(s.max(), 9999.0);
+    }
+
+    #[test]
+    fn overflow_percentiles_stay_near_exact() {
+        // A uniform ramp 0..10_000 through a 512-slot reservoir: Algorithm
+        // R keeps every value with equal probability, so the retained
+        // percentiles must track the exact ones.  (The old hash-slot
+        // scheme dropped half the overflow stream and overwrote a biased
+        // slot subset, pinning p50 far from the true median.)
+        let n = 10_000usize;
+        let cap = 512usize;
+        let mut s = Summary::with_capacity(cap);
+        for i in 0..n {
+            s.record(i as f64);
+        }
+        assert_eq!(s.samples.len(), cap);
+        // Every retained sample really came from the stream.
+        for &v in &s.samples {
+            assert!(v.fract() == 0.0 && (0.0..(n as f64)).contains(&v));
+        }
+        // sqrt-law tolerance: sigma(p50) ≈ n * 0.5 / sqrt(cap) ≈ 221;
+        // allow > 5 sigma so the deterministic stream has huge margin.
+        let exact_p50 = (n as f64 - 1.0) / 2.0;
+        assert!(
+            (s.p50() - exact_p50).abs() < 1_500.0,
+            "p50 {} vs exact {exact_p50}",
+            s.p50()
+        );
+        assert!(s.p99() > 0.9 * n as f64, "p99 {}", s.p99());
+        assert!(s.percentile(0.10) < 0.25 * n as f64);
+        // Late values keep entering the reservoir (the old scheme also
+        // silently dropped every odd-count overflow sample).
+        assert!(
+            s.samples.iter().any(|&v| v >= 0.9 * n as f64),
+            "no late-stream samples retained"
+        );
     }
 
     #[test]

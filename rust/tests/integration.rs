@@ -186,6 +186,7 @@ fn smaller_and_larger_sizes_serve() {
 #[test]
 fn server_round_trip_over_tcp() {
     use propd::config::ServingConfig;
+    use propd::runtime::RuntimeSpec;
     use propd::server::protocol::{parse_completion, render_request};
     use std::io::{BufRead, BufReader, Write};
 
@@ -195,8 +196,8 @@ fn server_round_trip_over_tcp() {
     cfg.engine.max_batch = 2;
     let (tx, rx) = std::sync::mpsc::channel();
     std::thread::spawn(move || {
-        let rt = Runtime::load(&dir).expect("runtime");
-        propd::server::serve(&cfg, &rt, Some(tx)).expect("serve");
+        let spec = RuntimeSpec::Artifacts(dir);
+        propd::server::serve(&cfg, &spec, Some(tx)).expect("serve");
     });
     let addr = rx.recv().expect("server ready");
     let stream = std::net::TcpStream::connect(addr).expect("connect");

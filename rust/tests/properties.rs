@@ -232,6 +232,103 @@ fn prop_prune_survivors_pass_membership_and_subtrees_die_whole() {
 }
 
 #[test]
+fn prop_prune_root_survives_and_partition_holds() {
+    let vocab = 64;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(13_000 + seed);
+        let tree = gen_tree(&mut rng, 24, 5);
+        let logits = gen_logits(&mut rng, tree.len(), vocab);
+        let k = rng.below(vocab + 1); // includes k = 0 and k = vocab
+        let out = prune_tree(&tree, &logits, vocab, k);
+        // The root is certain: it survives even at k = 0, and survivors
+        // plus pruned exactly partition the original tree.
+        assert!(!out.keep.is_empty(), "seed {seed}: root pruned");
+        assert_eq!(out.keep[0], 0, "seed {seed}: root not first survivor");
+        assert_eq!(out.keep.len() + out.pruned, tree.len(), "seed {seed}");
+        assert_eq!(out.tree.len(), out.keep.len(), "seed {seed}");
+        // keep is sorted and duplicate-free (index compaction relies on it).
+        assert!(out.keep.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_prune_old_to_new_is_consistent_bijection() {
+    let vocab = 64;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(14_000 + seed);
+        let tree = gen_tree(&mut rng, 24, 5);
+        let logits = gen_logits(&mut rng, tree.len(), vocab);
+        let out = prune_tree(&tree, &logits, vocab, rng.range(1, 9));
+        assert_eq!(out.old_to_new.len(), tree.len(), "seed {seed}");
+        // keep[new] = old and old_to_new[old] = new are mutually inverse;
+        // dropped nodes map to None and nothing else does.
+        for (new_i, &old_i) in out.keep.iter().enumerate() {
+            assert_eq!(out.old_to_new[old_i], Some(new_i), "seed {seed}");
+        }
+        for old_i in 0..tree.len() {
+            match out.old_to_new[old_i] {
+                Some(new_i) => {
+                    assert_eq!(out.keep[new_i], old_i, "seed {seed}");
+                    // The compacted node is the same token at the same
+                    // depth, with its parent remapped through the bijection.
+                    let a = tree.node(old_i);
+                    let b = out.tree.node(new_i);
+                    assert_eq!(a.token, b.token, "seed {seed}");
+                    assert_eq!(a.depth, b.depth, "seed {seed}");
+                    assert_eq!(
+                        b.parent,
+                        a.parent.and_then(|p| out.old_to_new[p]),
+                        "seed {seed}"
+                    );
+                }
+                None => {
+                    assert!(
+                        !out.keep.contains(&old_i),
+                        "seed {seed}: dropped node still in keep"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_prune_dead_parent_kills_all_descendants() {
+    let vocab = 64;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(15_000 + seed);
+        let tree = gen_tree(&mut rng, 24, 5);
+        let logits = gen_logits(&mut rng, tree.len(), vocab);
+        let out = prune_tree(&tree, &logits, vocab, rng.range(1, 5));
+        let alive: Vec<bool> = {
+            let mut v = vec![false; tree.len()];
+            for &i in &out.keep {
+                v[i] = true;
+            }
+            v
+        };
+        // Branch elimination: walking each node's ancestor chain, a dead
+        // ancestor anywhere implies the node itself is dead.
+        for i in 1..tree.len() {
+            let mut anc = tree.node(i).parent;
+            let mut ancestor_dead = false;
+            while let Some(p) = anc {
+                if !alive[p] {
+                    ancestor_dead = true;
+                }
+                anc = tree.node(p).parent;
+            }
+            if ancestor_dead {
+                assert!(
+                    !alive[i],
+                    "seed {seed}: node {i} survived a dead ancestor"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_prune_with_full_k_keeps_everything() {
     let vocab = 64;
     for seed in 0..CASES / 3 {

@@ -1,0 +1,174 @@
+//! Multi-replica scheduler integration over the deterministic sim backend.
+//!
+//! Unlike `integration.rs` (which needs real AOT artifacts and skips
+//! without them), these tests always run: the sim runtime stands in for
+//! XLA with a next-token oracle that is a pure function of the committed
+//! sequence, so every engine kind decodes the identical greedy text and
+//! the replica set can be checked end-to-end.
+
+use propd::config::ServingConfig;
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
+use propd::server::run_offline;
+
+const PROMPTS: [&str; 3] = [
+    "user: Explain how the scheduler reduces the latency of every \
+     request.\nassistant:",
+    "user: List three reasons why the token tree prunes the candidate \
+     sequences.\nassistant:",
+    "user: Summarize how the batch engine balances the decoding \
+     throughput.\nassistant:",
+];
+
+fn generate(
+    rt: &Runtime,
+    mut cfg: EngineConfig,
+    prompts: &[&str],
+    max_new: usize,
+) -> Vec<String> {
+    cfg.max_batch = prompts.len().max(1);
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    for p in prompts {
+        engine.submit(p, max_new);
+    }
+    let mut done = engine.run_to_completion().expect("run");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.text).collect()
+}
+
+#[test]
+fn sim_engines_reproduce_autoregressive_greedy() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let ar = generate(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::Autoregressive),
+        &PROMPTS,
+        20,
+    );
+    assert!(ar.iter().all(|t| !t.is_empty()));
+    for kind in [EngineKind::Bpd, EngineKind::Medusa, EngineKind::ProPD] {
+        let out =
+            generate(&rt, EngineConfig::new(&sim.size, kind), &PROMPTS, 20);
+        assert_eq!(
+            out, ar,
+            "{} output diverged from autoregressive greedy",
+            kind.as_str()
+        );
+    }
+}
+
+#[test]
+fn sim_pruning_toggles_do_not_change_output() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let mut texts = Vec::new();
+    for (early, dynamic) in
+        [(false, false), (true, false), (false, true), (true, true)]
+    {
+        let cfg = EngineConfig::ablation(&sim.size, early, dynamic);
+        texts.push(generate(&rt, cfg, &PROMPTS[..2], 16));
+    }
+    for t in &texts[1..] {
+        assert_eq!(*t, texts[0], "ablation toggle changed decoded text");
+    }
+}
+
+fn requests(n: usize) -> Vec<(String, usize)> {
+    (0..n)
+        .map(|i| (PROMPTS[i % PROMPTS.len()].to_string(), 10 + (i % 4) * 4))
+        .collect()
+}
+
+#[test]
+fn two_replicas_match_single_replica_byte_for_byte() {
+    let sim = SimConfig::default();
+    let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+    cfg.server.replicas = 2;
+    cfg.engine.max_batch = 2;
+    let reqs = requests(8);
+    let spec = RuntimeSpec::Sim(sim.clone());
+    let (completions, agg, served) =
+        run_offline(&cfg, &spec, &reqs).expect("replica run");
+    assert_eq!(completions.len(), reqs.len());
+    assert_eq!(served.iter().sum::<u64>(), reqs.len() as u64);
+    // Work actually spread across the fleet.
+    assert_eq!(served.len(), 2);
+    assert!(
+        served.iter().all(|&s| s > 0),
+        "one replica sat idle: served = {served:?}"
+    );
+    assert_eq!(agg.total("requests_completed"), reqs.len() as f64);
+
+    // Reference: identical engine config, one engine, same prompts.
+    let rt = Runtime::sim(&sim);
+    let mut engine = Engine::new(&rt, cfg.engine.clone()).expect("engine");
+    for (p, m) in &reqs {
+        engine.submit(p, *m);
+    }
+    let mut reference = engine.run_to_completion().expect("run");
+    reference.sort_by_key(|c| c.id);
+    for (i, (got, want)) in completions.iter().zip(&reference).enumerate() {
+        assert_eq!(
+            got.text, want.text,
+            "request {i} diverged from single-replica output"
+        );
+        assert_eq!(got.tokens, want.tokens, "request {i} token mismatch");
+    }
+}
+
+#[test]
+fn round_robin_fleet_drains_everything() {
+    let sim = SimConfig::default();
+    let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+    cfg.server.replicas = 3;
+    cfg.server.routing =
+        propd::batching::RoutingPolicy::parse("round-robin").unwrap();
+    cfg.engine.max_batch = 2;
+    let reqs = requests(9);
+    let (completions, _, served) =
+        run_offline(&cfg, &RuntimeSpec::Sim(sim), &reqs).expect("run");
+    assert_eq!(completions.len(), 9);
+    assert_eq!(served.len(), 3);
+    assert_eq!(served.iter().sum::<u64>(), 9);
+    assert!(completions.iter().all(|c| !c.tokens.is_empty()));
+}
+
+#[test]
+fn aggregate_metrics_roll_up_across_replicas() {
+    let sim = SimConfig::default();
+    let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+    cfg.server.replicas = 2;
+    cfg.engine.max_batch = 2;
+    let reqs = requests(6);
+    let (_, agg, served) =
+        run_offline(&cfg, &RuntimeSpec::Sim(sim), &reqs).expect("run");
+    assert_eq!(agg.replicas.len(), 2);
+    assert_eq!(agg.total("replicas"), 2.0);
+    assert_eq!(agg.total("served"), 6.0);
+    assert!(agg.total("steps") > 0.0);
+    assert!(agg.total("tokens_generated") > 0.0);
+    // Totals really are per-replica sums.
+    let steps_sum: f64 = agg
+        .replicas
+        .iter()
+        .map(|r| r.report.get("steps").copied().unwrap_or(0.0))
+        .sum();
+    assert_eq!(agg.total("steps"), steps_sum);
+    let served_sum: u64 = served.iter().sum();
+    assert_eq!(agg.total("served") as u64, served_sum);
+}
+
+#[test]
+fn single_replica_offline_run_also_works() {
+    let sim = SimConfig::default();
+    let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::Medusa);
+    cfg.server.replicas = 1;
+    cfg.engine.max_batch = 4;
+    let reqs = requests(5);
+    let (completions, agg, served) =
+        run_offline(&cfg, &RuntimeSpec::Sim(sim), &reqs).expect("run");
+    assert_eq!(completions.len(), 5);
+    assert_eq!(served, vec![5]);
+    assert_eq!(agg.total("served"), 5.0);
+}
