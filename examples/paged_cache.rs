@@ -1,0 +1,83 @@
+//! Paged KV cache + incremental batch assembly demonstration (sim mode —
+//! no artifacts needed).
+//!
+//!     cargo run --release --example paged_cache
+//!
+//! Runs a long-sequence workload on every engine and contrasts the bytes
+//! the incremental assembler actually copied per step against the bytes a
+//! full per-step prefix re-assembly would have copied, plus the page-pool
+//! occupancy that tracks actual sequence lengths instead of
+//! `slots × max_seq`.
+
+use anyhow::Result;
+
+use propd::bench::Table;
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::runtime::{Runtime, SimConfig};
+
+const MB: f64 = 1024.0 * 1024.0;
+
+fn main() -> Result<()> {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    println!(
+        "sim model: {} layers, max_seq {}, page pools auto-sized\n",
+        sim.n_layers, sim.max_seq
+    );
+
+    let mut table = Table::new(
+        "incremental vs full batch assembly (4 long requests, page_size 32)",
+        &["engine", "tokens", "steps", "copied MB", "full MB", "saved",
+          "peak pages"],
+    );
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        let mut cfg = EngineConfig::new(&sim.size, kind);
+        cfg.max_batch = 4;
+        cfg.page_size = 32;
+        let mut engine = Engine::new(&rt, cfg)?;
+        engine.precompile()?;
+        for i in 0..4 {
+            engine.submit(
+                &format!(
+                    "user: Tell the long story number {i} about how the \
+                     serving stack keeps every replica busy.\nassistant:"
+                ),
+                160,
+            );
+        }
+        let mut peak_pages = 0usize;
+        while engine.step()? {
+            peak_pages = peak_pages.max(engine.kv_pages_in_use());
+        }
+        let r = engine.metrics.report();
+        let copied = r["assembly_bytes_copied_total"];
+        let full = r["assembly_bytes_full_total"];
+        table.row(vec![
+            kind.as_str().into(),
+            format!("{}", r["tokens_generated"] as u64),
+            format!("{}", r["steps"] as u64),
+            format!("{:.1}", copied / MB),
+            format!("{:.1}", full / MB),
+            format!("{:.0}%", 100.0 * r["assembly_savings_ratio"]),
+            format!("{peak_pages}/{}", engine.kv_page_capacity()),
+        ]);
+        assert!(
+            copied < full,
+            "incremental assembly must beat full re-assembly"
+        );
+    }
+    println!("{}", table.render());
+    println!(
+        "\"copied MB\" is what the incremental assembler moved into the \
+         persistent batch tensor; \"full MB\" is what re-copying every \
+         active prefix each step (the old dense path) would have moved.  \
+         Peak pages show resident cache memory tracking actual sequence \
+         lengths."
+    );
+    Ok(())
+}

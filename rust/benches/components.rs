@@ -9,7 +9,7 @@
 
 use propd::bench::{bench_header, Bencher};
 use propd::estimator::{AcceptanceTracker, PerfModel};
-use propd::kvcache::{KvCache, KvGeometry};
+use propd::kvcache::{BatchAssembler, KvCache, KvGeometry};
 use propd::tree::builder::HeadCandidates;
 use propd::tree::{accept_path, prune_tree, TokenTree, TreeBuilder, TreeMask};
 use propd::util::rng::Rng;
@@ -126,7 +126,49 @@ fn main() {
             0,
             0,
             &[(0, 10), (1, 11), (2, 12), (3, 13), (4, 14)],
-        );
+        )
+        .unwrap();
+    }));
+
+    // ---- paged KV: full prefix re-assembly vs incremental (§Perf) ----
+    // Long-sequence steady state: 320 committed columns per lane; the
+    // incremental assembler copies only the columns committed since the
+    // previous step (1 per lane here) instead of every lane's prefix.
+    let mut pkv = KvCache::with_pages(geom, 8, 64, 0);
+    let plane: Vec<usize> = (0..8).map(|_| pkv.acquire().unwrap()).collect();
+    let t = 64;
+    let pblk = vec![0.25f32; geom.layers * 2 * t * geom.col()];
+    for &slot in &plane {
+        for chunk in 0..5 {
+            let pairs: Vec<(usize, usize)> =
+                (0..t).map(|j| (j, chunk * t + j)).collect();
+            pkv.commit_columns(slot, &pblk, (geom.layers, 1, t), 0, 0, &pairs)
+                .unwrap();
+        }
+    }
+    let mut pout =
+        vec![0f32; geom.layers * 2 * 8 * geom.max_seq * geom.col()];
+    results.push(b.run("kv_assemble_full_prefix_b8_seq320", || {
+        pkv.write_batch_prefix(&plane, &mut pout);
+        std::hint::black_box(&pout);
+    }));
+    let mut asm = BatchAssembler::new();
+    asm.assemble(&mut pkv, &plane); // initial sync outside the timer
+    let mut pos = 320usize;
+    results.push(b.run("kv_assemble_incremental_b8", || {
+        for &slot in &plane {
+            pkv.commit_columns(
+                slot,
+                &pblk,
+                (geom.layers, 1, t),
+                0,
+                0,
+                &[(0, pos)],
+            )
+            .unwrap();
+        }
+        pos += 1;
+        std::hint::black_box(asm.assemble(&mut pkv, &plane).1.bytes_copied);
     }));
 
     // ---- input packing ----

@@ -1,0 +1,232 @@
+//! CI bench-smoke (harness = false): a fast benchmark suite over the
+//! deterministic sim backend that emits machine-readable `BENCH_ci.json`
+//! and enforces the `bench/baseline.json` regression gate.
+//!
+//!     cargo bench --bench smoke -- --gate bench/baseline.json \
+//!                                  --out BENCH_ci.json
+//!     cargo bench --bench smoke -- --update bench/baseline.json
+//!
+//! Gated metrics are chosen to be machine-independent: end-to-end token /
+//! step counts from the deterministic oracle (the planner's time-fed
+//! sizing is disabled so step counts do not depend on host speed) and the
+//! incremental-assembly byte ratio.  Raw wall-clock figures are emitted as
+//! informational (`gate: false`) entries.  Exits non-zero when a gated
+//! metric regresses more than the baseline tolerance (default 25%).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{Context, Result};
+
+use propd::bench::gate::{self, Baseline, Direction};
+use propd::bench::harness::{run_trace, RunSpec};
+use propd::bench::{Bencher, Table};
+use propd::engine::{EngineConfig, EngineKind};
+use propd::kvcache::{BatchAssembler, KvCache, KvGeometry};
+use propd::runtime::{Runtime, SimConfig};
+use propd::workload::PromptSet;
+
+fn measure() -> Result<BTreeMap<String, f64>> {
+    let mut m = BTreeMap::new();
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let prompts = PromptSet::synthetic(32);
+
+    // ---- deterministic end-to-end counters ----
+    let mut ar = EngineConfig::new(&sim.size, EngineKind::Autoregressive);
+    ar.max_batch = 4;
+    let mut spec = RunSpec::new(ar, "chatgpt");
+    spec.n_requests = 8;
+    spec.max_new_tokens = Some(48);
+    spec.warmup = false;
+    let ar_out = run_trace(&rt, &prompts, &spec).context("ar run")?;
+    m.insert("ar_tokens".into(), ar_out.tokens as f64);
+    m.insert("ar_steps".into(), ar_out.steps as f64);
+
+    // Static-tree ProPD with early pruning: every decision is a pure
+    // function of the oracle, so these counters reproduce on any host.
+    let mut pd = EngineConfig::ablation(&sim.size, true, false);
+    pd.max_batch = 4;
+    let mut spec = RunSpec::new(pd, "chatgpt");
+    spec.n_requests = 8;
+    spec.max_new_tokens = Some(48);
+    spec.warmup = false;
+    let pd_out = run_trace(&rt, &prompts, &spec).context("propd run")?;
+    m.insert("propd_static_tokens".into(), pd_out.tokens as f64);
+    m.insert("propd_static_steps".into(), pd_out.steps as f64);
+    m.insert("propd_static_accept_len".into(), pd_out.accept_len);
+    m.insert(
+        "propd_step_reduction".into(),
+        ar_out.steps as f64 / (pd_out.steps as f64).max(1.0),
+    );
+    let copied = pd_out.report["assembly_bytes_copied_total"];
+    let full = pd_out.report["assembly_bytes_full_total"];
+    m.insert(
+        "assembly_copied_over_full".into(),
+        copied / full.max(1.0),
+    );
+
+    // ---- host-dependent microbenchmarks (informational) ----
+    let b = Bencher::new(3, 15);
+    let geom =
+        KvGeometry { layers: 4, max_seq: 512, heads: 4, head_dim: 16 };
+    let mut kv = KvCache::new(geom, 4);
+    let lanes: Vec<usize> =
+        (0..4).map(|_| kv.acquire().unwrap()).collect();
+    let col = geom.col();
+    // Pre-commit 384 columns per slot (long-sequence steady state).
+    let t = 64;
+    let blk = vec![0.5f32; geom.layers * 2 * t * col];
+    let pairs: Vec<(usize, usize)> = (0..t).map(|j| (j, j)).collect();
+    for &slot in &lanes {
+        for chunk in 0..6 {
+            let pairs: Vec<(usize, usize)> = pairs
+                .iter()
+                .map(|&(j, p)| (j, p + chunk * t))
+                .collect();
+            kv.commit_columns(slot, &blk, (geom.layers, 1, t), 0, 0, &pairs)
+                .unwrap();
+        }
+    }
+    let mut scratch =
+        vec![0f32; geom.layers * 2 * 4 * geom.max_seq * col];
+    let full_bench = b.run("kv_assemble_full", || {
+        kv.write_batch_prefix(&lanes, &mut scratch);
+        std::hint::black_box(&scratch);
+    });
+    m.insert("kv_assemble_full_ms".into(), full_bench.mean_s * 1e3);
+    let mut asm = BatchAssembler::new();
+    asm.assemble(&mut kv, &lanes); // initial sync outside the timer
+    let mut next_pos = 384usize;
+    let inc_bench = b.run("kv_assemble_incremental", || {
+        // One appended column per lane per step: the decode steady state.
+        for &slot in &lanes {
+            kv.commit_columns(
+                slot,
+                &blk,
+                (geom.layers, 1, t),
+                0,
+                0,
+                &[(0, next_pos)],
+            )
+            .unwrap();
+        }
+        next_pos += 1;
+        let (buf, _) = asm.assemble(&mut kv, &lanes);
+        std::hint::black_box(buf);
+    });
+    m.insert("kv_assemble_incremental_ms".into(), inc_bench.mean_s * 1e3);
+    m.insert(
+        "kv_assemble_speedup".into(),
+        full_bench.mean_s / inc_bench.mean_s.max(1e-12),
+    );
+    Ok(m)
+}
+
+/// Direction + gating per metric name (used by `--update`).
+fn metric_meta(name: &str) -> (Direction, bool) {
+    match name {
+        // Deterministic counters: gate.
+        "ar_tokens" | "propd_static_tokens" | "propd_static_accept_len"
+        | "propd_step_reduction" => (Direction::Higher, true),
+        "ar_steps" | "propd_static_steps" => (Direction::Lower, true),
+        "assembly_copied_over_full" => (Direction::Lower, true),
+        // Wall-clock figures: informational only (CI runners vary).
+        n if n.ends_with("_ms") => (Direction::Lower, false),
+        "kv_assemble_speedup" => (Direction::Higher, false),
+        _ => (Direction::Lower, false),
+    }
+}
+
+struct Args {
+    out: PathBuf,
+    gate: Option<PathBuf>,
+    update: Option<PathBuf>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut a = Args {
+        out: PathBuf::from("BENCH_ci.json"),
+        gate: None,
+        update: None,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(flag) = it.next() {
+        let mut val = |name: &str| -> Result<String> {
+            it.next()
+                .ok_or_else(|| anyhow::anyhow!("{name} needs a value"))
+        };
+        match flag.as_str() {
+            "--out" => a.out = PathBuf::from(val("--out")?),
+            "--gate" => a.gate = Some(PathBuf::from(val("--gate")?)),
+            "--update" => a.update = Some(PathBuf::from(val("--update")?)),
+            // `cargo bench` forwards its own flags (e.g. --bench); ignore.
+            _ => {}
+        }
+    }
+    Ok(a)
+}
+
+fn run() -> Result<ExitCode> {
+    let args = parse_args()?;
+    let measured = measure()?;
+
+    let mut table = Table::new("bench-smoke (sim)", &["metric", "value"]);
+    for (k, v) in &measured {
+        table.row(vec![k.clone(), format!("{v:.6}")]);
+    }
+    println!("{}", table.render());
+
+    if let Some(up) = &args.update {
+        let text =
+            gate::render_baseline(&measured, &metric_meta, 25.0);
+        std::fs::write(up, text)
+            .with_context(|| format!("writing {}", up.display()))?;
+        println!("baseline refreshed: {}", up.display());
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let report = match &args.gate {
+        Some(g) => {
+            let baseline = Baseline::load(g)
+                .with_context(|| format!("loading {}", g.display()))?;
+            gate::check(&baseline, &measured)
+        }
+        None => gate::GateReport::default(),
+    };
+    std::fs::write(&args.out, gate::render_report(&measured, &report))
+        .with_context(|| format!("writing {}", args.out.display()))?;
+    println!("wrote {}", args.out.display());
+
+    if report.bootstrap {
+        println!(
+            "bench gate: baseline is bootstrap-only — gate passes \
+             vacuously.  Refresh with:\n  cargo bench --bench smoke -- \
+             --update bench/baseline.json"
+        );
+    }
+    for f in &report.failures {
+        eprintln!("GATE FAIL: {f}");
+    }
+    if report.passed() {
+        println!("bench gate: green ({} metrics compared)", report.compared);
+        Ok(ExitCode::SUCCESS)
+    } else {
+        eprintln!(
+            "bench gate: RED ({} failures; see above)",
+            report.failures.len()
+        );
+        Ok(ExitCode::FAILURE)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("bench-smoke error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

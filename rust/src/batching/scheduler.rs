@@ -13,6 +13,12 @@
 //!   decision never waits on a worker.
 //! - **round-robin**: strict rotation (useful as a baseline and for
 //!   homogeneous offline drains).
+//! - **cache-pressure**: steers new requests away from page-starved
+//!   replicas.  A replica with an immediately fillable lane always beats
+//!   a saturated one; among those, the highest free-page fraction in the
+//!   KV page pool wins (workers publish the gauges each iteration), then
+//!   the least-loaded ordering.  With long-sequence traffic this tracks
+//!   *memory* headroom, which lane counts alone miss.
 //!
 //! Replicas that die close their feed; the scheduler skips closed feeds and
 //! drops a request (client sees "engine shut down") only when every feed is
@@ -33,6 +39,7 @@ const DISPATCH_BURST: usize = 32;
 pub enum RoutingPolicy {
     LeastLoaded,
     RoundRobin,
+    CachePressure,
 }
 
 impl RoutingPolicy {
@@ -40,6 +47,9 @@ impl RoutingPolicy {
         match s {
             "least-loaded" | "least_loaded" => Some(RoutingPolicy::LeastLoaded),
             "round-robin" | "round_robin" => Some(RoutingPolicy::RoundRobin),
+            "cache-pressure" | "cache_pressure" => {
+                Some(RoutingPolicy::CachePressure)
+            }
             _ => None,
         }
     }
@@ -48,6 +58,7 @@ impl RoutingPolicy {
         match self {
             RoutingPolicy::LeastLoaded => "least-loaded",
             RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::CachePressure => "cache-pressure",
         }
     }
 }
@@ -63,6 +74,15 @@ impl RoutingPolicy {
 pub struct ReplicaLoad {
     queued: AtomicUsize,
     pending: AtomicUsize,
+    /// KV pages still free in the replica's page pool (worker-published).
+    free_pages: AtomicUsize,
+    /// Total pages in the replica's page pool (worker-published; 0 =
+    /// not yet published, treated as fully free).
+    page_capacity: AtomicUsize,
+    /// Effective lane budget (`max_batch` capped by page coverage,
+    /// worker-published; 0 = not yet published, fall back to the
+    /// handle's `max_batch`).
+    lane_budget: AtomicUsize,
 }
 
 impl ReplicaLoad {
@@ -87,6 +107,34 @@ impl ReplicaLoad {
     pub fn in_flight(&self) -> usize {
         self.queued.load(Ordering::SeqCst) + self.pending.load(Ordering::SeqCst)
     }
+
+    /// Worker-side: publish the engine's KV page-pool headroom.
+    pub fn set_cache(&self, free_pages: usize, page_capacity: usize) {
+        self.free_pages.store(free_pages, Ordering::SeqCst);
+        self.page_capacity.store(page_capacity, Ordering::SeqCst);
+    }
+
+    /// Worker-side: publish the engine's effective lane budget
+    /// (`Engine::lane_budget`), so routing's free-lane math matches what
+    /// admission will actually accept under a finite page pool.
+    pub fn set_lane_budget(&self, lanes: usize) {
+        self.lane_budget.store(lanes, Ordering::SeqCst);
+    }
+
+    pub fn lane_budget(&self) -> usize {
+        self.lane_budget.load(Ordering::SeqCst)
+    }
+
+    /// Free-page fraction in permille (integer-orderable).  A replica
+    /// that has not published yet counts as fully free.
+    pub fn free_page_permille(&self) -> usize {
+        let cap = self.page_capacity.load(Ordering::SeqCst);
+        if cap == 0 {
+            1000
+        } else {
+            self.free_pages.load(Ordering::SeqCst) * 1000 / cap
+        }
+    }
 }
 
 /// Scheduler-visible handle to one replica: its feed plus load counters.
@@ -110,8 +158,17 @@ impl ReplicaHandle {
     }
 
     /// Lanes this replica could fill immediately (0 when saturated).
+    /// Uses the worker-published page-capped budget when available, so a
+    /// replica throttled by a finite page pool is not mistaken for one
+    /// with admittable lanes.
     pub fn free_lanes(&self) -> usize {
-        self.max_batch.saturating_sub(self.load.in_flight())
+        let published = self.load.lane_budget();
+        let budget = if published == 0 {
+            self.max_batch
+        } else {
+            published.min(self.max_batch)
+        };
+        budget.saturating_sub(self.load.in_flight())
     }
 }
 
@@ -149,6 +206,23 @@ impl Scheduler {
                 .filter(|r| !r.queue.is_closed())
                 .min_by_key(|r| {
                     (Reverse(r.free_lanes()), r.load.in_flight(), r.id)
+                }),
+            // A replica with an immediately fillable lane always beats a
+            // saturated one (otherwise a marginal page advantage would
+            // queue work behind a full batch while another replica idles);
+            // page headroom then picks among them.
+            RoutingPolicy::CachePressure => self
+                .replicas
+                .iter()
+                .filter(|r| !r.queue.is_closed())
+                .min_by_key(|r| {
+                    (
+                        Reverse(r.free_lanes().min(1)),
+                        Reverse(r.load.free_page_permille()),
+                        Reverse(r.free_lanes()),
+                        r.load.in_flight(),
+                        r.id,
+                    )
                 }),
         }
     }
@@ -218,8 +292,17 @@ mod tests {
             RoutingPolicy::parse("round_robin"),
             Some(RoutingPolicy::RoundRobin)
         );
+        assert_eq!(
+            RoutingPolicy::parse("cache-pressure"),
+            Some(RoutingPolicy::CachePressure)
+        );
+        assert_eq!(
+            RoutingPolicy::parse("cache_pressure"),
+            Some(RoutingPolicy::CachePressure)
+        );
         assert_eq!(RoutingPolicy::parse("warp"), None);
         assert_eq!(RoutingPolicy::LeastLoaded.as_str(), "least-loaded");
+        assert_eq!(RoutingPolicy::CachePressure.as_str(), "cache-pressure");
     }
 
     #[test]
@@ -268,6 +351,72 @@ mod tests {
         handles[0].load.set_pending(3);
         handles[1].load.set_pending(2);
         let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
+        assert_eq!(s.pick().unwrap().id, 1);
+    }
+
+    #[test]
+    fn cache_pressure_steers_away_from_page_starved_replicas() {
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        // Replica 0 is page-starved, replica 1 has headroom.
+        handles[0].load.set_cache(5, 100);
+        handles[1].load.set_cache(80, 100);
+        let s = Scheduler::new(handles, RoutingPolicy::CachePressure);
+        assert_eq!(s.pick().unwrap().id, 1);
+    }
+
+    #[test]
+    fn cache_pressure_ties_fall_back_to_least_loaded() {
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        handles[0].load.set_cache(50, 100);
+        handles[1].load.set_cache(50, 100);
+        handles[0].load.set_pending(2); // no free lanes on 0
+        let s = Scheduler::new(handles, RoutingPolicy::CachePressure);
+        assert_eq!(s.pick().unwrap().id, 1);
+    }
+
+    #[test]
+    fn cache_pressure_never_queues_behind_a_full_batch_while_one_idles() {
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        // Replica 0 has more free pages but zero free lanes; replica 1 is
+        // idle with slightly fewer pages — the idle replica must win.
+        handles[0].load.set_cache(60, 100);
+        handles[0].load.set_pending(2);
+        handles[1].load.set_cache(50, 100);
+        let s = Scheduler::new(handles, RoutingPolicy::CachePressure);
+        assert_eq!(s.pick().unwrap().id, 1);
+    }
+
+    #[test]
+    fn unpublished_cache_gauges_count_as_fully_free() {
+        let l = ReplicaLoad::default();
+        assert_eq!(l.free_page_permille(), 1000);
+        l.set_cache(25, 100);
+        assert_eq!(l.free_page_permille(), 250);
+    }
+
+    #[test]
+    fn published_lane_budget_caps_free_lanes() {
+        let h = ReplicaHandle::new(0, 8, 8);
+        assert_eq!(h.free_lanes(), 8, "unpublished → raw max_batch");
+        // Finite page pool: engine can only run 2 lanes despite max_batch 8.
+        h.load.set_lane_budget(2);
+        assert_eq!(h.free_lanes(), 2);
+        h.load.set_pending(2);
+        assert_eq!(h.free_lanes(), 0, "page-throttled replica is full");
+        // Routing consequence: a page-rich but budget-saturated replica
+        // loses to one with a genuinely admittable lane.
+        let handles =
+            vec![ReplicaHandle::new(0, 8, 8), ReplicaHandle::new(1, 8, 8)];
+        handles[0].load.set_lane_budget(2);
+        handles[0].load.set_pending(2);
+        handles[0].load.set_cache(80, 100);
+        handles[1].load.set_lane_budget(2);
+        handles[1].load.set_pending(1);
+        handles[1].load.set_cache(40, 100);
+        let s = Scheduler::new(handles, RoutingPolicy::CachePressure);
         assert_eq!(s.pick().unwrap().id, 1);
     }
 

@@ -1,0 +1,328 @@
+//! Perf-regression gate for the CI `bench-smoke` job.
+//!
+//! `benches/smoke.rs` measures a fixed set of (mostly deterministic)
+//! benchmarks over the sim backend, writes them to `BENCH_ci.json`, and
+//! fails the job when a *gated* metric regresses more than
+//! `tolerance_pct` against the checked-in `bench/baseline.json`.  A
+//! baseline with `"bootstrap": true` passes vacuously (the refresh
+//! workflow in CONTRIBUTING.md replaces it with measured values).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::jsonio::{self, Value};
+
+/// Which way "better" points for a benchmark value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Larger is better (throughput, speedups, savings).
+    Higher,
+    /// Smaller is better (times, step counts, copied bytes).
+    Lower,
+}
+
+impl Direction {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "higher" => Some(Direction::Higher),
+            "lower" => Some(Direction::Lower),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BaselineEntry {
+    pub value: f64,
+    pub direction: Direction,
+    /// Gated entries fail CI on regression; others are informational.
+    pub gate: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    pub tolerance_pct: f64,
+    pub bootstrap: bool,
+    pub benchmarks: BTreeMap<String, BaselineEntry>,
+}
+
+impl Baseline {
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_value(&jsonio::parse_file(path)?)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let tolerance_pct = match v.opt("tolerance_pct") {
+            Some(t) => t.as_f64()?,
+            None => 25.0,
+        };
+        let bootstrap = match v.opt("bootstrap") {
+            Some(b) => b.as_bool()?,
+            None => false,
+        };
+        let mut benchmarks = BTreeMap::new();
+        if let Some(b) = v.opt("benchmarks") {
+            for (name, e) in b.as_obj()? {
+                let value = e.get("value")?.as_f64()?;
+                let direction = match e.opt("direction") {
+                    Some(d) => {
+                        let ds = d.as_str()?;
+                        Direction::parse(ds).ok_or_else(|| {
+                            anyhow!("bad direction {ds:?} for {name}")
+                        })?
+                    }
+                    None => Direction::Lower,
+                };
+                let gate = match e.opt("gate") {
+                    Some(g) => g.as_bool()?,
+                    None => true,
+                };
+                benchmarks.insert(
+                    name.clone(),
+                    BaselineEntry { value, direction, gate },
+                );
+            }
+        }
+        Ok(Baseline { tolerance_pct, bootstrap, benchmarks })
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct GateReport {
+    /// Gated metrics actually compared.
+    pub compared: usize,
+    pub failures: Vec<String>,
+    pub bootstrap: bool,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Compare measured values against the baseline.  A gated baseline metric
+/// missing from `measured` fails (a silently dropped benchmark must not
+/// turn the gate green); non-gated entries are informational only.
+pub fn check(
+    baseline: &Baseline,
+    measured: &BTreeMap<String, f64>,
+) -> GateReport {
+    let mut rep =
+        GateReport { bootstrap: baseline.bootstrap, ..Default::default() };
+    if baseline.bootstrap {
+        return rep;
+    }
+    let tol = baseline.tolerance_pct / 100.0;
+    for (name, e) in &baseline.benchmarks {
+        if !e.gate {
+            continue;
+        }
+        let Some(&got) = measured.get(name) else {
+            rep.failures.push(format!("{name}: missing from measured set"));
+            continue;
+        };
+        rep.compared += 1;
+        let regressed = match e.direction {
+            Direction::Lower => got > e.value * (1.0 + tol),
+            Direction::Higher => got < e.value * (1.0 - tol),
+        };
+        if regressed {
+            rep.failures.push(format!(
+                "{name}: {got:.6} regressed vs baseline {:.6} \
+                 ({} is better, tolerance {:.0}%)",
+                e.value,
+                e.direction.as_str(),
+                baseline.tolerance_pct,
+            ));
+        }
+    }
+    rep
+}
+
+/// Serialize the measured set + gate outcome as the machine-readable
+/// `BENCH_ci.json` artifact.
+pub fn render_report(
+    measured: &BTreeMap<String, f64>,
+    report: &GateReport,
+) -> String {
+    use crate::jsonio::{arr, num, obj, s};
+    let benchmarks = Value::Obj(
+        measured.iter().map(|(k, &v)| (k.clone(), num(v))).collect(),
+    );
+    let failures =
+        arr(report.failures.iter().map(|f| s(f)).collect::<Vec<_>>());
+    jsonio::to_string(&obj(vec![
+        ("schema", num(1.0)),
+        ("gate_passed", Value::Bool(report.passed())),
+        ("gate_bootstrap", Value::Bool(report.bootstrap)),
+        ("gate_compared", num(report.compared as f64)),
+        ("failures", failures),
+        ("benchmarks", benchmarks),
+    ]))
+}
+
+/// Serialize measured values as a fresh baseline (the `--update` refresh
+/// workflow documented in CONTRIBUTING.md).
+pub fn render_baseline(
+    measured: &BTreeMap<String, f64>,
+    meta: &dyn Fn(&str) -> (Direction, bool),
+    tolerance_pct: f64,
+) -> String {
+    use crate::jsonio::{num, obj, s};
+    let benchmarks = Value::Obj(
+        measured
+            .iter()
+            .map(|(k, &v)| {
+                let (direction, gate) = meta(k);
+                (
+                    k.clone(),
+                    obj(vec![
+                        ("value", num(v)),
+                        ("direction", s(direction.as_str())),
+                        ("gate", Value::Bool(gate)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    jsonio::to_string(&obj(vec![
+        ("schema", num(1.0)),
+        ("bootstrap", Value::Bool(false)),
+        ("tolerance_pct", num(tolerance_pct)),
+        ("benchmarks", benchmarks),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline(entries: &[(&str, f64, Direction, bool)]) -> Baseline {
+        Baseline {
+            tolerance_pct: 25.0,
+            bootstrap: false,
+            benchmarks: entries
+                .iter()
+                .map(|&(n, value, direction, gate)| {
+                    (n.to_string(), BaselineEntry { value, direction, gate })
+                })
+                .collect(),
+        }
+    }
+
+    fn measured(entries: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        entries.iter().map(|&(n, v)| (n.to_string(), v)).collect()
+    }
+
+    #[test]
+    fn within_tolerance_passes_both_directions() {
+        let b = baseline(&[
+            ("time", 1.0, Direction::Lower, true),
+            ("tput", 1.0, Direction::Higher, true),
+        ]);
+        let rep = check(&b, &measured(&[("time", 1.24), ("tput", 0.76)]));
+        assert!(rep.passed(), "{:?}", rep.failures);
+        assert_eq!(rep.compared, 2);
+    }
+
+    #[test]
+    fn regressions_fail_both_directions() {
+        let b = baseline(&[
+            ("time", 1.0, Direction::Lower, true),
+            ("tput", 1.0, Direction::Higher, true),
+        ]);
+        let rep = check(&b, &measured(&[("time", 1.3), ("tput", 0.7)]));
+        assert_eq!(rep.failures.len(), 2);
+        assert!(!rep.passed());
+    }
+
+    #[test]
+    fn improvements_never_fail() {
+        let b = baseline(&[
+            ("time", 1.0, Direction::Lower, true),
+            ("tput", 1.0, Direction::Higher, true),
+        ]);
+        let rep = check(&b, &measured(&[("time", 0.1), ("tput", 10.0)]));
+        assert!(rep.passed());
+    }
+
+    #[test]
+    fn missing_gated_metric_fails() {
+        let b = baseline(&[("time", 1.0, Direction::Lower, true)]);
+        let rep = check(&b, &measured(&[]));
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn informational_entries_are_skipped() {
+        let b = baseline(&[("time", 1.0, Direction::Lower, false)]);
+        let rep = check(&b, &measured(&[("time", 99.0)]));
+        assert!(rep.passed());
+        assert_eq!(rep.compared, 0);
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_vacuously() {
+        let mut b = baseline(&[("time", 1.0, Direction::Lower, true)]);
+        b.bootstrap = true;
+        let rep = check(&b, &measured(&[("time", 99.0)]));
+        assert!(rep.passed());
+        assert!(rep.bootstrap);
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let m = measured(&[("a_ms", 1.5), ("b_ratio", 0.25)]);
+        let text = render_baseline(
+            &m,
+            &|name| {
+                if name.ends_with("_ms") {
+                    (Direction::Lower, false)
+                } else {
+                    (Direction::Lower, true)
+                }
+            },
+            25.0,
+        );
+        let b = Baseline::from_value(&jsonio::parse(&text).unwrap()).unwrap();
+        assert!(!b.bootstrap);
+        assert_eq!(b.benchmarks.len(), 2);
+        assert!(!b.benchmarks["a_ms"].gate);
+        assert!(b.benchmarks["b_ratio"].gate);
+        assert!((b.benchmarks["b_ratio"].value - 0.25).abs() < 1e-12);
+        // And the report artifact parses back too.
+        let rep = check(&b, &m);
+        let art = render_report(&m, &rep);
+        let v = jsonio::parse(&art).unwrap();
+        assert!(v.get("gate_passed").unwrap().as_bool().unwrap());
+        assert_eq!(
+            v.get("benchmarks").unwrap().get("a_ms").unwrap().as_f64()
+                .unwrap(),
+            1.5
+        );
+    }
+
+    #[test]
+    fn bootstrap_file_shape_parses() {
+        let v = jsonio::parse(
+            r#"{"schema":1,"bootstrap":true,"tolerance_pct":25,
+                "benchmarks":{}}"#,
+        )
+        .unwrap();
+        let b = Baseline::from_value(&v).unwrap();
+        assert!(b.bootstrap);
+        assert!(b.benchmarks.is_empty());
+        assert_eq!(b.tolerance_pct, 25.0);
+    }
+}

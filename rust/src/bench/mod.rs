@@ -141,7 +141,9 @@ impl Table {
         };
         out.push_str(&fmt_row(&self.headers));
         out.push('\n');
-        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push_str(
+            &"-".repeat(w.iter().sum::<usize>() + 2 * w.len().saturating_sub(1)),
+        );
         out.push('\n');
         for row in &self.rows {
             out.push_str(&fmt_row(row));
@@ -215,6 +217,19 @@ mod tests {
     }
 
     #[test]
+    fn zero_column_table_renders_without_panicking() {
+        // Regression: the separator width underflowed (`w.len() - 1`) on a
+        // table with no columns.
+        let t = Table::new("empty", &[]);
+        let s = t.render();
+        assert!(s.contains("empty"));
+        let mut rows_only = Table::new("", &[]);
+        rows_only.row(vec![]);
+        let _ = rows_only.render();
+        let _ = rows_only.render_markdown();
+    }
+
+    #[test]
     #[should_panic(expected = "row width")]
     fn table_rejects_bad_rows() {
         let mut t = Table::new("x", &["a", "b"]);
@@ -227,4 +242,5 @@ mod tests {
         assert_eq!(fmt_ratio(1.0, 0.0), "n/a");
     }
 }
+pub mod gate;
 pub mod harness;

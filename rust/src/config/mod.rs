@@ -109,6 +109,8 @@ impl ServingConfig {
         e.max_batch = get_us("engine.max_batch", e.max_batch)?;
         e.max_new_tokens =
             get_us("engine.max_new_tokens", e.max_new_tokens)?;
+        e.page_size = get_us("cache.page_size", e.page_size)?;
+        e.cache_pages = get_us("cache.max_pages", e.cache_pages)?;
         e.planner.replan_interval =
             get_us("planner.replan_interval",
                    e.planner.replan_interval as usize)? as u64;
@@ -121,7 +123,7 @@ impl ServingConfig {
         let routing = RoutingPolicy::parse(&routing_s).ok_or_else(|| {
             anyhow::anyhow!(
                 "unknown server.routing {routing_s:?} \
-                 (expected least-loaded or round-robin)"
+                 (expected least-loaded, round-robin or cache-pressure)"
             )
         })?;
         let server = ServerConfig {
@@ -155,6 +157,37 @@ mod tests {
         assert!(c.engine.early_prune);
         assert_eq!(c.server.replicas, 1);
         assert_eq!(c.server.routing, RoutingPolicy::LeastLoaded);
+    }
+
+    #[test]
+    fn cache_knobs_parse_and_validate() {
+        let c = ServingConfig::load(
+            None,
+            &["cache.page_size=16".into(), "cache.max_pages=48".into()],
+        )
+        .unwrap();
+        assert_eq!(c.engine.page_size, 16);
+        assert_eq!(c.engine.cache_pages, 48);
+        // defaults
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert_eq!(d.engine.page_size, propd_default_page_size());
+        assert_eq!(d.engine.cache_pages, 0);
+        assert!(ServingConfig::load(None, &["cache.page_size=0".into()])
+            .is_err());
+    }
+
+    fn propd_default_page_size() -> usize {
+        crate::kvcache::DEFAULT_PAGE_SIZE
+    }
+
+    #[test]
+    fn cache_pressure_routing_parses() {
+        let c = ServingConfig::load(
+            None,
+            &["server.routing=\"cache-pressure\"".into()],
+        )
+        .unwrap();
+        assert_eq!(c.server.routing, RoutingPolicy::CachePressure);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use anyhow::{bail, Context, Result};
 use super::requests::{Completion, ReqState, RequestSpec};
 use super::{EngineConfig, EngineKind};
 use crate::estimator::{AcceptanceTracker, PerfModel, Planner};
-use crate::kvcache::{KvCache, KvGeometry};
+use crate::kvcache::{BatchAssembler, KvCache, KvGeometry};
 use crate::manifest::{Entry, ModelMeta};
 use crate::metrics::EngineMetrics;
 use crate::runtime::Runtime;
@@ -44,8 +44,9 @@ pub struct Engine<'rt> {
     pub(super) builder: TreeBuilder,
     pub metrics: EngineMetrics,
     pub(super) clock: Instant,
-    /// Reusable batch-KV assembly scratch (§Perf: zero-alloc hot loop).
-    pub(super) kv_scratch: Vec<f32>,
+    /// Persistent incremental batch assembly (§Perf: per-step copy cost is
+    /// proportional to accepted tokens, not sequence length).
+    pub(super) assembler: BatchAssembler,
     next_id: u64,
 }
 
@@ -132,7 +133,21 @@ impl<'rt> Engine<'rt> {
             buckets: tree_buckets.clone(),
             ..cfg.planner.clone()
         };
-        let kv = KvCache::new(KvGeometry::of(&model), cfg.max_batch);
+        let kv = KvCache::with_pages(
+            KvGeometry::of(&model),
+            cfg.max_batch,
+            cfg.page_size,
+            cfg.cache_pages,
+        );
+        if kv.guaranteed_lanes() == 0 {
+            bail!(
+                "cache.max_pages {} cannot hold one max_seq sequence \
+                 ({} pages of {} positions needed)",
+                cfg.cache_pages,
+                model.max_seq.div_ceil(kv.page_size()),
+                kv.page_size()
+            );
+        }
         Ok(Engine {
             tree_buckets,
             late_buckets,
@@ -155,7 +170,7 @@ impl<'rt> Engine<'rt> {
             done: Vec::new(),
             metrics: EngineMetrics::default(),
             clock: Instant::now(),
-            kv_scratch: Vec::new(),
+            assembler: BatchAssembler::new(),
             next_id: 1,
         })
     }
@@ -224,12 +239,44 @@ impl<'rt> Engine<'rt> {
         self.metrics.busy_seconds += t0.elapsed().as_secs_f64();
         self.metrics.steps += 1;
         self.retire();
+        // Sample occupancy after retirement so an engine going idle
+        // publishes the pages actually still held.
+        self.metrics.kv_pages_in_use = self.kv.pages_in_use() as u64;
+        self.metrics.kv_page_capacity = self.kv.page_capacity() as u64;
         Ok(true)
     }
 
+    /// KV pages currently assigned to active requests.
+    pub fn kv_pages_in_use(&self) -> usize {
+        self.kv.pages_in_use()
+    }
+
+    /// Total pages the KV page pool may hand out.
+    pub fn kv_page_capacity(&self) -> usize {
+        self.kv.page_capacity()
+    }
+
+    /// KV pages still available (the cache-pressure routing signal).
+    pub fn kv_free_pages(&self) -> usize {
+        self.kv.free_pages()
+    }
+
+    /// Effective concurrent-lane budget: `max_batch` additionally capped
+    /// by the page pool's worst-case coverage.  Admission, the worker
+    /// pull, and dispatch-side routing all use this so a finite
+    /// `cache.max_pages` shrinks the batch everywhere consistently.
+    pub fn lane_budget(&self) -> usize {
+        self.cfg.max_batch.min(self.kv.guaranteed_lanes())
+    }
+
     /// Admit queued requests into free lanes (batched prefill).
+    ///
+    /// Admission is additionally bounded by the KV page pool's worst-case
+    /// coverage (`guaranteed_lanes`): with a finite `cache.max_pages`, a
+    /// burst of long requests throttles here instead of exhausting the
+    /// pool mid-decode and killing the replica.
     fn admit(&mut self) -> Result<()> {
-        let free = self.cfg.max_batch.saturating_sub(self.active.len());
+        let free = self.lane_budget().saturating_sub(self.active.len());
         if free == 0 || self.queue.is_empty() {
             return Ok(());
         }
@@ -279,7 +326,7 @@ impl<'rt> Engine<'rt> {
                 0,
                 lane,
                 &pairs,
-            );
+            ).context("prefill kv commit")?;
             let row = logits.f32_chunk(lane * v, v);
             let pending_root = argmax(row) as u32;
             let medusa_rows =

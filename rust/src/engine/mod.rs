@@ -91,6 +91,12 @@ pub struct EngineConfig {
     pub max_batch: usize,
     /// Default per-request generation budget.
     pub max_new_tokens: usize,
+    /// KV-cache positions per page (`cache.page_size`; clamped to the
+    /// model's `max_seq` at engine construction).
+    pub page_size: usize,
+    /// Total pages in the KV page pool (`cache.max_pages`; 0 auto-sizes to
+    /// full coverage, `max_batch × ⌈max_seq / page_size⌉`).
+    pub cache_pages: usize,
 }
 
 impl EngineConfig {
@@ -110,6 +116,8 @@ impl EngineConfig {
             planner: PlannerConfig::default(),
             max_batch: 8,
             max_new_tokens: 64,
+            page_size: crate::kvcache::DEFAULT_PAGE_SIZE,
+            cache_pages: 0,
         }
     }
 
@@ -137,6 +145,9 @@ impl EngineConfig {
         }
         if self.max_batch == 0 {
             bail!("max_batch must be >= 1");
+        }
+        if self.page_size == 0 {
+            bail!("cache.page_size must be >= 1");
         }
         Ok(())
     }
@@ -189,6 +200,9 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = EngineConfig::new("m", EngineKind::ProPD);
         c.accept_alpha = 2.0;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::new("m", EngineKind::ProPD);
+        c.page_size = 0;
         assert!(c.validate().is_err());
     }
 

@@ -33,14 +33,9 @@ impl<'rt> Engine<'rt> {
             toks[i] = toks[0];
             lens[i] = lens[0];
         }
-        let g = self.kv.geometry();
-        let kv_shape = [g.layers, 2, b, g.max_seq, g.heads, g.head_dim];
-        let kv_elems: usize = kv_shape.iter().product();
-        let mut scratch = std::mem::take(&mut self.kv_scratch);
-        scratch.resize(kv_elems, 0.0);
-        self.kv.write_batch_prefix(&lanes, &mut scratch[..kv_elems]);
-        let kv_buf = self.rt.upload_f32(&scratch[..kv_elems], &kv_shape)?;
-        self.kv_scratch = scratch;
+        // Incremental assembly: in the steady state only the single column
+        // committed last step is copied per lane (§Perf).
+        let (kv_buf, asm) = self.assembler.assemble(&mut self.kv, &lanes);
         let host_ready = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
@@ -54,7 +49,7 @@ impl<'rt> Engine<'rt> {
             .run_mixed(&[
                 DynArg::Host(&tok_t),
                 DynArg::Host(&len_t),
-                DynArg::Buf(&kv_buf),
+                DynArg::Buf(kv_buf),
             ])
             .context("decode")?;
         let exec = t1.elapsed().as_secs_f64();
@@ -74,7 +69,7 @@ impl<'rt> Engine<'rt> {
                 0,
                 i,
                 &[(0, pos)],
-            );
+            ).context("decode kv commit")?;
             req.tokens.push(committed);
             let row = logits.f32_chunk(i * v, v);
             req.pending_root = argmax(row) as u32;
@@ -90,6 +85,9 @@ impl<'rt> Engine<'rt> {
         self.metrics.late_time.record(exec);
         self.metrics.host_time.record(host_ready + (total - host_ready - exec));
         self.metrics.tree_size.record(1.0);
+        self.metrics.assembly_bytes.record(asm.bytes_copied as f64);
+        self.metrics.assembly_bytes_copied += asm.bytes_copied;
+        self.metrics.assembly_bytes_full += asm.bytes_full;
         Ok(())
     }
 }

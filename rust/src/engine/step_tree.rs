@@ -149,18 +149,12 @@ impl<'rt> Engine<'rt> {
         let tree_pos = pack_tree_positions(&tr, &sl, t_bucket);
         let tree_mask = pack_tree_masks(&mr, t_bucket);
         let seq_len_t = pack_seq_lens(&sl);
-        // The KV tensor is shared by both stages: assembled into a
-        // reusable scratch buffer and uploaded ONCE per step as a device
-        // buffer passed to both calls (§Perf iterations 2-3).
-        let g = self.kv.geometry();
-        let kv_shape =
-            [g.layers, 2, b, g.max_seq, g.heads, g.head_dim];
-        let kv_elems: usize = kv_shape.iter().product();
-        let mut scratch = std::mem::take(&mut self.kv_scratch);
-        scratch.resize(kv_elems, 0.0);
-        self.kv.write_batch_prefix(&lanes, &mut scratch[..kv_elems]);
-        let kv_buf = self.rt.upload_f32(&scratch[..kv_elems], &kv_shape)?;
-        self.kv_scratch = scratch;
+        // The KV tensor is shared by both stages: the persistent batch
+        // tensor is brought up to date incrementally — only columns
+        // committed since the previous step (plus lane join/leave deltas)
+        // are copied — and stays resident across both calls (§Perf
+        // iterations 2-4).
+        let (kv_buf, asm) = self.assembler.assemble(&mut self.kv, &lanes);
         let host_prep = t0.elapsed().as_secs_f64();
 
         // ------------------------------------------------ 2. early stage
@@ -175,7 +169,7 @@ impl<'rt> Engine<'rt> {
                 DynArg::Host(&tree_pos),
                 DynArg::Host(&tree_mask),
                 DynArg::Host(&seq_len_t),
-                DynArg::Buf(&kv_buf),
+                DynArg::Buf(kv_buf),
             ])
             .context("verify_early")?;
         let early_secs = t1.elapsed().as_secs_f64();
@@ -238,7 +232,7 @@ impl<'rt> Engine<'rt> {
                 DynArg::Host(&ppos),
                 DynArg::Host(&pmask),
                 DynArg::Host(&pseq),
-                DynArg::Buf(&kv_buf),
+                DynArg::Buf(kv_buf),
             ])
             .context("verify_late")?;
         let late_secs = t2.elapsed().as_secs_f64();
@@ -301,7 +295,7 @@ impl<'rt> Engine<'rt> {
                 0,
                 i,
                 &pairs_early,
-            );
+            ).context("early kv commit")?;
             self.kv.commit_columns(
                 slot,
                 tree_kv_late.as_f32(),
@@ -309,7 +303,7 @@ impl<'rt> Engine<'rt> {
                 n,
                 i,
                 &pairs_late,
-            );
+            ).context("late kv commit")?;
             // Book-keeping.
             let deepest = *res.path.last().unwrap();
             let med_rows = medusa
@@ -356,6 +350,9 @@ impl<'rt> Engine<'rt> {
             .record(host_prep + host_mid + host_post);
         self.metrics.tree_size.record(t_bucket as f64);
         self.metrics.pruned_size.record(tp_bucket as f64);
+        self.metrics.assembly_bytes.record(asm.bytes_copied as f64);
+        self.metrics.assembly_bytes_copied += asm.bytes_copied;
+        self.metrics.assembly_bytes_full += asm.bytes_full;
         let _ = committed_total;
         Ok(())
     }

@@ -1,0 +1,110 @@
+//! Incremental batch assembly: a persistent device-facing KV tensor per
+//! replica, updated with only the columns committed since the previous
+//! engine step.
+//!
+//! The dense path re-copied every active slot's whole prefix into a scratch
+//! buffer each iteration and re-uploaded it, so per-step host cost grew
+//! with sequence length even when one token was committed.  The assembler
+//! instead keeps the `[L, 2, b, S, H, Dh]` batch tensor resident (a
+//! [`DeviceBuffer`]) and, per lane, copies only `[synced, seq_len)` — the
+//! columns committed since the lane was last synced.  A lane whose occupant
+//! changed (slot handed to a new request, or the slot was truncated) is
+//! rebuilt from position 0, detected via the cache's [`SlotStamp`].  Stale
+//! data past a lane's committed length is never attended (the past mask
+//! excludes it) — the same contract `write_batch_prefix` relied on.
+//!
+//! When the batch bucket changes the lane stride changes, so the whole
+//! tensor is reallocated and rebuilt; in the steady state (stable bucket,
+//! stable lanes) per-step copy cost is proportional to *accepted tokens*,
+//! not sequence length.
+//!
+//! Device boundary: with the sim backend, "resident" is host memory, so
+//! the assembler owns the [`DeviceBuffer`] and writes columns in place.
+//! A compiled backend must route the same per-lane `[from, seq)` ranges
+//! through a runtime column-upload API instead (the sync granularity —
+//! contiguous column ranges per lane — is exactly what such an API
+//! needs); see DESIGN.md § Runtime backends.
+
+use crate::runtime::literal::HostTensor;
+use crate::runtime::registry::DeviceBuffer;
+
+use super::{KvCache, SlotStamp};
+
+#[derive(Debug, Clone, Copy)]
+struct LaneState {
+    stamp: SlotStamp,
+    /// Committed columns `[0, synced)` already present in the batch tensor.
+    synced: usize,
+}
+
+/// Per-call copy accounting (all figures in bytes of f32 payload).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AssemblyStats {
+    /// Bytes actually copied into the batch tensor this step.
+    pub bytes_copied: u64,
+    /// Bytes a full per-step prefix re-assembly would have copied.
+    pub bytes_full: u64,
+    /// Lanes rebuilt from position 0 (occupant change / bucket change).
+    pub lanes_rebuilt: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct BatchAssembler {
+    bucket: usize,
+    lanes: Vec<Option<LaneState>>,
+    buf: Option<DeviceBuffer>,
+}
+
+impl BatchAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bring the persistent batch tensor up to date for `lane_slots` and
+    /// return it alongside this step's copy statistics.
+    ///
+    /// Takes the cache mutably to advance each slot's synced watermark
+    /// (`note_synced`) — a cache therefore has a single consuming
+    /// assembler, which is the engine topology (one per replica).
+    pub fn assemble(
+        &mut self,
+        kv: &mut KvCache,
+        lane_slots: &[usize],
+    ) -> (&DeviceBuffer, AssemblyStats) {
+        let g = kv.geometry();
+        let b = lane_slots.len();
+        let col = g.col();
+        let elems = g.layers * 2 * b * g.max_seq * col;
+        let reusable = matches!(&self.buf,
+            Some(d) if b == self.bucket && d.tensor.elements() == elems);
+        if !reusable {
+            let shape = vec![g.layers, 2, b, g.max_seq, g.heads, g.head_dim];
+            self.buf = Some(DeviceBuffer {
+                tensor: HostTensor::f32(shape, vec![0.0; elems]),
+            });
+            self.bucket = b;
+            self.lanes = vec![None; b];
+        }
+        let mut stats = AssemblyStats::default();
+        // Bytes of one committed position across all layers and K+V.
+        let pos_bytes = (g.layers * 2 * col * std::mem::size_of::<f32>()) as u64;
+        let out = self.buf.as_mut().unwrap().tensor.as_f32_mut();
+        for (lane, &slot) in lane_slots.iter().enumerate() {
+            let stamp = kv.stamp(slot);
+            let seq = kv.seq_len(slot);
+            let from = match self.lanes[lane] {
+                Some(st) if st.stamp == stamp && st.synced <= seq => st.synced,
+                _ => {
+                    stats.lanes_rebuilt += 1;
+                    0
+                }
+            };
+            kv.write_lane_range(slot, lane, b, from, seq, out);
+            kv.note_synced(slot);
+            stats.bytes_copied += (seq - from) as u64 * pos_bytes;
+            stats.bytes_full += seq as u64 * pos_bytes;
+            self.lanes[lane] = Some(LaneState { stamp, synced: seq });
+        }
+        (self.buf.as_ref().unwrap(), stats)
+    }
+}

@@ -1,0 +1,147 @@
+//! Fixed-size page pool backing the paged KV cache.
+//!
+//! One page holds `page_size` consecutive sequence positions of one slot,
+//! for *every* layer and both K/V (layout `[L, 2, page_size, H·Dh]`), so
+//! committing one token touches exactly one page.  Pages are handed out
+//! through a LIFO free list; the backing store grows lazily (one page at a
+//! time, up to `max_pages`), so resident memory tracks the columns actually
+//! committed instead of `slots × max_seq`.
+
+#[derive(Debug)]
+pub struct PagePool {
+    page_elems: usize,
+    max_pages: usize,
+    /// Backing store for every page ever allocated; grows lazily.
+    data: Vec<f32>,
+    /// Recycled page ids (LIFO for locality).
+    free: Vec<u32>,
+    /// Per-allocated-page in-use flag (double-free / leak accounting).
+    in_use: Vec<bool>,
+}
+
+impl PagePool {
+    pub fn new(page_elems: usize, max_pages: usize) -> Self {
+        assert!(page_elems > 0, "page_elems must be >= 1");
+        PagePool {
+            page_elems,
+            max_pages,
+            data: Vec::new(),
+            free: Vec::new(),
+            in_use: Vec::new(),
+        }
+    }
+
+    /// Hand out a zeroed page, recycling before growing.  `None` when the
+    /// pool is at `max_pages` with nothing free.
+    pub fn alloc(&mut self) -> Option<u32> {
+        if let Some(p) = self.free.pop() {
+            debug_assert!(!self.in_use[p as usize]);
+            self.in_use[p as usize] = true;
+            let off = p as usize * self.page_elems;
+            self.data[off..off + self.page_elems].fill(0.0);
+            return Some(p);
+        }
+        let grown = self.in_use.len();
+        if grown >= self.max_pages {
+            return None;
+        }
+        self.data.resize(self.data.len() + self.page_elems, 0.0);
+        self.in_use.push(true);
+        Some(grown as u32)
+    }
+
+    pub fn release(&mut self, page: u32) {
+        let i = page as usize;
+        assert!(self.in_use[i], "double release of page {page}");
+        self.in_use[i] = false;
+        self.free.push(page);
+    }
+
+    pub fn page(&self, page: u32) -> &[f32] {
+        let off = page as usize * self.page_elems;
+        &self.data[off..off + self.page_elems]
+    }
+
+    pub fn page_mut(&mut self, page: u32) -> &mut [f32] {
+        let off = page as usize * self.page_elems;
+        &mut self.data[off..off + self.page_elems]
+    }
+
+    pub fn page_elems(&self) -> usize {
+        self.page_elems
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    /// Pages whose backing memory has ever been allocated.
+    pub fn allocated(&self) -> usize {
+        self.in_use.len()
+    }
+
+    /// Pages currently assigned to slots.
+    pub fn in_use(&self) -> usize {
+        self.in_use.len() - self.free.len()
+    }
+
+    /// Pages still available (recycled + never-grown headroom).
+    pub fn free_count(&self) -> usize {
+        self.max_pages - self.in_use()
+    }
+
+    /// Resident f32 elements in the backing store.
+    pub fn resident_elements(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_lazily_and_recycles() {
+        let mut p = PagePool::new(4, 3);
+        assert_eq!(p.resident_elements(), 0);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.resident_elements(), 8);
+        assert_eq!(p.in_use(), 2);
+        p.release(a);
+        assert_eq!(p.in_use(), 1);
+        // Recycled before growing: same id, no new memory.
+        assert_eq!(p.alloc().unwrap(), a);
+        assert_eq!(p.resident_elements(), 8);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = PagePool::new(2, 2);
+        assert!(p.alloc().is_some());
+        assert!(p.alloc().is_some());
+        assert!(p.alloc().is_none());
+        assert_eq!(p.free_count(), 0);
+    }
+
+    #[test]
+    fn recycled_pages_are_zeroed() {
+        let mut p = PagePool::new(3, 1);
+        let a = p.alloc().unwrap();
+        p.page_mut(a).fill(7.0);
+        p.release(a);
+        let b = p.alloc().unwrap();
+        assert_eq!(a, b);
+        assert!(p.page(b).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut p = PagePool::new(1, 1);
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+}

@@ -7,7 +7,9 @@
 //!
 //! `--replicas N` scales the server to N engine replicas; `--sim` swaps
 //! the artifacts runtime for the deterministic reference backend (no
-//! artifacts directory needed).
+//! artifacts directory needed).  `--routing cache-pressure` steers new
+//! requests away from page-starved replicas; `--page-size N` sets the KV
+//! cache page granularity (positions per page).
 //!
 //! (The offline crate mirror has no clap; argument parsing is hand-rolled.)
 
@@ -71,6 +73,10 @@ fn parse_args() -> Result<Args> {
             "--routing" => {
                 let v = val("--routing")?;
                 a.sets.push(format!("server.routing=\"{v}\""));
+            }
+            "--page-size" => {
+                let v = val("--page-size")?;
+                a.sets.push(format!("cache.page_size={v}"));
             }
             "--sim" => a.sim = true,
             other => bail!("unknown flag {other:?} (try `propd help`)"),
@@ -196,7 +202,7 @@ fn main() -> Result<()> {
                  usage: propd <serve|generate|inspect|selftest> \
                  [--config f.toml] [--set k=v] [--engine kind] [--size s] \
                  [--prompt p] [--max-new n] [--artifacts dir] \
-                 [--replicas n] [--routing policy] [--sim]"
+                 [--replicas n] [--routing policy] [--page-size n] [--sim]"
             );
             Ok(())
         }

@@ -94,9 +94,27 @@ impl MetricsHub {
             replicas.iter().map(|r| r.pending as f64).sum(),
         );
         for k in ["steps", "tokens_generated", "requests_completed",
-                  "busy_seconds", "tokens_per_second"] {
+                  "busy_seconds", "tokens_per_second",
+                  "assembly_bytes_copied_total", "assembly_bytes_full_total",
+                  "kv_pages_in_use", "kv_page_capacity"] {
             totals.insert(k.into(), sum(k));
         }
+        // Fleet cache economics: ratios recomputed from the summed parts
+        // (a ratio-of-sums, not a mean-of-ratios).
+        let full = sum("assembly_bytes_full_total");
+        totals.insert(
+            "assembly_savings_ratio".into(),
+            if full <= 0.0 {
+                0.0
+            } else {
+                1.0 - sum("assembly_bytes_copied_total") / full
+            },
+        );
+        let cap = sum("kv_page_capacity");
+        totals.insert(
+            "kv_page_occupancy".into(),
+            if cap <= 0.0 { 0.0 } else { sum("kv_pages_in_use") / cap },
+        );
         for k in ["step_time_mean_s", "accept_len_mean", "tree_size_mean",
                   "pruned_size_mean", "prune_rate_mean"] {
             totals.insert(k.into(), weighted(k, "steps"));
@@ -168,6 +186,33 @@ mod tests {
         assert!((agg.total("accept_len_mean") - 2.5).abs() < 1e-9);
         assert_eq!(agg.replicas.len(), 2);
         assert!(agg.summary().contains("served=[3, 5]"));
+    }
+
+    #[test]
+    fn cache_economics_roll_up_as_ratio_of_sums() {
+        let hub = MetricsHub::new(2);
+        let a = EngineMetrics {
+            assembly_bytes_copied: 10,
+            assembly_bytes_full: 100,
+            kv_pages_in_use: 2,
+            kv_page_capacity: 10,
+            ..Default::default()
+        };
+        let b = EngineMetrics {
+            assembly_bytes_copied: 40,
+            assembly_bytes_full: 100,
+            kv_pages_in_use: 8,
+            kv_page_capacity: 10,
+            ..Default::default()
+        };
+        hub.publish(0, 0, 0, &a);
+        hub.publish(1, 0, 0, &b);
+        let agg = hub.aggregate();
+        assert_eq!(agg.total("assembly_bytes_copied_total"), 50.0);
+        // ratio of sums: 1 - 50/200 = 0.75.
+        assert!((agg.total("assembly_savings_ratio") - 0.75).abs() < 1e-12);
+        // occupancy: (2+8)/(10+10) = 0.5.
+        assert!((agg.total("kv_page_occupancy") - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -31,12 +31,23 @@ pub struct EngineMetrics {
     pub request_latency: Summary,
     /// Queueing delay before prefill (s).
     pub queue_delay: Summary,
+    /// Bytes copied into the batch KV tensor per step by incremental
+    /// assembly (only columns committed since the previous step).
+    pub assembly_bytes: Summary,
     pub steps: u64,
     pub tokens_generated: u64,
     pub requests_completed: u64,
     pub prefills: u64,
     /// Engine wall-clock while at least one request was active (s).
     pub busy_seconds: f64,
+    /// Total bytes incremental assembly actually copied.
+    pub assembly_bytes_copied: u64,
+    /// Bytes a full per-step prefix re-assembly would have copied
+    /// (counterfactual; the savings denominator).
+    pub assembly_bytes_full: u64,
+    /// KV page-pool gauges sampled after the latest step.
+    pub kv_pages_in_use: u64,
+    pub kv_page_capacity: u64,
 }
 
 impl EngineMetrics {
@@ -54,6 +65,26 @@ impl EngineMetrics {
 
     pub fn mean_prune_rate(&self) -> f64 {
         self.prune_rate.mean()
+    }
+
+    /// Fraction of full re-assembly traffic avoided by incremental
+    /// assembly (0 when nothing was assembled yet).
+    pub fn assembly_savings_ratio(&self) -> f64 {
+        if self.assembly_bytes_full == 0 {
+            0.0
+        } else {
+            1.0 - self.assembly_bytes_copied as f64
+                / self.assembly_bytes_full as f64
+        }
+    }
+
+    /// KV page occupancy in [0, 1] after the latest step.
+    pub fn kv_page_occupancy(&self) -> f64 {
+        if self.kv_page_capacity == 0 {
+            0.0
+        } else {
+            self.kv_pages_in_use as f64 / self.kv_page_capacity as f64
+        }
     }
 
     /// Render a flat key→value report (stable keys; json/markdown-friendly).
@@ -79,6 +110,17 @@ impl EngineMetrics {
                  self.request_latency.mean());
         m.insert("request_latency_p99_s".into(), self.request_latency.p99());
         m.insert("queue_delay_mean_s".into(), self.queue_delay.mean());
+        m.insert("assembly_bytes_per_step_mean".into(),
+                 self.assembly_bytes.mean());
+        m.insert("assembly_bytes_copied_total".into(),
+                 self.assembly_bytes_copied as f64);
+        m.insert("assembly_bytes_full_total".into(),
+                 self.assembly_bytes_full as f64);
+        m.insert("assembly_savings_ratio".into(),
+                 self.assembly_savings_ratio());
+        m.insert("kv_pages_in_use".into(), self.kv_pages_in_use as f64);
+        m.insert("kv_page_capacity".into(), self.kv_page_capacity as f64);
+        m.insert("kv_page_occupancy".into(), self.kv_page_occupancy());
         m
     }
 }
@@ -106,8 +148,24 @@ mod tests {
             "accept_len_mean",
             "prune_rate_mean",
             "step_time_p99_s",
+            "assembly_bytes_copied_total",
+            "assembly_savings_ratio",
+            "kv_page_occupancy",
         ] {
             assert!(r.contains_key(k), "missing {k}");
         }
+    }
+
+    #[test]
+    fn cache_economics_ratios() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.assembly_savings_ratio(), 0.0);
+        assert_eq!(m.kv_page_occupancy(), 0.0);
+        m.assembly_bytes_copied = 25;
+        m.assembly_bytes_full = 100;
+        assert!((m.assembly_savings_ratio() - 0.75).abs() < 1e-12);
+        m.kv_pages_in_use = 3;
+        m.kv_page_capacity = 12;
+        assert!((m.kv_page_occupancy() - 0.25).abs() < 1e-12);
     }
 }

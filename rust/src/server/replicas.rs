@@ -31,8 +31,10 @@ pub fn replica_loop(
     let mut in_flight: Vec<(u64, mpsc::Sender<Completion>)> = Vec::new();
     let mut served = 0u64;
     loop {
-        // Pull new work (blocking only when fully idle).
-        let free = engine.cfg.max_batch.saturating_sub(engine.pending());
+        // Pull new work (blocking only when fully idle).  The pull is
+        // bounded by the page-capped lane budget, not raw max_batch, so a
+        // finite cache.max_pages does not strand requests in this feed.
+        let free = engine.lane_budget().saturating_sub(engine.pending());
         let new = if engine.pending() == 0 {
             replica.queue.drain_blocking(free.max(1))
         } else {
@@ -60,6 +62,10 @@ pub fn replica_loop(
             }
         }
         replica.load.set_pending(engine.pending());
+        replica
+            .load
+            .set_cache(engine.kv_free_pages(), engine.kv_page_capacity());
+        replica.load.set_lane_budget(engine.lane_budget());
         if completed || !progressed {
             hub.publish(replica.id, served, engine.pending(), &engine.metrics);
         }

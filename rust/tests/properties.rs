@@ -486,7 +486,8 @@ fn prop_kv_commit_then_batch_roundtrip() {
                 .map(|j| (j, rng.below(geom.max_seq)))
                 .collect();
             kv.commit_columns(slot, &blk, (geom.layers, 1, t), 0, 0,
-                              &pairs);
+                              &pairs)
+                .unwrap();
             for &(j, pos) in &pairs {
                 for l in 0..geom.layers {
                     for c in 0..2 {
