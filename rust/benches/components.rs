@@ -8,8 +8,12 @@
 //! KV batch assembly, input packing.  No artifacts required.
 
 use propd::bench::{bench_header, Bencher};
-use propd::estimator::{AcceptanceTracker, PerfModel};
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::estimator::{
+    allocate_budget, AcceptanceTracker, BudgetMode, PerfModel,
+};
 use propd::kvcache::{BatchAssembler, KvCache, KvGeometry};
+use propd::runtime::{Runtime, SimConfig};
 use propd::tree::builder::HeadCandidates;
 use propd::tree::{accept_path, prune_tree, TokenTree, TreeBuilder, TreeMask};
 use propd::util::rng::Rng;
@@ -93,6 +97,24 @@ fn main() {
     }));
     results.push(b.run("perf_model_record", || {
         perf.record(32, 0.003);
+    }));
+
+    // ---- per-lane budget allocation (tentpole hot path) ----
+    // A skewed batch: two hot lanes with steep curves, six stragglers.
+    let alloc_curves: Vec<Vec<f64>> = (0..8)
+        .map(|lane| {
+            let m = if lane < 2 { 0.8 } else { 0.05 };
+            (0..64).map(|i| 1.0 + m * i as f64).collect()
+        })
+        .collect();
+    let alloc_caps = vec![64usize; 8];
+    results.push(b.run("tree_alloc_b8_budget128", || {
+        std::hint::black_box(allocate_budget(
+            &alloc_curves,
+            &alloc_caps,
+            128,
+            propd::estimator::alloc::DEFAULT_MIN_GAIN,
+        ));
     }));
 
     // ---- §4.2.2 tracker ----
@@ -193,4 +215,58 @@ fn main() {
     for r in &results {
         println!("{}", r.summary());
     }
+
+    skewed_acceptance_scenario();
+}
+
+/// End-to-end skewed-acceptance workload on the sim backend: one
+/// high-acceptance lane (oracle-perfect medusa heads) plus three
+/// stragglers (deterministic-junk heads via `medusa_flaky_below`).  The
+/// per-lane budgeted allocator must convert the same verified-token
+/// budget into strictly more accepted tokens per verified token than the
+/// uniform-bucket baseline — the tentpole's headline economics.
+fn skewed_acceptance_scenario() {
+    // 'u' (117) ≥ 97 → oracle-perfect heads; uppercase starts < 97 → junk.
+    let sim = SimConfig { medusa_flaky_below: 97, ..Default::default() };
+    let rt = Runtime::sim(&sim);
+    let prompts = [
+        "user: Explain how the batch engine balances decode \
+         throughput.\nassistant:",
+        "User: ONE straggler prompt with junk speculation.\nassistant:",
+        "User: TWO straggler prompt with junk speculation.\nassistant:",
+        "User: SIX straggler prompt with junk speculation.\nassistant:",
+    ];
+    let run = |mode: BudgetMode| -> (f64, f64, f64) {
+        let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+        cfg.max_batch = prompts.len();
+        cfg.accept_alpha = 0.3; // adapt within a request's lifetime
+        cfg.planner.budget_mode = mode;
+        let mut engine = Engine::new(&rt, cfg).expect("engine");
+        for p in &prompts {
+            engine.submit(p, 56);
+        }
+        engine.run_to_completion().expect("run");
+        let r = engine.metrics.report();
+        (
+            r["accept_per_verified"],
+            r["verify_tokens_total"],
+            r["tree_alloc_lane_size_mean"],
+        )
+    };
+    let (uni_ratio, uni_verified, uni_mean) = run(BudgetMode::Uniform);
+    let (pl_ratio, pl_verified, pl_mean) = run(BudgetMode::PerLane);
+    println!();
+    println!("skewed-acceptance workload (1 hot lane + 3 stragglers):");
+    println!(
+        "  uniform  : accept/verified {uni_ratio:.3} \
+         (verified {uni_verified:.0}, mean lane size {uni_mean:.2})"
+    );
+    println!(
+        "  per-lane : accept/verified {pl_ratio:.3} \
+         (verified {pl_verified:.0}, mean lane size {pl_mean:.2})"
+    );
+    println!(
+        "  per-lane / uniform accept-per-verified: {:.2}x",
+        pl_ratio / uni_ratio.max(1e-9)
+    );
 }

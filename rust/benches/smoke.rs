@@ -23,6 +23,9 @@ use propd::bench::gate::{self, Baseline, Direction};
 use propd::bench::harness::{run_trace, RunSpec};
 use propd::bench::{Bencher, Table};
 use propd::engine::{EngineConfig, EngineKind};
+use propd::estimator::{
+    allocate_budget, allocation_gain, gain_at, alloc::DEFAULT_MIN_GAIN,
+};
 use propd::kvcache::{BatchAssembler, KvCache, KvGeometry};
 use propd::runtime::{Runtime, SimConfig};
 use propd::workload::PromptSet;
@@ -65,6 +68,36 @@ fn measure() -> Result<BTreeMap<String, f64>> {
     m.insert(
         "assembly_copied_over_full".into(),
         copied / full.max(1.0),
+    );
+
+    // ---- per-lane budget allocator (deterministic fixture) ----
+    // A skewed-acceptance batch as the allocator sees it: one hot lane
+    // (every extra node worth a full expected token) and three stragglers
+    // (flat curves — extra nodes are worthless).  Pure function of the
+    // fixture, so both metrics gate machine-independently:
+    //  - tree_alloc_util: the granted budget is fully spent while any
+    //    lane still has positive marginal gain (here: exactly 1.0).
+    //  - tree_alloc_gain_capture: expected accepted tokens of the
+    //    water-filled allocation vs the uniform same-budget split
+    //    (16/7 ≈ 2.29 on this fixture) — the tentpole win.
+    let lanes = 4usize;
+    let budget = 16usize;
+    let hot: Vec<f64> = (0..budget).map(|i| (i + 1) as f64).collect();
+    let cold: Vec<f64> = vec![1.0; budget];
+    let curves =
+        vec![hot, cold.clone(), cold.clone(), cold];
+    let caps = vec![budget; lanes];
+    let sizes = allocate_budget(&curves, &caps, budget, DEFAULT_MIN_GAIN);
+    let live: usize = sizes.iter().sum();
+    m.insert("tree_alloc_util".into(), live as f64 / budget as f64);
+    let per_lane_gain = allocation_gain(&curves, &sizes);
+    let uniform_gain: f64 = curves
+        .iter()
+        .map(|c| gain_at(c, budget / lanes))
+        .sum();
+    m.insert(
+        "tree_alloc_gain_capture".into(),
+        per_lane_gain / uniform_gain.max(1e-9),
     );
 
     // ---- host-dependent microbenchmarks (informational) ----
@@ -124,18 +157,24 @@ fn measure() -> Result<BTreeMap<String, f64>> {
     Ok(m)
 }
 
-/// Direction + gating per metric name (used by `--update`).
-fn metric_meta(name: &str) -> (Direction, bool) {
+/// Direction + gating + per-entry tolerance per metric name (used by
+/// `--update`; overrides must survive a refresh).
+fn metric_meta(name: &str) -> (Direction, bool, Option<f64>) {
     match name {
         // Deterministic counters: gate.
         "ar_tokens" | "propd_static_tokens" | "propd_static_accept_len"
-        | "propd_step_reduction" => (Direction::Higher, true),
-        "ar_steps" | "propd_static_steps" => (Direction::Lower, true),
-        "assembly_copied_over_full" => (Direction::Lower, true),
+        | "propd_step_reduction" => (Direction::Higher, true, None),
+        "ar_steps" | "propd_static_steps" => (Direction::Lower, true, None),
+        "assembly_copied_over_full" => (Direction::Lower, true, None),
+        // Allocator economics on the deterministic skewed fixture; the
+        // per-entry tolerance matches the armed baseline entries.
+        n if n.starts_with("tree_alloc_") => {
+            (Direction::Higher, true, Some(25.0))
+        }
         // Wall-clock figures: informational only (CI runners vary).
-        n if n.ends_with("_ms") => (Direction::Lower, false),
-        "kv_assemble_speedup" => (Direction::Higher, false),
-        _ => (Direction::Lower, false),
+        n if n.ends_with("_ms") => (Direction::Lower, false, None),
+        "kv_assemble_speedup" => (Direction::Higher, false, None),
+        _ => (Direction::Lower, false, None),
     }
 }
 

@@ -46,6 +46,9 @@ pub struct BaselineEntry {
     pub direction: Direction,
     /// Gated entries fail CI on regression; others are informational.
     pub gate: bool,
+    /// Per-entry tolerance override (percent); falls back to the
+    /// baseline-wide `tolerance_pct` when absent.
+    pub tolerance_pct: Option<f64>,
 }
 
 #[derive(Debug, Clone)]
@@ -86,9 +89,13 @@ impl Baseline {
                     Some(g) => g.as_bool()?,
                     None => true,
                 };
+                let tolerance_pct = e
+                    .opt("tolerance_pct")
+                    .map(|t| t.as_f64())
+                    .transpose()?;
                 benchmarks.insert(
                     name.clone(),
-                    BaselineEntry { value, direction, gate },
+                    BaselineEntry { value, direction, gate, tolerance_pct },
                 );
             }
         }
@@ -122,7 +129,6 @@ pub fn check(
     if baseline.bootstrap {
         return rep;
     }
-    let tol = baseline.tolerance_pct / 100.0;
     for (name, e) in &baseline.benchmarks {
         if !e.gate {
             continue;
@@ -132,6 +138,8 @@ pub fn check(
             continue;
         };
         rep.compared += 1;
+        let tol_pct = e.tolerance_pct.unwrap_or(baseline.tolerance_pct);
+        let tol = tol_pct / 100.0;
         let regressed = match e.direction {
             Direction::Lower => got > e.value * (1.0 + tol),
             Direction::Higher => got < e.value * (1.0 - tol),
@@ -142,7 +150,7 @@ pub fn check(
                  ({} is better, tolerance {:.0}%)",
                 e.value,
                 e.direction.as_str(),
-                baseline.tolerance_pct,
+                tol_pct,
             ));
         }
     }
@@ -172,10 +180,13 @@ pub fn render_report(
 }
 
 /// Serialize measured values as a fresh baseline (the `--update` refresh
-/// workflow documented in CONTRIBUTING.md).
+/// workflow documented in CONTRIBUTING.md).  `meta` supplies each
+/// metric's direction, gating, and optional per-entry tolerance override
+/// — the override must survive a refresh or the gate silently loosens
+/// back to the global tolerance.
 pub fn render_baseline(
     measured: &BTreeMap<String, f64>,
-    meta: &dyn Fn(&str) -> (Direction, bool),
+    meta: &dyn Fn(&str) -> (Direction, bool, Option<f64>),
     tolerance_pct: f64,
 ) -> String {
     use crate::jsonio::{num, obj, s};
@@ -183,15 +194,16 @@ pub fn render_baseline(
         measured
             .iter()
             .map(|(k, &v)| {
-                let (direction, gate) = meta(k);
-                (
-                    k.clone(),
-                    obj(vec![
-                        ("value", num(v)),
-                        ("direction", s(direction.as_str())),
-                        ("gate", Value::Bool(gate)),
-                    ]),
-                )
+                let (direction, gate, tol) = meta(k);
+                let mut fields = vec![
+                    ("value", num(v)),
+                    ("direction", s(direction.as_str())),
+                    ("gate", Value::Bool(gate)),
+                ];
+                if let Some(t) = tol {
+                    fields.push(("tolerance_pct", num(t)));
+                }
+                (k.clone(), obj(fields))
             })
             .collect(),
     );
@@ -214,7 +226,15 @@ mod tests {
             benchmarks: entries
                 .iter()
                 .map(|&(n, value, direction, gate)| {
-                    (n.to_string(), BaselineEntry { value, direction, gate })
+                    (
+                        n.to_string(),
+                        BaselineEntry {
+                            value,
+                            direction,
+                            gate,
+                            tolerance_pct: None,
+                        },
+                    )
                 })
                 .collect(),
         }
@@ -273,6 +293,33 @@ mod tests {
     }
 
     #[test]
+    fn per_entry_tolerance_overrides_the_global_one() {
+        let mut b = baseline(&[("util", 1.0, Direction::Higher, true)]);
+        // Global 25% would allow 0.8; a 5% per-entry override must not.
+        b.benchmarks.get_mut("util").unwrap().tolerance_pct = Some(5.0);
+        let rep = check(&b, &measured(&[("util", 0.8)]));
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("tolerance 5%"), "{:?}",
+                rep.failures);
+        let rep = check(&b, &measured(&[("util", 0.96)]));
+        assert!(rep.passed());
+    }
+
+    #[test]
+    fn per_entry_tolerance_parses_from_json() {
+        let v = jsonio::parse(
+            r#"{"schema":1,"bootstrap":false,"tolerance_pct":25,
+                "benchmarks":{"x":{"value":2.0,"direction":"higher",
+                                   "gate":true,"tolerance_pct":10}}}"#,
+        )
+        .unwrap();
+        let b = Baseline::from_value(&v).unwrap();
+        assert_eq!(b.benchmarks["x"].tolerance_pct, Some(10.0));
+        assert!(!check(&b, &measured(&[("x", 1.7)])).passed());
+        assert!(check(&b, &measured(&[("x", 1.9)])).passed());
+    }
+
+    #[test]
     fn bootstrap_baseline_passes_vacuously() {
         let mut b = baseline(&[("time", 1.0, Direction::Lower, true)]);
         b.bootstrap = true;
@@ -288,9 +335,9 @@ mod tests {
             &m,
             &|name| {
                 if name.ends_with("_ms") {
-                    (Direction::Lower, false)
+                    (Direction::Lower, false, None)
                 } else {
-                    (Direction::Lower, true)
+                    (Direction::Lower, true, Some(10.0))
                 }
             },
             25.0,
@@ -301,6 +348,9 @@ mod tests {
         assert!(!b.benchmarks["a_ms"].gate);
         assert!(b.benchmarks["b_ratio"].gate);
         assert!((b.benchmarks["b_ratio"].value - 0.25).abs() < 1e-12);
+        // Per-entry tolerance survives the refresh round-trip.
+        assert_eq!(b.benchmarks["a_ms"].tolerance_pct, None);
+        assert_eq!(b.benchmarks["b_ratio"].tolerance_pct, Some(10.0));
         // And the report artifact parses back too.
         let rep = check(&b, &m);
         let art = render_report(&m, &rep);

@@ -116,6 +116,15 @@ impl ServingConfig {
                    e.planner.replan_interval as usize)? as u64;
         e.planner.seq_drift = get_f("planner.seq_drift",
                                     e.planner.seq_drift)?;
+        let bm_s = gets("planner.budget_mode")
+            .unwrap_or_else(|| e.planner.budget_mode.as_str().into());
+        e.planner.budget_mode =
+            crate::estimator::BudgetMode::parse(&bm_s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown planner.budget_mode {bm_s:?} \
+                     (expected per-lane or uniform)"
+                )
+            })?;
         e.validate()?;
 
         let routing_s = gets("server.routing")
@@ -178,6 +187,33 @@ mod tests {
 
     fn propd_default_page_size() -> usize {
         crate::kvcache::DEFAULT_PAGE_SIZE
+    }
+
+    #[test]
+    fn budget_mode_knob_parses_and_validates() {
+        use crate::estimator::BudgetMode;
+        // Default: per-lane budgeted allocation.
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert_eq!(d.engine.planner.budget_mode, BudgetMode::PerLane);
+        // Explicit fallback to the uniform-bucket baseline (ablation).
+        let u = ServingConfig::load(
+            None,
+            &["planner.budget_mode=uniform".into()],
+        )
+        .unwrap();
+        assert_eq!(u.engine.planner.budget_mode, BudgetMode::Uniform);
+        // Quoted form (what `propd --tree-budget` emits).
+        let q = ServingConfig::load(
+            None,
+            &["planner.budget_mode=\"per-lane\"".into()],
+        )
+        .unwrap();
+        assert_eq!(q.engine.planner.budget_mode, BudgetMode::PerLane);
+        assert!(ServingConfig::load(
+            None,
+            &["planner.budget_mode=warp".into()]
+        )
+        .is_err());
     }
 
     #[test]

@@ -340,6 +340,10 @@ impl<'rt> Engine<'rt> {
                 pending_root,
                 medusa_rows,
                 ledger: VecDeque::new(),
+                // Seed per-request acceptance state from the engine-global
+                // tracker so a fresh lane starts from the fleet-typical
+                // regime instead of the cold-start prior.
+                tracker: self.tracker.clone(),
                 max_new_tokens: spec.max_new_tokens,
                 steps: 0,
                 arrival: spec.arrival,

@@ -6,12 +6,21 @@ use crate::runtime::literal::{HostTensor, NEG_INF};
 use crate::tree::{TokenTree, TreeMask};
 
 /// Pack per-lane token trees into `tree_tok [b, t]` (i32).
-/// Padding nodes repeat the lane's root token at the root position so they
-/// stay in-vocabulary and in-range; their outputs are never read.
+///
+/// The batch is *ragged*: every lane may carry a different live tree size
+/// (per-lane budgeted allocation) and is padded up to the shared
+/// `t_bucket`.  Padding nodes repeat the lane's root token at the root
+/// position so they stay in-vocabulary and in-range; their outputs are
+/// never read (the per-lane live size bounds every downstream consumer).
 pub fn pack_tree_tokens(trees: &[&TokenTree], t_bucket: usize) -> HostTensor {
     let b = trees.len();
     let mut out = vec![0i32; b * t_bucket];
     for (lane, tree) in trees.iter().enumerate() {
+        debug_assert!(
+            tree.len() <= t_bucket,
+            "lane {lane}: live tree size {} exceeds bucket {t_bucket}",
+            tree.len()
+        );
         let root = tree.node(0).token as i32;
         for j in 0..t_bucket {
             out[lane * t_bucket + j] = if j < tree.len() {
@@ -34,6 +43,11 @@ pub fn pack_tree_positions(
     let b = trees.len();
     let mut out = vec![0i32; b * t_bucket];
     for (lane, tree) in trees.iter().enumerate() {
+        debug_assert!(
+            tree.len() <= t_bucket,
+            "lane {lane}: live tree size {} exceeds bucket {t_bucket}",
+            tree.len()
+        );
         let base = seq_lens[lane];
         for j in 0..t_bucket {
             out[lane * t_bucket + j] = if j < tree.len() {
@@ -183,6 +197,41 @@ mod tests {
         let packed = pack_tree_masks(&[&m], 2);
         assert_eq!(packed.shape, vec![1, 2, 2]);
         assert_eq!(packed.as_f32(), &[0.0, NEG_INF, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ragged_lanes_pack_to_one_bucket() {
+        // Per-lane budgeted allocation produces heterogeneous live sizes;
+        // every packed tensor pads each lane independently to the shared
+        // bucket.
+        let deep = TokenTree::chain(&[5, 6, 7, 8]);
+        let chain = TokenTree::chain(&[9, 10]);
+        let root = TokenTree::root_only(3);
+        let trees = [&deep, &chain, &root];
+        let bucket = 4;
+        let toks = pack_tree_tokens(&trees, bucket);
+        assert_eq!(toks.shape, vec![3, 4]);
+        assert_eq!(
+            toks.as_i32(),
+            &[5, 6, 7, 8, 9, 10, 9, 9, 3, 3, 3, 3]
+        );
+        let pos = pack_tree_positions(&trees, &[20, 30, 40], bucket);
+        assert_eq!(
+            pos.as_i32(),
+            &[20, 21, 22, 23, 30, 31, 30, 30, 40, 40, 40, 40]
+        );
+        // Masks: padding rows attend only themselves, live rows their
+        // ancestor chain — regardless of each lane's live size.
+        let masks: Vec<TreeMask> =
+            trees.iter().map(|t| TreeMask::build(t, bucket)).collect();
+        let mrefs: Vec<&TreeMask> = masks.iter().collect();
+        let dense = pack_tree_masks(&mrefs, bucket);
+        assert_eq!(dense.shape, vec![3, 4, 4]);
+        let d = dense.as_f32();
+        // lane 1 (live 2): row 1 attends {0, 1}; pad row 2 attends only 2.
+        let lane1 = &d[16..32];
+        assert_eq!(&lane1[4..8], &[0.0, 0.0, NEG_INF, NEG_INF]);
+        assert_eq!(&lane1[8..12], &[NEG_INF, NEG_INF, 0.0, NEG_INF]);
     }
 
     #[test]

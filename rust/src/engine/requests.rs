@@ -2,6 +2,7 @@
 
 use std::collections::VecDeque;
 
+use crate::estimator::AcceptanceTracker;
 use crate::tokenizer::Token;
 
 /// What a client submits.
@@ -57,6 +58,12 @@ pub struct ReqState {
     pub medusa_rows: Vec<f32>,
     /// Prediction ledger for acceptance-tracker updates (§4.2.2).
     pub ledger: VecDeque<PendingPrediction>,
+    /// Request-local acceptance statistics: seeded from the engine-global
+    /// tracker on admission, then updated only with this request's own
+    /// resolved predictions.  The per-lane budget allocator reads its
+    /// gain curve from here, so an easy request earns a deep tree while a
+    /// hard one degrades to a chain without dragging the whole batch.
+    pub tracker: AcceptanceTracker,
     pub max_new_tokens: usize,
     pub steps: u64,
     pub arrival: f64,
@@ -139,6 +146,7 @@ mod tests {
             pending_root: 7,
             medusa_rows: Vec::new(),
             ledger: VecDeque::new(),
+            tracker: AcceptanceTracker::new(2, 4, 0.1),
             max_new_tokens: 10,
             steps: 0,
             arrival: 0.0,
@@ -191,6 +199,20 @@ mod tests {
             r.remember_prediction(4);
         }
         assert!(r.ledger.len() <= 8);
+    }
+
+    #[test]
+    fn request_trackers_diverge_independently() {
+        // Two requests seeded identically must be able to learn opposite
+        // acceptance regimes — the per-lane allocator depends on it.
+        let mut easy = req();
+        let mut hard = req();
+        for _ in 0..60 {
+            easy.tracker.record(0, Some(0));
+            hard.tracker.record(0, None);
+        }
+        assert!(easy.tracker.cumulative_p(0, 1) > 0.9);
+        assert!(hard.tracker.cumulative_p(0, 1) < 0.1);
     }
 
     #[test]

@@ -1,14 +1,21 @@
 //! The tree-verification step shared by BPD / Medusa / ProPD.
 //!
 //! Per iteration:
-//! 1. **Generate** one token tree per request — dynamically sized via the
-//!    §4.2 planner (ProPD) or statically (baselines / ablation).
+//! 1. **Generate** one token tree per request.  With dynamic generation
+//!    the §4.2 planner picks a verified-token budget for the step
+//!    (`lanes × bucket`, keyed on the perf model's total-token estimate)
+//!    and `estimator::alloc` water-fills it across lanes by each
+//!    request's own marginal-gain curve — high-acceptance lanes get deep
+//!    trees, stragglers get chains.  The resulting batch is *ragged*:
+//!    per-lane live sizes are padded up to the step's max-lane bucket,
+//!    which also keys the manifest entry.
 //! 2. **verify_early**: layers `0..n` + the early head.
 //! 3. **Prune** (§4.1, if enabled): Top-k membership against the early
 //!    head, branch elimination, mask *subsampling*, hidden compaction.
 //! 4. **verify_late**: layers `n..L` on the surviving nodes.
 //! 5. **Accept** the greedy path, commit its KV columns, update the
-//!    acceptance tracker and the iteration-time model.
+//!    acceptance trackers (request-local + engine-global) and the
+//!    iteration-time model.
 
 use std::time::Instant;
 
@@ -20,6 +27,8 @@ use super::inputs::{
     pack_tree_positions, pack_tree_tokens,
 };
 use super::EngineKind;
+use crate::estimator::alloc::{allocate_budget, allocation_gain};
+use crate::estimator::BudgetMode;
 use crate::manifest::Entry;
 use crate::runtime::registry::DynArg;
 use crate::tree::accept::accept_path;
@@ -27,41 +36,157 @@ use crate::tree::builder::static_head_profile;
 use crate::tree::prune::prune_tree;
 use crate::tree::{TokenTree, TreeMask};
 
+/// One step's tree-size decision: per-lane live sizes plus the shared
+/// padded bucket they are packed into.
+#[derive(Debug, Clone)]
+struct TreeAlloc {
+    /// Live tree size per *real* lane (dummy lanes replicate lane 0).
+    sizes: Vec<usize>,
+    /// Padded bucket for the step: keys the verify artifacts and sizes
+    /// every packed tensor.  Always ≥ every entry of `sizes`.
+    bucket: usize,
+    /// Total verified-token budget the planner granted this step.
+    budget: usize,
+    /// Expected accepted tokens captured by the allocation (per-lane mode
+    /// only — the other modes do not materialize gain curves every step).
+    gain: Option<f64>,
+    /// ProPD per-lane fast path: each lane's tree already built at its
+    /// cap (the build doubles as the gain curve); the generation step
+    /// prefix-truncates to `sizes` instead of rebuilding.
+    prebuilt: Option<Vec<TokenTree>>,
+}
+
 impl<'rt> Engine<'rt> {
-    /// Pick this iteration's (initial) tree-size bucket.
-    fn plan_tree_size(&mut self, batch: usize) -> usize {
+    /// Decide this iteration's per-lane tree sizes and padded bucket.
+    fn plan_allocation(&mut self, b_bucket: usize) -> TreeAlloc {
+        let b_real = self.active.len();
         let mean_seq = self.active.iter().map(|r| r.seq_len()).sum::<usize>()
             as f64
-            / self.active.len().max(1) as f64;
-        if self.cfg.dynamic_tree {
-            // Gain curve from the *tracked* acceptance probabilities; token
-            // ids are irrelevant for sizing.
-            let fake_tokens: Vec<Vec<u32>> = (0..self.model.n_medusa)
-                .map(|_| (0..self.cfg.max_rank as u32).collect())
-                .collect();
-            let cands = self.tracker.candidates(&fake_tokens);
-            let max_bucket = *self.tree_buckets.last().unwrap_or(&64);
-            let curve = self.builder.gain_curve(&cands, max_bucket);
-            self.planner.plan(batch, mean_seq, &curve, &self.perf)
-        } else {
+            / b_real.max(1) as f64;
+        let max_cap = *self.tree_buckets.last().unwrap_or(&64);
+        // Never speculate past a lane's remaining generation budget.
+        let caps: Vec<usize> = (0..b_real)
+            .map(|i| max_cap.min(self.room(&self.active[i]) + 1).max(1))
+            .collect();
+        if !self.cfg.dynamic_tree {
             let bucket = crate::manifest::bucket_for(
                 self.cfg.static_tree_size.max(1),
                 &self.tree_buckets,
             );
-            self.planner.force(bucket, batch, mean_seq);
-            bucket
+            self.planner.force(bucket, b_bucket, mean_seq);
+            let sizes: Vec<usize> =
+                caps.iter().map(|&c| bucket.min(c)).collect();
+            return TreeAlloc {
+                sizes,
+                bucket,
+                budget: b_real * bucket,
+                gain: None,
+                prebuilt: None,
+            };
         }
+        let per_lane =
+            self.cfg.planner.budget_mode == BudgetMode::PerLane;
+        // ProPD in per-lane mode builds each lane's real tree at its cap
+        // right here: one greedy build doubles as the gain curve (its
+        // cumulative path-probability prefix) and, truncated, as the
+        // final tree — the generation step must not pay a second build.
+        let prebuilt: Option<Vec<TokenTree>> = if per_lane
+            && self.cfg.kind == EngineKind::ProPD
+        {
+            Some(
+                (0..b_real)
+                    .map(|i| self.build_tree(i, caps[i]))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        // Gain curves are only materialized when something will consume
+        // them this step: the allocator (per-lane mode, every step) or
+        // the planner (any mode, but only on replan steps — the cached
+        // decision needs no curve).
+        let curves: Option<Vec<Vec<f64>>> = match &prebuilt {
+            Some(trees) => {
+                Some(trees.iter().map(|t| t.gain_prefix(max_cap)).collect())
+            }
+            None if per_lane
+                || self.planner.will_replan(b_bucket, mean_seq) =>
+            {
+                // Token ids are irrelevant for sizing.
+                let fake_tokens: Vec<Vec<u32>> = (0..self.model.n_medusa)
+                    .map(|_| (0..self.cfg.max_rank as u32).collect())
+                    .collect();
+                Some(
+                    self.active
+                        .iter()
+                        .map(|r| {
+                            self.builder.gain_curve(
+                                &r.tracker.candidates(&fake_tokens),
+                                max_cap,
+                            )
+                        })
+                        .collect(),
+                )
+            }
+            None => None,
+        };
+        // The lane-mean curve steers the shared budget decision.
+        let pooled: Vec<f64> = match &curves {
+            Some(cs) => (0..max_cap)
+                .map(|i| {
+                    cs.iter()
+                        .map(|c| c.get(i).copied().unwrap_or(1.0))
+                        .sum::<f64>()
+                        / b_real.max(1) as f64
+                })
+                .collect(),
+            // Unused: the planner returns its cached bucket this step.
+            None => Vec::new(),
+        };
+        let bucket =
+            self.planner.plan(b_bucket, mean_seq, &pooled, &self.perf);
+        let budget = b_real * bucket;
+        if !per_lane {
+            let sizes: Vec<usize> =
+                caps.iter().map(|&c| bucket.min(c)).collect();
+            return TreeAlloc {
+                sizes,
+                bucket,
+                budget,
+                gain: None,
+                prebuilt: None,
+            };
+        }
+        let curves = curves.expect("per-lane mode always builds curves");
+        // Cap every lane at the planner's bucket: the perf model costed
+        // `lanes × bucket` padded tokens, and the step's padded bucket is
+        // driven by the max lane — letting one lane outgrow the costed
+        // bucket would silently execute a step the planner just rejected
+        // as too slow.  Concentration therefore shows up as stragglers
+        // releasing budget (unspent → tree_alloc_util < 1), never as a
+        // costlier step.
+        let lane_caps: Vec<usize> =
+            caps.iter().map(|&c| c.min(bucket)).collect();
+        let sizes = allocate_budget(
+            &curves,
+            &lane_caps,
+            budget,
+            crate::estimator::alloc::DEFAULT_MIN_GAIN,
+        );
+        let max_size = sizes.iter().copied().max().unwrap_or(1).max(1);
+        let step_bucket =
+            crate::manifest::bucket_for(max_size, &self.tree_buckets);
+        let gain = Some(allocation_gain(&curves, &sizes));
+        TreeAlloc { sizes, bucket: step_bucket, budget, gain, prebuilt }
     }
 
-    /// Build one request's token tree for this iteration.
-    fn build_tree(&self, req_idx: usize, t_bucket: usize) -> TokenTree {
+    /// Build one request's token tree for this iteration at its allocated
+    /// live size.
+    fn build_tree(&self, req_idx: usize, size: usize) -> TokenTree {
         let req = &self.active[req_idx];
         let v = self.model.vocab;
         let root = req.pending_root;
-        // Cap the tree by the request's remaining budget (no point
-        // speculating past max_new_tokens).
-        let room = self.room(req) + 1;
-        let size = t_bucket.min(room.max(1));
+        let size = size.max(1);
         match self.cfg.kind {
             EngineKind::Bpd => {
                 // Chain of each head's top-1 (k=1 blockwise decoding).
@@ -105,7 +230,9 @@ impl<'rt> Engine<'rt> {
                     v,
                     self.cfg.max_rank,
                 );
-                let cands = self.tracker.candidates(&tops);
+                // Request-local tracker: the same statistics the per-lane
+                // allocator sized this tree with.
+                let cands = req.tracker.candidates(&tops);
                 self.builder.build(root, &cands, size)
             }
             EngineKind::Autoregressive => unreachable!(),
@@ -123,10 +250,18 @@ impl<'rt> Engine<'rt> {
         let m_heads = self.model.n_medusa;
 
         // ------------------------------------------------- 1. generation
-        let t_bucket = self.plan_tree_size(b);
-        let trees: Vec<TokenTree> = (0..b_real)
-            .map(|i| self.build_tree(i, t_bucket))
-            .collect();
+        let mut alloc = self.plan_allocation(b);
+        let t_bucket = alloc.bucket;
+        let trees: Vec<TokenTree> = match alloc.prebuilt.take() {
+            Some(full) => full
+                .iter()
+                .zip(&alloc.sizes)
+                .map(|(t, &s)| t.truncated(s))
+                .collect(),
+            None => (0..b_real)
+                .map(|i| self.build_tree(i, alloc.sizes[i]))
+                .collect(),
+        };
         let masks: Vec<TreeMask> =
             trees.iter().map(|t| TreeMask::build(t, t_bucket)).collect();
         let seq_lens_real: Vec<usize> =
@@ -186,6 +321,7 @@ impl<'rt> Engine<'rt> {
             let mut ptrees = Vec::with_capacity(b_real);
             let mut keeps = Vec::with_capacity(b_real);
             for (i, tree) in trees.iter().enumerate() {
+                // Ragged batch: each lane prunes only its live rows.
                 let rows =
                     early_logits.f32_chunk(i * t_bucket * v, tree.len() * v);
                 let out = prune_tree(tree, rows, v, self.cfg.prune_top_k);
@@ -321,12 +457,15 @@ impl<'rt> Engine<'rt> {
                 req.steps += 1;
                 req.remember_prediction(v);
             }
-            // Acceptance-tracker updates from resolved ledger entries.
+            // Acceptance-tracker updates from resolved ledger entries:
+            // the request-local tracker drives this lane's future
+            // allocation; the engine-global one seeds new admissions.
             let mut updates: Vec<(usize, usize)> = Vec::new();
             self.active[i]
                 .resolve_predictions(|h, rank| updates.push((h, rank)));
             for (h, rank) in updates {
                 self.tracker.record(h, Some(rank));
+                self.active[i].tracker.record(h, Some(rank));
             }
             committed_total += accept_len;
             self.metrics.accept_len.record(accept_len as f64);
@@ -341,7 +480,9 @@ impl<'rt> Engine<'rt> {
 
         // ----------------------------------- 6. estimator + metrics upkeep
         let total = t0.elapsed().as_secs_f64();
-        self.perf.record(t_bucket, total);
+        // §4.2.1 keyed on the step's total verified tokens: the padded
+        // batch block both verify stages actually process.
+        self.perf.record(b * t_bucket, total);
         self.metrics.step_time.record(total);
         self.metrics.early_time.record(early_secs);
         self.metrics.late_time.record(late_secs);
@@ -350,6 +491,22 @@ impl<'rt> Engine<'rt> {
             .record(host_prep + host_mid + host_post);
         self.metrics.tree_size.record(t_bucket as f64);
         self.metrics.pruned_size.record(tp_bucket as f64);
+        // Tree-allocation economics.  Live sizes come from the *built*
+        // trees, not the allocator's grant: a builder can saturate below
+        // its allocation (BPD chains cap at n_medusa + 1; a tree stops
+        // growing when no candidate has positive probability).
+        let live: usize = trees.iter().map(|t| t.len()).sum();
+        self.metrics.verify_tokens += live as u64;
+        for t in &trees {
+            self.metrics.tree_alloc_lane_size.record(t.len() as f64);
+        }
+        self.metrics.tree_alloc_budget.record(alloc.budget as f64);
+        self.metrics
+            .tree_alloc_util
+            .record(live as f64 / alloc.budget.max(1) as f64);
+        if let Some(g) = alloc.gain {
+            self.metrics.tree_alloc_gain.record(g);
+        }
         self.metrics.assembly_bytes.record(asm.bytes_copied as f64);
         self.metrics.assembly_bytes_copied += asm.bytes_copied;
         self.metrics.assembly_bytes_full += asm.bytes_full;

@@ -66,13 +66,22 @@ impl AcceptanceTracker {
         }
     }
 
-    /// `P_h^k` (cumulative top-k hit probability; k is 1-based).
+    /// `P_h^k` (cumulative top-k hit probability; k is 1-based).  A head
+    /// with no tracked ranks (`max_rank == 0` configurations) can never
+    /// hit, so its cumulative probability is 0 rather than a panic
+    /// (`(k - 1).min(len - 1)` underflowed on the empty row).
     pub fn cumulative_p(&self, head: usize, k: usize) -> f64 {
         assert!(k >= 1);
-        self.cumulative[head][(k - 1).min(self.cumulative[head].len() - 1)]
+        let c = &self.cumulative[head];
+        if c.is_empty() {
+            return 0.0;
+        }
+        c[(k - 1).min(c.len() - 1)]
     }
 
     /// Marginal `p_h^k = P_h^k − P_h^{k-1}` for 0-based rank `k`.
+    /// Untracked ranks (including every rank of a zero-rank tracker)
+    /// report 0.0.
     pub fn marginal(&self, head: usize, rank: usize) -> f64 {
         let c = &self.cumulative[head];
         if rank >= c.len() {
@@ -182,5 +191,26 @@ mod tests {
     fn out_of_range_rank_is_zero_marginal() {
         let t = AcceptanceTracker::new(1, 4, 0.1);
         assert_eq!(t.marginal(0, 99), 0.0);
+    }
+
+    #[test]
+    fn zero_rank_tracker_is_inert_not_panicking() {
+        // Regression: `max_rank == 0` builds empty cumulative rows;
+        // `cumulative_p` underflowed on `len - 1` and `marginal` must
+        // treat every rank as untracked.
+        let mut t = AcceptanceTracker::new(3, 0, 0.1);
+        assert_eq!(t.max_rank(), 0);
+        for h in 0..3 {
+            assert_eq!(t.cumulative_p(h, 1), 0.0);
+            assert_eq!(t.cumulative_p(h, 8), 0.0);
+            assert_eq!(t.marginal(h, 0), 0.0);
+        }
+        // Recording against a zero-rank head is a no-op, not a panic.
+        t.record(1, Some(0));
+        t.record(1, None);
+        assert_eq!(t.cumulative_p(1, 1), 0.0);
+        // Candidate assembly degrades to zero-probability candidates.
+        let cands = t.candidates(&[vec![7, 8], vec![9], vec![]]);
+        assert!(cands.iter().flatten().all(|&(_, p)| p == 0.0));
     }
 }

@@ -1,0 +1,240 @@
+//! Per-lane budgeted tree allocation.
+//!
+//! The planner (§4.2.3) chooses a *total* verified-token budget for the
+//! step; this module splits that budget across the batch lanes by greedy
+//! water-filling on each lane's marginal-gain curve.  A lane's curve comes
+//! from its own request-local acceptance tracker (`TreeBuilder::gain_curve`
+//! over the tracked per-rank probabilities), so an easy request (high
+//! acceptance) receives a deep tree while a hard one degenerates toward a
+//! chain or a bare root.
+//!
+//! Greedy is optimal here for the same reason it is inside
+//! `TreeBuilder::build`: each lane's marginal gains are nonincreasing in
+//! tree size (the builder adds nodes in descending path-probability order),
+//! so the union of per-lane curves is a concave set of candidate increments
+//! and taking the globally largest marginal at every step maximizes the
+//! summed expected acceptance length under the budget.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Expected acceptance length of the best tree of `size` nodes according
+/// to a gain curve (`curve[i]` = gain of size i+1).  An empty curve means
+/// "no information": only the root is certain, gain 1.0.  Sizes past the
+/// curve's end read the final (saturated) value.
+pub fn gain_at(curve: &[f64], size: usize) -> f64 {
+    if curve.is_empty() || size == 0 {
+        return 1.0;
+    }
+    curve
+        .get(size.min(curve.len()) - 1)
+        .copied()
+        .unwrap_or(1.0)
+}
+
+/// One candidate increment: grow `lane` to `next_size` nodes for `gain`
+/// extra expected accepted tokens.
+#[derive(Debug, Clone, Copy)]
+struct Increment {
+    gain: f64,
+    lane: usize,
+    next_size: usize,
+}
+
+impl PartialEq for Increment {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Increment {}
+impl PartialOrd for Increment {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Increment {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap by gain; ties resolve toward the smaller tree first
+        // (levels equal lanes round-robin instead of starving them), then
+        // the lower lane index, so allocation is deterministic across
+        // runs and replicas.
+        self.gain
+            .partial_cmp(&other.gain)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.next_size.cmp(&self.next_size))
+            .then_with(|| other.lane.cmp(&self.lane))
+    }
+}
+
+/// Marginal-gain floor the engine uses: an extra node expected to yield
+/// fewer than this many accepted tokens is not worth its verification
+/// slot.  EWMA-tracked probabilities decay toward zero but never reach
+/// it, so without a floor a collapsed lane would still "buy" epsilon-gain
+/// nodes until the budget filled — exactly the waste the allocator is
+/// meant to eliminate.
+pub const DEFAULT_MIN_GAIN: f64 = 0.01;
+
+/// Water-fill a total verified-token budget across lanes.
+///
+/// `curves[lane]` is the lane's gain curve (see [`gain_at`]); `caps[lane]`
+/// caps that lane's tree size (remaining generation budget, artifact
+/// grid).  Every lane always receives its root (size ≥ 1) even when
+/// `budget < curves.len()`; beyond the mandatory roots the summed sizes
+/// never exceed `budget`, and an increment whose marginal gain does not
+/// exceed `min_gain` is never bought — the budget is left unspent rather
+/// than wasted on nodes that will not be accepted (pass 0.0 for pure
+/// water-filling).
+pub fn allocate_budget(
+    curves: &[Vec<f64>],
+    caps: &[usize],
+    budget: usize,
+    min_gain: f64,
+) -> Vec<usize> {
+    assert_eq!(
+        curves.len(),
+        caps.len(),
+        "one cap per lane ({} curves, {} caps)",
+        curves.len(),
+        caps.len()
+    );
+    let min_gain = min_gain.max(0.0);
+    let lanes = curves.len();
+    let mut sizes = vec![1usize; lanes];
+    let mut total = lanes;
+    let mut heap: BinaryHeap<Increment> = BinaryHeap::new();
+    for lane in 0..lanes {
+        push_increment(&mut heap, curves, caps, lane, 1, min_gain);
+    }
+    while total < budget {
+        let inc = match heap.pop() {
+            Some(i) => i,
+            None => break, // nothing left worth buying
+        };
+        sizes[inc.lane] = inc.next_size;
+        total += 1;
+        push_increment(
+            &mut heap,
+            curves,
+            caps,
+            inc.lane,
+            inc.next_size,
+            min_gain,
+        );
+    }
+    sizes
+}
+
+fn push_increment(
+    heap: &mut BinaryHeap<Increment>,
+    curves: &[Vec<f64>],
+    caps: &[usize],
+    lane: usize,
+    current: usize,
+    min_gain: f64,
+) {
+    if current >= caps[lane].max(1) {
+        return;
+    }
+    let next_size = current + 1;
+    let gain = gain_at(&curves[lane], next_size) - gain_at(&curves[lane], current);
+    if gain > min_gain {
+        heap.push(Increment { gain, lane, next_size });
+    }
+}
+
+/// Summed expected acceptance length of an allocation (metrics: the "gain
+/// captured" by this step's trees).
+pub fn allocation_gain(curves: &[Vec<f64>], sizes: &[usize]) -> f64 {
+    sizes
+        .iter()
+        .zip(curves)
+        .map(|(&s, c)| gain_at(c, s))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linear curve: every extra node is worth `m` expected tokens.
+    fn linear(m: f64, n: usize) -> Vec<f64> {
+        (0..n).map(|i| 1.0 + m * i as f64).collect()
+    }
+
+    #[test]
+    fn gain_at_handles_empty_and_overflow() {
+        assert_eq!(gain_at(&[], 8), 1.0);
+        assert_eq!(gain_at(&[1.0, 1.5], 0), 1.0);
+        assert_eq!(gain_at(&[1.0, 1.5], 1), 1.0);
+        assert_eq!(gain_at(&[1.0, 1.5], 2), 1.5);
+        assert_eq!(gain_at(&[1.0, 1.5], 99), 1.5, "saturates at the end");
+    }
+
+    #[test]
+    fn budget_concentrates_on_the_dominant_lane() {
+        let curves = vec![linear(1.0, 16), linear(0.0, 16), linear(0.0, 16)];
+        let sizes = allocate_budget(&curves, &[16, 16, 16], 9, 0.0);
+        assert_eq!(sizes, vec![7, 1, 1]);
+    }
+
+    #[test]
+    fn equal_lanes_split_evenly() {
+        let curves = vec![linear(0.5, 16); 4];
+        let sizes = allocate_budget(&curves, &[16; 4], 16, 0.0);
+        assert_eq!(sizes, vec![4, 4, 4, 4]);
+        assert_eq!(sizes.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn caps_are_respected_and_budget_spills_over() {
+        let curves = vec![linear(1.0, 16), linear(0.2, 16)];
+        let sizes = allocate_budget(&curves, &[3, 16], 10, 0.0);
+        assert_eq!(sizes[0], 3, "lane 0 capped");
+        assert_eq!(sizes[1], 7, "remaining budget spills to lane 1");
+    }
+
+    #[test]
+    fn zero_gain_budget_goes_unspent() {
+        let curves = vec![linear(0.0, 16); 2];
+        let sizes = allocate_budget(&curves, &[16, 16], 20, 0.0);
+        assert_eq!(sizes, vec![1, 1], "no lane buys worthless nodes");
+    }
+
+    #[test]
+    fn budget_below_lane_count_still_grants_roots() {
+        let curves = vec![linear(1.0, 8); 4];
+        let sizes = allocate_budget(&curves, &[8; 4], 2, 0.0);
+        assert_eq!(sizes, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn min_gain_floor_cuts_epsilon_lanes() {
+        // EWMA probabilities never reach exactly zero: a collapsed lane's
+        // marginals are tiny but positive.  Without the floor it would
+        // soak up budget; with it the budget goes deliberately unspent.
+        let curves = vec![linear(1e-4, 16), linear(1e-4, 16)];
+        let greedy = allocate_budget(&curves, &[16, 16], 12, 0.0);
+        assert_eq!(greedy.iter().sum::<usize>(), 12, "no floor: fills up");
+        let floored =
+            allocate_budget(&curves, &[16, 16], 12, DEFAULT_MIN_GAIN);
+        assert_eq!(floored, vec![1, 1], "floored: epsilon nodes unbought");
+    }
+
+    #[test]
+    fn allocation_gain_sums_curves() {
+        let curves = vec![linear(1.0, 8), linear(0.0, 8)];
+        let g = allocation_gain(&curves, &[3, 1]);
+        assert!((g - (3.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        let curves = vec![linear(0.5, 16); 3];
+        let a = allocate_budget(&curves, &[16; 3], 10, 0.0);
+        let b = allocate_budget(&curves, &[16; 3], 10, 0.0);
+        assert_eq!(a, b);
+        // Ties resolve toward lower lanes, so the remainder (10 - 9 = 1
+        // extra increment) lands on lane 0.
+        assert_eq!(a, vec![4, 3, 3]);
+    }
+}

@@ -5,14 +5,20 @@
 //!   `T_est(i) = β0 + β1·i` (§4.2.1).
 //! - [`acceptance`]: per-head per-rank acceptance probability tracking
 //!   `P_h^k` via EWMA of top-k hit indicators (§4.2.2).
-//! - [`planner`]: combines both to pick the tree size maximizing
-//!   `v = l(i) / T_est(i)`, re-planning only when decoding conditions
+//! - [`planner`]: combines both to pick the tree-size bucket maximizing
+//!   `v = batch·l(i) / T_est(batch·i)` — and with it the step's total
+//!   verified-token budget — re-planning only when decoding conditions
 //!   change significantly (§4.2.3).
+//! - [`alloc`]: water-fills the planner's budget across batch lanes by
+//!   per-lane marginal gain, so each request's tree depth tracks its own
+//!   acceptance statistics.
 
 pub mod acceptance;
+pub mod alloc;
 pub mod perf_model;
 pub mod planner;
 
 pub use acceptance::AcceptanceTracker;
+pub use alloc::{allocate_budget, allocation_gain, gain_at};
 pub use perf_model::PerfModel;
-pub use planner::{Planner, PlannerConfig};
+pub use planner::{BudgetMode, Planner, PlannerConfig};

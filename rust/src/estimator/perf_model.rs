@@ -81,7 +81,15 @@ impl PerfModel {
                 let denom = sw * sxx - sx * sx;
                 if denom.abs() < 1e-12 {
                     // Degenerate (all weight on one size effectively).
-                    let s = &self.stats[self.stats.len() - 1];
+                    // Fall back to the most recently *updated* stat — the
+                    // one whose weight dominates — not the last *pushed*
+                    // one, which may be an arbitrarily stale first-seen
+                    // size whose slope would then steer every estimate.
+                    let s = self
+                        .stats
+                        .iter()
+                        .max_by_key(|s| s.last_update)
+                        .expect("len >= 2 in this branch");
                     return (0.0, s.t_perf / s.size.max(1) as f64);
                 }
                 let b1 = (sw * sxy - sx * sy) / denom;
@@ -177,6 +185,29 @@ mod tests {
         m.record(16, 4.0);
         assert!((m.estimate(32) - 8.0).abs() < 1e-9);
         assert!(m.estimate(1) > 0.0);
+    }
+
+    #[test]
+    fn degenerate_fallback_uses_freshest_stat_not_last_pushed() {
+        // Regression: with a heavy recency decay, one fresh size and one
+        // stale size collapse the regression (all weight on the fresh
+        // size, denom ≈ 0).  The fallback must follow the *freshest*
+        // stat; the old code indexed the last-*pushed* stat, so a stale
+        // first-seen bucket recorded *after* the fresh one dominated the
+        // slope.
+        let mut m = PerfModel::new(1.0, 50.0);
+        m.record(8, 1.0); // fresh regime: 0.125 s per token
+        m.record(4, 100.0); // stale outlier, pushed last
+        for _ in 0..30 {
+            m.record(8, 1.0); // only size 8 is ever seen again
+        }
+        // exp(-50 · 30) underflows to 0: the fit is degenerate.
+        let est = m.estimate(64);
+        assert!(
+            est < 10.0,
+            "stale last-pushed stat dominated the fallback: {est}"
+        );
+        assert!((est - 8.0).abs() < 1e-9, "expected 64 · (1/8), got {est}");
     }
 
     #[test]

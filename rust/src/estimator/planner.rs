@@ -1,13 +1,53 @@
 //! Tree-size planning (§4.2.3): pick the tree-size bucket maximizing
-//! `v(i) = l(i) / T_est(i)` — expected accepted tokens per second.
+//! expected accepted tokens per second for the *whole batch*:
+//! `v(i) = batch · l(i) / T_est(batch · i)` — the iteration-time model is
+//! keyed on the step's total verified tokens (`batch × tree size`), not
+//! the per-lane tree size alone, because verification cost scales with
+//! the full padded token block the entry point processes.
 //!
 //! Per the paper, the planner is NOT invoked every iteration; it re-plans
 //! when the batch size changes, when the aggregate sequence length has
 //! drifted significantly, or after a fixed re-plan interval (so the perf
 //! model's fresh observations keep steering).  Between re-plans the cached
 //! decision is used, making its steady-state cost zero.
+//!
+//! The chosen bucket also sets the step's verified-token *budget*
+//! (`lanes × bucket`); in [`BudgetMode::PerLane`] that budget is
+//! water-filled across lanes by `estimator::alloc` instead of handing
+//! every lane the same bucket.
 
+use super::alloc::gain_at;
 use super::perf_model::PerfModel;
+
+/// How the step's verified-token budget is split across batch lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetMode {
+    /// Every lane receives the planner's bucket — the pre-allocator
+    /// budget *split*, kept as the ablation baseline (per-request
+    /// trackers and the totals-keyed perf model stay active either way).
+    Uniform,
+    /// Greedy water-filling by per-lane marginal gain
+    /// (`estimator::alloc`): high-acceptance lanes get deep trees,
+    /// stragglers get chains.
+    PerLane,
+}
+
+impl BudgetMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BudgetMode::Uniform => "uniform",
+            BudgetMode::PerLane => "per-lane",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "uniform" => Some(BudgetMode::Uniform),
+            "per-lane" | "per_lane" | "perlane" => Some(BudgetMode::PerLane),
+            _ => None,
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct PlannerConfig {
@@ -17,6 +57,8 @@ pub struct PlannerConfig {
     pub replan_interval: u64,
     /// Tree-size buckets available in the artifact grid (sorted).
     pub buckets: Vec<usize>,
+    /// Per-lane budgeted allocation vs the uniform-bucket baseline.
+    pub budget_mode: BudgetMode,
 }
 
 impl Default for PlannerConfig {
@@ -25,6 +67,7 @@ impl Default for PlannerConfig {
             seq_drift: 0.125,
             replan_interval: 32,
             buckets: vec![4, 8, 16, 32, 64],
+            budget_mode: BudgetMode::PerLane,
         }
     }
 }
@@ -38,6 +81,12 @@ pub struct Planner {
     max_seq: usize,
     steps_since_plan: u64,
     replans: u64,
+    /// (lanes, bucket) pairs already handed out for exploration.  With
+    /// ragged per-lane allocation the step's *actual* total may differ
+    /// from `lanes × bucket`, so "has the perf model observed this key"
+    /// alone would re-explore the same bucket forever; each pair is
+    /// visited at most once.
+    explored: std::collections::BTreeSet<(usize, usize)>,
 }
 
 impl Planner {
@@ -50,6 +99,7 @@ impl Planner {
             max_seq,
             steps_since_plan: 0,
             replans: 0,
+            explored: std::collections::BTreeSet::new(),
         }
     }
 
@@ -57,21 +107,45 @@ impl Planner {
         self.replans
     }
 
-    /// Does the current condition require a fresh plan?
-    pub fn needs_replan(&self, batch: usize, mean_seq: f64) -> bool {
+    /// The single replan predicate, parameterized on the step counter so
+    /// [`needs_replan`](Self::needs_replan) (inside `plan`, post-tick)
+    /// and [`will_replan`](Self::will_replan) (callers, pre-tick) can
+    /// never drift apart.
+    fn replan_due(
+        &self,
+        ticked_steps: u64,
+        batch: usize,
+        mean_seq: f64,
+    ) -> bool {
         if self.cached.is_none() || batch != self.last_batch {
             return true;
         }
-        if self.steps_since_plan >= self.cfg.replan_interval {
+        if ticked_steps >= self.cfg.replan_interval {
             return true;
         }
         (mean_seq - self.last_seq).abs() / self.max_seq as f64
             > self.cfg.seq_drift
     }
 
+    /// Does the current condition require a fresh plan?
+    pub fn needs_replan(&self, batch: usize, mean_seq: f64) -> bool {
+        self.replan_due(self.steps_since_plan, batch, mean_seq)
+    }
+
+    /// Like [`needs_replan`](Self::needs_replan) but evaluated as the next
+    /// [`plan`](Self::plan) call will see it (after its per-step tick):
+    /// lets callers skip gain-curve construction on steps where `plan` is
+    /// guaranteed to return the cached bucket.
+    pub fn will_replan(&self, batch: usize, mean_seq: f64) -> bool {
+        self.replan_due(self.steps_since_plan + 1, batch, mean_seq)
+    }
+
     /// Choose the tree-size bucket.  `gain_curve[i]` = expected acceptance
     /// length of the best tree of size i+1 (from
-    /// `TreeBuilder::gain_curve`); `perf` supplies `T_est`.
+    /// `TreeBuilder::gain_curve`; for a batch, the lane-mean curve);
+    /// `perf` supplies `T_est` keyed on total verified tokens
+    /// (`batch × bucket`).  An empty curve is legal ("no information")
+    /// and reads as gain 1.0 for every size.
     pub fn plan(
         &mut self,
         batch: usize,
@@ -83,16 +157,16 @@ impl Planner {
         if !self.needs_replan(batch, mean_seq) {
             return self.cached.unwrap();
         }
+        let lanes = batch.max(1);
         // Exploration: the §4.2.1 regression needs observations across
         // sizes, and the paper explicitly avoids offline
         // pre-characterization — so the first re-plans visit each
         // still-unobserved bucket once before exploiting the model.
-        if let Some(&unseen) = self
-            .cfg
-            .buckets
-            .iter()
-            .find(|&&b| perf.observed(b).is_none())
-        {
+        if let Some(&unseen) = self.cfg.buckets.iter().find(|&&b| {
+            perf.observed(lanes * b).is_none()
+                && !self.explored.contains(&(lanes, b))
+        }) {
+            self.explored.insert((lanes, unseen));
             self.cached = Some(unseen);
             self.last_batch = batch;
             self.last_seq = mean_seq;
@@ -106,11 +180,8 @@ impl Planner {
         let mut best = *self.cfg.buckets.first().expect("no buckets");
         let mut best_v = f64::NEG_INFINITY;
         for &b in &self.cfg.buckets {
-            let l = gain_curve
-                .get(b.min(gain_curve.len()) - 1)
-                .copied()
-                .unwrap_or(1.0);
-            let v = l / perf.estimate(b);
+            let l = gain_at(gain_curve, b);
+            let v = lanes as f64 * l / perf.estimate(lanes * b);
             if v > best_v {
                 best_v = v;
                 best = b;
@@ -137,10 +208,13 @@ impl Planner {
 mod tests {
     use super::*;
 
-    fn perf_linear(b0: f64, b1: f64) -> PerfModel {
+    /// Perf model trained on total verified tokens (`batch × bucket`) with
+    /// linear iteration time in the total.
+    fn perf_linear(batch: usize, b0: f64, b1: f64) -> PerfModel {
         let mut m = PerfModel::new(1.0, 0.0);
         for &i in &[4usize, 8, 16, 32, 64] {
-            m.record(i, b0 + b1 * i as f64);
+            let total = batch.max(1) * i;
+            m.record(total, b0 + b1 * total as f64);
         }
         m
     }
@@ -153,7 +227,7 @@ mod tests {
     #[test]
     fn picks_small_tree_when_time_dominates() {
         // Steep time growth + weak acceptance → small tree wins.
-        let perf = perf_linear(1.0, 10.0);
+        let perf = perf_linear(4, 1.0, 10.0);
         let mut p = Planner::new(PlannerConfig::default(), 512);
         let t = p.plan(4, 100.0, &curve(0.3, 64), &perf);
         assert_eq!(t, 4);
@@ -163,7 +237,7 @@ mod tests {
     fn picks_large_tree_when_time_flat() {
         // Nearly flat time (memory-bound small batch) + strong acceptance →
         // large tree wins.  This is the paper's BS=1 regime.
-        let perf = perf_linear(10.0, 0.001);
+        let perf = perf_linear(1, 10.0, 0.001);
         let mut p = Planner::new(PlannerConfig::default(), 512);
         let t = p.plan(1, 100.0, &curve(3.0, 64), &perf);
         assert_eq!(t, 64);
@@ -171,7 +245,7 @@ mod tests {
 
     #[test]
     fn caches_until_condition_changes() {
-        let perf = perf_linear(1.0, 0.5);
+        let perf = perf_linear(4, 1.0, 0.5);
         let mut p = Planner::new(PlannerConfig::default(), 512);
         let t1 = p.plan(4, 100.0, &curve(1.0, 64), &perf);
         let r1 = p.replans();
@@ -187,7 +261,7 @@ mod tests {
 
     #[test]
     fn seq_drift_triggers_replan() {
-        let perf = perf_linear(1.0, 0.5);
+        let perf = perf_linear(4, 1.0, 0.5);
         let mut p = Planner::new(PlannerConfig::default(), 512);
         p.plan(4, 100.0, &curve(1.0, 64), &perf);
         let r = p.replans();
@@ -197,7 +271,7 @@ mod tests {
 
     #[test]
     fn replan_interval_forces_refresh() {
-        let perf = perf_linear(1.0, 0.5);
+        let perf = perf_linear(4, 1.0, 0.5);
         let cfg = PlannerConfig { replan_interval: 5, ..Default::default() };
         let mut p = Planner::new(cfg, 512);
         p.plan(4, 100.0, &curve(1.0, 64), &perf);
@@ -214,7 +288,7 @@ mod tests {
         // chosen tree size must shrink — the paper's central trade-off.
         let mut chosen = Vec::new();
         for slope in [0.001, 0.05, 0.3, 2.0, 20.0] {
-            let perf = perf_linear(2.0, slope);
+            let perf = perf_linear(4, 2.0, slope);
             let mut p = Planner::new(PlannerConfig::default(), 512);
             chosen.push(p.plan(4, 100.0, &curve(1.5, 64), &perf));
         }
@@ -222,6 +296,48 @@ mod tests {
             assert!(w[1] <= w[0], "{chosen:?} not nonincreasing");
         }
         assert!(chosen[0] > *chosen.last().unwrap(), "{chosen:?}");
+    }
+
+    #[test]
+    fn will_replan_predicts_plan_exactly() {
+        // Callers use `will_replan` to skip gain-curve construction on
+        // cached steps; it must agree with `plan`'s post-tick decision on
+        // every step, or a replan would run on an empty curve.
+        let perf = perf_linear(4, 1.0, 0.5);
+        let cfg = PlannerConfig { replan_interval: 5, ..Default::default() };
+        let mut p = Planner::new(cfg, 512);
+        for step in 0..40 {
+            let predicted = p.will_replan(4, 100.0);
+            let before = p.replans();
+            p.plan(4, 100.0, &curve(1.0, 64), &perf);
+            assert_eq!(
+                p.replans() > before,
+                predicted,
+                "step {step}: prediction diverged from plan"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_gain_curve_plans_without_panicking() {
+        // Regression: `gain_curve.get(b.min(len) - 1)` underflowed on an
+        // empty curve (a cold tracker can legitimately produce one); the
+        // planner must fall back to gain 1.0 and still pick a bucket.
+        let perf = perf_linear(4, 1.0, 0.5);
+        let mut p = Planner::new(PlannerConfig::default(), 512);
+        let t = p.plan(4, 100.0, &[], &perf);
+        assert!(PlannerConfig::default().buckets.contains(&t));
+        // With flat gain and growing time, the smallest bucket wins.
+        assert_eq!(t, 4);
+    }
+
+    #[test]
+    fn budget_mode_roundtrip() {
+        for m in [BudgetMode::Uniform, BudgetMode::PerLane] {
+            assert_eq!(BudgetMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(BudgetMode::parse("per_lane"), Some(BudgetMode::PerLane));
+        assert_eq!(BudgetMode::parse("warp"), None);
     }
 }
 
@@ -238,14 +354,37 @@ mod exploration_tests {
             .collect();
         let first = p.plan(4, 10.0, &curve, &perf);
         assert!(PlannerConfig::default().buckets.contains(&first));
-        // With a perf model that has seen every bucket, planning exploits.
+        // With a perf model that has seen every (batch × bucket) total,
+        // planning exploits.
         let mut seen = PerfModel::new(1.0, 0.0);
         for &b in &PlannerConfig::default().buckets {
-            seen.record(b, 0.001 * b as f64);
+            seen.record(4 * b, 0.001 * (4 * b) as f64);
         }
         let mut p2 = Planner::new(PlannerConfig::default(), 512);
         let choice = p2.plan(4, 10.0, &curve, &seen);
         // flat-ish gain + linear time → small tree maximizes v
         assert_eq!(choice, 4);
+    }
+
+    #[test]
+    fn exploration_visits_each_bucket_once_even_if_never_recorded() {
+        // Ragged per-lane steps may record perf under totals that never
+        // equal `lanes × bucket`; exploration must still terminate after
+        // one visit per bucket instead of re-exploring the first
+        // unobserved bucket forever.
+        let perf = PerfModel::default(); // nothing ever recorded
+        let cfg = PlannerConfig { replan_interval: 1, ..Default::default() };
+        let mut p = Planner::new(cfg, 512);
+        let buckets = PlannerConfig::default().buckets;
+        let curve = vec![1.0, 1.5];
+        let mut visits = Vec::new();
+        for _ in 0..buckets.len() + 5 {
+            visits.push(p.plan(4, 10.0, &curve, &perf));
+        }
+        // First pass: each bucket exactly once, in grid order.
+        assert_eq!(&visits[..buckets.len()], &buckets[..]);
+        // Afterwards: exploitation, stable (no renewed exploration).
+        let tail = &visits[buckets.len()..];
+        assert!(tail.iter().all(|&b| b == tail[0]), "{visits:?}");
     }
 }

@@ -528,6 +528,37 @@ mod tests {
     }
 
     #[test]
+    fn ragged_per_lane_commits_from_one_block() {
+        // The tree step's block_kv is padded to the step bucket while each
+        // lane commits a different number of accepted columns (per-lane
+        // budgeted trees).  Commit indices are per-lane pairs into the
+        // shared [Lsub, 2, b, t, H, Dh] block, so heterogeneous accept
+        // lengths must land in the right slots untouched by each other.
+        let g = geom();
+        let mut c = KvCache::new(g, 2);
+        let s0 = c.acquire().unwrap();
+        let s1 = c.acquire().unwrap();
+        let (l_sub, b, t) = (2, 2, 4); // bucket 4, two lanes
+        let blk = block(l_sub, b, t, g.col());
+        // lane 0 accepted 3 columns, lane 1 accepted 1.
+        c.commit_columns(s0, &blk, (l_sub, b, t), 0, 0,
+                         &[(0, 0), (1, 1), (2, 2)])
+            .unwrap();
+        c.commit_columns(s1, &blk, (l_sub, b, t), 0, 1, &[(0, 0)]).unwrap();
+        assert_eq!(c.seq_len(s0), 3);
+        assert_eq!(c.seq_len(s1), 1);
+        let col = g.col();
+        // lane 0, layer 1, V, pos 2 ← block (l=1, c=1, lane=0, j=2)
+        let src0 = (((1 * 2 + 1) * b + 0) * t + 2) * col;
+        assert_eq!(c.read_column(s0, 1, 1, 2), &blk[src0..src0 + col]);
+        // lane 1, layer 0, K, pos 0 ← block (l=0, c=0, lane=1, j=0)
+        let src1 = (((0 * 2 + 0) * b + 1) * t + 0) * col;
+        assert_eq!(c.read_column(s1, 0, 0, 0), &blk[src1..src1 + col]);
+        // lane 1 position 1 was never committed and reads zero.
+        assert!(c.read_column(s1, 0, 0, 1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
     fn truncate_rolls_back_and_frees_pages() {
         let g = geom();
         // page_size 2 → a 3-token slot holds 2 pages.

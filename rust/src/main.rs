@@ -9,7 +9,10 @@
 //! the artifacts runtime for the deterministic reference backend (no
 //! artifacts directory needed).  `--routing cache-pressure` steers new
 //! requests away from page-starved replicas; `--page-size N` sets the KV
-//! cache page granularity (positions per page).
+//! cache page granularity (positions per page).  `--tree-budget per-lane`
+//! (default) water-fills each step's verified-token budget across lanes
+//! by per-request acceptance; `--tree-budget uniform` restores the
+//! uniform-bucket baseline (ablation).
 //!
 //! (The offline crate mirror has no clap; argument parsing is hand-rolled.)
 
@@ -77,6 +80,10 @@ fn parse_args() -> Result<Args> {
             "--page-size" => {
                 let v = val("--page-size")?;
                 a.sets.push(format!("cache.page_size={v}"));
+            }
+            "--tree-budget" => {
+                let v = val("--tree-budget")?;
+                a.sets.push(format!("planner.budget_mode=\"{v}\""));
             }
             "--sim" => a.sim = true,
             other => bail!("unknown flag {other:?} (try `propd help`)"),
@@ -202,7 +209,8 @@ fn main() -> Result<()> {
                  usage: propd <serve|generate|inspect|selftest> \
                  [--config f.toml] [--set k=v] [--engine kind] [--size s] \
                  [--prompt p] [--max-new n] [--artifacts dir] \
-                 [--replicas n] [--routing policy] [--page-size n] [--sim]"
+                 [--replicas n] [--routing policy] [--page-size n] \
+                 [--tree-budget per-lane|uniform] [--sim]"
             );
             Ok(())
         }

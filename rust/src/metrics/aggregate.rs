@@ -96,9 +96,21 @@ impl MetricsHub {
         for k in ["steps", "tokens_generated", "requests_completed",
                   "busy_seconds", "tokens_per_second",
                   "assembly_bytes_copied_total", "assembly_bytes_full_total",
+                  "verify_tokens_total",
                   "kv_pages_in_use", "kv_page_capacity"] {
             totals.insert(k.into(), sum(k));
         }
+        // Fleet speculation economics: accepted per verified token as a
+        // ratio of sums (not a mean of per-replica ratios).
+        let verified = sum("verify_tokens_total");
+        totals.insert(
+            "accept_per_verified".into(),
+            if verified <= 0.0 {
+                0.0
+            } else {
+                sum("tokens_generated") / verified
+            },
+        );
         // Fleet cache economics: ratios recomputed from the summed parts
         // (a ratio-of-sums, not a mean-of-ratios).
         let full = sum("assembly_bytes_full_total");
@@ -116,9 +128,19 @@ impl MetricsHub {
             if cap <= 0.0 { 0.0 } else { sum("kv_pages_in_use") / cap },
         );
         for k in ["step_time_mean_s", "accept_len_mean", "tree_size_mean",
-                  "pruned_size_mean", "prune_rate_mean"] {
+                  "pruned_size_mean", "prune_rate_mean",
+                  "tree_alloc_lane_size_mean", "tree_alloc_budget_mean",
+                  "tree_alloc_util_mean", "tree_alloc_gain_mean"] {
             totals.insert(k.into(), weighted(k, "steps"));
         }
+        // The fleet's deepest lane allocation is a max-of-maxes.
+        totals.insert(
+            "tree_alloc_lane_size_max".into(),
+            replicas
+                .iter()
+                .map(|r| get(r, "tree_alloc_lane_size_max"))
+                .fold(0.0, f64::max),
+        );
         for k in ["request_latency_mean_s", "queue_delay_mean_s"] {
             totals.insert(k.into(), weighted(k, "requests_completed"));
         }
@@ -213,6 +235,41 @@ mod tests {
         assert!((agg.total("assembly_savings_ratio") - 0.75).abs() < 1e-12);
         // occupancy: (2+8)/(10+10) = 0.5.
         assert!((agg.total("kv_page_occupancy") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tree_alloc_economics_roll_up() {
+        let hub = MetricsHub::new(2);
+        let mut a = EngineMetrics {
+            tokens_generated: 20,
+            verify_tokens: 40,
+            steps: 10,
+            ..Default::default()
+        };
+        for _ in 0..10 {
+            a.tree_alloc_util.record(1.0);
+        }
+        let mut b = EngineMetrics {
+            tokens_generated: 10,
+            verify_tokens: 60,
+            steps: 30,
+            ..Default::default()
+        };
+        for _ in 0..30 {
+            b.tree_alloc_util.record(0.5);
+        }
+        a.tree_alloc_lane_size.record(13.0);
+        b.tree_alloc_lane_size.record(4.0);
+        hub.publish(0, 0, 0, &a);
+        hub.publish(1, 0, 0, &b);
+        let agg = hub.aggregate();
+        assert_eq!(agg.total("verify_tokens_total"), 100.0);
+        // ratio of sums: 30 / 100.
+        assert!((agg.total("accept_per_verified") - 0.3).abs() < 1e-12);
+        // step-weighted util: (1.0·10 + 0.5·30) / 40 = 0.625.
+        assert!((agg.total("tree_alloc_util_mean") - 0.625).abs() < 1e-12);
+        // deepest lane across the fleet: max of per-replica maxes.
+        assert_eq!(agg.total("tree_alloc_lane_size_max"), 13.0);
     }
 
     #[test]

@@ -27,6 +27,18 @@ pub struct EngineMetrics {
     pub pruned_size: Summary,
     /// Fraction of nodes eliminated by early pruning per step.
     pub prune_rate: Summary,
+    /// Live tree size granted to each lane each step (per-lane budgeted
+    /// allocation: the distribution spreads when acceptance is skewed).
+    pub tree_alloc_lane_size: Summary,
+    /// Verified-token budget the planner granted per step.
+    pub tree_alloc_budget: Summary,
+    /// Budget utilization per step: Σ live sizes / budget.  Below 1.0 the
+    /// allocator left tokens unspent because no lane had positive
+    /// marginal gain for them.
+    pub tree_alloc_util: Summary,
+    /// Expected accepted tokens captured by the step's allocation
+    /// (Σ per-lane gain curves at the chosen sizes; dynamic mode only).
+    pub tree_alloc_gain: Summary,
     /// Request latency (submit → completion) in seconds.
     pub request_latency: Summary,
     /// Queueing delay before prefill (s).
@@ -36,6 +48,9 @@ pub struct EngineMetrics {
     pub assembly_bytes: Summary,
     pub steps: u64,
     pub tokens_generated: u64,
+    /// Total live tree nodes verified across steps (real lanes only) —
+    /// the denominator of `accept_per_verified`.
+    pub verify_tokens: u64,
     pub requests_completed: u64,
     pub prefills: u64,
     /// Engine wall-clock while at least one request was active (s).
@@ -78,6 +93,17 @@ impl EngineMetrics {
         }
     }
 
+    /// Accepted tokens per verified token — the speculation economics the
+    /// per-lane allocator optimizes (0 when nothing was verified, e.g.
+    /// the autoregressive engine).
+    pub fn accept_per_verified(&self) -> f64 {
+        if self.verify_tokens == 0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.verify_tokens as f64
+        }
+    }
+
     /// KV page occupancy in [0, 1] after the latest step.
     pub fn kv_page_occupancy(&self) -> f64 {
         if self.kv_page_capacity == 0 {
@@ -106,6 +132,18 @@ impl EngineMetrics {
         m.insert("tree_size_mean".into(), self.tree_size.mean());
         m.insert("pruned_size_mean".into(), self.pruned_size.mean());
         m.insert("prune_rate_mean".into(), self.prune_rate.mean());
+        m.insert("tree_alloc_lane_size_mean".into(),
+                 self.tree_alloc_lane_size.mean());
+        m.insert("tree_alloc_lane_size_max".into(),
+                 self.tree_alloc_lane_size.max());
+        m.insert("tree_alloc_budget_mean".into(),
+                 self.tree_alloc_budget.mean());
+        m.insert("tree_alloc_util_mean".into(),
+                 self.tree_alloc_util.mean());
+        m.insert("tree_alloc_gain_mean".into(),
+                 self.tree_alloc_gain.mean());
+        m.insert("verify_tokens_total".into(), self.verify_tokens as f64);
+        m.insert("accept_per_verified".into(), self.accept_per_verified());
         m.insert("request_latency_mean_s".into(),
                  self.request_latency.mean());
         m.insert("request_latency_p99_s".into(), self.request_latency.p99());
@@ -151,9 +189,25 @@ mod tests {
             "assembly_bytes_copied_total",
             "assembly_savings_ratio",
             "kv_page_occupancy",
+            "tree_alloc_lane_size_mean",
+            "tree_alloc_budget_mean",
+            "tree_alloc_util_mean",
+            "tree_alloc_gain_mean",
+            "verify_tokens_total",
+            "accept_per_verified",
         ] {
             assert!(r.contains_key(k), "missing {k}");
         }
+    }
+
+    #[test]
+    fn accept_per_verified_ratio() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.accept_per_verified(), 0.0);
+        m.tokens_generated = 30;
+        m.verify_tokens = 120;
+        assert!((m.accept_per_verified() - 0.25).abs() < 1e-12);
+        assert!((m.report()["accept_per_verified"] - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -111,19 +111,22 @@ impl Runtime {
     /// `python/compile/aot.py`.
     pub fn load(artifacts_dir: &std::path::Path) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        Ok(Self::with_manifest(manifest, SimConfig::default().seed))
+        Ok(Self::with_manifest(
+            manifest,
+            Sim::new(SimConfig::default().seed),
+        ))
     }
 
     /// Build a runtime over the synthetic sim manifest — no artifacts
     /// needed; every entry point in the configured grid is executable.
     pub fn sim(cfg: &SimConfig) -> Self {
-        Self::with_manifest(cfg.manifest(), cfg.seed)
+        Self::with_manifest(cfg.manifest(), Sim::of(cfg))
     }
 
-    fn with_manifest(manifest: Manifest, seed: u64) -> Self {
+    fn with_manifest(manifest: Manifest, sim: Sim) -> Self {
         Runtime {
             manifest,
-            sim: Sim::new(seed),
+            sim,
             exes: RefCell::new(HashMap::new()),
             host_weights: RefCell::new(HashMap::new()),
             compile_log: RefCell::new(Vec::new()),

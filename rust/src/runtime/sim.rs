@@ -48,6 +48,14 @@ pub struct SimConfig {
     pub tree_buckets: Vec<usize>,
     /// Stream seed: different seeds give different deterministic corpora.
     pub seed: u64,
+    /// Skewed-acceptance workloads: requests whose *first* context token
+    /// is below this value get deterministic-junk medusa rows (their
+    /// speculation never lands), while other requests keep the oracle's
+    /// near-perfect heads.  0 disables.  Greedy text is unaffected —
+    /// verification is exact — so byte-identity invariants still hold;
+    /// only acceptance lengths (and therefore the per-lane allocator's
+    /// decisions) diverge between request classes.
+    pub medusa_flaky_below: u32,
 }
 
 impl Default for SimConfig {
@@ -67,6 +75,7 @@ impl Default for SimConfig {
             batch_buckets: vec![1, 2, 4, 8],
             tree_buckets: vec![4, 8, 16, 32, 64],
             seed: 0x5eed,
+            medusa_flaky_below: 0,
         }
     }
 }
@@ -203,11 +212,18 @@ impl SimConfig {
 #[derive(Debug, Clone, Copy)]
 pub struct Sim {
     pub seed: u64,
+    /// See [`SimConfig::medusa_flaky_below`].
+    pub medusa_flaky_below: u32,
 }
 
 impl Sim {
     pub fn new(seed: u64) -> Self {
-        Sim { seed }
+        Sim { seed, medusa_flaky_below: 0 }
+    }
+
+    /// Executor for a [`SimConfig`] (carries the flakiness knob).
+    pub fn of(cfg: &SimConfig) -> Self {
+        Sim { seed: cfg.seed, medusa_flaky_below: cfg.medusa_flaky_below }
     }
 
     /// Deterministic logits row for a token context (FNV-1a fold → xoshiro
@@ -226,6 +242,11 @@ impl Sim {
     /// Base logits + medusa head rows for a context.  Head `h` carries the
     /// logits of the greedy continuation `h+1` steps beyond the base
     /// prediction (so its argmax is the token at offset `h+2`).
+    ///
+    /// Flaky contexts (first token below `medusa_flaky_below`) instead get
+    /// deterministic junk head rows, decorrelated from the true
+    /// continuation by an out-of-vocabulary marker — a worst-case
+    /// speculator for skewed-acceptance workloads.
     fn base_and_medusa(
         &self,
         ctx: &[u32],
@@ -233,13 +254,23 @@ impl Sim {
         heads: usize,
     ) -> (Vec<f32>, Vec<f32>) {
         let base = self.row(ctx, vocab);
+        let flaky = self.medusa_flaky_below > 0
+            && ctx.first().map_or(false, |&t| t < self.medusa_flaky_below);
         let mut rolled = ctx.to_vec();
         rolled.push(argmax(&base) as u32);
         let mut medusa = Vec::with_capacity(heads * vocab);
-        for _ in 0..heads {
-            let r = self.row(&rolled, vocab);
-            rolled.push(argmax(&r) as u32);
-            medusa.extend_from_slice(&r);
+        for h in 0..heads {
+            // The true continuation row: rolled forward regardless of
+            // flakiness so every head offset stays oracle-consistent.
+            let next = self.row(&rolled, vocab);
+            if flaky {
+                let mut junk_ctx = ctx.to_vec();
+                junk_ctx.push((vocab + h) as u32);
+                medusa.extend_from_slice(&self.row(&junk_ctx, vocab));
+            } else {
+                medusa.extend_from_slice(&next);
+            }
+            rolled.push(argmax(&next) as u32);
         }
         (base, medusa)
     }
@@ -540,6 +571,30 @@ mod tests {
             Sim::new(1).row(&[1, 2, 3], 64),
             Sim::new(2).row(&[1, 2, 3], 64)
         );
+    }
+
+    #[test]
+    fn flaky_heads_break_speculation_but_not_the_base_oracle() {
+        let cfg = SimConfig { medusa_flaky_below: 97, ..Default::default() };
+        let sim = Sim::of(&cfg);
+        let clean = Sim::new(cfg.seed);
+        let v = cfg.vocab;
+        // 'u' (117) ≥ 97: heads stay oracle-perfect.
+        let good_ctx = [117u32, 1, 2];
+        let (gb, gm) = sim.base_and_medusa(&good_ctx, v, 2);
+        let (cb, cm) = clean.base_and_medusa(&good_ctx, v, 2);
+        assert_eq!(gb, cb);
+        assert_eq!(gm, cm);
+        // 'A' (65) < 97: base logits identical (greedy text unaffected),
+        // head rows diverge from the oracle continuation.
+        let bad_ctx = [65u32, 1, 2];
+        let (fb, fm) = sim.base_and_medusa(&bad_ctx, v, 2);
+        let (ob, om) = clean.base_and_medusa(&bad_ctx, v, 2);
+        assert_eq!(fb, ob, "base logits must not depend on flakiness");
+        assert_ne!(fm, om, "flaky heads must diverge");
+        // Deterministic: the same junk every time.
+        let (_, fm2) = sim.base_and_medusa(&bad_ctx, v, 2);
+        assert_eq!(fm, fm2);
     }
 
     #[test]

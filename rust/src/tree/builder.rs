@@ -287,6 +287,30 @@ mod tests {
     }
 
     #[test]
+    fn truncated_full_build_equals_direct_build() {
+        // The allocator builds once at the cap and prefix-truncates; that
+        // must match building directly at each smaller size, node for
+        // node (greedy adds in a deterministic global order).
+        let b = TreeBuilder::default();
+        let full = b.build(7, &cands(), 12);
+        for size in 1..=12 {
+            let direct = b.build(7, &cands(), size);
+            let trunc = full.truncated(size);
+            assert_eq!(
+                trunc.nodes(),
+                direct.nodes(),
+                "size {size}: prefix diverged from direct build"
+            );
+        }
+        // And the prefix gain curve matches gain_curve's values.
+        let curve = b.gain_curve(&cands(), 12);
+        let prefix = full.gain_prefix(12);
+        for (i, (a, c)) in prefix.iter().zip(&curve).enumerate() {
+            assert!((a - c).abs() < 1e-12, "index {i}: {a} vs {c}");
+        }
+    }
+
+    #[test]
     fn respects_max_rank() {
         let b = TreeBuilder::new(1);
         let t = b.build(0, &cands(), 10);

@@ -7,6 +7,12 @@
 //! `u64`-bitset per row; subsampling is a bit-gather, and the dense f32
 //! tensor the runtime uploads is written into a caller-provided scratch
 //! buffer so the hot loop never allocates.
+//!
+//! Ragged-batch contract (per-lane budgeted allocation): each lane's mask
+//! carries its own `live` size and is padded independently to the step's
+//! shared bucket.  Padding rows attend only themselves (finite softmax)
+//! and no live row ever attends a padding row, so lanes of different live
+//! sizes coexist in one `[b, t, t]` tensor without cross-talk.
 
 use super::node::TokenTree;
 use crate::runtime::literal::NEG_INF;
@@ -141,6 +147,29 @@ mod tests {
         let m = TreeMask::build(&tree(), 4);
         let sub = m.subsample(&[0, 1, 2, 3], 4);
         assert_eq!(sub, m);
+    }
+
+    #[test]
+    fn ragged_live_sizes_never_attend_padding() {
+        // Lanes with different live sizes share one bucket; each lane's
+        // live rows must be confined to its own live prefix.
+        for live in 1..=6usize {
+            let chain: Vec<u32> = (0..live as u32).map(|i| i + 1).collect();
+            let t = TokenTree::chain(&chain);
+            let m = TreeMask::build(&t, 8);
+            assert_eq!(m.live(), live);
+            let live_bits = (1u64 << live) - 1;
+            for i in 0..live {
+                assert_eq!(
+                    m.row(i) & !live_bits,
+                    0,
+                    "live {live}: row {i} attends padding"
+                );
+            }
+            for i in live..8 {
+                assert_eq!(m.row(i), 1 << i, "pad row {i} must be self-only");
+            }
+        }
     }
 
     #[test]

@@ -130,6 +130,36 @@ impl TokenTree {
         self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
     }
 
+    /// First `size` nodes as a tree (`size` clamped to `1..=len`).
+    ///
+    /// Because the greedy builder appends nodes in descending marginal
+    /// path-probability order, the prefix of a size-N greedy tree IS the
+    /// optimal greedy tree of the smaller size — the per-lane allocator
+    /// builds each lane once at its cap and truncates to the allocated
+    /// size instead of rebuilding.  The prefix is always structurally
+    /// valid: parents precede children in insertion order.
+    pub fn truncated(&self, size: usize) -> TokenTree {
+        let size = size.clamp(1, self.nodes.len());
+        TokenTree { nodes: self.nodes[..size].to_vec() }
+    }
+
+    /// Cumulative expected-acceptance curve over the insertion-order
+    /// prefix: `curve[i]` = expected accepted tokens of the first i+1
+    /// nodes, padded flat to `len` (mirror of `TreeBuilder::gain_curve`,
+    /// but read off an already-built tree).
+    pub fn gain_prefix(&self, len: usize) -> Vec<f64> {
+        let mut curve = Vec::with_capacity(len.max(self.nodes.len()));
+        let mut acc = 0.0;
+        for n in &self.nodes {
+            acc += n.path_prob;
+            curve.push(acc);
+        }
+        while curve.len() < len {
+            curve.push(acc);
+        }
+        curve
+    }
+
     /// Keep only `keep` (sorted, must contain 0); re-index parents.
     /// Returns the compacted tree plus the old→new index map.
     pub fn compact(&self, keep: &[usize]) -> (TokenTree, Vec<Option<usize>>) {
@@ -230,6 +260,22 @@ mod tests {
         let t = small_tree();
         assert!((t.expected_accept_len() - (1.0 + 0.6 + 0.3 + 0.36)).abs()
             < 1e-12);
+    }
+
+    #[test]
+    fn truncated_prefix_is_valid_and_gain_prefix_sums() {
+        let t = small_tree();
+        let p = t.truncated(2);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.node(1).token, 20);
+        assert!(p.validate().is_ok());
+        assert_eq!(t.truncated(0).len(), 1, "clamps to the root");
+        assert_eq!(t.truncated(99).len(), 4, "clamps to the tree");
+        let curve = t.gain_prefix(6);
+        assert_eq!(curve.len(), 6);
+        assert!((curve[0] - 1.0).abs() < 1e-12);
+        assert!((curve[3] - t.expected_accept_len()).abs() < 1e-12);
+        assert_eq!(curve[5], curve[3], "padded flat past the tree");
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Per-lane budgeted tree allocation: allocator properties, end-to-end
+//! byte-identity of the ragged batch path across all four engines and
+//! both budget modes, and the headline economics — on a skewed-acceptance
+//! workload the per-lane mode converts the same verified-token budget
+//! into strictly more accepted tokens per verified token than the
+//! uniform-bucket baseline.
+
+use propd::batching::RoutingPolicy;
+use propd::config::ServingConfig;
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::estimator::{allocate_budget, gain_at, BudgetMode};
+use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
+use propd::server::run_offline;
+use propd::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Allocator properties
+// ---------------------------------------------------------------------------
+
+/// A plausible gain curve: nonincreasing marginals (what the greedy tree
+/// builder produces), random per-lane steepness.
+fn random_curve(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let base = rng.f64(); // first marginal in [0, 1)
+    let decay = 0.5 + 0.5 * rng.f64(); // in [0.5, 1)
+    let mut acc = 1.0;
+    let mut marginal = base;
+    (0..n)
+        .map(|_| {
+            let g = acc;
+            acc += marginal;
+            marginal *= decay;
+            g
+        })
+        .collect()
+}
+
+#[test]
+fn prop_summed_sizes_never_exceed_the_budget() {
+    let mut rng = Rng::new(0xa110c);
+    for round in 0..300 {
+        let lanes = rng.range(1, 9);
+        let n = rng.range(4, 65);
+        let curves: Vec<Vec<f64>> =
+            (0..lanes).map(|_| random_curve(&mut rng, n)).collect();
+        let caps: Vec<usize> =
+            (0..lanes).map(|_| rng.range(1, n + 1)).collect();
+        let budget = rng.range(0, 4 * n);
+        let sizes = allocate_budget(&curves, &caps, budget, 0.0);
+        let total: usize = sizes.iter().sum();
+        // Every lane always owns its root; beyond the mandatory roots the
+        // allocator never oversubscribes the budget.
+        assert!(
+            total <= budget.max(lanes),
+            "round {round}: {total} > max({budget}, {lanes})"
+        );
+        for (lane, (&s, &c)) in sizes.iter().zip(&caps).enumerate() {
+            assert!(s >= 1, "round {round}: lane {lane} lost its root");
+            assert!(
+                s <= c.max(1),
+                "round {round}: lane {lane} exceeded its cap"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_allocation_is_monotone_in_gain() {
+    // A lane whose marginal gains strictly dominate another's at every
+    // index never receives a smaller tree (equal caps).
+    let mut rng = Rng::new(0xd011a);
+    for round in 0..300 {
+        let lanes = rng.range(2, 7);
+        let n = 32;
+        // Dominant lane: marginal 0.9^i; others scaled strictly below it.
+        let mut curves: Vec<Vec<f64>> = Vec::with_capacity(lanes);
+        let dominant = {
+            let mut acc = 1.0;
+            (0..n)
+                .map(|i| {
+                    let g = acc;
+                    acc += 0.95_f64.powi(i as i32);
+                    g
+                })
+                .collect::<Vec<f64>>()
+        };
+        curves.push(dominant);
+        for _ in 1..lanes {
+            let scale = 0.1 + 0.8 * rng.f64(); // strictly < 1
+            let mut acc = 1.0;
+            curves.push(
+                (0..n)
+                    .map(|i| {
+                        let g = acc;
+                        acc += scale * 0.95_f64.powi(i as i32);
+                        g
+                    })
+                    .collect(),
+            );
+        }
+        let caps = vec![n; lanes];
+        let budget = rng.range(lanes, 3 * n);
+        let sizes = allocate_budget(&curves, &caps, budget, 0.0);
+        for lane in 1..lanes {
+            assert!(
+                sizes[0] >= sizes[lane],
+                "round {round}: dominant lane got {} < lane {lane}'s {} \
+                 (budget {budget}, sizes {sizes:?})",
+                sizes[0],
+                sizes[lane]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_allocation_maximizes_gain_under_budget() {
+    // Spot-check optimality on small instances: the greedy allocation's
+    // summed gain matches exhaustive search over all size splits.
+    let mut rng = Rng::new(0x0b7a1);
+    for _ in 0..40 {
+        let n = 6;
+        let curves: Vec<Vec<f64>> =
+            (0..3).map(|_| random_curve(&mut rng, n)).collect();
+        let caps = vec![n; 3];
+        let budget = rng.range(3, 14);
+        let sizes = allocate_budget(&curves, &caps, budget, 0.0);
+        let got: f64 =
+            sizes.iter().zip(&curves).map(|(&s, c)| gain_at(c, s)).sum();
+        let mut best = f64::NEG_INFINITY;
+        for a in 1..=n {
+            for b in 1..=n {
+                for c in 1..=n {
+                    if a + b + c <= budget.max(3) {
+                        let g = gain_at(&curves[0], a)
+                            + gain_at(&curves[1], b)
+                            + gain_at(&curves[2], c);
+                        best = best.max(g);
+                    }
+                }
+            }
+        }
+        assert!(
+            got >= best - 1e-9,
+            "greedy {got} < exhaustive {best} (budget {budget})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: ragged batches stay byte-identical
+// ---------------------------------------------------------------------------
+
+/// Skewed-acceptance sim: prompts starting with an uppercase byte get
+/// deterministic-junk medusa heads; lowercase prompts keep the oracle's
+/// near-perfect ones.  Greedy text is unaffected either way.
+fn skewed_sim() -> SimConfig {
+    SimConfig { medusa_flaky_below: 97, ..Default::default() }
+}
+
+const HOT_PROMPT: &str = "user: Explain how the batch engine balances \
+                          decode throughput.\nassistant:";
+const COLD_PROMPTS: [&str; 3] = [
+    "User: FIRST straggler with junk speculation.\nassistant:",
+    "User: SECOND straggler with junk speculation.\nassistant:",
+    "User: THIRD straggler with junk speculation.\nassistant:",
+];
+
+fn skewed_requests() -> Vec<(String, usize)> {
+    let mut reqs = vec![(HOT_PROMPT.to_string(), 48)];
+    for p in COLD_PROMPTS {
+        reqs.push((p.to_string(), 48));
+    }
+    reqs
+}
+
+fn decode_all(
+    rt: &Runtime,
+    mut cfg: EngineConfig,
+    reqs: &[(String, usize)],
+) -> Vec<Vec<u32>> {
+    cfg.max_batch = reqs.len().max(1);
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    for (p, m) in reqs {
+        engine.submit(p, *m);
+    }
+    let mut done = engine.run_to_completion().expect("run");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.tokens).collect()
+}
+
+#[test]
+fn per_lane_budgeting_is_byte_identical_across_engines() {
+    let sim = skewed_sim();
+    let rt = Runtime::sim(&sim);
+    let reqs = skewed_requests();
+    let ar = decode_all(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::Autoregressive),
+        &reqs,
+    );
+    assert!(ar.iter().all(|t| !t.is_empty()));
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        for mode in [BudgetMode::Uniform, BudgetMode::PerLane] {
+            let mut cfg = EngineConfig::new(&sim.size, kind);
+            cfg.planner.budget_mode = mode;
+            cfg.accept_alpha = 0.3;
+            let out = decode_all(&rt, cfg, &reqs);
+            assert_eq!(
+                out,
+                ar,
+                "{} with budget_mode={} diverged from autoregressive",
+                kind.as_str(),
+                mode.as_str()
+            );
+        }
+    }
+}
+
+#[test]
+fn per_lane_budgeting_is_byte_identical_across_routing_policies() {
+    let sim = skewed_sim();
+    let rt = Runtime::sim(&sim);
+    let reqs = skewed_requests();
+    let ar = decode_all(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::Autoregressive),
+        &reqs,
+    );
+    for routing in [
+        RoutingPolicy::LeastLoaded,
+        RoutingPolicy::RoundRobin,
+        RoutingPolicy::CachePressure,
+    ] {
+        let mut cfg =
+            ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+        cfg.server.replicas = 2;
+        cfg.server.routing = routing;
+        cfg.engine.max_batch = 2;
+        cfg.engine.planner.budget_mode = BudgetMode::PerLane;
+        let (completions, _, served) =
+            run_offline(&cfg, &RuntimeSpec::Sim(sim.clone()), &reqs)
+                .expect("replica run");
+        assert_eq!(served.iter().sum::<u64>(), reqs.len() as u64);
+        for (i, c) in completions.iter().enumerate() {
+            assert_eq!(
+                c.tokens,
+                ar[i],
+                "routing {} request {i} diverged",
+                routing.as_str()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The headline economics
+// ---------------------------------------------------------------------------
+
+fn run_skewed(mode: BudgetMode) -> std::collections::BTreeMap<String, f64> {
+    let sim = skewed_sim();
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 4;
+    cfg.accept_alpha = 0.3; // per-request trackers adapt within a request
+    cfg.planner.budget_mode = mode;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    engine.submit(HOT_PROMPT, 56);
+    for p in COLD_PROMPTS {
+        engine.submit(p, 56);
+    }
+    engine.run_to_completion().expect("run");
+    engine.metrics.report()
+}
+
+#[test]
+fn per_lane_mode_beats_uniform_on_skewed_acceptance() {
+    let uniform = run_skewed(BudgetMode::Uniform);
+    let per_lane = run_skewed(BudgetMode::PerLane);
+    // Both modes verified real work and decoded everything.
+    assert!(uniform["verify_tokens_total"] > 0.0);
+    assert!(per_lane["verify_tokens_total"] > 0.0);
+    assert_eq!(
+        uniform["requests_completed"],
+        per_lane["requests_completed"]
+    );
+    // The tentpole claim: strictly more accepted tokens per verified
+    // token out of the same budget policy.
+    assert!(
+        per_lane["accept_per_verified"] > uniform["accept_per_verified"],
+        "per-lane {} must beat uniform {}",
+        per_lane["accept_per_verified"],
+        uniform["accept_per_verified"]
+    );
+    // And it does so by actually skewing the allocation: the lane-size
+    // distribution spreads (deep hot lane, chain stragglers) instead of
+    // every lane riding the same bucket.
+    assert!(
+        per_lane["tree_alloc_lane_size_max"]
+            > per_lane["tree_alloc_lane_size_mean"] + 0.5,
+        "lane sizes stayed uniform: max {} vs mean {}",
+        per_lane["tree_alloc_lane_size_max"],
+        per_lane["tree_alloc_lane_size_mean"]
+    );
+    // Budget accounting stays coherent: utilization in (0, 1].
+    let util = per_lane["tree_alloc_util_mean"];
+    assert!(util > 0.0 && util <= 1.0 + 1e-9, "util {util}");
+}
+
+#[test]
+fn tree_alloc_metrics_flow_to_the_report() {
+    let report = run_skewed(BudgetMode::PerLane);
+    for k in [
+        "tree_alloc_lane_size_mean",
+        "tree_alloc_budget_mean",
+        "tree_alloc_util_mean",
+        "tree_alloc_gain_mean",
+        "verify_tokens_total",
+        "accept_per_verified",
+    ] {
+        assert!(report.contains_key(k), "missing {k}");
+    }
+    assert!(report["tree_alloc_budget_mean"] > 0.0);
+    assert!(report["tree_alloc_gain_mean"] > 0.0);
+    assert!(report["accept_per_verified"] > 0.0);
+    assert!(report["accept_per_verified"] <= 1.0 + 1e-9);
+}
