@@ -22,7 +22,7 @@ use anyhow::{Context, Result};
 use propd::bench::gate::{self, Baseline, Direction};
 use propd::bench::harness::{run_trace, RunSpec};
 use propd::bench::{Bencher, Table};
-use propd::engine::{EngineConfig, EngineKind};
+use propd::engine::{AdmissionMode, EngineConfig, EngineKind};
 use propd::estimator::{
     allocate_budget, allocation_gain, gain_at, alloc::DEFAULT_MIN_GAIN,
 };
@@ -69,6 +69,33 @@ fn measure() -> Result<BTreeMap<String, f64>> {
         "assembly_copied_over_full".into(),
         copied / full.max(1.0),
     );
+
+    // ---- streaming lifecycle fixtures (deterministic) ----
+    // Static-tree ProPD under optimistic admission with a page pool tight
+    // enough to force preempt/requeue cycles.  Every decision is a pure
+    // function of the oracle + page math, so the lifecycle counters and
+    // the steps-to-first-token proxy gate machine-independently; the
+    // wall-clock TTFT is informational (runners vary).
+    let mut lc = EngineConfig::ablation(&sim.size, true, false);
+    lc.max_batch = 4;
+    lc.admission = AdmissionMode::Optimistic;
+    lc.page_size = 16;
+    lc.cache_pages = 26; // one guaranteed lane (384/16 = 24 pages)
+    let mut spec = RunSpec::new(lc, "chatgpt");
+    spec.n_requests = 8;
+    spec.max_new_tokens = Some(40);
+    spec.warmup = false;
+    let lc_out = run_trace(&rt, &prompts, &spec).context("lifecycle run")?;
+    m.insert("ttft_steps_mean".into(), lc_out.report["ttft_steps_mean"]);
+    m.insert("preempt_total".into(), lc_out.report["preempt_total"]);
+    m.insert("requeue_total".into(), lc_out.report["requeue_total"]);
+    m.insert("ttft_mean_ms".into(), lc_out.report["ttft_mean_s"] * 1e3);
+    m.insert("itl_mean_ms".into(), lc_out.report["itl_mean_s"] * 1e3);
+    // The pressure run must decode the exact same text as an unthrottled
+    // run would, so this fixture's total token count is a deterministic
+    // constant: it gates with direction "exact" (any drift — up or down —
+    // fails CI, a cheap byte-identity canary).
+    m.insert("lifecycle_tokens".into(), lc_out.tokens as f64);
 
     // ---- per-lane budget allocator (deterministic fixture) ----
     // A skewed-acceptance batch as the allocator sees it: one hot lane
@@ -166,6 +193,14 @@ fn metric_meta(name: &str) -> (Direction, bool, Option<f64>) {
         | "propd_step_reduction" => (Direction::Higher, true, None),
         "ar_steps" | "propd_static_steps" => (Direction::Lower, true, None),
         "assembly_copied_over_full" => (Direction::Lower, true, None),
+        // Streaming lifecycle fixtures: deterministic counters, lower is
+        // better (fewer steps to first token, less preempt churn).
+        "ttft_steps_mean" | "preempt_total" | "requeue_total" => {
+            (Direction::Lower, true, None)
+        }
+        // Byte-identity canary: the pressure run's token total is a
+        // deterministic constant — any drift fails.
+        "lifecycle_tokens" => (Direction::Exact, true, None),
         // Allocator economics on the deterministic skewed fixture; the
         // per-entry tolerance matches the armed baseline entries.
         n if n.starts_with("tree_alloc_") => {

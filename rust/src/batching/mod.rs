@@ -10,16 +10,28 @@ pub mod scheduler;
 pub use scheduler::{ReplicaHandle, ReplicaLoad, RoutingPolicy, Scheduler};
 
 use std::collections::VecDeque;
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
-use crate::engine::Completion;
+use crate::engine::{Completion, TokenDelta};
 
-/// A queued inference call: prompt + budget + a channel for the result.
+/// A queued inference call: identity + prompt + budget + the client's
+/// response plumbing (whole completion, optional streaming deltas, and an
+/// optional cancellation flag any thread may raise).
 pub struct QueuedRequest {
+    /// Fleet-unique request id (issued by the server front-end; 0 lets
+    /// the engine assign one — offline/test convenience).
+    pub id: u64,
     pub prompt: String,
     pub max_new_tokens: usize,
     pub respond: Option<Sender<Completion>>,
+    /// Streaming sink: per-step accepted-token deltas, preempt notices,
+    /// and the finish event.  A hung-up receiver cancels the request
+    /// (early client disconnect).
+    pub deltas: Option<Sender<TokenDelta>>,
+    /// Raised (by any holder of the flag) to cancel mid-flight.
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
@@ -129,9 +141,12 @@ mod tests {
 
     fn req(p: &str) -> QueuedRequest {
         QueuedRequest {
+            id: 0,
             prompt: p.into(),
             max_new_tokens: 8,
             respond: None,
+            deltas: None,
+            cancel: None,
         }
     }
 

@@ -177,33 +177,69 @@ pub struct Scheduler {
     replicas: Vec<ReplicaHandle>,
     policy: RoutingPolicy,
     rr: AtomicUsize,
+    /// Free-page watermark (permille): replicas below it are skipped by
+    /// every policy while at least one replica sits at or above it, so
+    /// new work steers clear of pools that are one burst away from
+    /// forcing preemptions.  0 disables; when the whole fleet is below
+    /// the mark, routing proceeds as if it were off (work must land
+    /// somewhere).
+    watermark_permille: usize,
 }
 
 impl Scheduler {
     pub fn new(replicas: Vec<ReplicaHandle>, policy: RoutingPolicy) -> Self {
         assert!(!replicas.is_empty(), "scheduler needs >= 1 replica");
-        Scheduler { replicas, policy, rr: AtomicUsize::new(0) }
+        Scheduler {
+            replicas,
+            policy,
+            rr: AtomicUsize::new(0),
+            watermark_permille: 0,
+        }
+    }
+
+    /// Enable free-page watermark admission control (see field docs).
+    pub fn with_watermark(mut self, permille: usize) -> Self {
+        self.watermark_permille = permille.min(1000);
+        self
     }
 
     pub fn replicas(&self) -> &[ReplicaHandle] {
         &self.replicas
     }
 
+    /// Watermark predicate for one replica given whether anyone clears
+    /// the mark: always true when the watermark is off or the whole
+    /// fleet is starved.
+    fn clears_watermark(&self, r: &ReplicaHandle, any_above: bool) -> bool {
+        !any_above
+            || r.load.free_page_permille() >= self.watermark_permille
+    }
+
     /// Pick the routing target among replicas whose feed is still open.
     /// Returns `None` when every feed has closed.
     pub fn pick(&self) -> Option<&ReplicaHandle> {
+        let any_above = self.watermark_permille > 0
+            && self.replicas.iter().any(|r| {
+                !r.queue.is_closed()
+                    && r.load.free_page_permille() >= self.watermark_permille
+            });
         match self.policy {
             RoutingPolicy::RoundRobin => {
                 let n = self.replicas.len();
                 let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
                 (0..n)
                     .map(|k| &self.replicas[(start + k) % n])
-                    .find(|r| !r.queue.is_closed())
+                    .find(|r| {
+                        !r.queue.is_closed()
+                            && self.clears_watermark(r, any_above)
+                    })
             }
             RoutingPolicy::LeastLoaded => self
                 .replicas
                 .iter()
-                .filter(|r| !r.queue.is_closed())
+                .filter(|r| {
+                    !r.queue.is_closed() && self.clears_watermark(r, any_above)
+                })
                 .min_by_key(|r| {
                     (Reverse(r.free_lanes()), r.load.in_flight(), r.id)
                 }),
@@ -214,7 +250,9 @@ impl Scheduler {
             RoutingPolicy::CachePressure => self
                 .replicas
                 .iter()
-                .filter(|r| !r.queue.is_closed())
+                .filter(|r| {
+                    !r.queue.is_closed() && self.clears_watermark(r, any_above)
+                })
                 .min_by_key(|r| {
                     (
                         Reverse(r.free_lanes().min(1)),
@@ -276,9 +314,12 @@ mod tests {
 
     fn req(p: &str) -> QueuedRequest {
         QueuedRequest {
+            id: 0,
             prompt: p.into(),
             max_new_tokens: 8,
             respond: None,
+            deltas: None,
+            cancel: None,
         }
     }
 
@@ -418,6 +459,45 @@ mod tests {
         handles[1].load.set_cache(40, 100);
         let s = Scheduler::new(handles, RoutingPolicy::CachePressure);
         assert_eq!(s.pick().unwrap().id, 1);
+    }
+
+    #[test]
+    fn watermark_skips_starved_replicas_until_all_are_starved() {
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        // Replica 0 idle but page-starved (5% free); replica 1 loaded but
+        // above the 200‰ watermark.
+        handles[0].load.set_cache(5, 100);
+        handles[1].load.set_cache(40, 100);
+        handles[1].load.set_pending(1);
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded)
+            .with_watermark(200);
+        assert_eq!(s.pick().unwrap().id, 1, "starved replica skipped");
+        // Whole fleet below the mark: admission falls back to normal
+        // routing (work must land somewhere).
+        s.replicas()[1].load.set_cache(10, 100);
+        assert_eq!(s.pick().unwrap().id, 0, "least-loaded when all starved");
+        // Round-robin honours the watermark too.
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        handles[0].load.set_cache(5, 100);
+        handles[1].load.set_cache(900, 1000);
+        let s = Scheduler::new(handles, RoutingPolicy::RoundRobin)
+            .with_watermark(200);
+        for _ in 0..4 {
+            assert_eq!(s.pick().unwrap().id, 1);
+        }
+    }
+
+    #[test]
+    fn zero_watermark_changes_nothing() {
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        handles[0].load.set_cache(1, 100); // nearly empty pool
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded)
+            .with_watermark(0);
+        // Ties on free lanes go to the lowest id despite page starvation.
+        assert_eq!(s.pick().unwrap().id, 0);
     }
 
     #[test]

@@ -21,6 +21,9 @@ pub enum Direction {
     Higher,
     /// Smaller is better (times, step counts, copied bytes).
     Lower,
+    /// Any change is a regression (deterministic canaries — e.g. the
+    /// token count of a byte-identity fixture); tolerance is ignored.
+    Exact,
 }
 
 impl Direction {
@@ -28,6 +31,7 @@ impl Direction {
         match self {
             Direction::Higher => "higher",
             Direction::Lower => "lower",
+            Direction::Exact => "exact",
         }
     }
 
@@ -35,6 +39,7 @@ impl Direction {
         match s {
             "higher" => Some(Direction::Higher),
             "lower" => Some(Direction::Lower),
+            "exact" => Some(Direction::Exact),
             _ => None,
         }
     }
@@ -49,6 +54,11 @@ pub struct BaselineEntry {
     /// Per-entry tolerance override (percent); falls back to the
     /// baseline-wide `tolerance_pct` when absent.
     pub tolerance_pct: Option<f64>,
+    /// Per-entry bootstrap: the metric is declared (direction/gating
+    /// recorded) but has no measured value yet, so the gate skips it
+    /// until the next `--update` refresh writes a real one.  Lets a new
+    /// fixture land armed without guessing its value.
+    pub bootstrap: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -93,9 +103,19 @@ impl Baseline {
                     .opt("tolerance_pct")
                     .map(|t| t.as_f64())
                     .transpose()?;
+                let entry_bootstrap = match e.opt("bootstrap") {
+                    Some(b) => b.as_bool()?,
+                    None => false,
+                };
                 benchmarks.insert(
                     name.clone(),
-                    BaselineEntry { value, direction, gate, tolerance_pct },
+                    BaselineEntry {
+                        value,
+                        direction,
+                        gate,
+                        tolerance_pct,
+                        bootstrap: entry_bootstrap,
+                    },
                 );
             }
         }
@@ -130,7 +150,7 @@ pub fn check(
         return rep;
     }
     for (name, e) in &baseline.benchmarks {
-        if !e.gate {
+        if !e.gate || e.bootstrap {
             continue;
         }
         let Some(&got) = measured.get(name) else {
@@ -143,6 +163,7 @@ pub fn check(
         let regressed = match e.direction {
             Direction::Lower => got > e.value * (1.0 + tol),
             Direction::Higher => got < e.value * (1.0 - tol),
+            Direction::Exact => got != e.value,
         };
         if regressed {
             rep.failures.push(format!(
@@ -150,7 +171,7 @@ pub fn check(
                  ({} is better, tolerance {:.0}%)",
                 e.value,
                 e.direction.as_str(),
-                tol_pct,
+                if e.direction == Direction::Exact { 0.0 } else { tol_pct },
             ));
         }
     }
@@ -233,6 +254,7 @@ mod tests {
                             direction,
                             gate,
                             tolerance_pct: None,
+                            bootstrap: false,
                         },
                     )
                 })
@@ -317,6 +339,57 @@ mod tests {
         assert_eq!(b.benchmarks["x"].tolerance_pct, Some(10.0));
         assert!(!check(&b, &measured(&[("x", 1.7)])).passed());
         assert!(check(&b, &measured(&[("x", 1.9)])).passed());
+    }
+
+    #[test]
+    fn exact_direction_fails_on_any_change() {
+        let b = baseline(&[("canary", 100.0, Direction::Exact, true)]);
+        assert!(check(&b, &measured(&[("canary", 100.0)])).passed());
+        // Both an increase and a tiny decrease fail — tolerance ignored.
+        assert!(!check(&b, &measured(&[("canary", 101.0)])).passed());
+        assert!(!check(&b, &measured(&[("canary", 99.999)])).passed());
+        assert_eq!(Direction::parse("exact"), Some(Direction::Exact));
+        assert_eq!(Direction::Exact.as_str(), "exact");
+    }
+
+    #[test]
+    fn per_entry_bootstrap_skips_only_that_entry() {
+        let mut b = baseline(&[
+            ("armed", 1.0, Direction::Lower, true),
+            ("fresh", 0.0, Direction::Lower, true),
+        ]);
+        b.benchmarks.get_mut("fresh").unwrap().bootstrap = true;
+        // "fresh" regresses wildly and is even missing in one run — the
+        // gate ignores it either way; "armed" still gates.
+        let rep = check(&b, &measured(&[("armed", 1.0), ("fresh", 99.0)]));
+        assert!(rep.passed(), "{:?}", rep.failures);
+        assert_eq!(rep.compared, 1);
+        let rep = check(&b, &measured(&[("armed", 2.0)]));
+        assert_eq!(rep.failures.len(), 1);
+        assert!(rep.failures[0].contains("armed"));
+    }
+
+    #[test]
+    fn per_entry_bootstrap_parses_and_refresh_clears_it() {
+        let v = jsonio::parse(
+            r#"{"schema":1,"bootstrap":false,"tolerance_pct":25,
+                "benchmarks":{"x":{"value":0,"direction":"lower",
+                                   "gate":true,"bootstrap":true}}}"#,
+        )
+        .unwrap();
+        let b = Baseline::from_value(&v).unwrap();
+        assert!(b.benchmarks["x"].bootstrap);
+        assert!(check(&b, &measured(&[("x", 1e9)])).passed());
+        // A refresh writes measured values without the bootstrap marker.
+        let text = render_baseline(
+            &measured(&[("x", 4.0)]),
+            &|_| (Direction::Lower, true, None),
+            25.0,
+        );
+        let b2 =
+            Baseline::from_value(&jsonio::parse(&text).unwrap()).unwrap();
+        assert!(!b2.benchmarks["x"].bootstrap);
+        assert!(!check(&b2, &measured(&[("x", 9.0)])).passed());
     }
 
     #[test]

@@ -107,6 +107,9 @@ pub fn run_trace(
         if !engine.step()? {
             break;
         }
+        // No streaming consumer here: drop lifecycle events so the
+        // buffer does not grow with the trace length.
+        drop(engine.take_events());
         completions += engine.take_completions().len();
     }
     completions += engine.take_completions().len();

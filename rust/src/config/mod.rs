@@ -14,7 +14,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::batching::RoutingPolicy;
-use crate::engine::{EngineConfig, EngineKind};
+use crate::engine::{AdmissionMode, EngineConfig, EngineKind};
 use toml_lite::TomlValue;
 
 /// Top-level launcher configuration.
@@ -33,6 +33,10 @@ pub struct ServerConfig {
     pub replicas: usize,
     /// How the scheduler routes admitted requests onto replicas.
     pub routing: RoutingPolicy,
+    /// Free-page watermark (permille) for dispatch-side admission
+    /// control: replicas below it receive no new work while any replica
+    /// clears it.  0 disables.
+    pub watermark_permille: usize,
 }
 
 impl Default for ServerConfig {
@@ -42,6 +46,7 @@ impl Default for ServerConfig {
             max_queue: 256,
             replicas: 1,
             routing: RoutingPolicy::LeastLoaded,
+            watermark_permille: 0,
         }
     }
 }
@@ -111,6 +116,16 @@ impl ServingConfig {
             get_us("engine.max_new_tokens", e.max_new_tokens)?;
         e.page_size = get_us("cache.page_size", e.page_size)?;
         e.cache_pages = get_us("cache.max_pages", e.cache_pages)?;
+        let adm_s = gets("cache.admission")
+            .unwrap_or_else(|| e.admission.as_str().into());
+        e.admission = AdmissionMode::parse(&adm_s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown cache.admission {adm_s:?} \
+                 (expected reserve or optimistic)"
+            )
+        })?;
+        e.watermark_pages =
+            get_us("cache.watermark_pages", e.watermark_pages)?;
         e.planner.replan_interval =
             get_us("planner.replan_interval",
                    e.planner.replan_interval as usize)? as u64;
@@ -141,6 +156,7 @@ impl ServingConfig {
             max_queue: get_us("server.max_queue", 256)?,
             replicas: get_us("server.replicas", 1)?,
             routing,
+            watermark_permille: get_us("server.watermark_permille", 0)?,
         };
         let artifacts = gets("artifacts.dir")
             .unwrap_or_else(|| crate::DEFAULT_ARTIFACTS.into());
@@ -149,6 +165,9 @@ impl ServingConfig {
         }
         if server.replicas == 0 {
             bail!("server.replicas must be >= 1");
+        }
+        if server.watermark_permille > 1000 {
+            bail!("server.watermark_permille must be <= 1000");
         }
         Ok(ServingConfig { artifacts, engine: e, server })
     }
@@ -187,6 +206,35 @@ mod tests {
 
     fn propd_default_page_size() -> usize {
         crate::kvcache::DEFAULT_PAGE_SIZE
+    }
+
+    #[test]
+    fn admission_knobs_parse_and_validate() {
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert_eq!(d.engine.admission, AdmissionMode::Reserve);
+        assert_eq!(d.engine.watermark_pages, 0);
+        assert_eq!(d.server.watermark_permille, 0);
+        let c = ServingConfig::load(
+            None,
+            &[
+                "cache.admission=\"optimistic\"".into(),
+                "cache.watermark_pages=3".into(),
+                "server.watermark_permille=150".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.engine.admission, AdmissionMode::Optimistic);
+        assert_eq!(c.engine.watermark_pages, 3);
+        assert_eq!(c.server.watermark_permille, 150);
+        assert!(
+            ServingConfig::load(None, &["cache.admission=warp".into()])
+                .is_err()
+        );
+        assert!(ServingConfig::load(
+            None,
+            &["server.watermark_permille=2000".into()]
+        )
+        .is_err());
     }
 
     #[test]

@@ -9,12 +9,15 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::requests::{Completion, ReqState, RequestSpec};
-use super::{EngineConfig, EngineKind};
+use super::requests::{
+    Completion, FinishReason, ReqState, RequestSpec, ResumeState, TokenDelta,
+};
+use super::{AdmissionMode, EngineConfig, EngineKind};
 use crate::estimator::{AcceptanceTracker, PerfModel, Planner};
 use crate::kvcache::{BatchAssembler, KvCache, KvGeometry};
 use crate::manifest::{Entry, ModelMeta};
 use crate::metrics::EngineMetrics;
+use crate::runtime::literal::HostTensor;
 use crate::runtime::Runtime;
 use crate::tokenizer::ByteTokenizer;
 use crate::tree::accept::argmax;
@@ -47,6 +50,9 @@ pub struct Engine<'rt> {
     /// Persistent incremental batch assembly (§Perf: per-step copy cost is
     /// proportional to accepted tokens, not sequence length).
     pub(super) assembler: BatchAssembler,
+    /// Per-lane lifecycle events (token deltas, finish notices, preempt
+    /// notices) buffered since the last [`Engine::take_events`].
+    pub(super) events: Vec<TokenDelta>,
     next_id: u64,
 }
 
@@ -171,6 +177,7 @@ impl<'rt> Engine<'rt> {
             metrics: EngineMetrics::default(),
             clock: Instant::now(),
             assembler: BatchAssembler::new(),
+            events: Vec::new(),
             next_id: 1,
         })
     }
@@ -183,18 +190,185 @@ impl<'rt> Engine<'rt> {
         self.clock.elapsed().as_secs_f64()
     }
 
-    /// Enqueue a request; returns its id.
+    /// Enqueue a request with an engine-assigned id; returns it.
     pub fn submit(&mut self, prompt: &str, max_new_tokens: usize) -> u64 {
         let id = self.next_id;
-        self.next_id += 1;
         let arrival = self.now();
-        self.queue.push_back(RequestSpec {
+        self.submit_spec(RequestSpec {
             id,
             prompt: prompt.to_string(),
             max_new_tokens,
             arrival,
+            resume: None,
         });
         id
+    }
+
+    /// Enqueue a request with a caller-assigned (e.g. fleet-unique) id.
+    /// Resume specs (preempt survivors) jump to the queue front — the age
+    /// bump that keeps requeued work ahead of fresh arrivals.
+    pub fn submit_spec(&mut self, spec: RequestSpec) {
+        self.next_id = self.next_id.max(spec.id + 1);
+        if spec.resume.is_some() {
+            self.queue.push_front(spec);
+        } else {
+            self.queue.push_back(spec);
+        }
+    }
+
+    /// Drain buffered per-lane lifecycle events (see [`TokenDelta`]).
+    pub fn take_events(&mut self) -> Vec<TokenDelta> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Cancel a request wherever it currently is (engine queue or active
+    /// lane): its KV pages return to the pool immediately and a
+    /// [`Completion`] with [`FinishReason::Cancelled`] plus the committed
+    /// partial text is produced.  Returns false when the id is unknown
+    /// (e.g. already completed).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let now = self.now();
+        if let Some(pos) = self.queue.iter().position(|s| s.id == id) {
+            let spec = self.queue.remove(pos).unwrap();
+            // A preempted (requeued) request may still owe the stream
+            // bytes generated before preemption but past its emission
+            // watermark (including a held-back incomplete UTF-8 tail):
+            // the final delta must flush them or the delta concatenation
+            // falls short of the completion text.
+            let (text, tokens, steps, started, first_token, preemptions,
+                 flush) =
+                match spec.resume {
+                    Some(r) => {
+                        let toks = r.tokens[r.prompt_len..].to_vec();
+                        let tail: Vec<u8> = toks[r.emitted..]
+                            .iter()
+                            .map(|&t| (t & 0xff) as u8)
+                            .collect();
+                        (
+                            self.tokenizer.decode(&toks),
+                            toks,
+                            r.steps,
+                            r.started,
+                            r.first_token,
+                            r.preemptions,
+                            String::from_utf8_lossy(&tail).into_owned(),
+                        )
+                    }
+                    None => {
+                        (String::new(), Vec::new(), 0, now, None, 0,
+                         String::new())
+                    }
+                };
+            self.events.push(TokenDelta {
+                id,
+                tokens: Vec::new(),
+                text: flush,
+                finish: Some(FinishReason::Cancelled),
+                preempted: false,
+            });
+            self.metrics.cancelled_total += 1;
+            self.done.push(Completion {
+                id,
+                prompt: spec.prompt,
+                text,
+                tokens,
+                steps,
+                latency_seconds: now - spec.arrival,
+                queue_seconds: started - spec.arrival,
+                finish: FinishReason::Cancelled,
+                ttft_seconds: first_token
+                    .map(|t| t - spec.arrival)
+                    .unwrap_or(0.0),
+                preemptions,
+            });
+            return true;
+        }
+        if let Some(pos) = self.active.iter().position(|r| r.id == id) {
+            let mut req = self.active.swap_remove(pos);
+            self.kv.release(req.slot);
+            let flush = req.delta_text(true);
+            let gen = req.tokens[req.prompt_len..].to_vec();
+            self.events.push(TokenDelta {
+                id,
+                tokens: Vec::new(),
+                text: flush,
+                finish: Some(FinishReason::Cancelled),
+                preempted: false,
+            });
+            self.metrics.cancelled_total += 1;
+            self.done.push(Completion {
+                id,
+                prompt: req.prompt,
+                text: self.tokenizer.decode(&gen),
+                tokens: gen,
+                steps: req.steps,
+                latency_seconds: now - req.arrival,
+                queue_seconds: req.started - req.arrival,
+                finish: FinishReason::Cancelled,
+                ttft_seconds: req
+                    .first_token
+                    .map(|t| t - req.arrival)
+                    .unwrap_or(0.0),
+                preemptions: req.preemptions,
+            });
+            return true;
+        }
+        false
+    }
+
+    /// Preempt the lowest-priority active lane (latest arrival, then
+    /// highest id): release its KV pages, emit a preempt notice, and
+    /// return the request carrying its committed prefix for requeueing
+    /// (see [`Engine::resubmit`]).  Returns None when no lane is active.
+    pub fn preempt_lowest(&mut self) -> Option<RequestSpec> {
+        if self.active.is_empty() {
+            return None;
+        }
+        let mut v = 0usize;
+        for i in 1..self.active.len() {
+            let (a, b) = (&self.active[i], &self.active[v]);
+            if a.arrival > b.arrival
+                || (a.arrival == b.arrival && a.id > b.id)
+            {
+                v = i;
+            }
+        }
+        Some(self.preempt_at(v))
+    }
+
+    fn preempt_at(&mut self, idx: usize) -> RequestSpec {
+        let req = self.active.swap_remove(idx);
+        self.kv.release(req.slot);
+        self.metrics.preempt_total += 1;
+        self.events.push(TokenDelta {
+            id: req.id,
+            tokens: Vec::new(),
+            text: String::new(),
+            finish: None,
+            preempted: true,
+        });
+        RequestSpec {
+            id: req.id,
+            prompt: req.prompt,
+            max_new_tokens: req.max_new_tokens,
+            arrival: req.arrival,
+            resume: Some(ResumeState {
+                tokens: req.tokens,
+                prompt_len: req.prompt_len,
+                emitted: req.emitted,
+                first_token: req.first_token,
+                steps: req.steps,
+                started: req.started,
+                preemptions: req.preemptions + 1,
+            }),
+        }
+    }
+
+    /// Requeue a preempted request with priority (queue front) so
+    /// round-robin/least-loaded admission cannot starve it.
+    pub fn resubmit(&mut self, spec: RequestSpec) {
+        self.metrics.requeue_total += 1;
+        self.submit_spec(spec);
     }
 
     pub fn pending(&self) -> usize {
@@ -228,6 +402,7 @@ impl<'rt> Engine<'rt> {
     /// One engine iteration.  Returns false when idle.
     pub fn step(&mut self) -> Result<bool> {
         self.admit().context("admission")?;
+        self.relieve_pressure();
         if self.active.is_empty() {
             return Ok(false);
         }
@@ -261,29 +436,133 @@ impl<'rt> Engine<'rt> {
         self.kv.free_pages()
     }
 
-    /// Effective concurrent-lane budget: `max_batch` additionally capped
-    /// by the page pool's worst-case coverage.  Admission, the worker
-    /// pull, and dispatch-side routing all use this so a finite
-    /// `cache.max_pages` shrinks the batch everywhere consistently.
+    /// Effective concurrent-lane budget.  Reserve admission caps
+    /// `max_batch` by the page pool's worst-case coverage so the pool can
+    /// never exhaust mid-decode; optimistic admission runs the full
+    /// `max_batch` and relies on watermark gating plus preemption.
+    /// Admission, the worker pull, and dispatch-side routing all use this
+    /// so a finite `cache.max_pages` shrinks the batch everywhere
+    /// consistently.
     pub fn lane_budget(&self) -> usize {
-        self.cfg.max_batch.min(self.kv.guaranteed_lanes())
+        match self.cfg.admission {
+            AdmissionMode::Reserve => {
+                self.cfg.max_batch.min(self.kv.guaranteed_lanes())
+            }
+            AdmissionMode::Optimistic => self.cfg.max_batch,
+        }
     }
 
-    /// Admit queued requests into free lanes (batched prefill).
+    /// Pages a spec's prefix will commit at admission.
+    fn admission_pages(&self, spec: &RequestSpec) -> usize {
+        let ps = self.kv.page_size();
+        let len = match &spec.resume {
+            Some(r) => r.tokens.len(),
+            // Byte tokenizer: prompt bytes = prompt tokens.
+            None => spec.prompt.len().min(self.model.max_prompt),
+        };
+        len.max(1).div_ceil(ps)
+    }
+
+    /// Free-page reserve optimistic admission keeps on hand (auto: one
+    /// worst-case step of one lane).
+    fn watermark(&self) -> usize {
+        if self.cfg.watermark_pages > 0 {
+            return self.cfg.watermark_pages;
+        }
+        let worst = self.worst_step_tokens();
+        worst.div_ceil(self.kv.page_size()) + 1
+    }
+
+    /// Upper bound on tokens one lane can commit in one step.
+    fn worst_step_tokens(&self) -> usize {
+        if self.cfg.kind.uses_tree() {
+            self.tree_buckets.last().copied().unwrap_or(1) + 1
+        } else {
+            1
+        }
+    }
+
+    /// Admit queued requests into free lanes (batched prefill; resumed
+    /// requests re-prefill individually).
     ///
-    /// Admission is additionally bounded by the KV page pool's worst-case
-    /// coverage (`guaranteed_lanes`): with a finite `cache.max_pages`, a
-    /// burst of long requests throttles here instead of exhausting the
-    /// pool mid-decode and killing the replica.
+    /// Reserve mode bounds the active set by the pool's worst-case
+    /// coverage (`guaranteed_lanes`): a burst of long requests throttles
+    /// here instead of exhausting the pool mid-decode.  Optimistic mode
+    /// admits while current free pages cover the newcomer's prefix plus a
+    /// watermark, in strict queue order (the front blocking keeps
+    /// requeued work from being starved by cheaper fresh arrivals).
     fn admit(&mut self) -> Result<()> {
         let free = self.lane_budget().saturating_sub(self.active.len());
         if free == 0 || self.queue.is_empty() {
             return Ok(());
         }
-        let n = free.min(self.queue.len());
-        let specs: Vec<RequestSpec> =
-            (0..n).map(|_| self.queue.pop_front().unwrap()).collect();
-        self.prefill(specs)
+        let optimistic = self.cfg.admission == AdmissionMode::Optimistic;
+        let mut picked: Vec<RequestSpec> = Vec::new();
+        let mut reserved = 0usize;
+        while picked.len() < free {
+            let need = match self.queue.front() {
+                None => break,
+                Some(s) if optimistic => self.admission_pages(s),
+                Some(_) => 0,
+            };
+            if optimistic
+                && self.kv.free_pages() < reserved + need + self.watermark()
+            {
+                break;
+            }
+            reserved += need;
+            picked.push(self.queue.pop_front().unwrap());
+        }
+        // Idle engine + non-empty queue must always make progress, even
+        // under an over-tight watermark: with no active lanes every page
+        // is free and the pool covers one full sequence by construction,
+        // so a solo admission is always safe.
+        if picked.is_empty() && self.active.is_empty() {
+            if let Some(spec) = self.queue.pop_front() {
+                picked.push(spec);
+            }
+        }
+        let (resumes, fresh): (Vec<RequestSpec>, Vec<RequestSpec>) =
+            picked.into_iter().partition(|s| s.resume.is_some());
+        for spec in resumes {
+            self.resume_prefill(spec)?;
+        }
+        if fresh.is_empty() {
+            return Ok(());
+        }
+        self.prefill(fresh)
+    }
+
+    /// Optimistic mode's pressure valve, run before every step: while the
+    /// free pool cannot cover the worst-case page growth of the active
+    /// set, preempt the lowest-priority lane (its pages return to the
+    /// pool, the request requeues at the front with its committed
+    /// prefix).  Never preempts the last lane — `Engine::new` guarantees
+    /// the pool covers one full sequence, so a solo lane always
+    /// completes and the loop cannot livelock.
+    fn relieve_pressure(&mut self) {
+        if self.cfg.admission != AdmissionMode::Optimistic {
+            return;
+        }
+        let ps = self.kv.page_size();
+        let worst = self.worst_step_tokens();
+        while self.active.len() > 1 {
+            let mut needed = 0usize;
+            for r in &self.active {
+                let target =
+                    (r.seq_len() + worst).min(self.model.max_seq);
+                needed += target
+                    .div_ceil(ps)
+                    .saturating_sub(self.kv.pages_held(r.slot));
+            }
+            if self.kv.free_pages() >= needed {
+                return;
+            }
+            match self.preempt_lowest() {
+                Some(spec) => self.resubmit(spec),
+                None => return,
+            }
+        }
     }
 
     /// Batched prefill of newly admitted requests.
@@ -349,12 +628,137 @@ impl<'rt> Engine<'rt> {
                 arrival: spec.arrival,
                 started,
                 done: false,
+                finish: None,
+                emitted: 0,
+                first_token: None,
+                last_token_at: started,
+                admit_step: self.metrics.steps,
+                preemptions: 0,
             };
             req.remember_prediction(v);
             self.metrics.queue_delay.record(started - req.arrival);
             self.metrics.prefills += 1;
             self.active.push(req);
         }
+        Ok(())
+    }
+
+    /// Re-admit a preempted request: re-prefill its committed prefix
+    /// (kept prompt + generated tokens) and recompute the tip state
+    /// (pending root + medusa rows).  The first `max_prompt` tokens go
+    /// through the prefill entry in one shot; any overflow is replayed
+    /// token-by-token through the decode entry, so arbitrarily long
+    /// committed prefixes resume exactly — the backend is a pure function
+    /// of the committed sequence, which is what makes resumed output
+    /// byte-identical to an uninterrupted run.
+    fn resume_prefill(&mut self, spec: RequestSpec) -> Result<()> {
+        let started = self.now();
+        let r = spec.resume.expect("resume_prefill needs resume state");
+        let slot = self.kv.acquire().context("kv slots (resume)")?;
+        let v = self.model.vocab;
+        let m_heads = self.model.n_medusa;
+        let layers = self.model.n_layers;
+        let p_bucket = self.model.max_prompt;
+        let total = r.tokens.len();
+        let p_cap = p_bucket.min(total);
+        let b = self.rt.manifest.batch_bucket(1);
+        // One-shot prefill of the prefix head (dummy lanes repeat it).
+        let mut toks = vec![0i32; b * p_bucket];
+        let mut lens = vec![0i32; b];
+        for lane in 0..b {
+            for (j, &t) in r.tokens[..p_cap].iter().enumerate() {
+                toks[lane * p_bucket + j] = t as i32;
+            }
+            lens[lane] = p_cap as i32;
+        }
+        let outs = self
+            .rt
+            .run(
+                &self.cfg.size,
+                Entry::Prefill,
+                None,
+                b,
+                None,
+                &[
+                    HostTensor::i32(vec![b, p_bucket], toks),
+                    HostTensor::i32(vec![b], lens),
+                ],
+            )
+            .context("resume prefill")?;
+        let pairs: Vec<(usize, usize)> = (0..p_cap).map(|j| (j, j)).collect();
+        self.kv
+            .commit_columns(
+                slot,
+                outs[2].as_f32(),
+                (layers, b, p_bucket),
+                0,
+                0,
+                &pairs,
+            )
+            .context("resume kv commit")?;
+        let mut logits_row: Vec<f32> = outs[0].f32_chunk(0, v).to_vec();
+        let mut medusa_row: Vec<f32> =
+            outs[1].f32_chunk(0, m_heads * v).to_vec();
+        // Decode-replay the overflow (committed prefix past max_prompt).
+        let replay_lanes = vec![slot; b];
+        for pos in p_cap..total {
+            let tok = r.tokens[pos];
+            let kv_t = self.kv.batch_tensor(&replay_lanes);
+            let outs = self
+                .rt
+                .run(
+                    &self.cfg.size,
+                    Entry::Decode,
+                    None,
+                    b,
+                    None,
+                    &[
+                        HostTensor::i32(vec![b], vec![tok as i32; b]),
+                        HostTensor::i32(vec![b], vec![pos as i32; b]),
+                        kv_t,
+                    ],
+                )
+                .context("resume replay")?;
+            self.kv
+                .commit_columns(
+                    slot,
+                    outs[2].as_f32(),
+                    (layers, b, 1),
+                    0,
+                    0,
+                    &[(0, pos)],
+                )
+                .context("resume replay commit")?;
+            logits_row = outs[0].f32_chunk(0, v).to_vec();
+            medusa_row = outs[1].f32_chunk(0, m_heads * v).to_vec();
+        }
+        let pending_root = argmax(&logits_row) as u32;
+        let mut req = ReqState {
+            id: spec.id,
+            prompt: spec.prompt,
+            prompt_len: r.prompt_len,
+            tokens: r.tokens,
+            slot,
+            pending_root,
+            medusa_rows: medusa_row,
+            ledger: VecDeque::new(),
+            tracker: self.tracker.clone(),
+            max_new_tokens: spec.max_new_tokens,
+            steps: r.steps,
+            arrival: spec.arrival,
+            started: r.started,
+            done: false,
+            finish: None,
+            emitted: r.emitted,
+            first_token: r.first_token,
+            last_token_at: started,
+            admit_step: self.metrics.steps,
+            preemptions: r.preemptions,
+        };
+        req.remember_prediction(v);
+        self.metrics.resume_prefills += 1;
+        self.metrics.reprefill_tokens += total as u64;
+        self.active.push(req);
         Ok(())
     }
 
@@ -366,16 +770,61 @@ impl<'rt> Engine<'rt> {
         hard.min(budget)
     }
 
-    /// Mark a request done when budget/stop/capacity is reached.
+    /// Mark a request done when stop/budget/capacity is reached,
+    /// recording the finish reason.
     pub(super) fn check_done(&mut self, idx: usize) {
         let req = &mut self.active[idx];
+        if req.done {
+            return;
+        }
         let gen = req.generated();
         let stop = self.tokenizer.is_stop(req.generated_tokens());
         let capacity =
             req.seq_len() + 2 + 64 >= self.model.max_seq;
-        if gen >= req.max_new_tokens || stop || capacity {
+        let finish = if stop {
+            Some(FinishReason::Stop)
+        } else if gen >= req.max_new_tokens {
+            Some(FinishReason::Length)
+        } else if capacity {
+            Some(FinishReason::Capacity)
+        } else {
+            None
+        };
+        if finish.is_some() {
+            req.finish = finish;
             req.done = true;
         }
+    }
+
+    /// Emit one lane's step outcome as a [`TokenDelta`] and keep the
+    /// latency bookkeeping (ttft / steps-to-first-token / itl) current.
+    /// Called after `check_done` so a finishing lane's final delta
+    /// flushes held-back bytes and carries the finish reason.
+    pub(super) fn emit_progress(&mut self, idx: usize, accepted: Vec<u32>) {
+        let now = self.clock.elapsed().as_secs_f64();
+        let steps_done = self.metrics.steps;
+        let req = &mut self.active[idx];
+        if !accepted.is_empty() {
+            if req.first_token.is_none() {
+                req.first_token = Some(now);
+                self.metrics.ttft.record(now - req.arrival);
+                self.metrics
+                    .ttft_steps
+                    .record((steps_done + 1 - req.admit_step) as f64);
+            } else {
+                self.metrics.itl.record(now - req.last_token_at);
+            }
+            req.last_token_at = now;
+        }
+        let finish = if req.done { req.finish } else { None };
+        let text = req.delta_text(req.done);
+        self.events.push(TokenDelta {
+            id: req.id,
+            tokens: accepted,
+            text,
+            finish,
+            preempted: false,
+        });
     }
 
     /// Move finished requests out of the active set.
@@ -400,6 +849,12 @@ impl<'rt> Engine<'rt> {
                     steps: req.steps,
                     latency_seconds: now - req.arrival,
                     queue_seconds: req.started - req.arrival,
+                    finish: req.finish.unwrap_or(FinishReason::Length),
+                    ttft_seconds: req
+                        .first_token
+                        .map(|t| t - req.arrival)
+                        .unwrap_or(0.0),
+                    preemptions: req.preemptions,
                 });
             } else {
                 i += 1;

@@ -26,7 +26,9 @@ pub mod step_ar;
 pub mod step_tree;
 
 pub use core::Engine;
-pub use requests::{Completion, ReqState, RequestSpec};
+pub use requests::{
+    Completion, FinishReason, ReqState, RequestSpec, ResumeState, TokenDelta,
+};
 
 use crate::estimator::planner::PlannerConfig;
 
@@ -60,6 +62,38 @@ impl EngineKind {
 
     pub fn uses_tree(&self) -> bool {
         !matches!(self, EngineKind::Autoregressive)
+    }
+}
+
+/// How admission trades KV-page headroom against concurrency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Conservative (default): the active set is bounded by the page
+    /// pool's worst-case coverage (`guaranteed_lanes`), so the pool can
+    /// never exhaust mid-decode and preemption never triggers.
+    Reserve,
+    /// Admit up to `max_batch` lanes whenever current free pages cover
+    /// the newcomer's prefix plus a watermark; when lanes later outgrow
+    /// the pool, the engine preempts the lowest-priority lane (pages
+    /// released, request requeued at the front with its committed
+    /// prefix) instead of failing.
+    Optimistic,
+}
+
+impl AdmissionMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdmissionMode::Reserve => "reserve",
+            AdmissionMode::Optimistic => "optimistic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reserve" => Some(AdmissionMode::Reserve),
+            "optimistic" => Some(AdmissionMode::Optimistic),
+            _ => None,
+        }
     }
 }
 
@@ -97,6 +131,12 @@ pub struct EngineConfig {
     /// Total pages in the KV page pool (`cache.max_pages`; 0 auto-sizes to
     /// full coverage, `max_batch × ⌈max_seq / page_size⌉`).
     pub cache_pages: usize,
+    /// Admission policy under a finite page pool (`cache.admission`).
+    pub admission: AdmissionMode,
+    /// Free-page watermark optimistic admission keeps in reserve
+    /// (`cache.watermark_pages`; 0 = auto: one worst-case step of one
+    /// lane).
+    pub watermark_pages: usize,
 }
 
 impl EngineConfig {
@@ -118,6 +158,8 @@ impl EngineConfig {
             max_new_tokens: 64,
             page_size: crate::kvcache::DEFAULT_PAGE_SIZE,
             cache_pages: 0,
+            admission: AdmissionMode::Reserve,
+            watermark_pages: 0,
         }
     }
 

@@ -1,37 +1,88 @@
 //! Measurement probes used by the figure drivers (not on the serving path).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::core::Engine;
 use super::inputs::{pack_seq_lens, pack_tree_masks, pack_tree_positions,
                     pack_tree_tokens};
 use crate::estimator::acceptance::rank_of;
-use crate::manifest::Entry;
+use crate::manifest::{Entry, Manifest};
 use crate::tree::{TokenTree, TreeMask};
 
 impl<'rt> Engine<'rt> {
+    /// The (batch, tree) shape `probe_early_ranks` runs at for a given
+    /// layer, derived from the emitted artifact set: the smallest covered
+    /// batch bucket that fits the active set, at its largest covered tree
+    /// bucket.  Errors name the missing artifact instead of assuming the
+    /// default sweep shape exists.
+    fn probe_grid(&self, n_layer: usize) -> Result<(usize, usize)> {
+        let grid: Vec<(usize, usize)> = self
+            .rt
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.size == self.cfg.size
+                    && a.entry == Entry::VerifyEarly
+                    && a.n_layer == Some(n_layer)
+            })
+            .map(|a| (a.batch, a.tree.unwrap_or(0)))
+            .collect();
+        if grid.is_empty() {
+            bail!(
+                "no verify_early artifacts for size {:?} at layer \
+                 {n_layer}: expected an entry like {:?} — emit the \
+                 layer-sweep set for this layer first",
+                self.cfg.size,
+                Manifest::key_for(
+                    &self.cfg.size,
+                    Entry::VerifyEarly,
+                    Some(n_layer),
+                    4,
+                    Some(64)
+                )
+            );
+        }
+        let b_need = self.active.len();
+        let b = grid
+            .iter()
+            .map(|&(b, _)| b)
+            .filter(|&b| b >= b_need)
+            .min()
+            .ok_or_else(|| {
+                anyhow!(
+                    "probe supports at most {} active requests (largest \
+                     covered batch bucket at layer {n_layer})",
+                    grid.iter().map(|&(b, _)| b).max().unwrap_or(0)
+                )
+            })?;
+        let t = grid
+            .iter()
+            .filter(|&&(bb, _)| bb == b)
+            .map(|&(_, t)| t)
+            .max()
+            .unwrap();
+        Ok((b, t))
+    }
+
     /// Fig 3a probe: for every *active* request, feed its most recent
     /// committed tokens through `verify_early` at layer `n_layer` as a
     /// degenerate chain tree and record, per chain position, the rank the
     /// early head assigns to the *actual* next token.
     ///
-    /// Requires the layer-sweep artifacts (`verify_early_n{n}_b4_t64`,
-    /// emitted for the default size); call with exactly ≤ 4 active
-    /// requests.
+    /// The probe's batch/tree shape is derived from the artifact set via
+    /// [`Engine::probe_grid`] (the layer-sweep emission is only
+    /// guaranteed at one batch bucket for non-default layers).
     pub fn probe_early_ranks(&mut self, n_layer: usize)
         -> Result<Vec<usize>> {
-        const B: usize = 4;
-        const T: usize = 64;
         if self.active.is_empty() {
             bail!("probe requires active requests");
         }
-        if self.active.len() > B {
-            bail!("probe supports at most {B} active requests");
-        }
+        let (b_probe, t_probe) = self.probe_grid(n_layer)?;
         let v = self.model.vocab;
 
-        // Chain = the last ≤T committed tokens *excluding* the final one
-        // (each chain position predicts its successor, which must be
+        // Chain = the last ≤t_probe committed tokens *excluding* the final
+        // one (each chain position predicts its successor, which must be
         // committed so we can score it).
         let mut chains: Vec<Vec<u32>> = Vec::new();
         let mut starts: Vec<usize> = Vec::new();
@@ -42,7 +93,7 @@ impl<'rt> Engine<'rt> {
                 starts.push(0);
                 continue;
             }
-            let take = T.min(n_tok - 1);
+            let take = t_probe.min(n_tok - 1);
             let start = n_tok - 1 - take;
             chains.push(req.tokens[start..n_tok - 1].to_vec());
             starts.push(start);
@@ -51,7 +102,7 @@ impl<'rt> Engine<'rt> {
         let trees: Vec<TokenTree> =
             chains.iter().map(|c| TokenTree::chain(c)).collect();
         let masks: Vec<TreeMask> =
-            trees.iter().map(|t| TreeMask::build(t, T)).collect();
+            trees.iter().map(|t| TreeMask::build(t, t_probe)).collect();
         // The chain re-processes committed positions: attention over the
         // past must stop where the chain starts, so seq_len = start.
         let mut sl: Vec<usize> = starts.clone();
@@ -59,7 +110,7 @@ impl<'rt> Engine<'rt> {
         let mut mr: Vec<&TreeMask> = masks.iter().collect();
         let mut lanes: Vec<usize> =
             self.active.iter().map(|r| r.slot).collect();
-        while tr.len() < B {
+        while tr.len() < b_probe {
             tr.push(&trees[0]);
             mr.push(&masks[0]);
             sl.push(starts[0]);
@@ -67,9 +118,9 @@ impl<'rt> Engine<'rt> {
         }
 
         let inputs = [
-            pack_tree_tokens(&tr, T),
-            pack_tree_positions(&tr, &sl, T),
-            pack_tree_masks(&mr, T),
+            pack_tree_tokens(&tr, t_probe),
+            pack_tree_positions(&tr, &sl, t_probe),
+            pack_tree_masks(&mr, t_probe),
             pack_seq_lens(&sl),
             self.kv.batch_tensor(&lanes),
         ];
@@ -77,11 +128,11 @@ impl<'rt> Engine<'rt> {
             &self.cfg.size,
             Entry::VerifyEarly,
             Some(n_layer),
-            B,
-            Some(T),
+            b_probe,
+            Some(t_probe),
             &inputs,
         )?;
-        let early_logits = &outs[1]; // [B, T, V]
+        let early_logits = &outs[1]; // [b_probe, t_probe, V]
 
         let mut ranks = Vec::new();
         for (lane, req) in self.active.iter().enumerate() {
@@ -92,7 +143,7 @@ impl<'rt> Engine<'rt> {
                 let actual =
                     req.tokens[starts[lane] + j + 1] as usize;
                 let row = early_logits
-                    .f32_chunk((lane * T + j) * v, v);
+                    .f32_chunk((lane * t_probe + j) * v, v);
                 ranks.push(rank_of(row, actual));
             }
         }

@@ -76,9 +76,8 @@ impl<'rt> Engine<'rt> {
             req.steps += 1;
             self.metrics.tokens_generated += 1;
             self.metrics.accept_len.record(1.0);
-        }
-        for i in 0..b_real {
             self.check_done(i);
+            self.emit_progress(i, vec![committed]);
         }
         let total = t0.elapsed().as_secs_f64();
         self.metrics.step_time.record(total);

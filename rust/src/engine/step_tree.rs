@@ -475,6 +475,7 @@ impl<'rt> Engine<'rt> {
                 .prune_rate
                 .record(1.0 - (pruned[i].len() as f64 / t_live as f64));
             self.check_done(i);
+            self.emit_progress(i, res.tokens);
         }
         let host_post = t3.elapsed().as_secs_f64();
 

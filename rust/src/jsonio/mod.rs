@@ -448,4 +448,23 @@ mod tests {
         assert_eq!(to_string(&Value::Num(7.0)), "7");
         assert_eq!(to_string(&Value::Num(0.5)), "0.5");
     }
+
+    #[test]
+    fn writer_never_emits_raw_control_characters() {
+        // Line framing depends on it: every control character (and both
+        // line breaks specifically) must leave the writer escaped, for
+        // any string position, and survive a parse round-trip.
+        for c in (0u32..0x20).chain([0x7f]) {
+            let c = char::from_u32(c).unwrap();
+            for src in [format!("{c}"), format!("a{c}b"), format!("{c}{c}")] {
+                let line = to_string(&Value::Str(src.clone()));
+                assert!(
+                    line.chars().all(|ch| (ch as u32) >= 0x20),
+                    "raw control char in output for {:?}",
+                    src
+                );
+                assert_eq!(parse(&line).unwrap(), Value::Str(src));
+            }
+        }
+    }
 }

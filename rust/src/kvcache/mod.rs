@@ -229,6 +229,13 @@ impl KvCache {
         self.slots[slot].seq_len
     }
 
+    /// Pages currently owned by one slot (preemption's page-growth math:
+    /// a lane's worst-case next-step need is its target coverage minus
+    /// this).
+    pub fn pages_held(&self, slot: usize) -> usize {
+        self.slots[slot].pages.len()
+    }
+
     /// Make sure `slot` owns pages covering positions `[0, ..=pos]`.
     fn ensure_page(&mut self, slot: usize, pos: usize) -> Result<()> {
         let page_idx = pos / self.page_size;
@@ -589,6 +596,21 @@ mod tests {
             .commit_columns(s, &blk, (2, 1, 4), 0, 0, &[(2, 2)])
             .unwrap_err();
         assert!(err.to_string().contains("exhausted"), "{err}");
+    }
+
+    #[test]
+    fn pages_held_tracks_growth_and_release() {
+        let g = geom();
+        let mut c = KvCache::with_pages(g, 1, 2, 0);
+        let s = c.acquire().unwrap();
+        assert_eq!(c.pages_held(s), 0);
+        let blk = block(2, 1, 4, g.col());
+        c.commit_columns(s, &blk, (2, 1, 4), 0, 0, &[(0, 0), (1, 1), (2, 2)])
+            .unwrap();
+        assert_eq!(c.pages_held(s), 2, "3 positions at page_size 2");
+        c.release(s);
+        let s2 = c.acquire().unwrap();
+        assert_eq!(c.pages_held(s2), 0, "release returns every page");
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //! cache page granularity (positions per page).  `--tree-budget per-lane`
 //! (default) water-fills each step's verified-token budget across lanes
 //! by per-request acceptance; `--tree-budget uniform` restores the
-//! uniform-bucket baseline (ablation).
+//! uniform-bucket baseline (ablation).  `--admission optimistic` lets a
+//! finite page pool over-subscribe lanes and preempt/resume under
+//! pressure instead of capping concurrency up front; streaming clients
+//! send `{"stream": true}` for per-step token deltas and `{"cancel": id}`
+//! to abort mid-flight.
 //!
 //! (The offline crate mirror has no clap; argument parsing is hand-rolled.)
 
@@ -80,6 +84,10 @@ fn parse_args() -> Result<Args> {
             "--page-size" => {
                 let v = val("--page-size")?;
                 a.sets.push(format!("cache.page_size={v}"));
+            }
+            "--admission" => {
+                let v = val("--admission")?;
+                a.sets.push(format!("cache.admission=\"{v}\""));
             }
             "--tree-budget" => {
                 let v = val("--tree-budget")?;
@@ -210,6 +218,7 @@ fn main() -> Result<()> {
                  [--config f.toml] [--set k=v] [--engine kind] [--size s] \
                  [--prompt p] [--max-new n] [--artifacts dir] \
                  [--replicas n] [--routing policy] [--page-size n] \
+                 [--admission reserve|optimistic] \
                  [--tree-budget per-lane|uniform] [--sim]"
             );
             Ok(())

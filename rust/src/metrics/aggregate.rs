@@ -97,7 +97,9 @@ impl MetricsHub {
                   "busy_seconds", "tokens_per_second",
                   "assembly_bytes_copied_total", "assembly_bytes_full_total",
                   "verify_tokens_total",
-                  "kv_pages_in_use", "kv_page_capacity"] {
+                  "kv_pages_in_use", "kv_page_capacity",
+                  "preempt_total", "requeue_total", "cancelled_total",
+                  "resume_prefills", "reprefill_tokens_total"] {
             totals.insert(k.into(), sum(k));
         }
         // Fleet speculation economics: accepted per verified token as a
@@ -141,9 +143,15 @@ impl MetricsHub {
                 .map(|r| get(r, "tree_alloc_lane_size_max"))
                 .fold(0.0, f64::max),
         );
-        for k in ["request_latency_mean_s", "queue_delay_mean_s"] {
+        for k in ["request_latency_mean_s", "queue_delay_mean_s",
+                  "ttft_mean_s", "ttft_steps_mean"] {
             totals.insert(k.into(), weighted(k, "requests_completed"));
         }
+        // Inter-token gaps occur once per generated token: weight by it.
+        totals.insert(
+            "itl_mean_s".into(),
+            weighted("itl_mean_s", "tokens_generated"),
+        );
         AggregateSnapshot { replicas, totals }
     }
 }
@@ -270,6 +278,42 @@ mod tests {
         assert!((agg.total("tree_alloc_util_mean") - 0.625).abs() < 1e-12);
         // deepest lane across the fleet: max of per-replica maxes.
         assert_eq!(agg.total("tree_alloc_lane_size_max"), 13.0);
+    }
+
+    #[test]
+    fn lifecycle_counters_sum_and_ttft_weights_by_completions() {
+        let hub = MetricsHub::new(2);
+        let mut a = EngineMetrics {
+            preempt_total: 2,
+            requeue_total: 2,
+            cancelled_total: 1,
+            reprefill_tokens: 50,
+            requests_completed: 1,
+            ..Default::default()
+        };
+        a.ttft.record(0.2);
+        a.ttft_steps.record(2.0);
+        let mut b = EngineMetrics {
+            preempt_total: 1,
+            requeue_total: 1,
+            reprefill_tokens: 30,
+            requests_completed: 3,
+            ..Default::default()
+        };
+        for _ in 0..3 {
+            b.ttft.record(0.6);
+            b.ttft_steps.record(6.0);
+        }
+        hub.publish(0, 1, 0, &a);
+        hub.publish(1, 3, 0, &b);
+        let agg = hub.aggregate();
+        assert_eq!(agg.total("preempt_total"), 3.0);
+        assert_eq!(agg.total("requeue_total"), 3.0);
+        assert_eq!(agg.total("cancelled_total"), 1.0);
+        assert_eq!(agg.total("reprefill_tokens_total"), 80.0);
+        // (0.2·1 + 0.6·3) / 4 = 0.5; steps (2·1 + 6·3) / 4 = 5.
+        assert!((agg.total("ttft_mean_s") - 0.5).abs() < 1e-12);
+        assert!((agg.total("ttft_steps_mean") - 5.0).abs() < 1e-12);
     }
 
     #[test]

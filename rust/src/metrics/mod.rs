@@ -43,6 +43,16 @@ pub struct EngineMetrics {
     pub request_latency: Summary,
     /// Queueing delay before prefill (s).
     pub queue_delay: Summary,
+    /// Time to first committed token per request (submit → first token,
+    /// s); recorded once per request even across preempt/resume.
+    pub ttft: Summary,
+    /// Deterministic TTFT proxy: engine steps from (re-)admission to the
+    /// first committed token (host-speed-independent; the bench gate
+    /// fixture).
+    pub ttft_steps: Summary,
+    /// Inter-token latency: gap between consecutive accepted-token deltas
+    /// of one request (s).
+    pub itl: Summary,
     /// Bytes copied into the batch KV tensor per step by incremental
     /// assembly (only columns committed since the previous step).
     pub assembly_bytes: Summary,
@@ -63,6 +73,18 @@ pub struct EngineMetrics {
     /// KV page-pool gauges sampled after the latest step.
     pub kv_pages_in_use: u64,
     pub kv_page_capacity: u64,
+    /// Lanes preempted under KV-page pressure (pages released, request
+    /// requeued with its committed prefix).
+    pub preempt_total: u64,
+    /// Preempted requests requeued with priority (front of queue).
+    pub requeue_total: u64,
+    /// Requests cancelled mid-flight (client request or disconnect).
+    pub cancelled_total: u64,
+    /// Resume re-admissions (each pairs with a preemption).
+    pub resume_prefills: u64,
+    /// Committed-prefix tokens re-prefetched/replayed on resume — the
+    /// cache-pressure tax preemption pays.
+    pub reprefill_tokens: u64,
 }
 
 impl EngineMetrics {
@@ -148,6 +170,17 @@ impl EngineMetrics {
                  self.request_latency.mean());
         m.insert("request_latency_p99_s".into(), self.request_latency.p99());
         m.insert("queue_delay_mean_s".into(), self.queue_delay.mean());
+        m.insert("ttft_mean_s".into(), self.ttft.mean());
+        m.insert("ttft_p99_s".into(), self.ttft.p99());
+        m.insert("ttft_steps_mean".into(), self.ttft_steps.mean());
+        m.insert("itl_mean_s".into(), self.itl.mean());
+        m.insert("itl_p99_s".into(), self.itl.p99());
+        m.insert("preempt_total".into(), self.preempt_total as f64);
+        m.insert("requeue_total".into(), self.requeue_total as f64);
+        m.insert("cancelled_total".into(), self.cancelled_total as f64);
+        m.insert("resume_prefills".into(), self.resume_prefills as f64);
+        m.insert("reprefill_tokens_total".into(),
+                 self.reprefill_tokens as f64);
         m.insert("assembly_bytes_per_step_mean".into(),
                  self.assembly_bytes.mean());
         m.insert("assembly_bytes_copied_total".into(),
@@ -195,9 +228,33 @@ mod tests {
             "tree_alloc_gain_mean",
             "verify_tokens_total",
             "accept_per_verified",
+            "ttft_mean_s",
+            "ttft_steps_mean",
+            "itl_mean_s",
+            "preempt_total",
+            "requeue_total",
+            "cancelled_total",
+            "reprefill_tokens_total",
         ] {
             assert!(r.contains_key(k), "missing {k}");
         }
+    }
+
+    #[test]
+    fn lifecycle_counters_report() {
+        let mut m = EngineMetrics::default();
+        m.preempt_total = 3;
+        m.requeue_total = 3;
+        m.cancelled_total = 1;
+        m.reprefill_tokens = 120;
+        m.ttft_steps.record(2.0);
+        m.ttft_steps.record(4.0);
+        let r = m.report();
+        assert_eq!(r["preempt_total"], 3.0);
+        assert_eq!(r["requeue_total"], 3.0);
+        assert_eq!(r["cancelled_total"], 1.0);
+        assert_eq!(r["reprefill_tokens_total"], 120.0);
+        assert!((r["ttft_steps_mean"] - 3.0).abs() < 1e-12);
     }
 
     #[test]

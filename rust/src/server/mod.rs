@@ -2,25 +2,34 @@
 //!
 //! Protocol (one JSON object per line):
 //!   → {"prompt": "user: ...\nassistant:", "max_new_tokens": 64}
-//!   ← {"id": 3, "text": "...", "latency_s": 0.42, "steps": 11}
+//!   ← {"id": 3, "text": "...", "latency_s": 0.42, "steps": 11, ...}
+//!   → {"prompt": "...", "stream": true}
+//!   ← {"id": 4, "event": "delta", "text": "...", "tokens": 3}   (×N)
+//!   ← {"id": 4, "event": "preempt", ...}                 (under pressure)
+//!   ← {"id": 4, "event": "delta", ..., "finish": "stop"}
+//!   ← {"id": 4, "text": "...", ...}                    (summary frame)
+//!   → {"cancel": 4}            (any connection; fleet-unique ids)
+//!   ← {"cancelled": 4, "known": true}
 //!   → {"metrics": true}
 //!   ← {"replicas": [...], "totals": {...}}
 //!
 //! Threading model: each replica engine (and its runtime, whose caches are
 //! single-threaded) lives on ONE worker thread; a scheduler thread routes
 //! requests from the shared bounded admission queue onto per-replica decode
-//! feeds; acceptor/connection threads only touch the admission queue and
-//! the metrics hub.  (The environment's crate mirror has no tokio; std
-//! threads + blocking sockets implement the same architecture.)
+//! feeds; acceptor/connection threads only touch the admission queue, the
+//! cancel registry and the metrics hub.  (The environment's crate mirror
+//! has no tokio; std threads + blocking sockets implement the same
+//! architecture.)
 
 pub mod protocol;
 pub mod replicas;
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -30,7 +39,10 @@ use crate::metrics::MetricsHub;
 use crate::runtime::RuntimeSpec;
 
 pub use protocol::{parse_request, render_completion, Request};
-pub use replicas::{replica_loop, run_offline, ReplicaSet};
+pub use replicas::{
+    replica_loop, run_offline, run_offline_requests, OfflineOutcome,
+    OfflineRequest, ReplicaSet,
+};
 
 /// Shared server state handed to connection threads.
 pub struct Shared {
@@ -39,6 +51,11 @@ pub struct Shared {
     pub shutdown: AtomicBool,
     /// Per-replica metrics roll-up point.
     pub hub: MetricsHub,
+    /// Fleet-unique request-id source (replica engines adopt these ids,
+    /// so `{"cancel": id}` can address a request from any connection).
+    next_id: AtomicU64,
+    /// Live cancellation flags by request id.
+    cancels: Mutex<BTreeMap<u64, Arc<AtomicBool>>>,
 }
 
 impl Shared {
@@ -47,7 +64,38 @@ impl Shared {
             queue: RequestQueue::new(max_queue),
             shutdown: AtomicBool::new(false),
             hub: MetricsHub::new(replicas),
+            next_id: AtomicU64::new(1),
+            cancels: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Issue a fleet-unique request id.
+    pub fn issue_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Register a cancellation flag for an issued id.
+    pub fn register_cancel(&self, id: u64) -> Arc<AtomicBool> {
+        let flag = Arc::new(AtomicBool::new(false));
+        self.cancels.lock().unwrap().insert(id, flag.clone());
+        flag
+    }
+
+    /// Raise a request's cancellation flag; false when the id is unknown
+    /// (never issued, or already finished and unregistered).
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.cancels.lock().unwrap().get(&id) {
+            Some(flag) => {
+                flag.store(true, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a finished request's cancellation flag.
+    pub fn unregister_cancel(&self, id: u64) {
+        self.cancels.lock().unwrap().remove(&id);
     }
 
     /// Request a graceful drain: new submissions are rejected, in-flight
@@ -64,6 +112,8 @@ impl Shared {
 }
 
 /// Handle one client connection: parse request lines, enqueue, reply.
+/// Streaming requests emit delta/preempt/finish frames as the engine
+/// produces them, then the whole-completion summary frame.
 pub fn handle_connection(stream: TcpStream, shared: &Shared) {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(match stream.try_clone() {
@@ -71,6 +121,12 @@ pub fn handle_connection(stream: TcpStream, shared: &Shared) {
         Err(_) => return,
     });
     let mut writer = stream;
+    let mut write_frame = move |reply: &str| -> bool {
+        writer
+            .write_all(protocol::frame_line(reply).as_bytes())
+            .and_then(|_| writer.flush())
+            .is_ok()
+    };
     for line in reader.lines() {
         let line = match line {
             Ok(l) if !l.trim().is_empty() => l,
@@ -81,28 +137,57 @@ pub fn handle_connection(stream: TcpStream, shared: &Shared) {
             Ok(Request::Metrics) => {
                 protocol::render_metrics(&shared.hub.aggregate())
             }
-            Ok(Request::Generate { prompt, max_new }) => {
+            Ok(Request::Cancel { id }) => {
+                protocol::render_cancel_ack(id, shared.cancel(id))
+            }
+            Ok(Request::Generate { prompt, max_new, stream }) => {
+                let id = shared.issue_id();
+                let flag = shared.register_cancel(id);
                 let (tx, rx) = mpsc::channel();
+                let (dtx, drx) = if stream {
+                    let (a, b) = mpsc::channel();
+                    (Some(a), Some(b))
+                } else {
+                    (None, None)
+                };
                 let queued = QueuedRequest {
+                    id,
                     prompt,
                     max_new_tokens: max_new,
                     respond: Some(tx),
+                    deltas: dtx,
+                    cancel: Some(flag.clone()),
                 };
-                match shared.queue.submit(queued) {
-                    Ok(()) => match rx.recv() {
-                        Ok(c) => render_completion(&c),
-                        Err(_) => protocol::render_error("engine shut down"),
-                    },
+                let reply = match shared.queue.submit(queued) {
+                    Ok(()) => {
+                        if let Some(drx) = drx {
+                            // Forward event frames until the replica drops
+                            // the sender (at completion).  A dead client
+                            // raises the cancel flag so the engine stops
+                            // decoding for nobody.
+                            for ev in drx.iter() {
+                                if !write_frame(&protocol::render_delta(&ev))
+                                {
+                                    flag.store(true, Ordering::SeqCst);
+                                    break;
+                                }
+                            }
+                        }
+                        match rx.recv() {
+                            Ok(c) => render_completion(&c),
+                            Err(_) => {
+                                protocol::render_error("engine shut down")
+                            }
+                        }
+                    }
                     Err(_) => protocol::render_error("queue full"),
-                }
+                };
+                shared.unregister_cancel(id);
+                reply
             }
             Err(e) => protocol::render_error(&format!("bad request: {e}")),
         };
-        if writer
-            .write_all(format!("{reply}\n").as_bytes())
-            .and_then(|_| writer.flush())
-            .is_err()
-        {
+        if !write_frame(&reply) {
             break;
         }
     }

@@ -1,17 +1,25 @@
 //! JSON-lines wire protocol.
+//!
+//! Framing safety: one frame per `\n`-terminated line.  Every renderer
+//! here goes through [`jsonio`], whose string escaping turns `\n`, `\r`
+//! and all other control characters into escape sequences, so generated
+//! text can never split a frame; [`frame_line`] is the single place the
+//! terminator is appended and double-checks that invariant.
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use crate::engine::Completion;
+use crate::engine::{Completion, TokenDelta};
 use crate::jsonio::{self, num, obj, s, Value};
 use crate::metrics::{AggregateSnapshot, ReplicaSnapshot};
 
 /// A parsed client request line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Generate { prompt: String, max_new: usize },
+    Generate { prompt: String, max_new: usize, stream: bool },
+    /// `{"cancel": <id>}` — cancel an in-flight request fleet-wide.
+    Cancel { id: u64 },
     /// `{"metrics": true}` — return the aggregate replica snapshot.
     Metrics,
 }
@@ -24,8 +32,34 @@ pub fn parse_line(line: &str) -> Result<Request> {
             return Ok(Request::Metrics);
         }
     }
+    if let Some(c) = v.opt("cancel") {
+        return Ok(Request::Cancel { id: c.as_usize()? as u64 });
+    }
     let (prompt, max_new) = parse_request(line)?;
-    Ok(Request::Generate { prompt, max_new })
+    let stream = match v.opt("stream") {
+        Some(b) => b.as_bool()?,
+        None => false,
+    };
+    Ok(Request::Generate { prompt, max_new, stream })
+}
+
+/// Append the frame terminator, enforcing the one-line-per-frame
+/// invariant: a reply containing a raw newline or carriage return (which
+/// no [`jsonio`] renderer can produce — its escaper covers all control
+/// characters) would desynchronize every subsequent frame on the
+/// connection, so it is scrubbed rather than shipped.
+pub fn frame_line(reply: &str) -> String {
+    let broken = reply.contains('\n') || reply.contains('\r');
+    debug_assert!(!broken, "protocol renderer produced a raw line break");
+    if broken {
+        let mut safe: String = reply
+            .chars()
+            .map(|c| if c == '\n' || c == '\r' { ' ' } else { c })
+            .collect();
+        safe.push('\n');
+        return safe;
+    }
+    format!("{reply}\n")
 }
 
 /// Parse `{"prompt": ..., "max_new_tokens": ...}` → (prompt, budget).
@@ -53,6 +87,54 @@ pub fn render_completion(c: &Completion) -> String {
         ("steps", num(c.steps as f64)),
         ("latency_s", num(c.latency_seconds)),
         ("queue_s", num(c.queue_seconds)),
+        ("ttft_s", num(c.ttft_seconds)),
+        ("finish", s(c.finish.as_str())),
+        ("preemptions", num(c.preemptions as f64)),
+    ]))
+}
+
+/// One streaming event frame: an accepted-token delta or a preempt
+/// notice.  The final delta of a request carries its finish reason; the
+/// whole-completion summary frame follows it.
+pub fn render_delta(d: &TokenDelta) -> String {
+    let mut fields = vec![
+        ("id", num(d.id as f64)),
+        ("event", s(if d.preempted { "preempt" } else { "delta" })),
+        ("text", s(&d.text)),
+        ("tokens", num(d.tokens.len() as f64)),
+    ];
+    if let Some(f) = d.finish {
+        fields.push(("finish", s(f.as_str())));
+    }
+    jsonio::to_string(&obj(fields))
+}
+
+/// Client-side helper: parse a streaming event frame back into
+/// (id, event, text, tokens, finish?).
+pub fn parse_delta(
+    line: &str,
+) -> Result<(u64, String, String, usize, Option<String>)> {
+    let v = jsonio::parse(line)?;
+    if let Some(e) = v.opt("error") {
+        anyhow::bail!("server error: {}", e.as_str().unwrap_or("?"));
+    }
+    Ok((
+        v.get("id")?.as_usize()? as u64,
+        v.get("event")?.as_str()?.to_string(),
+        v.get("text")?.as_str()?.to_string(),
+        v.get("tokens")?.as_usize()?,
+        v.opt("finish")
+            .map(|f| f.as_str().map(str::to_string))
+            .transpose()?,
+    ))
+}
+
+/// Acknowledge a `{"cancel": id}` request (the flag is raised; whether it
+/// lands before the request finishes is inherently racy).
+pub fn render_cancel_ack(id: u64, known: bool) -> String {
+    jsonio::to_string(&obj(vec![
+        ("cancelled", num(id as f64)),
+        ("known", Value::Bool(known)),
     ]))
 }
 
@@ -106,6 +188,18 @@ pub fn render_request(prompt: &str, max_new: usize) -> String {
     ]))
 }
 
+pub fn render_stream_request(prompt: &str, max_new: usize) -> String {
+    jsonio::to_string(&obj(vec![
+        ("prompt", s(prompt)),
+        ("max_new_tokens", num(max_new as f64)),
+        ("stream", Value::Bool(true)),
+    ]))
+}
+
+pub fn render_cancel_request(id: u64) -> String {
+    jsonio::to_string(&obj(vec![("cancel", num(id as f64))]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,43 +228,116 @@ mod tests {
         assert!(parse_request("not json").is_err());
     }
 
-    #[test]
-    fn completion_roundtrip() {
-        let c = Completion {
+    fn completion(text: &str) -> Completion {
+        Completion {
             id: 9,
             prompt: "p".into(),
-            text: "answer\n".into(),
+            text: text.into(),
             tokens: vec![1, 2, 3],
             steps: 4,
             latency_seconds: 0.5,
             queue_seconds: 0.1,
-        };
-        let line = render_completion(&c);
+            finish: crate::engine::FinishReason::Stop,
+            ttft_seconds: 0.05,
+            preemptions: 1,
+        }
+    }
+
+    #[test]
+    fn completion_roundtrip() {
+        let line = render_completion(&completion("answer\n"));
         let (id, text, lat) = parse_completion(&line).unwrap();
         assert_eq!(id, 9);
         assert_eq!(text, "answer\n");
         assert!((lat - 0.5).abs() < 1e-12);
+        let v = jsonio::parse(&line).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "stop");
+        assert_eq!(v.get("preemptions").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn framing_survives_newlines_and_control_chars() {
+        // Generated text with every flavour of line break and control
+        // character must stay inside ONE frame: embedded breaks would
+        // desynchronize the whole connection.
+        let nasty = "a\nb\r\nc\td\u{0}\u{1}\u{1f}e\u{7f}";
+        let line = render_completion(&completion(nasty));
+        assert!(!line.contains('\n'), "frame split by completion text");
+        assert!(!line.contains('\r'));
+        let (_, text, _) = parse_completion(&line).unwrap();
+        assert_eq!(text, nasty, "escaping must be lossless");
+        // Same for streaming deltas and errors.
+        let d = TokenDelta {
+            id: 3,
+            tokens: vec![10, 10],
+            text: "x\n\n".into(),
+            finish: Some(crate::engine::FinishReason::Stop),
+            preempted: false,
+        };
+        let dl = render_delta(&d);
+        assert!(!dl.contains('\n'));
+        let (id, event, text, ntok, finish) = parse_delta(&dl).unwrap();
+        assert_eq!((id, event.as_str(), ntok), (3, "delta", 2));
+        assert_eq!(text, "x\n\n");
+        assert_eq!(finish.as_deref(), Some("stop"));
+        let el = render_error("bad\nrequest");
+        assert!(!el.contains('\n'));
+        // frame_line appends exactly one terminator.
+        let framed = frame_line(&line);
+        assert!(framed.ends_with('\n'));
+        assert_eq!(framed.matches('\n').count(), 1);
+    }
+
+    #[test]
+    fn preempt_notice_renders_as_event() {
+        let d = TokenDelta {
+            id: 7,
+            tokens: Vec::new(),
+            text: String::new(),
+            finish: None,
+            preempted: true,
+        };
+        let (id, event, text, ntok, finish) =
+            parse_delta(&render_delta(&d)).unwrap();
+        assert_eq!((id, event.as_str()), (7, "preempt"));
+        assert!(text.is_empty() && ntok == 0 && finish.is_none());
     }
 
     #[test]
     fn error_rendering() {
         let e = render_error("queue full");
         assert!(parse_completion(&e).is_err());
+        assert!(parse_delta(&e).is_err());
     }
 
     #[test]
-    fn parse_line_distinguishes_metrics_from_generate() {
+    fn parse_line_distinguishes_request_kinds() {
         assert_eq!(
             parse_line(r#"{"metrics": true}"#).unwrap(),
             Request::Metrics
         );
+        assert_eq!(
+            parse_line(r#"{"cancel": 42}"#).unwrap(),
+            Request::Cancel { id: 42 }
+        );
         match parse_line(r#"{"prompt": "x", "max_new_tokens": 3}"#).unwrap() {
-            Request::Generate { prompt, max_new } => {
+            Request::Generate { prompt, max_new, stream } => {
                 assert_eq!(prompt, "x");
                 assert_eq!(max_new, 3);
+                assert!(!stream);
             }
             other => panic!("unexpected {other:?}"),
         }
+        match parse_line(&render_stream_request("y", 5)).unwrap() {
+            Request::Generate { prompt, max_new, stream } => {
+                assert_eq!((prompt.as_str(), max_new, stream), ("y", 5, true));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(
+            parse_line(&render_cancel_request(7)).unwrap(),
+            Request::Cancel { id: 7 }
+        );
         assert!(parse_line(r#"{"metrics": false}"#).is_err());
     }
 

@@ -8,27 +8,51 @@
 //! decision adapts to *that replica's* batch size rather than a global
 //! one, and publishes metrics into the shared [`MetricsHub`].
 
-use std::sync::mpsc;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
 use crate::batching::{QueuedRequest, ReplicaHandle, Scheduler};
 use crate::config::ServingConfig;
-use crate::engine::{Completion, Engine};
+use crate::engine::{Completion, Engine, RequestSpec, TokenDelta};
 use crate::metrics::{AggregateSnapshot, MetricsHub};
 use crate::runtime::RuntimeSpec;
 
 use super::Shared;
 
-/// Drive one replica: drain its feed, step the engine, reply, publish
-/// load + metrics.  Returns the number of requests served once the feed
-/// closes and drains.
+/// One in-flight request's client plumbing, keyed by request id.
+struct ClientHooks {
+    respond: Option<mpsc::Sender<Completion>>,
+    deltas: Option<mpsc::Sender<TokenDelta>>,
+    cancel: Option<Arc<AtomicBool>>,
+    /// Delta receiver hung up (client disconnect): cancel on next sweep.
+    gone: bool,
+    /// Cancel already forwarded to the engine (avoid re-cancelling).
+    cancelled: bool,
+}
+
+impl ClientHooks {
+    fn wants_cancel(&self) -> bool {
+        !self.cancelled
+            && (self.gone
+                || self
+                    .cancel
+                    .as_ref()
+                    .map_or(false, |f| f.load(Ordering::SeqCst)))
+    }
+}
+
+/// Drive one replica: drain its feed, sweep cancellations, step the
+/// engine, forward streaming deltas, reply, publish load + metrics.
+/// Returns the number of requests served once the feed closes and drains.
 pub fn replica_loop(
     engine: &mut Engine,
     replica: &ReplicaHandle,
     hub: &MetricsHub,
 ) -> Result<u64> {
-    let mut in_flight: Vec<(u64, mpsc::Sender<Completion>)> = Vec::new();
+    let mut clients: BTreeMap<u64, ClientHooks> = BTreeMap::new();
     let mut served = 0u64;
     loop {
         // Pull new work (blocking only when fully idle).  The pull is
@@ -44,21 +68,63 @@ pub fn replica_loop(
             replica.load.note_drained(new.len());
         }
         for q in new {
-            let id = engine.submit(&q.prompt, q.max_new_tokens);
-            if let Some(tx) = q.respond {
-                in_flight.push((id, tx));
+            let id = if q.id == 0 {
+                engine.submit(&q.prompt, q.max_new_tokens)
+            } else {
+                engine.submit_spec(RequestSpec {
+                    id: q.id,
+                    prompt: q.prompt,
+                    max_new_tokens: q.max_new_tokens,
+                    arrival: engine.now(),
+                    resume: None,
+                });
+                q.id
+            };
+            clients.insert(
+                id,
+                ClientHooks {
+                    respond: q.respond,
+                    deltas: q.deltas,
+                    cancel: q.cancel,
+                    gone: false,
+                    cancelled: false,
+                },
+            );
+        }
+        // Cancellation sweep: flags raised by any connection thread, plus
+        // streams whose receiver hung up (early client disconnect).
+        let to_cancel: Vec<u64> = clients
+            .iter()
+            .filter(|(_, c)| c.wants_cancel())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in to_cancel {
+            if let Some(c) = clients.get_mut(&id) {
+                c.cancelled = true;
             }
+            engine.cancel(id);
         }
         let progressed = engine.step()?;
+        // Forward per-lane lifecycle events to streaming clients.
+        for ev in engine.take_events() {
+            if let Some(c) = clients.get_mut(&ev.id) {
+                if let Some(tx) = &c.deltas {
+                    if tx.send(ev).is_err() {
+                        c.gone = true;
+                    }
+                }
+            }
+        }
         let mut completed = false;
         for c in engine.take_completions() {
             served += 1;
             completed = true;
-            if let Some(pos) =
-                in_flight.iter().position(|(id, _)| *id == c.id)
-            {
-                let (_, tx) = in_flight.swap_remove(pos);
-                let _ = tx.send(c); // receiver may have hung up
+            if let Some(hooks) = clients.remove(&c.id) {
+                // Dropping `hooks.deltas` here ends the client's event
+                // stream; the summary reply follows on `respond`.
+                if let Some(tx) = hooks.respond {
+                    let _ = tx.send(c); // receiver may have hung up
+                }
             }
         }
         replica.load.set_pending(engine.pending());
@@ -128,7 +194,8 @@ impl ReplicaSet<'_> {
             })
             .collect();
         let scheduler =
-            Scheduler::new(handles.clone(), self.cfg.server.routing);
+            Scheduler::new(handles.clone(), self.cfg.server.routing)
+                .with_watermark(self.cfg.server.watermark_permille);
         std::thread::scope(|s| {
             let mut workers = Vec::with_capacity(n);
             for h in &handles {
@@ -157,31 +224,77 @@ impl ReplicaSet<'_> {
     }
 }
 
-/// Closed-loop offline run: enqueue every request up front, close the
-/// queue, drain it through the replica set, and return the completions in
-/// submission order plus the aggregate metrics and per-replica served
-/// counts.  This is the library entry the `serve_replicas` example, the
-/// bench harness, and the replica tests share.
-pub fn run_offline(
+/// One request of an offline (closed-loop) run, with the lifecycle knobs
+/// the streaming/cancellation tests exercise.
+#[derive(Clone)]
+pub struct OfflineRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// Collect per-step token deltas for this request.
+    pub stream: bool,
+    /// Optional pre-shared cancellation flag (raise it from any thread).
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl OfflineRequest {
+    pub fn new(prompt: &str, max_new_tokens: usize) -> Self {
+        OfflineRequest {
+            prompt: prompt.to_string(),
+            max_new_tokens,
+            stream: false,
+            cancel: None,
+        }
+    }
+}
+
+/// What an offline run returns: completions and per-request delta streams
+/// in submission order, plus the aggregate metrics and per-replica served
+/// counts.
+pub struct OfflineOutcome {
+    pub completions: Vec<Completion>,
+    /// `deltas[i]` holds request i's streamed events (empty unless its
+    /// `stream` flag was set).
+    pub deltas: Vec<Vec<TokenDelta>>,
+    pub snapshot: AggregateSnapshot,
+    pub served: Vec<u64>,
+}
+
+/// Closed-loop offline run over full lifecycle requests: enqueue
+/// everything up front (with fleet-unique ids), close the queue, drain it
+/// through the replica set, and collect completions + delta streams in
+/// submission order.
+pub fn run_offline_requests(
     cfg: &ServingConfig,
     spec: &RuntimeSpec,
-    requests: &[(String, usize)],
-) -> Result<(Vec<Completion>, AggregateSnapshot, Vec<u64>)> {
+    requests: &[OfflineRequest],
+) -> Result<OfflineOutcome> {
     let n = cfg.server.replicas.max(1);
     let capacity = cfg.server.max_queue.max(requests.len()).max(1);
     let shared = Shared::new(capacity, n);
     let mut rxs = Vec::with_capacity(requests.len());
-    for (prompt, max_new) in requests {
+    let mut delta_rxs = Vec::with_capacity(requests.len());
+    for r in requests {
+        let id = shared.issue_id();
         let (tx, rx) = mpsc::channel();
+        let (dtx, drx) = if r.stream {
+            let (a, b) = mpsc::channel();
+            (Some(a), Some(b))
+        } else {
+            (None, None)
+        };
         shared
             .queue
             .submit(QueuedRequest {
-                prompt: prompt.clone(),
-                max_new_tokens: *max_new,
+                id,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new_tokens,
                 respond: Some(tx),
+                deltas: dtx,
+                cancel: r.cancel.clone(),
             })
             .map_err(|_| anyhow!("admission queue rejected request"))?;
         rxs.push(rx);
+        delta_rxs.push(drx);
     }
     shared.queue.close();
     let served = ReplicaSet { cfg, spec }.run(&shared)?;
@@ -191,5 +304,35 @@ pub fn run_offline(
             rx.recv().map_err(|_| anyhow!("request dropped by replica"))?,
         );
     }
-    Ok((completions, shared.hub.aggregate(), served))
+    let deltas = delta_rxs
+        .into_iter()
+        .map(|drx| match drx {
+            // Senders are gone once the run drained: try_iter sees all.
+            Some(drx) => drx.try_iter().collect(),
+            None => Vec::new(),
+        })
+        .collect();
+    Ok(OfflineOutcome {
+        completions,
+        deltas,
+        snapshot: shared.hub.aggregate(),
+        served,
+    })
+}
+
+/// Closed-loop offline run (no streaming): the library entry the
+/// `serve_replicas` example, the bench harness, and the replica tests
+/// share.  Returns completions in submission order plus the aggregate
+/// metrics and per-replica served counts.
+pub fn run_offline(
+    cfg: &ServingConfig,
+    spec: &RuntimeSpec,
+    requests: &[(String, usize)],
+) -> Result<(Vec<Completion>, AggregateSnapshot, Vec<u64>)> {
+    let reqs: Vec<OfflineRequest> = requests
+        .iter()
+        .map(|(p, m)| OfflineRequest::new(p, *m))
+        .collect();
+    let out = run_offline_requests(cfg, spec, &reqs)?;
+    Ok((out.completions, out.snapshot, out.served))
 }

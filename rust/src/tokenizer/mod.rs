@@ -38,6 +38,49 @@ impl ByteTokenizer {
     }
 }
 
+/// Length of the longest prefix of `bytes` that can be decoded (lossily)
+/// NOW without changing meaning once more bytes arrive: a trailing
+/// *valid-so-far but incomplete* UTF-8 sequence (≤ 3 bytes) is held back
+/// so a multi-byte character split across two streaming deltas is emitted
+/// whole.  Bytes that are already determined invalid (a continuation with
+/// no starter, a starter followed by a non-continuation) decode to U+FFFD
+/// regardless of what follows, so they are never held.
+///
+/// The guarantee streaming relies on: cutting a byte stream only at
+/// offsets this function returns (flushing the remainder at
+/// end-of-stream) makes the concatenation of per-chunk lossy decodes
+/// byte-identical to the lossy decode of the whole stream.
+pub fn streamable_prefix_len(bytes: &[u8]) -> usize {
+    let n = bytes.len();
+    // Only the last 3 bytes can belong to an incomplete sequence (the
+    // longest UTF-8 encoding is 4 bytes, so an incomplete one holds at
+    // most a starter plus 2 continuations).
+    let lo = n.saturating_sub(3);
+    for i in (lo..n).rev() {
+        let b = bytes[i];
+        if b & 0b1100_0000 == 0b1000_0000 {
+            continue; // continuation byte: keep scanning for its starter
+        }
+        let need = if b >= 0xF0 {
+            4
+        } else if b >= 0xE0 {
+            3
+        } else if b >= 0xC0 {
+            2
+        } else {
+            1 // ASCII or an invalid lone byte: complete either way
+        };
+        let have = n - i;
+        let tail_ok =
+            bytes[i + 1..n].iter().all(|&c| c & 0b1100_0000 == 0b1000_0000);
+        if have < need && tail_ok {
+            return i; // hold the incomplete sequence back
+        }
+        return n;
+    }
+    n
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,6 +113,61 @@ mod tests {
         assert!(t.is_stop(&t.encode("done.\n\n")));
         assert!(!t.is_stop(&t.encode("done.\n")));
         assert!(!t.is_stop(&[]));
+    }
+
+    #[test]
+    fn streamable_prefix_holds_back_incomplete_sequences() {
+        // Complete ASCII: everything is emittable.
+        assert_eq!(streamable_prefix_len(b"abc"), 3);
+        // Trailing 2-byte starter alone is held.
+        assert_eq!(streamable_prefix_len(&[b'a', 0xC3]), 1);
+        // Complete 2-byte char passes.
+        assert_eq!(streamable_prefix_len(&[0xC3, 0xA9]), 2);
+        // Incomplete 3- and 4-byte sequences are held back wholesale.
+        assert_eq!(streamable_prefix_len(&[0xE2, 0x82]), 0);
+        assert_eq!(streamable_prefix_len(&[b'x', 0xF0, 0x9F, 0x92]), 1);
+        // A starter followed by a non-continuation is already invalid —
+        // emit it now, more bytes cannot rescue it.
+        assert_eq!(streamable_prefix_len(&[0xE0, b'A']), 2);
+        // Lone continuation bytes are invalid on arrival: emit.
+        assert_eq!(streamable_prefix_len(&[0x80, 0x80]), 2);
+    }
+
+    #[test]
+    fn chunked_lossy_decode_matches_whole_stream() {
+        // Simulate streaming emission over adversarial byte streams: at
+        // every step some bytes arrive, the streamable prefix is emitted,
+        // the rest held; at end-of-stream the remainder is flushed.  The
+        // concatenation must equal the whole-stream lossy decode — the
+        // invariant the engine's delta emission relies on.
+        let mut rng = crate::util::rng::Rng::new(0xfeed);
+        for case in 0..200 {
+            let len = 1 + rng.below(24);
+            let bytes: Vec<u8> = (0..len)
+                .map(|_| {
+                    if case % 3 == 0 {
+                        // Bias toward multi-byte/invalid territory.
+                        (0x70 + rng.below(0x90)) as u8
+                    } else {
+                        rng.below(256) as u8
+                    }
+                })
+                .collect();
+            let mut emitted = String::new();
+            let mut held: Vec<u8> = Vec::new();
+            let mut i = 0;
+            while i < bytes.len() {
+                let take = (1 + rng.below(4)).min(bytes.len() - i);
+                held.extend_from_slice(&bytes[i..i + take]);
+                i += take;
+                let k = streamable_prefix_len(&held);
+                emitted.push_str(&String::from_utf8_lossy(&held[..k]));
+                held.drain(..k);
+            }
+            emitted.push_str(&String::from_utf8_lossy(&held));
+            let whole = String::from_utf8_lossy(&bytes).into_owned();
+            assert_eq!(emitted, whole, "bytes {bytes:02x?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,497 @@
+//! Request-lifecycle integration over the deterministic sim backend:
+//! streaming deltas, mid-flight cancellation, and KV-pressure
+//! preempt/resume.
+//!
+//! The two invariants everything here leans on:
+//!  (a) for any request, the concatenation of its streamed delta texts is
+//!      byte-identical to the whole-completion text;
+//!  (b) a run under a `cache.max_pages` budget tight enough to force
+//!      preemptions produces final texts byte-identical to an
+//!      unconstrained run.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use propd::batching::RoutingPolicy;
+use propd::config::ServingConfig;
+use propd::engine::{
+    AdmissionMode, Engine, EngineConfig, EngineKind, FinishReason,
+};
+use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
+use propd::server::{run_offline, run_offline_requests, OfflineRequest};
+
+const PROMPTS: [&str; 3] = [
+    "user: Explain how the scheduler reduces the latency of every \
+     request.\nassistant:",
+    "user: List three reasons why the token tree prunes the candidate \
+     sequences.\nassistant:",
+    "user: Summarize how the batch engine balances the decoding \
+     throughput.\nassistant:",
+];
+
+fn requests(n: usize) -> Vec<(String, usize)> {
+    (0..n)
+        .map(|i| (PROMPTS[i % PROMPTS.len()].to_string(), 12 + (i % 3) * 8))
+        .collect()
+}
+
+fn stream_requests(n: usize) -> Vec<OfflineRequest> {
+    requests(n)
+        .into_iter()
+        .map(|(p, m)| {
+            let mut r = OfflineRequest::new(&p, m);
+            r.stream = true;
+            r
+        })
+        .collect()
+}
+
+/// Single-engine greedy reference decode (text per request).
+fn reference(
+    rt: &Runtime,
+    mut cfg: EngineConfig,
+    reqs: &[(String, usize)],
+) -> Vec<String> {
+    cfg.max_batch = reqs.len().max(1);
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    for (p, m) in reqs {
+        engine.submit(p, *m);
+    }
+    let mut done = engine.run_to_completion().expect("run");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.text).collect()
+}
+
+// ---------------------------------------------------------------------------
+// (a) streamed deltas concatenate to the whole-completion output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streamed_deltas_concatenate_to_whole_output_across_engines() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let reqs = requests(6);
+    let truth = reference(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::Autoregressive),
+        &reqs,
+    );
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        let mut cfg = ServingConfig::default_for(&sim.size, kind);
+        cfg.server.replicas = 2;
+        cfg.engine.max_batch = 2;
+        let out = run_offline_requests(
+            &cfg,
+            &RuntimeSpec::Sim(sim.clone()),
+            &stream_requests(6),
+        )
+        .expect("streaming run");
+        for (i, c) in out.completions.iter().enumerate() {
+            let concat: String = out.deltas[i]
+                .iter()
+                .map(|d| d.text.as_str())
+                .collect();
+            assert_eq!(
+                concat,
+                c.text,
+                "{}: request {i} delta concat diverged",
+                kind.as_str()
+            );
+            assert_eq!(c.text, truth[i], "{} diverged", kind.as_str());
+            let streamed_tokens: usize =
+                out.deltas[i].iter().map(|d| d.tokens.len()).sum();
+            assert_eq!(streamed_tokens, c.tokens.len());
+            let last = out.deltas[i].last().expect("at least one delta");
+            assert_eq!(last.finish, Some(c.finish), "final delta finishes");
+            assert!(
+                c.ttft_seconds >= 0.0
+                    && c.ttft_seconds <= c.latency_seconds + 1e-9
+            );
+        }
+    }
+}
+
+#[test]
+fn streamed_deltas_identical_across_kinds_and_routing_policies() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let reqs = requests(5);
+    let truth = reference(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::Autoregressive),
+        &reqs,
+    );
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        for routing in [
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::CachePressure,
+        ] {
+            let mut cfg = ServingConfig::default_for(&sim.size, kind);
+            cfg.server.replicas = 2;
+            cfg.server.routing = routing;
+            cfg.engine.max_batch = 2;
+            let out = run_offline_requests(
+                &cfg,
+                &RuntimeSpec::Sim(sim.clone()),
+                &stream_requests(5),
+            )
+            .expect("streaming run");
+            for (i, c) in out.completions.iter().enumerate() {
+                let concat: String = out.deltas[i]
+                    .iter()
+                    .map(|d| d.text.as_str())
+                    .collect();
+                assert_eq!(
+                    concat,
+                    c.text,
+                    "{} × {} request {i}: delta concat diverged",
+                    kind.as_str(),
+                    routing.as_str()
+                );
+                assert_eq!(
+                    c.text,
+                    truth[i],
+                    "{} × {} request {i} diverged",
+                    kind.as_str(),
+                    routing.as_str()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) preempt/resume under a tight page pool is byte-identical
+// ---------------------------------------------------------------------------
+
+fn tight_cfg(kind: EngineKind, sim: &SimConfig) -> ServingConfig {
+    let mut cfg = ServingConfig::default_for(&sim.size, kind);
+    cfg.server.replicas = 1;
+    cfg.engine.max_batch = 4;
+    cfg.engine.page_size = 16; // 24 pages cover one max_seq sequence
+    cfg.engine.cache_pages = 26; // exactly one guaranteed lane
+    cfg.engine.admission = AdmissionMode::Optimistic;
+    cfg
+}
+
+#[test]
+fn preemption_under_tight_pool_is_byte_identical() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let reqs: Vec<(String, usize)> = (0..6)
+        .map(|i| (PROMPTS[i % 3].to_string(), 40))
+        .collect();
+    for kind in [EngineKind::ProPD, EngineKind::Autoregressive] {
+        let truth =
+            reference(&rt, EngineConfig::new(&sim.size, kind), &reqs);
+        let cfg = tight_cfg(kind, &sim);
+        let mut stream_reqs: Vec<OfflineRequest> = reqs
+            .iter()
+            .map(|(p, m)| OfflineRequest::new(p, *m))
+            .collect();
+        for r in &mut stream_reqs {
+            r.stream = true;
+        }
+        let out = run_offline_requests(
+            &cfg,
+            &RuntimeSpec::Sim(sim.clone()),
+            &stream_reqs,
+        )
+        .expect("tight-pool run");
+        let preempts = out.snapshot.total("preempt_total");
+        assert!(
+            preempts >= 1.0,
+            "{}: pool was meant to force preemption (got {preempts})",
+            kind.as_str()
+        );
+        assert_eq!(
+            out.snapshot.total("requeue_total"),
+            preempts,
+            "every preemption requeues"
+        );
+        assert_eq!(
+            out.snapshot.total("resume_prefills"),
+            preempts,
+            "every requeued request resumes"
+        );
+        assert!(out.snapshot.total("reprefill_tokens_total") > 0.0);
+        for (i, c) in out.completions.iter().enumerate() {
+            assert_eq!(
+                c.text,
+                truth[i],
+                "{}: request {i} diverged under preemption",
+                kind.as_str()
+            );
+            // Streaming across preempt/resume still concatenates exactly.
+            let concat: String = out.deltas[i]
+                .iter()
+                .map(|d| d.text.as_str())
+                .collect();
+            assert_eq!(concat, c.text);
+        }
+        // At least one request observed a preempt notice.
+        let noticed = out
+            .deltas
+            .iter()
+            .flatten()
+            .filter(|d| d.preempted)
+            .count();
+        assert_eq!(noticed as f64, preempts, "preempt notices streamed");
+    }
+}
+
+#[test]
+fn manual_preempt_resume_keeps_priority_and_byte_identity() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let truth = reference(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::ProPD),
+        &[(PROMPTS[0].to_string(), 24)],
+    );
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 1;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    let a = engine.submit(PROMPTS[0], 24);
+    // Get A mid-generation, then queue a competitor.
+    for _ in 0..3 {
+        engine.step().expect("step");
+    }
+    let c = engine.submit(PROMPTS[1], 24);
+    let spec = engine.preempt_lowest().expect("one active lane");
+    assert_eq!(spec.id, a, "only active lane is the victim");
+    let resume = spec.resume.clone().expect("carries committed prefix");
+    assert_eq!(resume.preemptions, 1);
+    assert!(resume.tokens.len() > resume.prompt_len, "has generated work");
+    engine.resubmit(spec);
+    assert_eq!(engine.metrics.preempt_total, 1);
+    assert_eq!(engine.metrics.requeue_total, 1);
+    let mut done = engine.run_to_completion().expect("drain");
+    assert_eq!(done.len(), 2);
+    // Priority: the requeued request re-enters the single lane BEFORE the
+    // later-arrived competitor, so it retires first.
+    assert_eq!(done[0].id, a, "requeued request must not starve");
+    assert_eq!(done[0].preemptions, 1);
+    assert_eq!(engine.metrics.resume_prefills, 1);
+    assert!(engine.metrics.reprefill_tokens > 0);
+    done.sort_by_key(|x| x.id);
+    assert_eq!(done[0].text, truth[0], "resume is byte-identical");
+    let _ = c;
+}
+
+#[test]
+fn preempt_lowest_picks_the_youngest_lane() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::Medusa);
+    cfg.max_batch = 2;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    let a = engine.submit(PROMPTS[0], 16);
+    let b = engine.submit(PROMPTS[1], 16);
+    engine.step().expect("step");
+    assert_eq!(engine.active_count(), 2);
+    let pages_full = engine.kv_pages_in_use();
+    let spec = engine.preempt_lowest().expect("two lanes active");
+    assert_eq!(spec.id, b, "later arrival is lower priority");
+    assert_eq!(engine.active_count(), 1);
+    assert!(
+        engine.kv_pages_in_use() < pages_full,
+        "victim's pages return to the pool"
+    );
+    let _ = a;
+}
+
+// ---------------------------------------------------------------------------
+// Cancellation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cancel_frees_pages_and_keeps_counts_across_engine_kinds() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        let mut cfg = EngineConfig::new(&sim.size, kind);
+        cfg.max_batch = 2;
+        let mut engine = Engine::new(&rt, cfg).expect("engine");
+        let a = engine.submit(PROMPTS[0], 24);
+        let b = engine.submit(PROMPTS[1], 24);
+        let c = engine.submit(PROMPTS[2], 24);
+        engine.step().expect("step");
+        engine.step().expect("step");
+        assert_eq!(engine.active_count(), 2, "{}", kind.as_str());
+        assert!(engine.kv_pages_in_use() > 0);
+        // Cancel both active lanes: pool accounting returns to baseline.
+        assert!(engine.cancel(a));
+        assert!(engine.cancel(b));
+        assert!(!engine.cancel(9999), "unknown id");
+        assert_eq!(engine.active_count(), 0, "{}", kind.as_str());
+        assert_eq!(engine.kv_pages_in_use(), 0, "{}", kind.as_str());
+        assert_eq!(engine.pending(), 1, "queued request c remains");
+        let cancelled = engine.take_completions();
+        assert_eq!(cancelled.len(), 2);
+        assert!(cancelled
+            .iter()
+            .all(|x| x.finish == FinishReason::Cancelled));
+        assert!(
+            cancelled.iter().any(|x| !x.tokens.is_empty()),
+            "{}: mid-flight cancel keeps committed partial text",
+            kind.as_str()
+        );
+        assert_eq!(engine.metrics.cancelled_total, 2);
+        // The survivor drains normally afterwards.
+        let done = engine.run_to_completion().expect("drain");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, c);
+        assert!(done[0].finish != FinishReason::Cancelled);
+        assert_eq!(engine.kv_pages_in_use(), 0);
+        assert_eq!(engine.pending(), 0);
+    }
+}
+
+#[test]
+fn cancel_of_queued_request_completes_empty() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 1;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    engine.submit(PROMPTS[0], 16);
+    let queued = engine.submit(PROMPTS[1], 16);
+    engine.step().expect("step");
+    assert!(engine.cancel(queued), "still in the engine queue");
+    let events = engine.take_events();
+    assert!(events
+        .iter()
+        .any(|e| e.id == queued
+            && e.finish == Some(FinishReason::Cancelled)));
+    let done = engine.run_to_completion().expect("drain");
+    let cancelled: Vec<_> =
+        done.iter().filter(|c| c.id == queued).collect();
+    assert_eq!(cancelled.len(), 1);
+    assert!(cancelled[0].text.is_empty());
+    assert_eq!(cancelled[0].finish, FinishReason::Cancelled);
+}
+
+#[test]
+fn cancel_of_preempted_queued_request_flushes_stream_tail() {
+    // A preempted request sitting in the queue may still owe the stream
+    // bytes generated before preemption (past the emission watermark);
+    // cancelling it there must flush them so the delta concatenation
+    // still equals the completion text.
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 1;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    let a = engine.submit(PROMPTS[0], 24);
+    for _ in 0..2 {
+        engine.step().expect("step");
+    }
+    let mut stream: String =
+        engine.take_events().into_iter().map(|e| e.text).collect();
+    let spec = engine.preempt_lowest().expect("active lane");
+    engine.resubmit(spec);
+    assert!(engine.cancel(a), "cancel while requeued");
+    for e in engine.take_events() {
+        if e.id == a {
+            stream.push_str(&e.text);
+        }
+    }
+    let done = engine.take_completions();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish, FinishReason::Cancelled);
+    assert!(!done[0].text.is_empty(), "had generated work before preempt");
+    assert_eq!(stream, done[0].text, "queued cancel flushed the tail");
+}
+
+#[test]
+fn replica_set_honours_cancellation_flags() {
+    let sim = SimConfig::default();
+    let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+    cfg.server.replicas = 2;
+    cfg.engine.max_batch = 2;
+    let mut reqs = stream_requests(4);
+    let flag = Arc::new(AtomicBool::new(true)); // cancelled on arrival
+    reqs[1].cancel = Some(flag.clone());
+    let out =
+        run_offline_requests(&cfg, &RuntimeSpec::Sim(sim.clone()), &reqs)
+            .expect("run");
+    assert_eq!(out.completions.len(), 4);
+    assert_eq!(out.completions[1].finish, FinishReason::Cancelled);
+    for (i, c) in out.completions.iter().enumerate() {
+        if i != 1 {
+            assert!(c.finish != FinishReason::Cancelled);
+            assert!(!c.tokens.is_empty());
+        }
+    }
+    assert_eq!(out.snapshot.total("cancelled_total"), 1.0);
+    assert!(flag.load(Ordering::SeqCst));
+}
+
+// ---------------------------------------------------------------------------
+// Offline equivalence of the extended plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn run_offline_matches_streaming_variant() {
+    let sim = SimConfig::default();
+    let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::Medusa);
+    cfg.server.replicas = 2;
+    cfg.engine.max_batch = 2;
+    let reqs = requests(5);
+    let (plain, _, _) =
+        run_offline(&cfg, &RuntimeSpec::Sim(sim.clone()), &reqs)
+            .expect("plain run");
+    let out = run_offline_requests(
+        &cfg,
+        &RuntimeSpec::Sim(sim.clone()),
+        &stream_requests(5),
+    )
+    .expect("streaming run");
+    for (a, b) in plain.iter().zip(&out.completions) {
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.tokens, b.tokens);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Probe grid derivation (satellite)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn probe_derives_grid_from_artifacts_and_names_missing_ones() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 2;
+    let prune_layer = cfg.prune_layer;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    engine.submit(PROMPTS[0], 16);
+    engine.submit(PROMPTS[1], 16);
+    engine.step().expect("step");
+    let ranks = engine
+        .probe_early_ranks(prune_layer)
+        .expect("probe over derived grid");
+    assert!(!ranks.is_empty());
+    // A layer with no emitted artifacts errors by NAMING the artifact,
+    // instead of bailing on a hard-coded shape.
+    let err = engine.probe_early_ranks(99).unwrap_err().to_string();
+    assert!(err.contains("verify_early"), "{err}");
+    assert!(err.contains("99"), "{err}");
+}
