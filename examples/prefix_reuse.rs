@@ -1,0 +1,91 @@
+//! Shared-prefix KV reuse demonstration (sim mode — no artifacts needed).
+//!
+//!     cargo run --release --example prefix_reuse
+//!
+//! Runs the same shared-prefix workload (a common few-shot header + a
+//! unique tail per request) with the prefix cache off and on, and prints
+//! the hit-rate / prefill-token / reprefill-token deltas.  A preemption
+//! round (tight page pool, optimistic admission) shows the resume path
+//! riding the cache too.  The outputs of every run are asserted
+//! byte-identical — reuse is a pure optimization.
+
+use anyhow::Result;
+
+use propd::bench::Table;
+use propd::config::ServingConfig;
+use propd::engine::{AdmissionMode, EngineKind};
+use propd::runtime::{RuntimeSpec, SimConfig};
+use propd::server::run_offline;
+use propd::workload::{shared_prefix_requests, SharedPrefixConfig};
+
+fn main() -> Result<()> {
+    let sim = SimConfig::default();
+    // 64-byte headers (4 pages at page_size 16) fit max_prompt whole, so
+    // the full header is reusable across the 24 requests (2 templates).
+    let reqs = shared_prefix_requests(&SharedPrefixConfig {
+        n_requests: 24,
+        header_len: 64,
+        tail_len: 12,
+        ..Default::default()
+    });
+    println!(
+        "workload: {} requests, 2 shared 64-byte headers, unique tails\n",
+        reqs.len()
+    );
+
+    let mut table = Table::new(
+        "prefix cache off vs on (2 replicas, page_size 16)",
+        &["run", "hit rate", "hit tok", "prefill tok", "reprefill tok",
+          "evictions"],
+    );
+    let mut texts: Vec<Vec<String>> = Vec::new();
+    for (label, prefix_cache, tight) in [
+        ("off", false, false),
+        ("on", true, false),
+        ("off+preempt", false, true),
+        ("on+preempt", true, true),
+    ] {
+        let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+        cfg.server.replicas = 2;
+        cfg.engine.max_batch = 2;
+        cfg.engine.page_size = 16;
+        cfg.engine.prefix_cache = prefix_cache;
+        if prefix_cache {
+            cfg.server.routing =
+                propd::batching::RoutingPolicy::PrefixAffinity;
+        }
+        if tight {
+            // Over-subscribed lanes on a pool that guarantees only one:
+            // growth forces preempt → requeue → resume, which is where
+            // reprefill tokens accrue.
+            cfg.engine.max_batch = 4;
+            cfg.engine.cache_pages = 26;
+            cfg.engine.admission = AdmissionMode::Optimistic;
+        }
+        let (done, snap, _) =
+            run_offline(&cfg, &RuntimeSpec::Sim(sim.clone()), &reqs)?;
+        table.row(vec![
+            label.into(),
+            format!("{:.2}", snap.total("kv_prefix_hit_rate")),
+            format!("{}", snap.total("kv_prefix_hit_tokens") as u64),
+            format!("{}", snap.total("kv_prefix_miss_tokens") as u64),
+            format!("{}", snap.total("reprefill_tokens_total") as u64),
+            format!("{}", snap.total("kv_prefix_evictions") as u64),
+        ]);
+        texts.push(done.into_iter().map(|c| c.text).collect());
+    }
+    println!("{}", table.render());
+    for t in &texts[1..] {
+        assert_eq!(
+            t, &texts[0],
+            "prefix reuse must be a pure optimization (byte-identical)"
+        );
+    }
+    println!(
+        "\"prefill tok\" counts prompt/prefix tokens actually run through \
+         the model; with the cache on the hit tokens were adopted from \
+         frozen pages instead.  All four runs decoded byte-identical \
+         text."
+    );
+    Ok(())
+}

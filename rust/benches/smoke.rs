@@ -22,13 +22,15 @@ use anyhow::{Context, Result};
 use propd::bench::gate::{self, Baseline, Direction};
 use propd::bench::harness::{run_trace, RunSpec};
 use propd::bench::{Bencher, Table};
-use propd::engine::{AdmissionMode, EngineConfig, EngineKind};
+use propd::engine::{AdmissionMode, Engine, EngineConfig, EngineKind};
 use propd::estimator::{
     allocate_budget, allocation_gain, gain_at, alloc::DEFAULT_MIN_GAIN,
 };
 use propd::kvcache::{BatchAssembler, KvCache, KvGeometry};
 use propd::runtime::{Runtime, SimConfig};
-use propd::workload::PromptSet;
+use propd::workload::{
+    shared_prefix_requests, PromptSet, SharedPrefixConfig,
+};
 
 fn measure() -> Result<BTreeMap<String, f64>> {
     let mut m = BTreeMap::new();
@@ -96,6 +98,39 @@ fn measure() -> Result<BTreeMap<String, f64>> {
     // constant: it gates with direction "exact" (any drift — up or down —
     // fails CI, a cheap byte-identity canary).
     m.insert("lifecycle_tokens".into(), lc_out.tokens as f64);
+    // Committed-prefix tokens recomputed on resume.  With the prefix
+    // cache on (default) resumes adopt their frozen pages and replay only
+    // the tail, so a regression here means reuse stopped working on the
+    // resume path.
+    m.insert(
+        "reprefill_tokens".into(),
+        lc_out.report["reprefill_tokens_total"],
+    );
+
+    // ---- shared-prefix reuse (deterministic fixture) ----
+    // Few-shot-style traffic sized to fit max_prompt whole (64-byte
+    // header = 4 pages at page_size 16): after each header's first cold
+    // prefill, every later same-header admission adopts the cached chain.
+    // Hit rate is a pure function of the workload + admission order, so
+    // it gates machine-independently.
+    let spx = SharedPrefixConfig {
+        n_requests: 12,
+        header_len: 64,
+        tail_len: 12,
+        ..Default::default()
+    };
+    let mut px = EngineConfig::ablation(&sim.size, true, false);
+    px.max_batch = 2;
+    px.page_size = 16;
+    let mut engine = Engine::new(&rt, px).context("prefix engine")?;
+    for (p, mx) in shared_prefix_requests(&spx) {
+        engine.submit(&p, mx);
+    }
+    engine.run_to_completion().context("prefix run")?;
+    m.insert(
+        "kv_prefix_hit_rate".into(),
+        engine.metrics.kv_prefix_hit_rate(),
+    );
 
     // ---- per-lane budget allocator (deterministic fixture) ----
     // A skewed-acceptance batch as the allocator sees it: one hot lane
@@ -201,6 +236,10 @@ fn metric_meta(name: &str) -> (Direction, bool, Option<f64>) {
         // Byte-identity canary: the pressure run's token total is a
         // deterministic constant — any drift fails.
         "lifecycle_tokens" => (Direction::Exact, true, None),
+        // Shared-prefix reuse: fewer recomputed resume tokens and a
+        // higher cache hit rate are better.
+        "reprefill_tokens" => (Direction::Lower, true, None),
+        "kv_prefix_hit_rate" => (Direction::Higher, true, None),
         // Allocator economics on the deterministic skewed fixture; the
         // per-entry tolerance matches the armed baseline entries.
         n if n.starts_with("tree_alloc_") => {

@@ -19,6 +19,14 @@
 //!   KV page pool wins (workers publish the gauges each iteration), then
 //!   the least-loaded ordering.  With long-sequence traffic this tracks
 //!   *memory* headroom, which lane counts alone miss.
+//! - **prefix-affinity**: steers a request toward the replica whose
+//!   shared-prefix KV cache already holds the prompt's head.  The
+//!   scheduler hashes the prompt's leading page-aligned blocks
+//!   (cumulative digests, same fold the [`kvcache::prefix`] index uses)
+//!   and matches them against per-replica published digest sets; among
+//!   replicas with an immediately fillable lane the deepest match wins,
+//!   then the cache-pressure ordering.  Routing is a hint, never a
+//!   correctness lever: a digest mismatch just misses reuse.
 //!
 //! Replicas that die close their feed; the scheduler skips closed feeds and
 //! drops a request (client sees "engine shut down") only when every feed is
@@ -26,7 +34,7 @@
 
 use std::cmp::Reverse;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::{QueuedRequest, RequestQueue};
@@ -34,12 +42,17 @@ use super::{QueuedRequest, RequestQueue};
 /// How many admission-queue entries the scheduler pulls per wakeup.
 const DISPATCH_BURST: usize = 32;
 
+/// Leading page-aligned prompt blocks the affinity router hashes (the
+/// shared few-shot/system-prompt head; deeper matches add little signal).
+const MAX_AFFINITY_BLOCKS: usize = 8;
+
 /// Request routing policy for the multi-replica scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutingPolicy {
     LeastLoaded,
     RoundRobin,
     CachePressure,
+    PrefixAffinity,
 }
 
 impl RoutingPolicy {
@@ -50,6 +63,9 @@ impl RoutingPolicy {
             "cache-pressure" | "cache_pressure" => {
                 Some(RoutingPolicy::CachePressure)
             }
+            "prefix-affinity" | "prefix_affinity" => {
+                Some(RoutingPolicy::PrefixAffinity)
+            }
             _ => None,
         }
     }
@@ -59,6 +75,7 @@ impl RoutingPolicy {
             RoutingPolicy::LeastLoaded => "least-loaded",
             RoutingPolicy::RoundRobin => "round-robin",
             RoutingPolicy::CachePressure => "cache-pressure",
+            RoutingPolicy::PrefixAffinity => "prefix-affinity",
         }
     }
 }
@@ -83,6 +100,13 @@ pub struct ReplicaLoad {
     /// worker-published; 0 = not yet published, fall back to the
     /// handle's `max_batch`).
     lane_budget: AtomicUsize,
+    /// Cumulative digests of the replica's cached prefix chains
+    /// (worker-published, sorted; see `kvcache::prefix::block_digests`).
+    prefix_digests: Mutex<Vec<u64>>,
+    /// Effective (post-clamp) KV page size of the replica's engine
+    /// (worker-published; 0 = not yet published).  The affinity router
+    /// must hash prompts at this granularity or digests never match.
+    page_size: AtomicUsize,
 }
 
 impl ReplicaLoad {
@@ -135,6 +159,40 @@ impl ReplicaLoad {
             self.free_pages.load(Ordering::SeqCst) * 1000 / cap
         }
     }
+
+    /// Worker-side: publish the replica's cached-prefix digest set
+    /// (`Engine::prefix_digests`); kept sorted for binary search.
+    pub fn set_prefix_digests(&self, mut digests: Vec<u64>) {
+        digests.sort_unstable();
+        *self.prefix_digests.lock().unwrap() = digests;
+    }
+
+    /// Worker-side: publish the engine's effective KV page size
+    /// (`Engine::kv_page_size`), which may differ from the configured
+    /// `cache.page_size` (the engine clamps it to the model's max_seq).
+    pub fn set_page_size(&self, page_size: usize) {
+        self.page_size.store(page_size, Ordering::SeqCst);
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size.load(Ordering::SeqCst)
+    }
+
+    /// How many of the prompt's leading cumulative block digests this
+    /// replica holds (the prefix-affinity score: a depth-k match means
+    /// the first k page-aligned blocks are cached there).
+    pub fn prefix_match_depth(&self, wanted: &[u64]) -> usize {
+        let g = self.prefix_digests.lock().unwrap();
+        let mut depth = 0usize;
+        for d in wanted {
+            if g.binary_search(d).is_ok() {
+                depth += 1;
+            } else {
+                break;
+            }
+        }
+        depth
+    }
 }
 
 /// Scheduler-visible handle to one replica: its feed plus load counters.
@@ -184,6 +242,10 @@ pub struct Scheduler {
     /// the mark, routing proceeds as if it were off (work must land
     /// somewhere).
     watermark_permille: usize,
+    /// KV page granularity the engines run with — the prefix-affinity
+    /// digests must be computed over the same block size the replicas'
+    /// prefix indexes freeze at, or nothing ever matches.
+    page_size: usize,
 }
 
 impl Scheduler {
@@ -194,12 +256,20 @@ impl Scheduler {
             policy,
             rr: AtomicUsize::new(0),
             watermark_permille: 0,
+            page_size: crate::kvcache::DEFAULT_PAGE_SIZE,
         }
     }
 
     /// Enable free-page watermark admission control (see field docs).
     pub fn with_watermark(mut self, permille: usize) -> Self {
         self.watermark_permille = permille.min(1000);
+        self
+    }
+
+    /// Match the affinity digest block size to the engines'
+    /// `cache.page_size`.
+    pub fn with_page_size(mut self, page_size: usize) -> Self {
+        self.page_size = page_size.max(1);
         self
     }
 
@@ -218,6 +288,13 @@ impl Scheduler {
     /// Pick the routing target among replicas whose feed is still open.
     /// Returns `None` when every feed has closed.
     pub fn pick(&self) -> Option<&ReplicaHandle> {
+        self.pick_for(None)
+    }
+
+    /// Like [`pick`](Self::pick), but with the request's prompt so the
+    /// prefix-affinity policy can score digest matches.  The other
+    /// policies ignore the prompt.
+    pub fn pick_for(&self, prompt: Option<&str>) -> Option<&ReplicaHandle> {
         let any_above = self.watermark_permille > 0
             && self.replicas.iter().any(|r| {
                 !r.queue.is_closed()
@@ -262,6 +339,57 @@ impl Scheduler {
                         r.id,
                     )
                 }),
+            // Immediate availability first (affinity must not queue a
+            // request behind a full batch while another replica idles —
+            // reuse saves a prefill, not a whole decode), then the
+            // deepest cached-prefix match, then cache-pressure ordering.
+            RoutingPolicy::PrefixAffinity => {
+                // Hash at the granularity the engines actually freeze
+                // chains at: workers publish their effective (clamped)
+                // page size; fall back to the configured one until the
+                // first publish.
+                let block = self
+                    .replicas
+                    .iter()
+                    .map(|r| r.load.page_size())
+                    .find(|&x| x > 0)
+                    .unwrap_or(self.page_size)
+                    .max(1);
+                let wanted: Vec<u64> = match prompt {
+                    Some(p) => {
+                        // Only the leading blocks are scored — bound the
+                        // copy so a huge prompt doesn't get re-buffered
+                        // on every dispatch.
+                        let toks: Vec<u32> = p
+                            .bytes()
+                            .take(block * MAX_AFFINITY_BLOCKS)
+                            .map(|b| b as u32)
+                            .collect();
+                        crate::kvcache::block_digests(
+                            &toks,
+                            block,
+                            MAX_AFFINITY_BLOCKS,
+                        )
+                    }
+                    None => Vec::new(),
+                };
+                self.replicas
+                    .iter()
+                    .filter(|r| {
+                        !r.queue.is_closed()
+                            && self.clears_watermark(r, any_above)
+                    })
+                    .min_by_key(|r| {
+                        (
+                            Reverse(r.free_lanes().min(1)),
+                            Reverse(r.load.prefix_match_depth(&wanted)),
+                            Reverse(r.load.free_page_permille()),
+                            Reverse(r.free_lanes()),
+                            r.load.in_flight(),
+                            r.id,
+                        )
+                    })
+            }
         }
     }
 
@@ -270,7 +398,7 @@ impl Scheduler {
     /// every feed is closed.
     pub fn dispatch_one(&self, mut req: QueuedRequest) -> bool {
         loop {
-            let Some(r) = self.pick() else {
+            let Some(r) = self.pick_for(Some(&req.prompt)) else {
                 return false; // all replicas gone; drop → client errors out
             };
             r.load.note_dispatched();
@@ -498,6 +626,77 @@ mod tests {
             .with_watermark(0);
         // Ties on free lanes go to the lowest id despite page starvation.
         assert_eq!(s.pick().unwrap().id, 0);
+    }
+
+    #[test]
+    fn prefix_affinity_routes_to_the_digest_holder() {
+        use crate::kvcache::block_digests;
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        let prompt = "system: shared few-shot header padded out to cover \
+                      several pages of the kv cache before the tail";
+        let toks: Vec<u32> = prompt.bytes().map(|b| b as u32).collect();
+        let digests = block_digests(&toks, 16, 8);
+        assert!(digests.len() >= 2, "prompt must span multiple blocks");
+        // Replica 1 has the prompt's head cached; 0 would otherwise win
+        // every least-loaded/cache-pressure tiebreak (lower id).
+        handles[1].load.set_prefix_digests(digests.clone());
+        let s = Scheduler::new(handles, RoutingPolicy::PrefixAffinity)
+            .with_page_size(16);
+        assert_eq!(s.pick_for(Some(prompt)).unwrap().id, 1);
+        // A prompt nobody holds falls back to cache-pressure ordering.
+        assert_eq!(s.pick_for(Some("zzz completely different")).unwrap().id, 0);
+        // Deeper match beats shallower: replica 0 caches only block 1.
+        s.replicas()[0].load.set_prefix_digests(digests[..1].to_vec());
+        assert_eq!(s.pick_for(Some(prompt)).unwrap().id, 1);
+    }
+
+    #[test]
+    fn prefix_affinity_never_queues_behind_a_full_batch() {
+        use crate::kvcache::block_digests;
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        let prompt = "another shared header long enough for two blocks!!";
+        let toks: Vec<u32> = prompt.bytes().map(|b| b as u32).collect();
+        handles[0].load.set_prefix_digests(block_digests(&toks, 16, 8));
+        handles[0].load.set_pending(2); // digest holder is saturated
+        let s = Scheduler::new(handles, RoutingPolicy::PrefixAffinity)
+            .with_page_size(16);
+        assert_eq!(
+            s.pick_for(Some(prompt)).unwrap().id,
+            1,
+            "an idle replica beats a saturated digest holder"
+        );
+    }
+
+    #[test]
+    fn affinity_hashes_at_the_published_effective_page_size() {
+        use crate::kvcache::block_digests;
+        let handles =
+            vec![ReplicaHandle::new(0, 2, 8), ReplicaHandle::new(1, 2, 8)];
+        let prompt = "a fifty-ish byte prompt for the clamp mismatch case";
+        let toks: Vec<u32> = prompt.bytes().map(|b| b as u32).collect();
+        // The engines clamped cache.page_size=64 down to 24 and froze
+        // chains at that granularity; replica 1 holds the prompt's head.
+        handles[0].load.set_page_size(24);
+        handles[1].load.set_page_size(24);
+        handles[1].load.set_prefix_digests(block_digests(&toks, 24, 8));
+        // Hashing at the configured 64 would produce zero blocks for
+        // this prompt and silently degrade to the id-0 tiebreak.
+        let s = Scheduler::new(handles, RoutingPolicy::PrefixAffinity)
+            .with_page_size(64);
+        assert_eq!(s.pick_for(Some(prompt)).unwrap().id, 1);
+    }
+
+    #[test]
+    fn prefix_match_depth_is_longest_leading_run() {
+        let l = ReplicaLoad::default();
+        l.set_prefix_digests(vec![10, 30]);
+        assert_eq!(l.prefix_match_depth(&[10, 20, 30]), 1,
+                   "run stops at the first missing block");
+        assert_eq!(l.prefix_match_depth(&[10, 30, 99]), 2);
+        assert_eq!(l.prefix_match_depth(&[20]), 0);
+        assert_eq!(l.prefix_match_depth(&[]), 0);
     }
 
     #[test]

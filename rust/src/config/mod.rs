@@ -126,6 +126,9 @@ impl ServingConfig {
         })?;
         e.watermark_pages =
             get_us("cache.watermark_pages", e.watermark_pages)?;
+        e.prefix_cache = get_b("cache.prefix_cache", e.prefix_cache)?;
+        e.prefix_lru_pages =
+            get_us("cache.prefix_lru_pages", e.prefix_lru_pages)?;
         e.planner.replan_interval =
             get_us("planner.replan_interval",
                    e.planner.replan_interval as usize)? as u64;
@@ -147,7 +150,8 @@ impl ServingConfig {
         let routing = RoutingPolicy::parse(&routing_s).ok_or_else(|| {
             anyhow::anyhow!(
                 "unknown server.routing {routing_s:?} \
-                 (expected least-loaded, round-robin or cache-pressure)"
+                 (expected least-loaded, round-robin, cache-pressure or \
+                 prefix-affinity)"
             )
         })?;
         let server = ServerConfig {
@@ -272,6 +276,25 @@ mod tests {
         )
         .unwrap();
         assert_eq!(c.server.routing, RoutingPolicy::CachePressure);
+    }
+
+    #[test]
+    fn prefix_cache_knobs_parse_and_default_on() {
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert!(d.engine.prefix_cache, "reuse is the default");
+        assert_eq!(d.engine.prefix_lru_pages, 0);
+        let c = ServingConfig::load(
+            None,
+            &[
+                "cache.prefix_cache=false".into(),
+                "cache.prefix_lru_pages=12".into(),
+                "server.routing=\"prefix-affinity\"".into(),
+            ],
+        )
+        .unwrap();
+        assert!(!c.engine.prefix_cache);
+        assert_eq!(c.engine.prefix_lru_pages, 12);
+        assert_eq!(c.server.routing, RoutingPolicy::PrefixAffinity);
     }
 
     #[test]

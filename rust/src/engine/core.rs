@@ -139,12 +139,15 @@ impl<'rt> Engine<'rt> {
             buckets: tree_buckets.clone(),
             ..cfg.planner.clone()
         };
-        let kv = KvCache::with_pages(
+        let mut kv = KvCache::with_pages(
             KvGeometry::of(&model),
             cfg.max_batch,
             cfg.page_size,
             cfg.cache_pages,
         );
+        if cfg.prefix_cache {
+            kv.enable_prefix_cache(cfg.prefix_lru_pages);
+        }
         if kv.guaranteed_lanes() == 0 {
             bail!(
                 "cache.max_pages {} cannot hold one max_seq sequence \
@@ -418,7 +421,26 @@ impl<'rt> Engine<'rt> {
         // publishes the pages actually still held.
         self.metrics.kv_pages_in_use = self.kv.pages_in_use() as u64;
         self.metrics.kv_page_capacity = self.kv.page_capacity() as u64;
+        self.metrics.kv_prefix_evictions = self.kv.prefix_evictions();
         Ok(true)
+    }
+
+    /// Cumulative digests of the cached prefix chains this engine holds
+    /// (what the replica worker publishes for prefix-affinity routing).
+    pub fn prefix_digests(&self) -> Vec<u64> {
+        self.kv.prefix_digests()
+    }
+
+    /// Prefix-index content version (publishers re-derive the digest
+    /// set only when this changes).
+    pub fn prefix_version(&self) -> u64 {
+        self.kv.prefix_version()
+    }
+
+    /// Effective KV page size (post-clamp): the block granularity
+    /// prefix-affinity digests must be computed at.
+    pub fn kv_page_size(&self) -> usize {
+        self.kv.page_size()
     }
 
     /// KV pages currently assigned to active requests.
@@ -565,14 +587,168 @@ impl<'rt> Engine<'rt> {
         }
     }
 
+    /// Run the decode entry over positions `[from, to)` of a slot's
+    /// committed token sequence, committing each KV column, and return
+    /// the tip logits + medusa rows after the final position.  The
+    /// backend is a pure function of the committed prefix, so this
+    /// reproduces exactly what a full prefill of `tokens[..to]` would
+    /// produce — the prefix-reuse byte-identity invariant leans on it.
+    /// Returns empty rows when the range is empty.
+    fn replay_decode(
+        &mut self,
+        slot: usize,
+        tokens: &[u32],
+        from: usize,
+        to: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let v = self.model.vocab;
+        let m_heads = self.model.n_medusa;
+        let layers = self.model.n_layers;
+        let b = self.rt.manifest.batch_bucket(1);
+        let lanes = vec![slot; b];
+        let mut logits_row: Vec<f32> = Vec::new();
+        let mut medusa_row: Vec<f32> = Vec::new();
+        for pos in from..to {
+            let tok = tokens[pos];
+            let kv_t = self.kv.batch_tensor(&lanes);
+            let outs = self
+                .rt
+                .run(
+                    &self.cfg.size,
+                    Entry::Decode,
+                    None,
+                    b,
+                    None,
+                    &[
+                        HostTensor::i32(vec![b], vec![tok as i32; b]),
+                        HostTensor::i32(vec![b], vec![pos as i32; b]),
+                        kv_t,
+                    ],
+                )
+                .context("prefix replay")?;
+            self.kv
+                .commit_columns(
+                    slot,
+                    outs[2].as_f32(),
+                    (layers, b, 1),
+                    0,
+                    0,
+                    &[(0, pos)],
+                )
+                .context("prefix replay commit")?;
+            logits_row = outs[0].f32_chunk(0, v).to_vec();
+            medusa_row = outs[1].f32_chunk(0, m_heads * v).to_vec();
+        }
+        Ok((logits_row, medusa_row))
+    }
+
+    /// Uncached-tail budget for taking a cached-prefix path: the tail is
+    /// recomputed through per-token decode replay, so a *shallow* hit on
+    /// a long prompt must not trade one batched prefill call for a long
+    /// serial replay.  Two pages bounds the replay at a couple of decode
+    /// calls per page of reuse while still covering the common
+    /// shared-header + short-unique-tail shape.
+    fn replay_cap(&self) -> usize {
+        2 * self.kv.page_size()
+    }
+
+    /// Shared-prefix fast path for one fresh request: adopt the longest
+    /// cached page chain matching its (kept, pre-encoded) prompt and run
+    /// the model only on the uncached tail.  Returns the spec back
+    /// untouched when the cache holds nothing for it (or the hit is too
+    /// shallow to beat one batched prefill call) — the caller
+    /// batch-prefills those.
+    fn cached_prefill(
+        &mut self,
+        spec: RequestSpec,
+        toks: &[u32],
+    ) -> Result<Option<RequestSpec>> {
+        let plen = toks.len().min(self.model.max_prompt);
+        if plen == 0 {
+            return Ok(Some(spec));
+        }
+        let kept = &toks[toks.len() - plen..];
+        // Always leave >= 1 tail position to recompute: the tip
+        // logits/medusa come from running the model at the final prompt
+        // position (full pages past that simply stay in the index).
+        let (pages, h) = self.kv.prefix_lookup(kept, plen - 1);
+        if h == 0 || plen - h > self.replay_cap() {
+            self.kv.release_prefix(pages);
+            return Ok(Some(spec));
+        }
+        let started = self.now();
+        let slot = match self.kv.acquire() {
+            Ok(s) => s,
+            Err(e) => {
+                self.kv.release_prefix(pages);
+                return Err(e.context("kv slots (cached prefill)"));
+            }
+        };
+        self.kv.adopt_prefix(slot, pages);
+        let (logits_row, medusa_row) =
+            self.replay_decode(slot, kept, h, plen)?;
+        self.metrics.kv_prefix_hit_tokens += h as u64;
+        self.metrics.kv_prefix_miss_tokens += (plen - h) as u64;
+        self.kv.freeze_prefix(slot, kept);
+        let pending_root = argmax(&logits_row) as u32;
+        let mut req = ReqState {
+            id: spec.id,
+            prompt: spec.prompt,
+            prompt_len: plen,
+            tokens: kept.to_vec(),
+            slot,
+            pending_root,
+            medusa_rows: medusa_row,
+            ledger: VecDeque::new(),
+            tracker: self.tracker.clone(),
+            max_new_tokens: spec.max_new_tokens,
+            steps: 0,
+            arrival: spec.arrival,
+            started,
+            done: false,
+            finish: None,
+            emitted: 0,
+            first_token: None,
+            last_token_at: started,
+            admit_step: self.metrics.steps,
+            preemptions: 0,
+        };
+        req.remember_prediction(self.model.vocab);
+        self.metrics.queue_delay.record(started - req.arrival);
+        self.metrics.prefills += 1;
+        self.active.push(req);
+        Ok(None)
+    }
+
     /// Batched prefill of newly admitted requests.
     fn prefill(&mut self, specs: Vec<RequestSpec>) -> Result<()> {
         use super::inputs::pack_prompts;
-        let started = self.now();
-        let prompts: Vec<Vec<u32>> = specs
+        // Encode once; both the cached fast path and the batched cold
+        // path work from the same token buffers.
+        let mut specs = specs;
+        let mut prompts: Vec<Vec<u32>> = specs
             .iter()
             .map(|s| self.tokenizer.encode(&s.prompt))
             .collect();
+        // Shared-prefix fast path first: requests whose prompt head is
+        // cached adopt pages and replay only the tail; the rest fall
+        // through to the batched prefill below.
+        if self.kv.prefix_enabled() {
+            let mut cold = Vec::with_capacity(specs.len());
+            let mut cold_toks = Vec::with_capacity(prompts.len());
+            for (spec, toks) in specs.into_iter().zip(prompts) {
+                if let Some(miss) = self.cached_prefill(spec, &toks)? {
+                    cold.push(miss);
+                    cold_toks.push(toks);
+                }
+            }
+            if cold.is_empty() {
+                return Ok(());
+            }
+            specs = cold;
+            prompts = cold_toks;
+        }
+        let started = self.now();
         let b_real = specs.len();
         let b = self.rt.manifest.batch_bucket(b_real);
         // Pad the prompt list by repeating the first prompt (dummy lanes).
@@ -606,6 +782,13 @@ impl<'rt> Engine<'rt> {
                 lane,
                 &pairs,
             ).context("prefill kv commit")?;
+            // These prompt tokens were computed, not served from the
+            // prefix cache; freeze their full pages for later traffic.
+            self.metrics.kv_prefix_miss_tokens += plen as u64;
+            self.kv.freeze_prefix(
+                slot,
+                &prompts[lane][prompts[lane].len() - plen..],
+            );
             let row = logits.f32_chunk(lane * v, v);
             let pending_root = argmax(row) as u32;
             let medusa_rows =
@@ -643,13 +826,14 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    /// Re-admit a preempted request: re-prefill its committed prefix
-    /// (kept prompt + generated tokens) and recompute the tip state
-    /// (pending root + medusa rows).  The first `max_prompt` tokens go
-    /// through the prefill entry in one shot; any overflow is replayed
-    /// token-by-token through the decode entry, so arbitrarily long
-    /// committed prefixes resume exactly — the backend is a pure function
-    /// of the committed sequence, which is what makes resumed output
+    /// Re-admit a preempted request: re-establish KV for its committed
+    /// prefix (kept prompt + generated tokens) and recompute the tip
+    /// state (pending root + medusa rows).  With the prefix cache on,
+    /// the longest cached page chain is adopted and only the uncached
+    /// tail is recomputed; cold resumes push the first `max_prompt`
+    /// tokens through the prefill entry in one shot and decode-replay
+    /// any overflow.  Either way the backend is a pure function of the
+    /// committed sequence, which is what makes resumed output
     /// byte-identical to an uninterrupted run.
     fn resume_prefill(&mut self, spec: RequestSpec) -> Result<()> {
         let started = self.now();
@@ -661,77 +845,80 @@ impl<'rt> Engine<'rt> {
         let p_bucket = self.model.max_prompt;
         let total = r.tokens.len();
         let p_cap = p_bucket.min(total);
-        let b = self.rt.manifest.batch_bucket(1);
-        // One-shot prefill of the prefix head (dummy lanes repeat it).
-        let mut toks = vec![0i32; b * p_bucket];
-        let mut lens = vec![0i32; b];
-        for lane in 0..b {
-            for (j, &t) in r.tokens[..p_cap].iter().enumerate() {
-                toks[lane * p_bucket + j] = t as i32;
+        // Shared-prefix fast path: adopt the longest cached chain over
+        // the committed prefix, leaving >= 1 tail position to recompute
+        // so the tip logits/medusa are always produced.  Taken when the
+        // uncached tail is short, or when the chain covers at least what
+        // the one-shot prefill head would (the cold path serially
+        // replays everything past `max_prompt` anyway, so the cached
+        // path is never the slower one).
+        let (pages, h) =
+            self.kv.prefix_lookup(&r.tokens, total.saturating_sub(1));
+        let use_cache =
+            h > 0 && (total - h <= self.replay_cap() || h >= p_cap);
+        let (logits_row, medusa_row) = if use_cache {
+            self.kv.adopt_prefix(slot, pages);
+            self.metrics.kv_prefix_hit_tokens += h as u64;
+            self.metrics.kv_prefix_miss_tokens += (total - h) as u64;
+            self.metrics.reprefill_tokens += (total - h) as u64;
+            self.replay_decode(slot, &r.tokens, h, total)
+                .context("resume replay (cached)")?
+        } else {
+            // Cold resume: one-shot prefill of the prefix head (dummy
+            // lanes repeat it), then decode-replay of the overflow.  A
+            // rejected shallow hit releases its retained chain.
+            self.kv.release_prefix(pages);
+            let b = self.rt.manifest.batch_bucket(1);
+            let mut toks = vec![0i32; b * p_bucket];
+            let mut lens = vec![0i32; b];
+            for lane in 0..b {
+                for (j, &t) in r.tokens[..p_cap].iter().enumerate() {
+                    toks[lane * p_bucket + j] = t as i32;
+                }
+                lens[lane] = p_cap as i32;
             }
-            lens[lane] = p_cap as i32;
-        }
-        let outs = self
-            .rt
-            .run(
-                &self.cfg.size,
-                Entry::Prefill,
-                None,
-                b,
-                None,
-                &[
-                    HostTensor::i32(vec![b, p_bucket], toks),
-                    HostTensor::i32(vec![b], lens),
-                ],
-            )
-            .context("resume prefill")?;
-        let pairs: Vec<(usize, usize)> = (0..p_cap).map(|j| (j, j)).collect();
-        self.kv
-            .commit_columns(
-                slot,
-                outs[2].as_f32(),
-                (layers, b, p_bucket),
-                0,
-                0,
-                &pairs,
-            )
-            .context("resume kv commit")?;
-        let mut logits_row: Vec<f32> = outs[0].f32_chunk(0, v).to_vec();
-        let mut medusa_row: Vec<f32> =
-            outs[1].f32_chunk(0, m_heads * v).to_vec();
-        // Decode-replay the overflow (committed prefix past max_prompt).
-        let replay_lanes = vec![slot; b];
-        for pos in p_cap..total {
-            let tok = r.tokens[pos];
-            let kv_t = self.kv.batch_tensor(&replay_lanes);
             let outs = self
                 .rt
                 .run(
                     &self.cfg.size,
-                    Entry::Decode,
+                    Entry::Prefill,
                     None,
                     b,
                     None,
                     &[
-                        HostTensor::i32(vec![b], vec![tok as i32; b]),
-                        HostTensor::i32(vec![b], vec![pos as i32; b]),
-                        kv_t,
+                        HostTensor::i32(vec![b, p_bucket], toks),
+                        HostTensor::i32(vec![b], lens),
                     ],
                 )
-                .context("resume replay")?;
+                .context("resume prefill")?;
+            let pairs: Vec<(usize, usize)> =
+                (0..p_cap).map(|j| (j, j)).collect();
             self.kv
                 .commit_columns(
                     slot,
                     outs[2].as_f32(),
-                    (layers, b, 1),
+                    (layers, b, p_bucket),
                     0,
                     0,
-                    &[(0, pos)],
+                    &pairs,
                 )
-                .context("resume replay commit")?;
-            logits_row = outs[0].f32_chunk(0, v).to_vec();
-            medusa_row = outs[1].f32_chunk(0, m_heads * v).to_vec();
-        }
+                .context("resume kv commit")?;
+            self.metrics.kv_prefix_miss_tokens += total as u64;
+            self.metrics.reprefill_tokens += total as u64;
+            if total > p_cap {
+                // Decode-replay the committed prefix past max_prompt.
+                self.replay_decode(slot, &r.tokens, p_cap, total)
+                    .context("resume replay")?
+            } else {
+                (
+                    outs[0].f32_chunk(0, v).to_vec(),
+                    outs[1].f32_chunk(0, m_heads * v).to_vec(),
+                )
+            }
+        };
+        // Donate the re-established prefix so the next resume (or a
+        // same-prompt arrival) skips this work entirely.
+        self.kv.freeze_prefix(slot, &r.tokens);
         let pending_root = argmax(&logits_row) as u32;
         let mut req = ReqState {
             id: spec.id,
@@ -757,7 +944,6 @@ impl<'rt> Engine<'rt> {
         };
         req.remember_prediction(v);
         self.metrics.resume_prefills += 1;
-        self.metrics.reprefill_tokens += total as u64;
         self.active.push(req);
         Ok(())
     }

@@ -137,6 +137,14 @@ pub struct EngineConfig {
     /// (`cache.watermark_pages`; 0 = auto: one worst-case step of one
     /// lane).
     pub watermark_pages: usize,
+    /// Cross-request shared-prefix KV reuse (`cache.prefix_cache`):
+    /// prefill and preempt-resume adopt cached page chains for repeated
+    /// prompt/committed prefixes instead of recomputing them.  A pure
+    /// optimization — greedy output is byte-identical either way.
+    pub prefix_cache: bool,
+    /// Max pages the prefix index may pin (`cache.prefix_lru_pages`;
+    /// 0 = unbounded — pool pressure still evicts LRU entries on demand).
+    pub prefix_lru_pages: usize,
 }
 
 impl EngineConfig {
@@ -160,6 +168,8 @@ impl EngineConfig {
             cache_pages: 0,
             admission: AdmissionMode::Reserve,
             watermark_pages: 0,
+            prefix_cache: true,
+            prefix_lru_pages: 0,
         }
     }
 

@@ -76,6 +76,10 @@ impl<'rt> Engine<'rt> {
             req.steps += 1;
             self.metrics.tokens_generated += 1;
             self.metrics.accept_len.record(1.0);
+            // Freeze any newly completed page into the prefix index so
+            // identical prefixes (e.g. a preempt-resume of this very
+            // request) can adopt it.
+            self.kv.freeze_prefix(req.slot, &req.tokens);
             self.check_done(i);
             self.emit_progress(i, vec![committed]);
         }

@@ -457,6 +457,10 @@ impl<'rt> Engine<'rt> {
                 req.steps += 1;
                 req.remember_prediction(v);
             }
+            // Both split-layer commits for these positions are done:
+            // freeze any newly completed page into the prefix index.
+            self.kv
+                .freeze_prefix(self.active[i].slot, &self.active[i].tokens);
             // Acceptance-tracker updates from resolved ledger entries:
             // the request-local tracker drives this lane's future
             // allocation; the engine-global one seeds new admissions.

@@ -21,16 +21,19 @@
 
 pub mod assembler;
 pub mod pages;
+pub mod prefix;
 pub mod slots;
 
 pub use assembler::{AssemblyStats, BatchAssembler};
 pub use pages::PagePool;
+pub use prefix::{block_digests, PrefixIndex};
 pub use slots::SlotAllocator;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::manifest::ModelMeta;
 use crate::runtime::literal::HostTensor;
+use crate::tokenizer::Token;
 
 /// Default positions per page (overridable via `cache.page_size`).
 pub const DEFAULT_PAGE_SIZE: usize = 64;
@@ -89,6 +92,10 @@ struct PagedSlot {
     /// write *below* it invalidates synced state and bumps
     /// `trunc_epoch`.
     synced_len: usize,
+    /// Leading pages already donated to the prefix index (adopted pages
+    /// count from the start), so repeated freeze calls are O(1) until a
+    /// new page boundary is crossed.
+    frozen_pages: usize,
 }
 
 /// The cache: a fixed pool of slots over a shared page pool.
@@ -99,6 +106,9 @@ pub struct KvCache {
     pool: PagePool,
     slots: Vec<PagedSlot>,
     alloc: SlotAllocator,
+    /// Cross-request shared-prefix index (enabled by
+    /// [`KvCache::enable_prefix_cache`]); holds its own page references.
+    prefix: Option<PrefixIndex>,
     /// Reads of never-committed positions resolve here (always zero).
     zero_col: Vec<f32>,
 }
@@ -133,8 +143,36 @@ impl KvCache {
             pool: PagePool::new(page_elems.max(1), max_pages),
             slots: (0..capacity).map(|_| PagedSlot::default()).collect(),
             alloc: SlotAllocator::new(capacity),
+            prefix: None,
             zero_col: vec![0.0; geom.col()],
         }
+    }
+
+    /// Turn on the shared-prefix index (`cache.prefix_cache`).
+    /// `lru_pages` caps the pages the index may pin (0 = unbounded; pool
+    /// pressure still evicts on demand, so admission math stays correct).
+    pub fn enable_prefix_cache(&mut self, lru_pages: usize) {
+        self.prefix = Some(PrefixIndex::new(self.page_size, lru_pages));
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Pages currently pinned by the prefix index.
+    pub fn prefix_pages(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |ix| ix.len())
+    }
+
+    /// LRU evictions the prefix index has performed so far.
+    pub fn prefix_evictions(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, |ix| ix.evictions())
+    }
+
+    /// Cumulative prefix digests the replica publishes for
+    /// prefix-affinity routing.
+    pub fn prefix_digests(&self) -> Vec<u64> {
+        self.prefix.as_ref().map_or_else(Vec::new, |ix| ix.digests())
     }
 
     pub fn geometry(&self) -> KvGeometry {
@@ -153,9 +191,12 @@ impl KvCache {
         self.page_size
     }
 
-    /// Pages currently assigned to live slots.
+    /// Pages currently assigned to live slots.  Pages pinned *only* by
+    /// the prefix index are excluded: they are reclaimed on demand under
+    /// pressure, so admission, preemption, and routing treat them as
+    /// headroom, not occupancy.
     pub fn pages_in_use(&self) -> usize {
-        self.pool.in_use()
+        self.pool.in_use() - self.reclaimable_pages()
     }
 
     /// Total pages the pool may hand out.
@@ -163,9 +204,23 @@ impl KvCache {
         self.pool.max_pages()
     }
 
-    /// Pages still available for new columns.
+    /// Index-only pages the pool could reclaim on demand (O(1): the
+    /// pool maintains the count at every refcount transition).
+    fn reclaimable_pages(&self) -> usize {
+        self.pool.index_exclusive()
+    }
+
+    /// Monotone prefix-index content version (see
+    /// [`PrefixIndex::version`]); publishers skip re-deriving digest
+    /// sets while it is unchanged.
+    pub fn prefix_version(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, |ix| ix.version())
+    }
+
+    /// Pages still available for new columns (free-list + never-grown
+    /// headroom + reclaimable prefix-cache pages).
     pub fn free_pages(&self) -> usize {
-        self.pool.free_count()
+        self.pool.free_count() + self.reclaimable_pages()
     }
 
     /// Resident f32 elements in the page pool (grows with actual usage).
@@ -208,6 +263,7 @@ impl KvCache {
                 debug_assert!(slot.pages.is_empty());
                 slot.seq_len = 0;
                 slot.synced_len = 0;
+                slot.frozen_pages = 0;
                 slot.generation += 1;
                 Ok(s)
             }
@@ -215,13 +271,74 @@ impl KvCache {
         }
     }
 
-    /// Release a finished request's slot; every page returns to the pool.
+    /// Longest cached prefix of `tokens` (capped at `max_len` tokens,
+    /// matched at page granularity).  Returns the retained page chain and
+    /// the matched token count; hand the pages to [`adopt_prefix`]
+    /// (KvCache::adopt_prefix) or release them.
+    pub fn prefix_lookup(
+        &mut self,
+        tokens: &[Token],
+        max_len: usize,
+    ) -> (Vec<u32>, usize) {
+        match self.prefix.as_mut() {
+            Some(ix) => {
+                let pages = ix.lookup(tokens, max_len, &mut self.pool);
+                let matched = pages.len() * self.page_size;
+                (pages, matched)
+            }
+            None => (Vec::new(), 0),
+        }
+    }
+
+    /// Release a retained lookup chain without adopting it.
+    pub fn release_prefix(&mut self, pages: Vec<u32>) {
+        for p in pages {
+            self.pool.release(p);
+        }
+    }
+
+    /// Attach a retained cached-prefix chain to a freshly acquired slot:
+    /// the slot starts with `pages.len() × page_size` committed positions
+    /// it never computed.  The pages are shared (the index and possibly
+    /// other slots hold them); any later write into them copies first.
+    pub fn adopt_prefix(&mut self, slot: usize, pages: Vec<u32>) {
+        let s = &mut self.slots[slot];
+        assert!(s.pages.is_empty(), "adopt into a fresh slot only");
+        assert_eq!(s.seq_len, 0);
+        s.seq_len = pages.len() * self.page_size;
+        s.frozen_pages = pages.len();
+        s.pages = pages;
+    }
+
+    /// Donate the slot's full committed pages (positions `[0, seq_len)`
+    /// covered by `tokens`) to the prefix index so later requests can
+    /// reuse them.  Incremental: pages donated before are skipped.  A
+    /// no-op unless the prefix cache is enabled.
+    pub fn freeze_prefix(&mut self, slot: usize, tokens: &[Token]) {
+        let Some(ix) = self.prefix.as_mut() else { return };
+        let s = &self.slots[slot];
+        let full = (s.seq_len.min(tokens.len())) / self.page_size;
+        if full <= s.frozen_pages {
+            return;
+        }
+        ix.insert_chain(
+            &tokens[..full * self.page_size],
+            &s.pages[..full],
+            &mut self.pool,
+        );
+        self.slots[slot].frozen_pages = full;
+    }
+
+    /// Release a finished request's slot; the slot's references return to
+    /// the pool (pages also frozen into the prefix index stay cached
+    /// until evicted).
     pub fn release(&mut self, slot: usize) {
         let pages = std::mem::take(&mut self.slots[slot].pages);
         for p in pages {
             self.pool.release(p);
         }
         self.slots[slot].seq_len = 0;
+        self.slots[slot].frozen_pages = 0;
         self.alloc.release(slot);
     }
 
@@ -236,19 +353,52 @@ impl KvCache {
         self.slots[slot].pages.len()
     }
 
-    /// Make sure `slot` owns pages covering positions `[0, ..=pos]`.
-    fn ensure_page(&mut self, slot: usize, pos: usize) -> Result<()> {
-        let page_idx = pos / self.page_size;
-        while self.slots[slot].pages.len() <= page_idx {
-            let p = self.pool.alloc().ok_or_else(|| {
-                anyhow!(
+    /// Allocate one page, evicting prefix-cache entries under pressure:
+    /// when the free list is empty, LRU index-only pages are reclaimed
+    /// one at a time.  This is what keeps the reserve-admission
+    /// worst-case math (`guaranteed_lanes`) correct with the cache on —
+    /// the index can only ever *delay* an allocation, never defeat it.
+    fn alloc_page(&mut self) -> Result<u32> {
+        loop {
+            if let Some(p) = self.pool.alloc() {
+                return Ok(p);
+            }
+            let evicted = match self.prefix.as_mut() {
+                Some(ix) => ix.evict_reclaimable(&mut self.pool),
+                None => false,
+            };
+            if !evicted {
+                bail!(
                     "kv page pool exhausted ({} pages × {} positions; \
                      raise cache.max_pages or lower concurrency)",
                     self.pool.max_pages(),
                     self.page_size
-                )
-            })?;
+                );
+            }
+        }
+    }
+
+    /// Make sure `slot` owns pages covering positions `[0, ..=pos]`.
+    fn ensure_page(&mut self, slot: usize, pos: usize) -> Result<()> {
+        let page_idx = pos / self.page_size;
+        while self.slots[slot].pages.len() <= page_idx {
+            let p = self.alloc_page()?;
             self.slots[slot].pages.push(p);
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write: make sure the page holding `pos` is exclusively
+    /// owned by `slot` before a write lands in it.  Values are copied
+    /// bit-for-bit, so synced assembler state stays valid.
+    fn make_unique(&mut self, slot: usize, pos: usize) -> Result<()> {
+        let idx = pos / self.page_size;
+        let p = self.slots[slot].pages[idx];
+        if self.pool.refcount(p) > 1 {
+            let np = self.alloc_page()?;
+            self.pool.copy_page(p, np);
+            self.pool.release(p);
+            self.slots[slot].pages[idx] = np;
         }
         Ok(())
     }
@@ -363,6 +513,9 @@ impl KvCache {
             debug_assert!(j < t);
             assert!(pos < g.max_seq, "commit at {pos} past max_seq");
             self.ensure_page(slot, pos)?;
+            // A write into a page shared with the prefix index (or
+            // another slot) copies it first; frozen pages stay immutable.
+            self.make_unique(slot, pos)?;
             max_pos = Some(max_pos.map_or(pos, |m| m.max(pos)));
             min_pos = min_pos.min(pos);
         }
@@ -425,6 +578,7 @@ impl KvCache {
         }
         s.seq_len = seq_len;
         s.synced_len = s.synced_len.min(seq_len);
+        s.frozen_pages = s.frozen_pages.min(keep);
         while s.pages.len() > keep {
             let p = s.pages.pop().unwrap();
             self.pool.release(p);
@@ -628,6 +782,136 @@ mod tests {
         assert_eq!(c.pages_in_use(), 2);
         c.release(s1);
         assert_eq!(c.pages_in_use(), 0);
+    }
+}
+
+#[cfg(test)]
+mod prefix_cache_tests {
+    use super::*;
+
+    fn geom() -> KvGeometry {
+        KvGeometry { layers: 2, max_seq: 16, heads: 1, head_dim: 2 }
+    }
+
+    fn block(l_sub: usize, b: usize, t: usize, col: usize) -> Vec<f32> {
+        (0..l_sub * 2 * b * t * col).map(|i| i as f32 + 1.0).collect()
+    }
+
+    /// Commit `n` positions of `tokens`-coded columns into `slot`.
+    fn commit_n(c: &mut KvCache, slot: usize, n: usize) {
+        let g = c.geometry();
+        let blk = block(g.layers, 1, n, g.col());
+        let pairs: Vec<(usize, usize)> = (0..n).map(|j| (j, j)).collect();
+        c.commit_columns(slot, &blk, (g.layers, 1, n), 0, 0, &pairs)
+            .unwrap();
+    }
+
+    #[test]
+    fn freeze_then_adopt_shares_pages_and_values() {
+        let mut c = KvCache::with_pages(geom(), 2, 4, 0);
+        c.enable_prefix_cache(0);
+        let toks: Vec<Token> = (0..8).collect();
+        let s0 = c.acquire().unwrap();
+        commit_n(&mut c, s0, 8); // 2 full pages
+        c.freeze_prefix(s0, &toks);
+        assert_eq!(c.prefix_pages(), 2);
+        // Second request with the same leading tokens adopts both pages.
+        let s1 = c.acquire().unwrap();
+        let (pages, matched) = c.prefix_lookup(&toks, toks.len());
+        assert_eq!(matched, 8);
+        assert_eq!(pages.len(), 2);
+        c.adopt_prefix(s1, pages);
+        assert_eq!(c.seq_len(s1), 8);
+        // Adopted columns read back the donor's values byte-for-byte.
+        for pos in 0..8 {
+            assert_eq!(
+                c.read_column(s1, 1, 1, pos),
+                c.read_column(s0, 1, 1, pos)
+            );
+        }
+        // No extra memory: both slots + index share the same 2 pages.
+        assert_eq!(c.resident_elements(), 2 * c.pool.page_elems());
+    }
+
+    #[test]
+    fn cow_on_write_to_shared_page_leaves_the_frozen_copy_intact() {
+        let mut c = KvCache::with_pages(geom(), 2, 4, 0);
+        c.enable_prefix_cache(0);
+        let toks: Vec<Token> = (0..4).collect();
+        let s0 = c.acquire().unwrap();
+        commit_n(&mut c, s0, 4);
+        c.freeze_prefix(s0, &toks);
+        let s1 = c.acquire().unwrap();
+        let (pages, _) = c.prefix_lookup(&toks, 4);
+        let shared = pages[0];
+        c.adopt_prefix(s1, pages);
+        let before: Vec<f32> = c.read_column(s0, 0, 0, 1).to_vec();
+        // s1 truncates into the shared page and rewrites position 1.
+        c.truncate(s1, 1);
+        let g = c.geometry();
+        let blk = vec![-5.0; g.layers * 2 * 1 * 1 * g.col()];
+        c.commit_columns(s1, &blk, (g.layers, 1, 1), 0, 0, &[(0, 1)])
+            .unwrap();
+        assert_eq!(c.read_column(s1, 0, 0, 1), &blk[..g.col()]);
+        assert_eq!(
+            c.read_column(s0, 0, 0, 1),
+            &before[..],
+            "donor's frozen page must be untouched (CoW)"
+        );
+        assert_eq!(c.pool.refcount(shared), 2, "s1 dropped its reference");
+    }
+
+    #[test]
+    fn pressure_eviction_reclaims_index_only_pages() {
+        // Pool of 4 pages; a retired request leaves 2 cached pages; a new
+        // request needing 4 pages must succeed by evicting them.
+        let mut c = KvCache::with_pages(geom(), 2, 4, 4);
+        c.enable_prefix_cache(0);
+        let toks: Vec<Token> = (0..8).collect();
+        let s0 = c.acquire().unwrap();
+        commit_n(&mut c, s0, 8);
+        c.freeze_prefix(s0, &toks);
+        c.release(s0);
+        assert_eq!(c.prefix_pages(), 2);
+        assert_eq!(c.pages_in_use(), 0, "index-only pages are headroom");
+        assert_eq!(c.free_pages(), 4);
+        let s1 = c.acquire().unwrap();
+        let g = c.geometry();
+        // 16 divergent positions → 4 pages → forces both evictions.
+        let blk: Vec<f32> =
+            (0..g.layers * 2 * 16 * g.col()).map(|_| 9.0).collect();
+        let pairs: Vec<(usize, usize)> = (0..16).map(|j| (j, j)).collect();
+        c.commit_columns(s1, &blk, (g.layers, 1, 16), 0, 0, &pairs)
+            .unwrap();
+        assert_eq!(c.prefix_evictions(), 2);
+        assert_eq!(c.prefix_pages(), 0);
+        c.release(s1);
+        assert_eq!(c.pages_in_use(), 0);
+        assert_eq!(c.free_pages(), 4, "pool balances after drain");
+    }
+
+    #[test]
+    fn lru_cap_bounds_index_pages() {
+        let mut c = KvCache::with_pages(geom(), 2, 4, 0);
+        c.enable_prefix_cache(1);
+        let s0 = c.acquire().unwrap();
+        commit_n(&mut c, s0, 8);
+        c.freeze_prefix(s0, &(0..8).collect::<Vec<Token>>());
+        assert_eq!(c.prefix_pages(), 1, "cap evicts down to prefix_lru_pages");
+        assert!(c.prefix_evictions() >= 1);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut c = KvCache::with_pages(geom(), 1, 4, 0);
+        let s = c.acquire().unwrap();
+        commit_n(&mut c, s, 8);
+        c.freeze_prefix(s, &(0..8).collect::<Vec<Token>>());
+        assert_eq!(c.prefix_pages(), 0);
+        let (pages, matched) = c.prefix_lookup(&(0..8).collect::<Vec<_>>(), 8);
+        assert!(pages.is_empty());
+        assert_eq!(matched, 0);
+        assert!(c.prefix_digests().is_empty());
     }
 }
 

@@ -6,6 +6,14 @@
 //! through a LIFO free list; the backing store grows lazily (one page at a
 //! time, up to `max_pages`), so resident memory tracks the columns actually
 //! committed instead of `slots × max_seq`.
+//!
+//! Pages are **refcounted** so the prefix cache can share frozen prompt
+//! pages across requests: [`PagePool::alloc`] hands out a page at count 1,
+//! [`PagePool::retain`] adds an owner, and [`PagePool::release`] drops one
+//! — the page returns to the free list only when the last owner lets go.
+//! Shared pages are immutable by convention; a writer that holds a page
+//! with other owners must copy it first ([`PagePool::copy_page`] is the
+//! copy-on-write primitive the [`KvCache`](super::KvCache) uses).
 
 #[derive(Debug)]
 pub struct PagePool {
@@ -15,8 +23,15 @@ pub struct PagePool {
     data: Vec<f32>,
     /// Recycled page ids (LIFO for locality).
     free: Vec<u32>,
-    /// Per-allocated-page in-use flag (double-free / leak accounting).
-    in_use: Vec<bool>,
+    /// Per-allocated-page owner count (0 = on the free list).
+    refcount: Vec<u32>,
+    /// Per-page "the prefix index holds a reference" flag (the index
+    /// keeps at most one reference per page).
+    index_held: Vec<bool>,
+    /// Pages with `index_held` and refcount exactly 1 — reclaimable on
+    /// demand.  Maintained incrementally so the serving hot path's
+    /// free-page math is O(1) instead of rescanning the index.
+    index_exclusive: usize,
 }
 
 impl PagePool {
@@ -27,34 +42,112 @@ impl PagePool {
             max_pages,
             data: Vec::new(),
             free: Vec::new(),
-            in_use: Vec::new(),
+            refcount: Vec::new(),
+            index_held: Vec::new(),
+            index_exclusive: 0,
         }
     }
 
-    /// Hand out a zeroed page, recycling before growing.  `None` when the
-    /// pool is at `max_pages` with nothing free.
+    /// Hand out a zeroed page (refcount 1), recycling before growing.
+    /// `None` when the pool is at `max_pages` with nothing free.
     pub fn alloc(&mut self) -> Option<u32> {
         if let Some(p) = self.free.pop() {
-            debug_assert!(!self.in_use[p as usize]);
-            self.in_use[p as usize] = true;
+            debug_assert_eq!(self.refcount[p as usize], 0);
+            debug_assert!(!self.index_held[p as usize]);
+            self.refcount[p as usize] = 1;
             let off = p as usize * self.page_elems;
             self.data[off..off + self.page_elems].fill(0.0);
             return Some(p);
         }
-        let grown = self.in_use.len();
+        let grown = self.refcount.len();
         if grown >= self.max_pages {
             return None;
         }
         self.data.resize(self.data.len() + self.page_elems, 0.0);
-        self.in_use.push(true);
+        self.refcount.push(1);
+        self.index_held.push(false);
         Some(grown as u32)
     }
 
+    /// Add an owner to a live page (prefix-cache sharing).
+    pub fn retain(&mut self, page: u32) {
+        let i = page as usize;
+        assert!(self.refcount[i] > 0, "retain of free page {page}");
+        if self.index_held[i] && self.refcount[i] == 1 {
+            self.index_exclusive -= 1; // a second owner appeared
+        }
+        self.refcount[i] += 1;
+    }
+
+    /// Prefix-index bookkeeping: the index now holds (exactly one of)
+    /// this page's references.  Call after [`retain`](Self::retain).
+    pub fn mark_index_held(&mut self, page: u32) {
+        let i = page as usize;
+        debug_assert!(self.refcount[i] > 0);
+        if !self.index_held[i] {
+            self.index_held[i] = true;
+            if self.refcount[i] == 1 {
+                self.index_exclusive += 1;
+            }
+        }
+    }
+
+    /// Prefix-index bookkeeping: the index is about to drop its
+    /// reference.  Call before the matching [`release`](Self::release).
+    pub fn unmark_index_held(&mut self, page: u32) {
+        let i = page as usize;
+        if self.index_held[i] {
+            self.index_held[i] = false;
+            if self.refcount[i] == 1 {
+                self.index_exclusive -= 1;
+            }
+        }
+    }
+
+    /// Pages held only by the prefix index (refcount 1 + flag): the
+    /// reclaimable-on-demand headroom, maintained in O(1).
+    pub fn index_exclusive(&self) -> usize {
+        self.index_exclusive
+    }
+
+    /// Drop one owner; the page returns to the free list when the last
+    /// owner releases it.  Double-free hardening: releasing a page whose
+    /// count is already zero panics, and in debug builds the free list is
+    /// scanned to catch a page being pushed twice (which would let the
+    /// pool hand the same page to two slots).
     pub fn release(&mut self, page: u32) {
         let i = page as usize;
-        assert!(self.in_use[i], "double release of page {page}");
-        self.in_use[i] = false;
-        self.free.push(page);
+        assert!(self.refcount[i] > 0, "double release of page {page}");
+        debug_assert!(
+            !self.free.contains(&page),
+            "page {page} already on the free list"
+        );
+        self.refcount[i] -= 1;
+        if self.refcount[i] == 1 && self.index_held[i] {
+            self.index_exclusive += 1; // only the index still holds it
+        }
+        if self.refcount[i] == 0 {
+            debug_assert!(
+                !self.index_held[i],
+                "index must unmark before releasing its reference"
+            );
+            self.free.push(page);
+        }
+    }
+
+    /// Current owner count of a page (0 = free).
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    /// Copy `src`'s contents into `dst` (the copy-on-write primitive:
+    /// callers alloc a fresh page, copy the shared one into it, then
+    /// release their reference on the shared one).
+    pub fn copy_page(&mut self, src: u32, dst: u32) {
+        assert_ne!(src, dst, "copy_page onto itself");
+        let (s, d) = (src as usize * self.page_elems,
+                      dst as usize * self.page_elems);
+        self.data.copy_within(s..s + self.page_elems, d);
     }
 
     pub fn page(&self, page: u32) -> &[f32] {
@@ -77,12 +170,13 @@ impl PagePool {
 
     /// Pages whose backing memory has ever been allocated.
     pub fn allocated(&self) -> usize {
-        self.in_use.len()
+        self.refcount.len()
     }
 
-    /// Pages currently assigned to slots.
+    /// Pages currently owned by at least one holder (slots or the prefix
+    /// index).
     pub fn in_use(&self) -> usize {
-        self.in_use.len() - self.free.len()
+        self.refcount.len() - self.free.len()
     }
 
     /// Pages still available (recycled + never-grown headroom).
@@ -143,5 +237,74 @@ mod tests {
         let a = p.alloc().unwrap();
         p.release(a);
         p.release(a);
+    }
+
+    #[test]
+    fn retain_keeps_page_alive_across_releases() {
+        let mut p = PagePool::new(2, 2);
+        let a = p.alloc().unwrap();
+        p.page_mut(a).fill(3.0);
+        p.retain(a);
+        assert_eq!(p.refcount(a), 2);
+        p.release(a);
+        // Still owned: not recycled, contents intact.
+        assert_eq!(p.refcount(a), 1);
+        assert_eq!(p.in_use(), 1);
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b, "shared page must not be recycled");
+        p.release(b);
+        p.release(a);
+        assert_eq!(p.in_use(), 0);
+        // Now it recycles (and is zeroed on the way out).
+        let c = p.alloc().unwrap();
+        assert!(p.page(c).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free page")]
+    fn retain_of_free_page_panics() {
+        let mut p = PagePool::new(1, 1);
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.retain(a);
+    }
+
+    #[test]
+    fn copy_page_is_the_cow_primitive() {
+        let mut p = PagePool::new(3, 2);
+        let shared = p.alloc().unwrap();
+        p.page_mut(shared).copy_from_slice(&[1.0, 2.0, 3.0]);
+        p.retain(shared); // second owner appears
+        // Writer copies before mutating.
+        let own = p.alloc().unwrap();
+        p.copy_page(shared, own);
+        p.release(shared);
+        p.page_mut(own)[0] = 9.0;
+        assert_eq!(p.page(shared), &[1.0, 2.0, 3.0], "original untouched");
+        assert_eq!(p.page(own), &[9.0, 2.0, 3.0]);
+        assert_eq!(p.refcount(shared), 1);
+    }
+
+    /// Regression (satellite): a release that would push a page onto the
+    /// free list twice must be caught — the refcount guard fires first
+    /// (count already zero), so the same page can never be handed to two
+    /// slots.
+    #[test]
+    fn release_cannot_double_insert_into_free_list() {
+        let mut p = PagePool::new(1, 4);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        p.release(a);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.release(a)
+        }));
+        assert!(r.is_err(), "second release must panic");
+        // The free list still holds exactly one copy of `a`: allocating
+        // twice yields a then b's successor, never a twice.
+        let x = p.alloc().unwrap();
+        assert_eq!(x, a);
+        let y = p.alloc().unwrap();
+        assert_ne!(y, a, "page a must not be handed out twice");
+        let _ = b;
     }
 }

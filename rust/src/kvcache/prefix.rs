@@ -1,0 +1,503 @@
+//! Radix prefix index: token-id prefixes → frozen KV page chains.
+//!
+//! The index maps page-granularity token prefixes onto pages frozen out of
+//! live slots, so a new request whose prompt shares a leading block with
+//! earlier traffic (few-shot templates, system prompts, preempt-resume
+//! prefixes) adopts the cached pages instead of recomputing them.  Each
+//! node covers exactly `page_size` tokens and holds one page on which the
+//! index keeps a [`PagePool`] reference; a chain of nodes from the root is
+//! a reusable prefix.  Reuse is a pure optimization: pages are immutable
+//! once frozen (writers copy-on-write), so a cached chain always carries
+//! the byte-identical KV a fresh prefill would produce.
+//!
+//! Eviction is LRU over leaves, in two flavours:
+//! - **pressure** ([`PrefixIndex::evict_reclaimable`]): frees real memory
+//!   by evicting the least-recently-used leaf whose page has no other
+//!   owner.  Chain discipline guarantees progress: a slot holding a page
+//!   holds the whole chain above it, so an index-only subtree is
+//!   index-only all the way down and its leaves free actual pages.
+//! - **cap** ([`PrefixIndex::enforce_cap`]): bounds the number of pages
+//!   the index may pin (`cache.prefix_lru_pages`), evicting any LRU leaf.
+//!
+//! Every node also carries a cumulative FNV digest of its token prefix;
+//! the set of digests is what replicas publish for prefix-affinity
+//! routing (the scheduler hashes a prompt's leading page-aligned blocks
+//! with [`block_digests`] and matches them against the fleet).
+
+use super::pages::PagePool;
+use crate::tokenizer::Token;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// Fold `tokens` into a running FNV-1a digest (start from
+/// [`digest_seed`]).  Token values are folded as `t + 1` so a zero token
+/// still advances the state.
+pub fn digest_extend(mut h: u64, tokens: &[Token]) -> u64 {
+    for &t in tokens {
+        h ^= t as u64 + 1;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Starting state for prefix digests.
+pub fn digest_seed() -> u64 {
+    FNV_OFFSET
+}
+
+/// Cumulative digests of the leading page-aligned blocks of `tokens`:
+/// entry `k` hashes `tokens[..(k+1)·page_size]`.  At most `max_blocks`
+/// entries (the affinity router only needs the head of the prompt).
+pub fn block_digests(
+    tokens: &[Token],
+    page_size: usize,
+    max_blocks: usize,
+) -> Vec<u64> {
+    let blocks = (tokens.len() / page_size.max(1)).min(max_blocks);
+    let mut out = Vec::with_capacity(blocks);
+    let mut h = digest_seed();
+    for k in 0..blocks {
+        h = digest_extend(h, &tokens[k * page_size..(k + 1) * page_size]);
+        out.push(h);
+    }
+    out
+}
+
+#[derive(Debug)]
+struct PrefixNode {
+    /// The `page_size` tokens this node covers (compared exactly; digests
+    /// are a routing hint, never a correctness shortcut).
+    chunk: Vec<Token>,
+    /// Frozen page (the index holds one pool reference on it).
+    page: u32,
+    /// Cumulative digest of the full token prefix ending at this node.
+    digest: u64,
+    parent: Option<usize>,
+    children: Vec<usize>,
+    last_use: u64,
+}
+
+/// See module docs.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    page_size: usize,
+    /// Max pages the index may pin (0 = unbounded; pool pressure still
+    /// evicts).
+    max_pages: usize,
+    nodes: Vec<Option<PrefixNode>>,
+    free_nodes: Vec<usize>,
+    roots: Vec<usize>,
+    live: usize,
+    tick: u64,
+    evictions: u64,
+    /// Bumped on every insert/evict so publishers (digest sets for
+    /// affinity routing) can skip work when nothing changed.
+    version: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(page_size: usize, max_pages: usize) -> Self {
+        assert!(page_size > 0, "page_size must be >= 1");
+        PrefixIndex {
+            page_size,
+            max_pages,
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: Vec::new(),
+            live: 0,
+            tick: 0,
+            evictions: 0,
+            version: 0,
+        }
+    }
+
+    /// Monotone content version: changes iff the cached chain set did.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Cached pages currently pinned by the index.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Total LRU evictions so far (pressure + cap).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    fn node(&self, id: usize) -> &PrefixNode {
+        self.nodes[id].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut PrefixNode {
+        self.nodes[id].as_mut().expect("live node")
+    }
+
+    fn child_matching(
+        &self,
+        children: &[usize],
+        chunk: &[Token],
+    ) -> Option<usize> {
+        children.iter().copied().find(|&c| self.node(c).chunk == chunk)
+    }
+
+    /// Longest cached chain matching `tokens`, capped at `max_len` tokens.
+    /// Every returned page is retained on `pool` for the caller (adopt
+    /// them into a slot or release them).  Matched length in tokens is
+    /// `pages.len() * page_size`.
+    pub fn lookup(
+        &mut self,
+        tokens: &[Token],
+        max_len: usize,
+        pool: &mut PagePool,
+    ) -> Vec<u32> {
+        let ps = self.page_size;
+        let usable = tokens.len().min(max_len) / ps;
+        let mut pages = Vec::new();
+        let mut children: Vec<usize> = self.roots.clone();
+        self.tick += 1;
+        let tick = self.tick;
+        for k in 0..usable {
+            let chunk = &tokens[k * ps..(k + 1) * ps];
+            match self.child_matching(&children, chunk) {
+                Some(id) => {
+                    let n = self.node_mut(id);
+                    n.last_use = tick;
+                    pages.push(n.page);
+                    children = self.node(id).children.clone();
+                }
+                None => break,
+            }
+        }
+        for &p in &pages {
+            pool.retain(p);
+        }
+        pages
+    }
+
+    /// Freeze `pages` (covering `tokens`, one chunk per page) into the
+    /// index.  Chunks already cached are descended without change (the
+    /// donor keeps exclusive ownership of its duplicate page); new chunks
+    /// get a node and the index retains the donated page.  Returns the
+    /// number of newly inserted pages.
+    pub fn insert_chain(
+        &mut self,
+        tokens: &[Token],
+        pages: &[u32],
+        pool: &mut PagePool,
+    ) -> usize {
+        let ps = self.page_size;
+        assert!(tokens.len() >= pages.len() * ps, "chunk/page mismatch");
+        self.tick += 1;
+        let tick = self.tick;
+        let mut inserted = 0usize;
+        let mut parent: Option<usize> = None;
+        let mut digest = digest_seed();
+        for (k, &page) in pages.iter().enumerate() {
+            let chunk = &tokens[k * ps..(k + 1) * ps];
+            digest = digest_extend(digest, chunk);
+            let siblings = match parent {
+                Some(p) => self.node(p).children.clone(),
+                None => self.roots.clone(),
+            };
+            let id = match self.child_matching(&siblings, chunk) {
+                Some(id) => {
+                    self.node_mut(id).last_use = tick;
+                    id
+                }
+                None => {
+                    pool.retain(page);
+                    pool.mark_index_held(page);
+                    self.version += 1;
+                    let node = PrefixNode {
+                        chunk: chunk.to_vec(),
+                        page,
+                        digest,
+                        parent,
+                        children: Vec::new(),
+                        last_use: tick,
+                    };
+                    let id = match self.free_nodes.pop() {
+                        Some(i) => {
+                            self.nodes[i] = Some(node);
+                            i
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    match parent {
+                        Some(p) => self.node_mut(p).children.push(id),
+                        None => self.roots.push(id),
+                    }
+                    self.live += 1;
+                    inserted += 1;
+                    id
+                }
+            };
+            parent = Some(id);
+        }
+        self.enforce_cap(pool);
+        inserted
+    }
+
+    fn remove_node(&mut self, id: usize, pool: &mut PagePool) {
+        let node = self.nodes[id].take().expect("live node");
+        debug_assert!(node.children.is_empty(), "evict leaves only");
+        match node.parent {
+            Some(p) => self.node_mut(p).children.retain(|&c| c != id),
+            None => self.roots.retain(|&c| c != id),
+        }
+        pool.unmark_index_held(node.page);
+        pool.release(node.page);
+        self.free_nodes.push(id);
+        self.live -= 1;
+        self.evictions += 1;
+        self.version += 1;
+    }
+
+    /// LRU leaf whose page passes `pred`.
+    fn lru_leaf(
+        &self,
+        pred: impl Fn(u32) -> bool,
+    ) -> Option<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+            .filter(|(_, n)| n.children.is_empty() && pred(n.page))
+            .min_by_key(|(_, n)| n.last_use)
+            .map(|(i, _)| i)
+    }
+
+    /// Pressure eviction: drop the LRU leaf whose page the index is the
+    /// sole owner of, returning one page to the free list.  False when
+    /// nothing is reclaimable (every cached page is also held by a live
+    /// slot — evicting those would free no memory).
+    pub fn evict_reclaimable(&mut self, pool: &mut PagePool) -> bool {
+        match self.lru_leaf(|p| pool.refcount(p) == 1) {
+            Some(id) => {
+                self.remove_node(id, pool);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Cap eviction: while over `max_pages`, drop LRU leaves regardless of
+    /// sharing (a shared page just loses its index entry).
+    pub fn enforce_cap(&mut self, pool: &mut PagePool) {
+        if self.max_pages == 0 {
+            return;
+        }
+        while self.live > self.max_pages {
+            match self.lru_leaf(|_| true) {
+                Some(id) => self.remove_node(id, pool),
+                None => break,
+            }
+        }
+    }
+
+    /// Pages the pool could reclaim from the index on demand (sole-owner
+    /// pages).  The O(index) reference computation; the hot path uses
+    /// the pool's incrementally maintained
+    /// [`index_exclusive`](PagePool::index_exclusive) counter instead
+    /// (tests assert the two agree).
+    pub fn reclaimable(&self, pool: &PagePool) -> usize {
+        self.nodes
+            .iter()
+            .flatten()
+            .filter(|n| pool.refcount(n.page) == 1)
+            .count()
+    }
+
+    /// Cumulative prefix digests of every cached chain node (what a
+    /// replica publishes for prefix-affinity routing).
+    pub fn digests(&self) -> Vec<u64> {
+        let mut d: Vec<u64> =
+            self.nodes.iter().flatten().map(|n| n.digest).collect();
+        d.sort_unstable();
+        d.dedup();
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> PagePool {
+        PagePool::new(2, 64)
+    }
+
+    fn toks(n: usize, salt: u32) -> Vec<Token> {
+        (0..n as u32).map(|i| i * 7 + salt).collect()
+    }
+
+    #[test]
+    fn insert_then_lookup_roundtrip() {
+        let mut pool = pool();
+        let mut ix = PrefixIndex::new(4, 0);
+        let t = toks(12, 1);
+        let pages: Vec<u32> =
+            (0..3).map(|_| pool.alloc().unwrap()).collect();
+        assert_eq!(ix.insert_chain(&t, &pages, &mut pool), 3);
+        assert_eq!(ix.len(), 3);
+        for &p in &pages {
+            assert_eq!(pool.refcount(p), 2, "index retains each page");
+        }
+        // Full match.
+        let hit = ix.lookup(&t, t.len(), &mut pool);
+        assert_eq!(hit, pages);
+        assert_eq!(pool.refcount(pages[0]), 3, "lookup retains for caller");
+        // Capped match: only 2 pages fit under 9 tokens.
+        let hit2 = ix.lookup(&t, 9, &mut pool);
+        assert_eq!(hit2, &pages[..2]);
+        // Divergent tail matches only the shared head.
+        let mut t2 = t.clone();
+        t2[5] = 999;
+        let hit3 = ix.lookup(&t2, t2.len(), &mut pool);
+        assert_eq!(hit3, &pages[..1]);
+    }
+
+    #[test]
+    fn radix_branches_on_divergence() {
+        let mut pool = pool();
+        let mut ix = PrefixIndex::new(2, 0);
+        let a = toks(6, 1);
+        let mut b = a.clone();
+        b[4] = 400; // diverges in the third chunk
+        let pa: Vec<u32> = (0..3).map(|_| pool.alloc().unwrap()).collect();
+        let pb: Vec<u32> = (0..3).map(|_| pool.alloc().unwrap()).collect();
+        ix.insert_chain(&a, &pa, &mut pool);
+        // Shared chunks are descended, only the divergent third inserts.
+        assert_eq!(ix.insert_chain(&b, &pb, &mut pool), 1);
+        assert_eq!(ix.len(), 4);
+        assert_eq!(ix.lookup(&a, 6, &mut pool), pa);
+        let hb = ix.lookup(&b, 6, &mut pool);
+        assert_eq!(hb[..2], pa[..2], "shared head served from first chain");
+        assert_eq!(hb[2], pb[2]);
+        // The duplicate pages pb[0], pb[1] stayed donor-owned only.
+        assert_eq!(pool.refcount(pb[0]), 1);
+    }
+
+    #[test]
+    fn pressure_eviction_frees_only_sole_owner_pages() {
+        let mut pool = pool();
+        let mut ix = PrefixIndex::new(2, 0);
+        let t = toks(4, 3);
+        let pages: Vec<u32> = (0..2).map(|_| pool.alloc().unwrap()).collect();
+        ix.insert_chain(&t, &pages, &mut pool);
+        // Simulate the donor slot releasing its refs: index is sole owner.
+        pool.release(pages[0]);
+        pool.release(pages[1]);
+        assert_eq!(ix.reclaimable(&pool), 2);
+        assert_eq!(
+            pool.index_exclusive(),
+            ix.reclaimable(&pool),
+            "O(1) counter must agree with the reference scan"
+        );
+        assert!(ix.evict_reclaimable(&mut pool));
+        // The leaf (deepest chunk) goes first; chain discipline.
+        assert_eq!(ix.len(), 1);
+        assert!(ix.evict_reclaimable(&mut pool));
+        assert!(!ix.evict_reclaimable(&mut pool), "nothing left");
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(ix.evictions(), 2);
+    }
+
+    #[test]
+    fn pressure_eviction_skips_slot_shared_pages() {
+        let mut pool = pool();
+        let mut ix = PrefixIndex::new(2, 0);
+        let t = toks(2, 5);
+        let p = pool.alloc().unwrap(); // slot's ref
+        ix.insert_chain(&t, &[p], &mut pool); // index's ref
+        assert_eq!(ix.reclaimable(&pool), 0);
+        assert_eq!(pool.index_exclusive(), 0);
+        assert!(!ix.evict_reclaimable(&mut pool), "shared page stays");
+        assert_eq!(ix.len(), 1);
+        // The counter tracks every transition: slot drops its ref →
+        // reclaimable; a lookup retains → pinned again.
+        pool.release(p);
+        assert_eq!(pool.index_exclusive(), 1);
+        let got = ix.lookup(&t, 2, &mut pool);
+        assert_eq!(pool.index_exclusive(), 0);
+        pool.release(got[0]);
+        assert_eq!(pool.index_exclusive(), 1);
+    }
+
+    #[test]
+    fn version_changes_iff_content_does() {
+        let mut pool = pool();
+        let mut ix = PrefixIndex::new(2, 0);
+        let v0 = ix.version();
+        let t = toks(4, 9);
+        let pages: Vec<u32> = (0..2).map(|_| pool.alloc().unwrap()).collect();
+        ix.insert_chain(&t, &pages, &mut pool);
+        let v1 = ix.version();
+        assert_ne!(v0, v1, "insert bumps");
+        // Re-inserting the same chain and looking it up change nothing.
+        ix.insert_chain(&t, &pages, &mut pool);
+        let hit = ix.lookup(&t, 4, &mut pool);
+        for p in hit {
+            pool.release(p);
+        }
+        assert_eq!(ix.version(), v1);
+        pool.release(pages[0]);
+        pool.release(pages[1]);
+        assert!(ix.evict_reclaimable(&mut pool));
+        assert_ne!(ix.version(), v1, "evict bumps");
+    }
+
+    #[test]
+    fn cap_eviction_is_lru() {
+        let mut pool = pool();
+        let mut ix = PrefixIndex::new(2, 2);
+        let a = toks(2, 1);
+        let b = toks(2, 100);
+        let c = toks(2, 200);
+        let pa = pool.alloc().unwrap();
+        let pb = pool.alloc().unwrap();
+        let pc = pool.alloc().unwrap();
+        ix.insert_chain(&a, &[pa], &mut pool);
+        ix.insert_chain(&b, &[pb], &mut pool);
+        // Touch `a` so `b` is the LRU when the cap trips.
+        let got = ix.lookup(&a, 2, &mut pool);
+        pool.release(got[0]);
+        ix.insert_chain(&c, &[pc], &mut pool);
+        assert_eq!(ix.len(), 2);
+        assert!(ix.lookup(&b, 2, &mut pool).is_empty(), "b evicted");
+        assert!(!ix.lookup(&a, 2, &mut pool).is_empty());
+        assert_eq!(pool.refcount(pb), 1, "index ref dropped, donor keeps");
+    }
+
+    #[test]
+    fn digests_are_cumulative_and_match_block_digests() {
+        let mut pool = pool();
+        let mut ix = PrefixIndex::new(3, 0);
+        let t = toks(9, 2);
+        let pages: Vec<u32> = (0..3).map(|_| pool.alloc().unwrap()).collect();
+        ix.insert_chain(&t, &pages, &mut pool);
+        let want = block_digests(&t, 3, 8);
+        let have = ix.digests();
+        assert_eq!(want.len(), 3);
+        for d in &want {
+            assert!(have.contains(d), "digest {d:x} missing");
+        }
+        // A different prefix yields different digests.
+        let other = block_digests(&toks(9, 77), 3, 8);
+        assert_ne!(want, other);
+        // max_blocks caps the head.
+        assert_eq!(block_digests(&t, 3, 2).len(), 2);
+        // Partial trailing block is ignored.
+        assert_eq!(block_digests(&t[..8], 3, 8).len(), 2);
+    }
+}

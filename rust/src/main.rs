@@ -16,7 +16,10 @@
 //! finite page pool over-subscribe lanes and preempt/resume under
 //! pressure instead of capping concurrency up front; streaming clients
 //! send `{"stream": true}` for per-step token deltas and `{"cancel": id}`
-//! to abort mid-flight.
+//! to abort mid-flight.  `--prefix-cache on|off` (default on) toggles
+//! cross-request shared-prefix KV reuse (`cache.prefix_lru_pages` caps
+//! the pages it may pin); `--routing prefix-affinity` steers
+//! same-prefix traffic to the replica already holding the cached head.
 //!
 //! (The offline crate mirror has no clap; argument parsing is hand-rolled.)
 
@@ -88,6 +91,17 @@ fn parse_args() -> Result<Args> {
             "--admission" => {
                 let v = val("--admission")?;
                 a.sets.push(format!("cache.admission=\"{v}\""));
+            }
+            "--prefix-cache" => {
+                let v = val("--prefix-cache")?;
+                let b = match v.as_str() {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => bail!(
+                        "--prefix-cache expects on|off, got {other:?}"
+                    ),
+                };
+                a.sets.push(format!("cache.prefix_cache={b}"));
             }
             "--tree-budget" => {
                 let v = val("--tree-budget")?;
@@ -218,7 +232,7 @@ fn main() -> Result<()> {
                  [--config f.toml] [--set k=v] [--engine kind] [--size s] \
                  [--prompt p] [--max-new n] [--artifacts dir] \
                  [--replicas n] [--routing policy] [--page-size n] \
-                 [--admission reserve|optimistic] \
+                 [--admission reserve|optimistic] [--prefix-cache on|off] \
                  [--tree-budget per-lane|uniform] [--sim]"
             );
             Ok(())

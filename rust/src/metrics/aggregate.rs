@@ -99,9 +99,23 @@ impl MetricsHub {
                   "verify_tokens_total",
                   "kv_pages_in_use", "kv_page_capacity",
                   "preempt_total", "requeue_total", "cancelled_total",
-                  "resume_prefills", "reprefill_tokens_total"] {
+                  "resume_prefills", "reprefill_tokens_total",
+                  "kv_prefix_hit_tokens", "kv_prefix_miss_tokens",
+                  "kv_prefix_evictions"] {
             totals.insert(k.into(), sum(k));
         }
+        // Fleet prefix-reuse economics: hit rate as a ratio of summed
+        // token counts (not a mean of per-replica ratios).
+        let prefix_total =
+            sum("kv_prefix_hit_tokens") + sum("kv_prefix_miss_tokens");
+        totals.insert(
+            "kv_prefix_hit_rate".into(),
+            if prefix_total <= 0.0 {
+                0.0
+            } else {
+                sum("kv_prefix_hit_tokens") / prefix_total
+            },
+        );
         // Fleet speculation economics: accepted per verified token as a
         // ratio of sums (not a mean of per-replica ratios).
         let verified = sum("verify_tokens_total");
@@ -314,6 +328,43 @@ mod tests {
         // (0.2·1 + 0.6·3) / 4 = 0.5; steps (2·1 + 6·3) / 4 = 5.
         assert!((agg.total("ttft_mean_s") - 0.5).abs() < 1e-12);
         assert!((agg.total("ttft_steps_mean") - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_reuse_rolls_up_as_ratio_of_sums() {
+        let hub = MetricsHub::new(2);
+        let a = EngineMetrics {
+            kv_prefix_hit_tokens: 90,
+            kv_prefix_miss_tokens: 10,
+            kv_prefix_evictions: 2,
+            ..Default::default()
+        };
+        let b = EngineMetrics {
+            kv_prefix_hit_tokens: 10,
+            kv_prefix_miss_tokens: 90,
+            kv_prefix_evictions: 1,
+            ..Default::default()
+        };
+        hub.publish(0, 0, 0, &a);
+        hub.publish(1, 0, 0, &b);
+        let agg = hub.aggregate();
+        assert_eq!(agg.total("kv_prefix_hit_tokens"), 100.0);
+        assert_eq!(agg.total("kv_prefix_miss_tokens"), 100.0);
+        assert_eq!(agg.total("kv_prefix_evictions"), 3.0);
+        // Ratio of sums: 100 / 200 (a mean of ratios would also be 0.5
+        // here, so skew replica b to prove the distinction).
+        assert!((agg.total("kv_prefix_hit_rate") - 0.5).abs() < 1e-12);
+        let hub = MetricsHub::new(2);
+        let c = EngineMetrics {
+            kv_prefix_hit_tokens: 300,
+            kv_prefix_miss_tokens: 100,
+            ..Default::default()
+        };
+        hub.publish(0, 0, 0, &c);
+        hub.publish(1, 0, 0, &b);
+        // (300 + 10) / (400 + 100) = 0.62, not (0.75 + 0.1) / 2.
+        assert!((hub.aggregate().total("kv_prefix_hit_rate") - 0.62).abs()
+            < 1e-12);
     }
 
     #[test]

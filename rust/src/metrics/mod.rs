@@ -83,8 +83,19 @@ pub struct EngineMetrics {
     /// Resume re-admissions (each pairs with a preemption).
     pub resume_prefills: u64,
     /// Committed-prefix tokens re-prefetched/replayed on resume — the
-    /// cache-pressure tax preemption pays.
+    /// cache-pressure tax preemption pays.  With the prefix cache on,
+    /// only the *uncached* tail counts (the cached head is adopted).
     pub reprefill_tokens: u64,
+    /// Prompt/prefix tokens served from the shared-prefix KV cache
+    /// (adopted page chains; never recomputed).
+    pub kv_prefix_hit_tokens: u64,
+    /// Prompt/prefix tokens actually run through prefill or replay (the
+    /// compute the cache failed to avoid; counted with the cache off
+    /// too, so on/off runs are directly comparable).
+    pub kv_prefix_miss_tokens: u64,
+    /// LRU evictions from the prefix index (cap + pool pressure), sampled
+    /// after the latest step.
+    pub kv_prefix_evictions: u64,
 }
 
 impl EngineMetrics {
@@ -123,6 +134,17 @@ impl EngineMetrics {
             0.0
         } else {
             self.tokens_generated as f64 / self.verify_tokens as f64
+        }
+    }
+
+    /// Fraction of prompt/prefix tokens served from the shared-prefix
+    /// cache (0 when nothing was prefilled yet or the cache is off).
+    pub fn kv_prefix_hit_rate(&self) -> f64 {
+        let total = self.kv_prefix_hit_tokens + self.kv_prefix_miss_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.kv_prefix_hit_tokens as f64 / total as f64
         }
     }
 
@@ -192,6 +214,13 @@ impl EngineMetrics {
         m.insert("kv_pages_in_use".into(), self.kv_pages_in_use as f64);
         m.insert("kv_page_capacity".into(), self.kv_page_capacity as f64);
         m.insert("kv_page_occupancy".into(), self.kv_page_occupancy());
+        m.insert("kv_prefix_hit_tokens".into(),
+                 self.kv_prefix_hit_tokens as f64);
+        m.insert("kv_prefix_miss_tokens".into(),
+                 self.kv_prefix_miss_tokens as f64);
+        m.insert("kv_prefix_hit_rate".into(), self.kv_prefix_hit_rate());
+        m.insert("kv_prefix_evictions".into(),
+                 self.kv_prefix_evictions as f64);
         m
     }
 }
@@ -235,9 +264,23 @@ mod tests {
             "requeue_total",
             "cancelled_total",
             "reprefill_tokens_total",
+            "kv_prefix_hit_tokens",
+            "kv_prefix_miss_tokens",
+            "kv_prefix_hit_rate",
+            "kv_prefix_evictions",
         ] {
             assert!(r.contains_key(k), "missing {k}");
         }
+    }
+
+    #[test]
+    fn prefix_hit_rate_ratio() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.kv_prefix_hit_rate(), 0.0);
+        m.kv_prefix_hit_tokens = 75;
+        m.kv_prefix_miss_tokens = 25;
+        assert!((m.kv_prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.report()["kv_prefix_hit_rate"] - 0.75).abs() < 1e-12);
     }
 
     #[test]

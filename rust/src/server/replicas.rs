@@ -54,6 +54,11 @@ pub fn replica_loop(
 ) -> Result<u64> {
     let mut clients: BTreeMap<u64, ClientHooks> = BTreeMap::new();
     let mut served = 0u64;
+    // Publish the effective (post-clamp) page size once so the
+    // prefix-affinity scheduler hashes prompts at the granularity this
+    // engine actually freezes chains at.
+    replica.load.set_page_size(engine.kv_page_size());
+    let mut published_prefix_version = u64::MAX;
     loop {
         // Pull new work (blocking only when fully idle).  The pull is
         // bounded by the page-capped lane budget, not raw max_batch, so a
@@ -132,6 +137,15 @@ pub fn replica_loop(
             .load
             .set_cache(engine.kv_free_pages(), engine.kv_page_capacity());
         replica.load.set_lane_budget(engine.lane_budget());
+        // Publish the cached-prefix digest set so prefix-affinity routing
+        // can steer same-prefix traffic here — only when the index
+        // actually changed (deriving the set is O(index); version
+        // checks are O(1) and the common steady-state case).
+        let v = engine.prefix_version();
+        if v != published_prefix_version {
+            replica.load.set_prefix_digests(engine.prefix_digests());
+            published_prefix_version = v;
+        }
         if completed || !progressed {
             hub.publish(replica.id, served, engine.pending(), &engine.metrics);
         }
@@ -195,7 +209,8 @@ impl ReplicaSet<'_> {
             .collect();
         let scheduler =
             Scheduler::new(handles.clone(), self.cfg.server.routing)
-                .with_watermark(self.cfg.server.watermark_permille);
+                .with_watermark(self.cfg.server.watermark_permille)
+                .with_page_size(self.cfg.engine.page_size);
         std::thread::scope(|s| {
             let mut workers = Vec::with_capacity(n);
             for h in &handles {

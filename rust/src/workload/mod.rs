@@ -143,6 +143,79 @@ pub fn generate_trace(
     Ok(out)
 }
 
+/// Shared-prefix workload: a common few-shot/system-prompt header
+/// followed by a short unique tail per request — the traffic shape that
+/// makes cross-request KV prefix reuse pay (every request after the
+/// first serves its header from the cache).  Deterministic from `seed`.
+#[derive(Debug, Clone)]
+pub struct SharedPrefixConfig {
+    pub n_requests: usize,
+    /// Distinct shared headers (templates); requests cycle round-robin,
+    /// so hit depth stays high even with several tenants.
+    pub n_headers: usize,
+    /// Header length in tokens (bytes under the byte tokenizer).  Size
+    /// this to span several KV pages or there is nothing to share.
+    pub header_len: usize,
+    /// Unique tail length in tokens (bytes) per request.
+    pub tail_len: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for SharedPrefixConfig {
+    fn default() -> Self {
+        SharedPrefixConfig {
+            n_requests: 16,
+            n_headers: 2,
+            header_len: 96,
+            tail_len: 24,
+            max_new_tokens: 24,
+            seed: 11,
+        }
+    }
+}
+
+/// Deterministic printable filler of exactly `len` bytes.
+fn filler(rng: &mut Rng, len: usize) -> String {
+    const WORDS: [&str; 8] = [
+        "tree", "prune", "batch", "decode", "verify", "token", "cache",
+        "serve",
+    ];
+    let mut s = String::with_capacity(len + 8);
+    while s.len() < len {
+        s.push_str(rng.choose(&WORDS));
+        s.push(' ');
+    }
+    s.truncate(len);
+    s
+}
+
+/// Generate the shared-prefix request list (`(prompt, max_new_tokens)`
+/// pairs, ready for `run_offline` or direct engine submission).
+pub fn shared_prefix_requests(
+    cfg: &SharedPrefixConfig,
+) -> Vec<(String, usize)> {
+    let mut rng = Rng::new(cfg.seed);
+    let headers: Vec<String> = (0..cfg.n_headers.max(1))
+        .map(|h| {
+            let body = filler(&mut rng, cfg.header_len.saturating_sub(10));
+            format!("system {h}: {body}")
+        })
+        .map(|mut s| {
+            s.truncate(cfg.header_len);
+            s
+        })
+        .collect();
+    (0..cfg.n_requests)
+        .map(|i| {
+            let header = &headers[i % headers.len()];
+            let tail = filler(&mut rng, cfg.tail_len.saturating_sub(8));
+            let prompt = format!("{header}user {i}: {tail}\nassistant:");
+            (prompt, cfg.max_new_tokens)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +260,31 @@ mod tests {
     fn budgets_follow_profile_ordering() {
         assert!(output_budget("mtbench") > output_budget("chatgpt"));
         assert!(output_budget("chatgpt") > output_budget("alpaca"));
+    }
+
+    #[test]
+    fn shared_prefix_requests_share_headers_and_diverge_tails() {
+        let cfg = SharedPrefixConfig::default();
+        let reqs = shared_prefix_requests(&cfg);
+        assert_eq!(reqs.len(), cfg.n_requests);
+        // Deterministic.
+        assert_eq!(reqs, shared_prefix_requests(&cfg));
+        // Requests i and i + n_headers share an exact header_len-byte
+        // prefix; adjacent requests (different headers) do not.
+        let h = cfg.header_len;
+        assert_eq!(&reqs[0].0.as_bytes()[..h], &reqs[2].0.as_bytes()[..h]);
+        assert_eq!(&reqs[1].0.as_bytes()[..h], &reqs[3].0.as_bytes()[..h]);
+        assert_ne!(&reqs[0].0.as_bytes()[..h], &reqs[1].0.as_bytes()[..h]);
+        // Tails are unique even within a header group.
+        assert_ne!(reqs[0].0, reqs[2].0);
+        // Every prompt carries the full header.
+        assert!(reqs.iter().all(|(p, _)| p.len() > h));
+        // A different seed moves the text.
+        let other = shared_prefix_requests(&SharedPrefixConfig {
+            seed: 99,
+            ..cfg
+        });
+        assert_ne!(reqs[0].0, other[0].0);
     }
 
     #[test]

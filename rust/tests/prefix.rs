@@ -1,0 +1,266 @@
+//! Shared-prefix KV reuse integration over the deterministic sim backend.
+//!
+//! The load-bearing invariant: reuse is a *pure optimization* — greedy
+//! output is byte-identical with `cache.prefix_cache` on or off, across
+//! every engine kind and routing policy, including preempt→resume under
+//! a tight page pool.  On top of that, the shared-prefix workload must
+//! actually hit (> 0.5 token hit rate) and the pool must balance to zero
+//! after a drain.
+
+use propd::batching::RoutingPolicy;
+use propd::config::ServingConfig;
+use propd::engine::{AdmissionMode, Engine, EngineConfig, EngineKind};
+use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
+use propd::server::run_offline;
+use propd::workload::{shared_prefix_requests, SharedPrefixConfig};
+
+const PROMPTS: [&str; 3] = [
+    "user: Explain how the scheduler reduces the latency of every \
+     request.\nassistant:",
+    "user: List three reasons why the token tree prunes the candidate \
+     sequences.\nassistant:",
+    "user: Summarize how the batch engine balances the decoding \
+     throughput.\nassistant:",
+];
+
+/// Single-engine greedy reference decode with the prefix cache OFF.
+fn reference(
+    rt: &Runtime,
+    mut cfg: EngineConfig,
+    reqs: &[(String, usize)],
+) -> Vec<String> {
+    cfg.prefix_cache = false;
+    cfg.max_batch = reqs.len().max(1);
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    for (p, m) in reqs {
+        engine.submit(p, *m);
+    }
+    let mut done = engine.run_to_completion().expect("run");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.text).collect()
+}
+
+/// Shared-prefix workload sized to fit the sim's max_prompt (96) whole:
+/// a 64-byte header (4 pages at page_size 16) + a short unique tail, so
+/// the full header is reusable and the uncached tail stays within the
+/// engine's replay budget.
+fn shared_reqs(n: usize) -> Vec<(String, usize)> {
+    shared_prefix_requests(&SharedPrefixConfig {
+        n_requests: n,
+        header_len: 64,
+        tail_len: 12,
+        ..Default::default()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Byte-identity: cache on == cache off, all engines × routing policies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cache_on_is_byte_identical_across_engines_and_routing() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let reqs = shared_reqs(6);
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        let truth = reference(&rt, EngineConfig::new(&sim.size, kind), &reqs);
+        for routing in [
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::CachePressure,
+            RoutingPolicy::PrefixAffinity,
+        ] {
+            let mut cfg = ServingConfig::default_for(&sim.size, kind);
+            cfg.server.replicas = 2;
+            cfg.server.routing = routing;
+            cfg.engine.max_batch = 2;
+            cfg.engine.page_size = 16;
+            assert!(cfg.engine.prefix_cache, "reuse defaults on");
+            let (done, snap, _) =
+                run_offline(&cfg, &RuntimeSpec::Sim(sim.clone()), &reqs)
+                    .expect("offline run");
+            for (i, c) in done.iter().enumerate() {
+                assert_eq!(
+                    c.text,
+                    truth[i],
+                    "{} × {} request {i} diverged with the cache on",
+                    kind.as_str(),
+                    routing.as_str()
+                );
+            }
+            // The shared-prefix workload must actually exercise reuse
+            // (beyond the first cold wave on each replica).
+            assert!(
+                snap.total("kv_prefix_hit_tokens") > 0.0,
+                "{} × {}: no prefix hits recorded",
+                kind.as_str(),
+                routing.as_str()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hit rate + prefill savings + pool balance on the shared-prefix workload
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_prefix_workload_hits_and_pool_balances_after_drain() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let reqs = shared_reqs(12);
+    let run = |prefix_cache: bool| {
+        let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+        cfg.max_batch = 2;
+        cfg.page_size = 16;
+        cfg.prefix_cache = prefix_cache;
+        let mut engine = Engine::new(&rt, cfg).expect("engine");
+        for (p, m) in &reqs {
+            engine.submit(p, *m);
+        }
+        let mut done = engine.run_to_completion().expect("run");
+        done.sort_by_key(|c| c.id);
+        let texts: Vec<String> =
+            done.into_iter().map(|c| c.text).collect();
+        let hit = engine.metrics.kv_prefix_hit_tokens;
+        let miss = engine.metrics.kv_prefix_miss_tokens;
+        let rate = engine.metrics.kv_prefix_hit_rate();
+        // Pool accounting balances to zero after the drain: no slot
+        // holds pages, every remaining index page is reclaimable.
+        assert_eq!(engine.kv_pages_in_use(), 0, "slots drained");
+        assert_eq!(
+            engine.kv_free_pages(),
+            engine.kv_page_capacity(),
+            "all pages available again"
+        );
+        (texts, hit, miss, rate)
+    };
+    let (texts_off, hit_off, miss_off, _) = run(false);
+    let (texts_on, hit_on, miss_on, rate_on) = run(true);
+    assert_eq!(texts_on, texts_off, "byte identity on vs off");
+    assert_eq!(hit_off, 0, "cache off never hits");
+    assert!(
+        rate_on > 0.5,
+        "hit rate {rate_on} too low (hit {hit_on}, miss {miss_on})"
+    );
+    assert!(
+        miss_on < miss_off,
+        "prefill tokens computed must drop ({miss_on} vs {miss_off})"
+    );
+    assert_eq!(
+        hit_on + miss_on,
+        miss_off,
+        "hits + misses account for every prompt token"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Preempt → resume through the prefix cache (satellite)
+// ---------------------------------------------------------------------------
+
+/// Deterministic preempt/resume cycle for one request; returns
+/// (reprefill_tokens, text).
+fn preempt_resume_run(rt: &Runtime, prefix_cache: bool) -> (u64, String) {
+    let sim_size = "m";
+    let mut cfg = EngineConfig::new(sim_size, EngineKind::ProPD);
+    cfg.max_batch = 1;
+    cfg.page_size = 16;
+    cfg.prefix_cache = prefix_cache;
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    let id = engine.submit(PROMPTS[0], 24);
+    for _ in 0..3 {
+        engine.step().expect("step");
+    }
+    let spec = engine.preempt_lowest().expect("one active lane");
+    assert_eq!(spec.id, id);
+    engine.resubmit(spec);
+    let done = engine.run_to_completion().expect("drain");
+    assert_eq!(done.len(), 1);
+    assert_eq!(engine.metrics.resume_prefills, 1);
+    (engine.metrics.reprefill_tokens, done[0].text.clone())
+}
+
+#[test]
+fn resume_through_prefix_cache_reprefills_less_and_stays_byte_identical() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let truth = reference(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::ProPD),
+        &[(PROMPTS[0].to_string(), 24)],
+    );
+    let (reprefill_off, text_off) = preempt_resume_run(&rt, false);
+    let (reprefill_on, text_on) = preempt_resume_run(&rt, true);
+    assert_eq!(text_off, truth[0], "cold resume is byte-identical");
+    assert_eq!(text_on, truth[0], "cached resume is byte-identical");
+    // PR-4 behavior re-prefills the whole committed prefix; through the
+    // cache only the tail past the last frozen page is recomputed.
+    assert!(reprefill_off > 0);
+    assert!(
+        reprefill_on < reprefill_off,
+        "cached resume must reprefill less ({reprefill_on} vs \
+         {reprefill_off})"
+    );
+    // The committed prefix at preemption spans >= 4 full pages (~70
+    // prompt bytes at page 16), so the drop is substantial, not one page.
+    assert!(reprefill_on <= reprefill_off / 2);
+}
+
+#[test]
+fn tight_pool_preemption_with_cache_on_off_is_byte_identical() {
+    let sim = SimConfig::default();
+    let rt = Runtime::sim(&sim);
+    let reqs: Vec<(String, usize)> = (0..6)
+        .map(|i| (PROMPTS[i % 3].to_string(), 40))
+        .collect();
+    let truth = reference(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::ProPD),
+        &reqs,
+    );
+    let mut snaps = Vec::new();
+    for prefix_cache in [false, true] {
+        let mut cfg =
+            ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+        cfg.server.replicas = 1;
+        cfg.engine.max_batch = 4;
+        cfg.engine.page_size = 16;
+        cfg.engine.cache_pages = 26; // one guaranteed lane
+        cfg.engine.admission = AdmissionMode::Optimistic;
+        cfg.engine.prefix_cache = prefix_cache;
+        let (done, snap, _) =
+            run_offline(&cfg, &RuntimeSpec::Sim(sim.clone()), &reqs)
+                .expect("tight-pool run");
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(
+                c.text,
+                truth[i],
+                "prefix_cache={prefix_cache}: request {i} diverged under \
+                 preemption"
+            );
+        }
+        snaps.push(snap);
+    }
+    let (off, on) = (&snaps[0], &snaps[1]);
+    // The tight pool forces the lifecycle either way…
+    assert!(off.total("preempt_total") >= 1.0);
+    // …and when resumes happen with the cache on, they re-prefill less
+    // per resume than PR-4's full-prefix replay.
+    let resumes_on = on.total("resume_prefills");
+    if resumes_on >= 1.0 {
+        let per_resume_on =
+            on.total("reprefill_tokens_total") / resumes_on;
+        let per_resume_off = off.total("reprefill_tokens_total")
+            / off.total("resume_prefills").max(1.0);
+        assert!(
+            per_resume_on < per_resume_off,
+            "cached resume must be cheaper per resume \
+             ({per_resume_on} vs {per_resume_off})"
+        );
+    }
+}
