@@ -13,6 +13,7 @@ use propd::estimator::{
     allocate_budget, AcceptanceTracker, BudgetMode, PerfModel,
 };
 use propd::kvcache::{BatchAssembler, KvCache, KvGeometry};
+use propd::runtime::kernels::{matmul_blocked_into, matmul_naive};
 use propd::runtime::{Runtime, SimConfig};
 use propd::tree::builder::HeadCandidates;
 use propd::tree::{accept_path, prune_tree, TokenTree, TreeBuilder, TreeMask};
@@ -85,6 +86,27 @@ fn main() {
     // ---- acceptance walk ----
     results.push(b.run("accept_path_64", || {
         std::hint::black_box(accept_path(&tree, &logits, vocab));
+    }));
+
+    // ---- blocked/threaded matmul (execution backend) ----
+    // Naive vs blocked vs blocked+threads on one shape; the blocked
+    // kernel is bit-identical to naive at every thread count (the
+    // property tests in tests/exec_backend.rs), so this only measures
+    // the layout and fan-out win.
+    let (mm, mk, mn) = (128, 64, 256);
+    let mat_a = random_logits(&mut rng, mm, mk);
+    let mat_b = random_logits(&mut rng, mk, mn);
+    results.push(b.run("matmul_naive_128x64x256", || {
+        std::hint::black_box(matmul_naive(&mat_a, &mat_b, mm, mk, mn));
+    }));
+    let mut mat_c = vec![0f32; mm * mn];
+    results.push(b.run("matmul_blocked_t1_128x64x256", || {
+        matmul_blocked_into(1, &mat_a, &mat_b, mm, mk, mn, &mut mat_c);
+        std::hint::black_box(&mat_c);
+    }));
+    results.push(b.run("matmul_blocked_t4_128x64x256", || {
+        matmul_blocked_into(4, &mat_a, &mat_b, mm, mk, mn, &mut mat_c);
+        std::hint::black_box(&mat_c);
     }));
 
     // ---- §4.2.1 regression ----

@@ -23,6 +23,11 @@ pub struct ServingConfig {
     pub artifacts: String,
     pub engine: EngineConfig,
     pub server: ServerConfig,
+    /// Sim-backend worker threads (`runtime.threads` / `propd --threads`):
+    /// `0` = auto (`available_parallelism`, clamped), `1` = serial
+    /// spawn-free reproducibility mode.  Output bytes are identical at
+    /// every setting — only wall-clock changes.
+    pub runtime_threads: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -57,6 +62,7 @@ impl ServingConfig {
             artifacts: crate::DEFAULT_ARTIFACTS.into(),
             engine: EngineConfig::new(size, kind),
             server: ServerConfig::default(),
+            runtime_threads: 0,
         }
     }
 
@@ -173,7 +179,8 @@ impl ServingConfig {
         if server.watermark_permille > 1000 {
             bail!("server.watermark_permille must be <= 1000");
         }
-        Ok(ServingConfig { artifacts, engine: e, server })
+        let runtime_threads = get_us("runtime.threads", 0)?;
+        Ok(ServingConfig { artifacts, engine: e, server, runtime_threads })
     }
 }
 
@@ -369,6 +376,18 @@ max_queue = 8
                                      &["engine.prune_top_k=4".into()])
             .unwrap();
         assert_eq!(c2.engine.prune_top_k, 4);
+    }
+
+    #[test]
+    fn runtime_threads_knob_parses() {
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert_eq!(d.runtime_threads, 0, "default is auto");
+        let c =
+            ServingConfig::load(None, &["runtime.threads=1".into()]).unwrap();
+        assert_eq!(c.runtime_threads, 1);
+        let c =
+            ServingConfig::load(None, &["runtime.threads=8".into()]).unwrap();
+        assert_eq!(c.runtime_threads, 8);
     }
 
     #[test]

@@ -1,0 +1,90 @@
+//! Per-engine scratch arena: every tensor the step loops stage inputs in
+//! or receive outputs into lives here, so the steady state reuses heap
+//! slabs instead of allocating fresh `Vec`s per step.
+//!
+//! The contract (DESIGN.md § Execution backend): once shapes stabilize —
+//! same batch bucket, same tree bucket — resetting a slab via
+//! [`HostTensor::reset_f32`] / [`reset_i32`](HostTensor::reset_i32) reuses
+//! its heap block, and the sim writes outputs back into the same slabs
+//! through [`Executable::run_mixed_into`].  The autoregressive decode loop
+//! allocates *nothing* per step under this regime (asserted by the
+//! counting-allocator test `tests/zero_alloc.rs`); the tree step reuses
+//! the large packed tensors (tokens/positions/masks scale with `b · t²`)
+//! while tree construction and pruning keep their own small per-step
+//! structures.
+//!
+//! [`Executable::run_mixed_into`]: crate::runtime::Executable::run_mixed_into
+//! [`HostTensor::reset_f32`]: crate::runtime::HostTensor::reset_f32
+
+use crate::runtime::literal::HostTensor;
+
+/// Placeholder for a not-yet-shaped slab.  Shape `[0]` (not `[]`): an
+/// empty shape's element product is 1, which would fail the length
+/// invariant with no data.
+fn empty_i32() -> HostTensor {
+    HostTensor::i32(vec![0], Vec::new())
+}
+
+fn empty_f32() -> HostTensor {
+    HostTensor::f32(vec![0], Vec::new())
+}
+
+/// Reusable per-engine step scratch (one per [`Engine`], never shared —
+/// the runtime topology is one engine per replica thread).
+///
+/// [`Engine`]: super::Engine
+pub(super) struct StepArena {
+    // --- autoregressive decode ---------------------------------------
+    /// `tokens [b]` i32 staged for the decode entry.
+    pub dec_tok: HostTensor,
+    /// `seq_len [b]` i32 staged for the decode entry.
+    pub dec_len: HostTensor,
+    /// Decode outputs (logits / medusa / col_kv), slabs reused in place.
+    pub dec_outs: Vec<HostTensor>,
+    /// Cached decode artifact key + the batch bucket it was built for
+    /// (`Manifest::key_for` allocates; the steady state re-uses it).
+    pub dec_key: String,
+    pub dec_bucket: usize,
+
+    // --- tree step: packed verify_early inputs -----------------------
+    pub tree_tok: HostTensor,
+    pub tree_pos: HostTensor,
+    pub tree_mask: HostTensor,
+    pub seq_len: HostTensor,
+    // --- tree step: packed verify_late inputs ------------------------
+    pub hidden_c: HostTensor,
+    pub ppos: HostTensor,
+    pub pmask: HostTensor,
+    pub pseq: HostTensor,
+    /// verify_early outputs (hidden / early logits / early tree_kv).
+    pub early_outs: Vec<HostTensor>,
+    /// verify_late outputs (logits / medusa / late tree_kv).
+    pub late_outs: Vec<HostTensor>,
+
+    // --- shared scratch ----------------------------------------------
+    /// Lane→slot layout for batch assembly (dummy lanes repeat lane 0).
+    pub lanes: Vec<usize>,
+}
+
+impl StepArena {
+    pub fn new() -> Self {
+        StepArena {
+            dec_tok: empty_i32(),
+            dec_len: empty_i32(),
+            dec_outs: Vec::new(),
+            dec_key: String::new(),
+            dec_bucket: 0,
+            tree_tok: empty_i32(),
+            tree_pos: empty_i32(),
+            tree_mask: empty_f32(),
+            seq_len: empty_i32(),
+            hidden_c: empty_f32(),
+            ppos: empty_i32(),
+            pmask: empty_f32(),
+            pseq: empty_i32(),
+            early_outs: Vec::new(),
+            late_outs: Vec::new(),
+            lanes: Vec::new(),
+        }
+    }
+}

@@ -9,6 +9,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::arena::StepArena;
 use super::requests::{
     Completion, FinishReason, ReqState, RequestSpec, ResumeState, TokenDelta,
 };
@@ -53,6 +54,11 @@ pub struct Engine<'rt> {
     /// Per-lane lifecycle events (token deltas, finish notices, preempt
     /// notices) buffered since the last [`Engine::take_events`].
     pub(super) events: Vec<TokenDelta>,
+    /// Reusable step scratch: staged inputs, entry-point outputs, and the
+    /// cached decode key all live in slabs that survive across steps, so
+    /// the steady-state decode loop performs no heap allocation (see
+    /// DESIGN.md § Execution backend).
+    pub(super) arena: StepArena,
     next_id: u64,
 }
 
@@ -181,6 +187,7 @@ impl<'rt> Engine<'rt> {
             clock: Instant::now(),
             assembler: BatchAssembler::new(),
             events: Vec::new(),
+            arena: StepArena::new(),
             next_id: 1,
         })
     }
@@ -713,6 +720,9 @@ impl<'rt> Engine<'rt> {
             admit_step: self.metrics.steps,
             preemptions: 0,
         };
+        // Generation pushes must never regrow this vec mid-decode (+2:
+        // a zero-room tree step may still commit one token past budget).
+        req.tokens.reserve(req.max_new_tokens + 2);
         req.remember_prediction(self.model.vocab);
         self.metrics.queue_delay.record(started - req.arrival);
         self.metrics.prefills += 1;
@@ -818,6 +828,7 @@ impl<'rt> Engine<'rt> {
                 admit_step: self.metrics.steps,
                 preemptions: 0,
             };
+            req.tokens.reserve(req.max_new_tokens + 2);
             req.remember_prediction(v);
             self.metrics.queue_delay.record(started - req.arrival);
             self.metrics.prefills += 1;
@@ -942,6 +953,7 @@ impl<'rt> Engine<'rt> {
             admit_step: self.metrics.steps,
             preemptions: r.preemptions,
         };
+        req.tokens.reserve(req.max_new_tokens + 2);
         req.remember_prediction(v);
         self.metrics.resume_prefills += 1;
         self.active.push(req);
@@ -986,7 +998,12 @@ impl<'rt> Engine<'rt> {
     /// latency bookkeeping (ttft / steps-to-first-token / itl) current.
     /// Called after `check_done` so a finishing lane's final delta
     /// flushes held-back bytes and carries the finish reason.
-    pub(super) fn emit_progress(&mut self, idx: usize, accepted: Vec<u32>) {
+    ///
+    /// Latency bookkeeping runs unconditionally; the delta itself (which
+    /// copies tokens and decodes text, i.e. allocates) is skipped when
+    /// `collect_events` is off — the bench engines' steady-state loop
+    /// stays allocation-free that way.
+    pub(super) fn emit_progress(&mut self, idx: usize, accepted: &[u32]) {
         let now = self.clock.elapsed().as_secs_f64();
         let steps_done = self.metrics.steps;
         let req = &mut self.active[idx];
@@ -1002,11 +1019,14 @@ impl<'rt> Engine<'rt> {
             }
             req.last_token_at = now;
         }
+        if !self.cfg.collect_events {
+            return;
+        }
         let finish = if req.done { req.finish } else { None };
         let text = req.delta_text(req.done);
         self.events.push(TokenDelta {
             id: req.id,
-            tokens: accepted,
+            tokens: accepted.to_vec(),
             text,
             finish,
             preempted: false,

@@ -5,16 +5,21 @@ use crate::manifest::ModelMeta;
 use crate::runtime::literal::{HostTensor, NEG_INF};
 use crate::tree::{TokenTree, TreeMask};
 
-/// Pack per-lane token trees into `tree_tok [b, t]` (i32).
+/// Pack per-lane token trees into `tree_tok [b, t]` (i32), reusing
+/// `out`'s heap slab (arena packing — see `engine/arena.rs`).
 ///
 /// The batch is *ragged*: every lane may carry a different live tree size
 /// (per-lane budgeted allocation) and is padded up to the shared
 /// `t_bucket`.  Padding nodes repeat the lane's root token at the root
 /// position so they stay in-vocabulary and in-range; their outputs are
 /// never read (the per-lane live size bounds every downstream consumer).
-pub fn pack_tree_tokens(trees: &[&TokenTree], t_bucket: usize) -> HostTensor {
+pub fn pack_tree_tokens_into(
+    trees: &[&TokenTree],
+    t_bucket: usize,
+    out: &mut HostTensor,
+) {
     let b = trees.len();
-    let mut out = vec![0i32; b * t_bucket];
+    let buf = out.reset_i32(&[b, t_bucket]);
     for (lane, tree) in trees.iter().enumerate() {
         debug_assert!(
             tree.len() <= t_bucket,
@@ -23,25 +28,33 @@ pub fn pack_tree_tokens(trees: &[&TokenTree], t_bucket: usize) -> HostTensor {
         );
         let root = tree.node(0).token as i32;
         for j in 0..t_bucket {
-            out[lane * t_bucket + j] = if j < tree.len() {
+            buf[lane * t_bucket + j] = if j < tree.len() {
                 tree.node(j).token as i32
             } else {
                 root
             };
         }
     }
-    HostTensor::i32(vec![b, t_bucket], out)
 }
 
-/// Pack positions `tree_pos [b, t]`: node depth offsets from each lane's
-/// committed length; padding nodes sit at the root position.
-pub fn pack_tree_positions(
+/// Allocating wrapper over [`pack_tree_tokens_into`].
+pub fn pack_tree_tokens(trees: &[&TokenTree], t_bucket: usize) -> HostTensor {
+    let mut out = HostTensor::i32(vec![0], Vec::new());
+    pack_tree_tokens_into(trees, t_bucket, &mut out);
+    out
+}
+
+/// Pack positions `tree_pos [b, t]` into `out`'s reused slab: node depth
+/// offsets from each lane's committed length; padding nodes sit at the
+/// root position.
+pub fn pack_tree_positions_into(
     trees: &[&TokenTree],
     seq_lens: &[usize],
     t_bucket: usize,
-) -> HostTensor {
+    out: &mut HostTensor,
+) {
     let b = trees.len();
-    let mut out = vec![0i32; b * t_bucket];
+    let buf = out.reset_i32(&[b, t_bucket]);
     for (lane, tree) in trees.iter().enumerate() {
         debug_assert!(
             tree.len() <= t_bucket,
@@ -50,59 +63,100 @@ pub fn pack_tree_positions(
         );
         let base = seq_lens[lane];
         for j in 0..t_bucket {
-            out[lane * t_bucket + j] = if j < tree.len() {
+            buf[lane * t_bucket + j] = if j < tree.len() {
                 (base + tree.node(j).depth) as i32
             } else {
                 base as i32
             };
         }
     }
-    HostTensor::i32(vec![b, t_bucket], out)
+}
+
+/// Allocating wrapper over [`pack_tree_positions_into`].
+pub fn pack_tree_positions(
+    trees: &[&TokenTree],
+    seq_lens: &[usize],
+    t_bucket: usize,
+) -> HostTensor {
+    let mut out = HostTensor::i32(vec![0], Vec::new());
+    pack_tree_positions_into(trees, seq_lens, t_bucket, &mut out);
+    out
 }
 
 /// Pack dense additive masks `tree_mask [b, t, t]` from per-lane bitset
-/// masks (already padded to `t_bucket`).
-pub fn pack_tree_masks(masks: &[&TreeMask], t_bucket: usize) -> HostTensor {
+/// masks (already padded to `t_bucket`) into `out`'s reused slab — the
+/// largest packed input (`b · t²`), which is why it lives in the arena.
+pub fn pack_tree_masks_into(
+    masks: &[&TreeMask],
+    t_bucket: usize,
+    out: &mut HostTensor,
+) {
     let b = masks.len();
-    let mut out = vec![NEG_INF; b * t_bucket * t_bucket];
+    let buf = out.reset_f32(&[b, t_bucket, t_bucket]);
+    buf.fill(NEG_INF);
     for (lane, m) in masks.iter().enumerate() {
         debug_assert_eq!(m.bucket(), t_bucket);
-        m.write_dense(&mut out[lane * t_bucket * t_bucket
+        m.write_dense(&mut buf[lane * t_bucket * t_bucket
             ..(lane + 1) * t_bucket * t_bucket]);
     }
-    HostTensor::f32(vec![b, t_bucket, t_bucket], out)
 }
 
-/// `seq_len [b]` i32.
+/// Allocating wrapper over [`pack_tree_masks_into`].
+pub fn pack_tree_masks(masks: &[&TreeMask], t_bucket: usize) -> HostTensor {
+    let mut out = HostTensor::f32(vec![0], Vec::new());
+    pack_tree_masks_into(masks, t_bucket, &mut out);
+    out
+}
+
+/// `seq_len [b]` i32 into `out`'s reused slab.
+pub fn pack_seq_lens_into(seq_lens: &[usize], out: &mut HostTensor) {
+    let buf = out.reset_i32(&[seq_lens.len()]);
+    for (x, &s) in buf.iter_mut().zip(seq_lens) {
+        *x = s as i32;
+    }
+}
+
+/// Allocating wrapper over [`pack_seq_lens_into`].
 pub fn pack_seq_lens(seq_lens: &[usize]) -> HostTensor {
-    HostTensor::i32(
-        vec![seq_lens.len()],
-        seq_lens.iter().map(|&s| s as i32).collect(),
-    )
+    let mut out = HostTensor::i32(vec![0], Vec::new());
+    pack_seq_lens_into(seq_lens, &mut out);
+    out
 }
 
 /// Compact the early-stage hidden states `[b, t, d]` into `[b, t', d]`
-/// per-lane gathers (`keeps[lane]` = surviving original indices).  Pad rows
-/// are zeros (masked to self-attention; outputs ignored).
-pub fn compact_hidden(
+/// per-lane gathers (`keeps[lane]` = surviving original indices), writing
+/// into `out`'s reused slab.  Pad rows are zeros (masked to
+/// self-attention; outputs ignored).
+pub fn compact_hidden_into(
     hidden: &HostTensor,
     keeps: &[Vec<usize>],
     t_prime: usize,
-) -> HostTensor {
+    out: &mut HostTensor,
+) {
     let (b, t, d) = (hidden.shape[0], hidden.shape[1], hidden.shape[2]);
     assert_eq!(b, keeps.len());
     let src = hidden.as_f32();
-    let mut out = vec![0f32; b * t_prime * d];
+    let buf = out.reset_f32(&[b, t_prime, d]);
     for (lane, keep) in keeps.iter().enumerate() {
         debug_assert!(keep.len() <= t_prime);
         for (nj, &oj) in keep.iter().enumerate() {
             debug_assert!(oj < t);
             let s = (lane * t + oj) * d;
             let o = (lane * t_prime + nj) * d;
-            out[o..o + d].copy_from_slice(&src[s..s + d]);
+            buf[o..o + d].copy_from_slice(&src[s..s + d]);
         }
     }
-    HostTensor::f32(vec![b, t_prime, d], out)
+}
+
+/// Allocating wrapper over [`compact_hidden_into`].
+pub fn compact_hidden(
+    hidden: &HostTensor,
+    keeps: &[Vec<usize>],
+    t_prime: usize,
+) -> HostTensor {
+    let mut out = HostTensor::f32(vec![0], Vec::new());
+    compact_hidden_into(hidden, keeps, t_prime, &mut out);
+    out
 }
 
 /// Pack prompts into `tokens [b, P]` + `prompt_len [b]` for prefill.

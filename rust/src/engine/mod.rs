@@ -18,6 +18,7 @@
 //! baselines pay the identical substrate costs and comparisons isolate the
 //! algorithm.
 
+pub(crate) mod arena;
 pub mod core;
 pub mod inputs;
 pub mod probe;
@@ -145,6 +146,12 @@ pub struct EngineConfig {
     /// Max pages the prefix index may pin (`cache.prefix_lru_pages`;
     /// 0 = unbounded — pool pressure still evicts LRU entries on demand).
     pub prefix_lru_pages: usize,
+    /// Buffer per-step [`TokenDelta`] events (streaming).  Serving keeps
+    /// this on; throughput benches turn it off so the steady-state decode
+    /// loop stays allocation-free (delta text and token copies are the
+    /// only per-step heap traffic left).  Lifecycle notices (cancel /
+    /// preempt / resubmit) are emitted regardless.
+    pub collect_events: bool,
 }
 
 impl EngineConfig {
@@ -170,6 +177,7 @@ impl EngineConfig {
             watermark_pages: 0,
             prefix_cache: true,
             prefix_lru_pages: 0,
+            collect_events: true,
         }
     }
 

@@ -1,5 +1,15 @@
 //! Autoregressive baseline step: one `decode` call commits one token per
 //! request per iteration.
+//!
+//! This is the loop the zero-allocation contract is stated for
+//! (DESIGN.md § Execution backend): staged inputs, entry-point outputs,
+//! and the decode key all live in the engine's [`StepArena`], the KV
+//! batch tensor is the assembler's resident buffer, and commits land in
+//! already-allocated pages — so once shapes stabilize, a step touches the
+//! heap zero times (asserted by `tests/zero_alloc.rs` under a counting
+//! allocator).
+//!
+//! [`StepArena`]: super::arena::StepArena
 
 use std::time::Instant;
 
@@ -7,7 +17,6 @@ use anyhow::{Context, Result};
 
 use super::core::Engine;
 use crate::manifest::Entry;
-use crate::runtime::literal::HostTensor;
 use crate::runtime::registry::DynArg;
 use crate::tree::accept::argmax;
 
@@ -18,70 +27,86 @@ impl<'rt> Engine<'rt> {
         let b = self.rt.manifest.batch_bucket(b_real);
 
         // Lane layout: active requests first, dummy lanes repeat lane 0.
-        let mut lanes: Vec<usize> =
-            self.active.iter().map(|r| r.slot).collect();
-        while lanes.len() < b {
-            lanes.push(lanes[0]);
+        self.arena.lanes.clear();
+        self.arena.lanes.extend(self.active.iter().map(|r| r.slot));
+        while self.arena.lanes.len() < b {
+            let l0 = self.arena.lanes[0];
+            self.arena.lanes.push(l0);
         }
-        let mut toks = vec![0i32; b];
-        let mut lens = vec![0i32; b];
-        for (i, req) in self.active.iter().enumerate() {
-            toks[i] = req.pending_root as i32;
-            lens[i] = req.seq_len() as i32;
+        {
+            let toks = self.arena.dec_tok.reset_i32(&[b]);
+            for (i, req) in self.active.iter().enumerate() {
+                toks[i] = req.pending_root as i32;
+            }
+            for i in b_real..b {
+                toks[i] = toks[0];
+            }
         }
-        for i in b_real..b {
-            toks[i] = toks[0];
-            lens[i] = lens[0];
+        {
+            let lens = self.arena.dec_len.reset_i32(&[b]);
+            for (i, req) in self.active.iter().enumerate() {
+                lens[i] = req.seq_len() as i32;
+            }
+            for i in b_real..b {
+                lens[i] = lens[0];
+            }
         }
         // Incremental assembly: in the steady state only the single column
         // committed last step is copied per lane (§Perf).
-        let (kv_buf, asm) = self.assembler.assemble(&mut self.kv, &lanes);
+        let (kv_buf, asm) = self.assembler.assemble(&mut self.kv, &self.arena.lanes);
         let host_ready = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let key = crate::manifest::Manifest::key_for(
-            &self.cfg.size, Entry::Decode, None, b, None);
-        let tok_t = HostTensor::i32(vec![b], toks);
-        let len_t = HostTensor::i32(vec![b], lens);
-        let outs = self
-            .rt
-            .executable(&key)?
-            .run_mixed(&[
-                DynArg::Host(&tok_t),
-                DynArg::Host(&len_t),
+        // The decode key is pure function of (size, bucket): cache it and
+        // rebuild only when the bucket moves.
+        if self.arena.dec_bucket != b || self.arena.dec_key.is_empty() {
+            self.arena.dec_key = crate::manifest::Manifest::key_for(
+                &self.cfg.size, Entry::Decode, None, b, None);
+            self.arena.dec_bucket = b;
+        }
+        let exe = self.rt.executable(&self.arena.dec_key)?;
+        exe.run_mixed_into(
+            &[
+                DynArg::Host(&self.arena.dec_tok),
+                DynArg::Host(&self.arena.dec_len),
                 DynArg::Buf(kv_buf),
-            ])
-            .context("decode")?;
+            ],
+            &mut self.arena.dec_outs,
+        )
+        .context("decode")?;
         let exec = t1.elapsed().as_secs_f64();
 
-        let logits = &outs[0]; // [b, V]
-        let col_kv = &outs[2]; // [L, 2, b, 1, H, Dh]
+        // dec_outs: [0] logits [b, V], [2] col_kv [L, 2, b, 1, H, Dh].
         let v = self.model.vocab;
         let layers = self.model.n_layers;
         for i in 0..b_real {
-            let req = &mut self.active[i];
-            let pos = req.seq_len();
-            let committed = req.pending_root;
+            let pos = self.active[i].seq_len();
+            let committed = self.active[i].pending_root;
+            let slot = self.active[i].slot;
             self.kv.commit_columns(
-                req.slot,
-                col_kv.as_f32(),
+                slot,
+                self.arena.dec_outs[2].as_f32(),
                 (layers, b, 1),
                 0,
                 i,
                 &[(0, pos)],
             ).context("decode kv commit")?;
+            let next = {
+                let row = self.arena.dec_outs[0].f32_chunk(i * v, v);
+                argmax(row) as u32
+            };
+            let req = &mut self.active[i];
             req.tokens.push(committed);
-            let row = logits.f32_chunk(i * v, v);
-            req.pending_root = argmax(row) as u32;
+            req.pending_root = next;
             req.steps += 1;
             self.metrics.tokens_generated += 1;
             self.metrics.accept_len.record(1.0);
             // Freeze any newly completed page into the prefix index so
             // identical prefixes (e.g. a preempt-resume of this very
             // request) can adopt it.
-            self.kv.freeze_prefix(req.slot, &req.tokens);
+            self.kv.freeze_prefix(slot, &self.active[i].tokens);
             self.check_done(i);
-            self.emit_progress(i, vec![committed]);
+            self.emit_progress(i, &[committed]);
         }
         let total = t0.elapsed().as_secs_f64();
         self.metrics.step_time.record(total);

@@ -16,6 +16,15 @@
 //! 5. **Accept** the greedy path, commit its KV columns, update the
 //!    acceptance trackers (request-local + engine-global) and the
 //!    iteration-time model.
+//!
+//! The big packed tensors (tree tokens / positions / masks, compacted
+//! hidden states — `O(b·t²)` for the masks) and both stages' outputs are
+//! staged in the engine's [`StepArena`], so their slabs are reused across
+//! steps at a stable (batch, tree) bucket.  Tree construction and pruning
+//! keep their own small per-step structures; the *zero*-allocation
+//! contract is stated for the autoregressive decode loop only.
+//!
+//! [`StepArena`]: super::arena::StepArena
 
 use std::time::Instant;
 
@@ -23,8 +32,8 @@ use anyhow::{Context, Result};
 
 use super::core::Engine;
 use super::inputs::{
-    compact_hidden, medusa_top_tokens, pack_seq_lens, pack_tree_masks,
-    pack_tree_positions, pack_tree_tokens,
+    compact_hidden_into, medusa_top_tokens, pack_seq_lens_into,
+    pack_tree_masks_into, pack_tree_positions_into, pack_tree_tokens_into,
 };
 use super::EngineKind;
 use crate::estimator::alloc::{allocate_budget, allocation_gain};
@@ -271,46 +280,49 @@ impl<'rt> Engine<'rt> {
         let mut tr: Vec<&TokenTree> = trees.iter().collect();
         let mut mr: Vec<&TreeMask> = masks.iter().collect();
         let mut sl = seq_lens_real.clone();
-        let mut lanes: Vec<usize> =
-            self.active.iter().map(|r| r.slot).collect();
+        self.arena.lanes.clear();
+        self.arena.lanes.extend(self.active.iter().map(|r| r.slot));
         while tr.len() < b {
             tr.push(&trees[0]);
             mr.push(&masks[0]);
             sl.push(seq_lens_real[0]);
-            lanes.push(lanes[0]);
+            let l0 = self.arena.lanes[0];
+            self.arena.lanes.push(l0);
         }
 
-        let tree_tok = pack_tree_tokens(&tr, t_bucket);
-        let tree_pos = pack_tree_positions(&tr, &sl, t_bucket);
-        let tree_mask = pack_tree_masks(&mr, t_bucket);
-        let seq_len_t = pack_seq_lens(&sl);
+        pack_tree_tokens_into(&tr, t_bucket, &mut self.arena.tree_tok);
+        pack_tree_positions_into(&tr, &sl, t_bucket, &mut self.arena.tree_pos);
+        pack_tree_masks_into(&mr, t_bucket, &mut self.arena.tree_mask);
+        pack_seq_lens_into(&sl, &mut self.arena.seq_len);
         // The KV tensor is shared by both stages: the persistent batch
         // tensor is brought up to date incrementally — only columns
         // committed since the previous step (plus lane join/leave deltas)
         // are copied — and stays resident across both calls (§Perf
         // iterations 2-4).
-        let (kv_buf, asm) = self.assembler.assemble(&mut self.kv, &lanes);
+        let (kv_buf, asm) =
+            self.assembler.assemble(&mut self.kv, &self.arena.lanes);
         let host_prep = t0.elapsed().as_secs_f64();
 
         // ------------------------------------------------ 2. early stage
         let t1 = Instant::now();
         let early_key = crate::manifest::Manifest::key_for(
             &size, Entry::VerifyEarly, Some(n), b, Some(t_bucket));
-        let early_outs = self
-            .rt
+        self.rt
             .executable(&early_key)?
-            .run_mixed(&[
-                DynArg::Host(&tree_tok),
-                DynArg::Host(&tree_pos),
-                DynArg::Host(&tree_mask),
-                DynArg::Host(&seq_len_t),
-                DynArg::Buf(kv_buf),
-            ])
+            .run_mixed_into(
+                &[
+                    DynArg::Host(&self.arena.tree_tok),
+                    DynArg::Host(&self.arena.tree_pos),
+                    DynArg::Host(&self.arena.tree_mask),
+                    DynArg::Host(&self.arena.seq_len),
+                    DynArg::Buf(kv_buf),
+                ],
+                &mut self.arena.early_outs,
+            )
             .context("verify_early")?;
         let early_secs = t1.elapsed().as_secs_f64();
-        let hidden = &early_outs[0]; // [b, t, d]
-        let early_logits = &early_outs[1]; // [b, t, V]
-        let tree_kv_early = &early_outs[2]; // [n, 2, b, t, H, Dh]
+        // early_outs: [0] hidden [b, t, d], [1] early logits [b, t, V],
+        // [2] early tree_kv [n, 2, b, t, H, Dh].
 
         // ---------------------------------------------------- 3. pruning
         let th = Instant::now();
@@ -322,8 +334,8 @@ impl<'rt> Engine<'rt> {
             let mut keeps = Vec::with_capacity(b_real);
             for (i, tree) in trees.iter().enumerate() {
                 // Ragged batch: each lane prunes only its live rows.
-                let rows =
-                    early_logits.f32_chunk(i * t_bucket * v, tree.len() * v);
+                let rows = self.arena.early_outs[1]
+                    .f32_chunk(i * t_bucket * v, tree.len() * v);
                 let out = prune_tree(tree, rows, v, self.cfg.prune_top_k);
                 ptrees.push(out.tree);
                 keeps.push(out.keep);
@@ -344,47 +356,60 @@ impl<'rt> Engine<'rt> {
             .zip(&keeps)
             .map(|(m, k)| m.subsample(k, tp_bucket))
             .collect();
-        let hidden_c = compact_hidden(hidden, &pad_keeps(&keeps, b), tp_bucket);
+        let padded_keeps = pad_keeps(&keeps, b);
+        compact_hidden_into(
+            &self.arena.early_outs[0],
+            &padded_keeps,
+            tp_bucket,
+            &mut self.arena.hidden_c,
+        );
         let mut ptr: Vec<&TokenTree> = pruned.iter().collect();
         let mut pmr: Vec<&TreeMask> = pmasks.iter().collect();
         while ptr.len() < b {
             ptr.push(&pruned[0]);
             pmr.push(&pmasks[0]);
         }
-        let ppos = pack_tree_positions(&ptr, &sl, tp_bucket);
-        let pmask = pack_tree_masks(&pmr, tp_bucket);
-        let pseq = pack_seq_lens(&sl);
+        pack_tree_positions_into(&ptr, &sl, tp_bucket, &mut self.arena.ppos);
+        pack_tree_masks_into(&pmr, tp_bucket, &mut self.arena.pmask);
+        pack_seq_lens_into(&sl, &mut self.arena.pseq);
         let host_mid = th.elapsed().as_secs_f64();
 
         // ------------------------------------------------- 4. late stage
         let t2 = Instant::now();
         let late_key = crate::manifest::Manifest::key_for(
             &size, Entry::VerifyLate, Some(n), b, Some(tp_bucket));
-        let late_outs = self
-            .rt
+        self.rt
             .executable(&late_key)?
-            .run_mixed(&[
-                DynArg::Host(&hidden_c),
-                DynArg::Host(&ppos),
-                DynArg::Host(&pmask),
-                DynArg::Host(&pseq),
-                DynArg::Buf(kv_buf),
-            ])
+            .run_mixed_into(
+                &[
+                    DynArg::Host(&self.arena.hidden_c),
+                    DynArg::Host(&self.arena.ppos),
+                    DynArg::Host(&self.arena.pmask),
+                    DynArg::Host(&self.arena.pseq),
+                    DynArg::Buf(kv_buf),
+                ],
+                &mut self.arena.late_outs,
+            )
             .context("verify_late")?;
         let late_secs = t2.elapsed().as_secs_f64();
-        let logits = &late_outs[0]; // [b, t', V]
-        let medusa = &late_outs[1]; // [b, t', M, V]
-        let tree_kv_late = &late_outs[2]; // [L-n, 2, b, t', H, Dh]
+        // late_outs: [0] logits [b, t', V], [1] medusa [b, t', M, V],
+        // [2] late tree_kv [L-n, 2, b, t', H, Dh].
 
         // ------------------------------------------- 5. accept + commit
+        // Arena borrows below are scoped per statement so the `&mut self`
+        // calls at the end of each lane (check_done / emit_progress) see
+        // no live output borrows.
         let t3 = Instant::now();
         let mut committed_total = 0usize;
         for i in 0..b_real {
             let ptree = &pruned[i];
-            let rows = logits.f32_chunk(i * tp_bucket * v, ptree.len() * v);
-            let mut res = accept_path(ptree, rows, v);
+            let room = self.room(&self.active[i]);
+            let mut res = {
+                let rows = self.arena.late_outs[0]
+                    .f32_chunk(i * tp_bucket * v, ptree.len() * v);
+                accept_path(ptree, rows, v)
+            };
             // Respect the generation budget: truncate over-acceptance.
-            let room = self.room(&self.active[i]) ;
             let mut cut = res.path.len().min(room.max(1));
             // Also cut at the stop sequence: a tree step may accept past
             // "\n\n", which autoregressive decoding would never commit,
@@ -404,7 +429,7 @@ impl<'rt> Engine<'rt> {
                 res.path.truncate(cut);
                 res.tokens.truncate(cut);
                 let last = *res.path.last().unwrap();
-                let row = logits.f32_chunk(
+                let row = self.arena.late_outs[0].f32_chunk(
                     (i * tp_bucket + last) * v, v);
                 res.bonus = crate::tree::accept::argmax(row) as u32;
             }
@@ -426,7 +451,7 @@ impl<'rt> Engine<'rt> {
             let slot = self.active[i].slot;
             self.kv.commit_columns(
                 slot,
-                tree_kv_early.as_f32(),
+                self.arena.early_outs[2].as_f32(),
                 (n, b, t_bucket),
                 0,
                 i,
@@ -434,7 +459,7 @@ impl<'rt> Engine<'rt> {
             ).context("early kv commit")?;
             self.kv.commit_columns(
                 slot,
-                tree_kv_late.as_f32(),
+                self.arena.late_outs[2].as_f32(),
                 (layers - n, b, tp_bucket),
                 n,
                 i,
@@ -442,7 +467,7 @@ impl<'rt> Engine<'rt> {
             ).context("late kv commit")?;
             // Book-keeping.
             let deepest = *res.path.last().unwrap();
-            let med_rows = medusa
+            let med_rows = self.arena.late_outs[1]
                 .f32_chunk(
                     (i * tp_bucket + deepest) * m_heads * v,
                     m_heads * v,
@@ -479,7 +504,7 @@ impl<'rt> Engine<'rt> {
                 .prune_rate
                 .record(1.0 - (pruned[i].len() as f64 / t_live as f64));
             self.check_done(i);
-            self.emit_progress(i, res.tokens);
+            self.emit_progress(i, &res.tokens);
         }
         let host_post = t3.elapsed().as_secs_f64();
 

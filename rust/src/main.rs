@@ -20,6 +20,9 @@
 //! cross-request shared-prefix KV reuse (`cache.prefix_lru_pages` caps
 //! the pages it may pin); `--routing prefix-affinity` steers
 //! same-prefix traffic to the replica already holding the cached head.
+//! `--threads N` sets the sim backend's worker-thread count (0 = auto,
+//! 1 = deterministic spawn-free reproducibility mode; output bytes are
+//! identical at every setting).
 //!
 //! (The offline crate mirror has no clap; argument parsing is hand-rolled.)
 
@@ -107,11 +110,22 @@ fn parse_args() -> Result<Args> {
                 let v = val("--tree-budget")?;
                 a.sets.push(format!("planner.budget_mode=\"{v}\""));
             }
+            "--threads" => {
+                let v = val("--threads")?;
+                a.sets.push(format!("runtime.threads={v}"));
+            }
             "--sim" => a.sim = true,
             other => bail!("unknown flag {other:?} (try `propd help`)"),
         }
     }
     Ok(a)
+}
+
+/// The sim backend honours the `runtime.threads` knob (`--threads`);
+/// `threads = 1` is the spawn-free reproducibility mode.  Output bytes
+/// are identical at every setting — the knob only moves wall-clock.
+fn sim_config(cfg: &ServingConfig) -> SimConfig {
+    SimConfig { threads: cfg.runtime_threads, ..SimConfig::default() }
 }
 
 fn runtime_spec(
@@ -120,7 +134,7 @@ fn runtime_spec(
     sim: bool,
 ) -> RuntimeSpec {
     if sim {
-        return RuntimeSpec::Sim(SimConfig::default());
+        return RuntimeSpec::Sim(sim_config(cfg));
     }
     RuntimeSpec::Artifacts(propd::artifacts_dir(
         artifacts.or(Some(&cfg.artifacts)),
@@ -130,7 +144,7 @@ fn runtime_spec(
 fn load(cfg: &ServingConfig, artifacts: Option<&str>, sim: bool)
     -> Result<Runtime> {
     if sim {
-        return Ok(Runtime::sim(&SimConfig::default()));
+        return Ok(Runtime::sim(&sim_config(cfg)));
     }
     let dir = propd::artifacts_dir(artifacts.or(Some(&cfg.artifacts)));
     Runtime::load(&dir).with_context(|| {
@@ -233,7 +247,7 @@ fn main() -> Result<()> {
                  [--prompt p] [--max-new n] [--artifacts dir] \
                  [--replicas n] [--routing policy] [--page-size n] \
                  [--admission reserve|optimistic] [--prefix-cache on|off] \
-                 [--tree-budget per-lane|uniform] [--sim]"
+                 [--tree-budget per-lane|uniform] [--threads n] [--sim]"
             );
             Ok(())
         }

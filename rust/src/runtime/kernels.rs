@@ -1,0 +1,116 @@
+//! Blocked, threaded matmul kernels (std-only) for the compute-bound
+//! parts of the execution backend and the wall-clock benches.
+//!
+//! Bit-exactness contract: every output element accumulates its `k`
+//! products **in ascending k order starting from 0.0**, exactly like the
+//! naive triple loop.  Tiling moves only over the `i`/`j` dimensions and
+//! threading splits whole output rows, so neither changes any element's
+//! accumulation order — the blocked/threaded result is bit-identical to
+//! [`matmul_naive`] for every shape and thread count (verified by the
+//! property tests in `tests/exec_backend.rs`).
+
+use crate::runtime::pool;
+
+/// Column-tile width: one `j`-band of C and B stays resident in L1 while
+/// a full row of A streams past it.
+const TILE_J: usize = 64;
+
+/// Reference kernel: `C[i,j] = sum_k A[i,k] * B[k,j]`, plain triple loop
+/// with ascending-k accumulation.  A is `[m,k]` row-major, B `[k,n]`,
+/// C `[m,n]`.
+pub fn matmul_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Blocked/tiled matmul into a caller-owned slab, parallel over row
+/// bands (`threads = 1` runs inline with zero spawns).  `c` must be
+/// `m * n` elements; it is overwritten.
+pub fn matmul_blocked_into(
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    pool::for_each_row(threads, n, c, |i, crow| {
+        crow.fill(0.0);
+        let arow = &a[i * k..(i + 1) * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TILE_J).min(n);
+            // k is never tiled: within this j-band each c[j] sees its
+            // products for k = 0..K in one ascending pass, preserving
+            // the naive kernel's accumulation order bit-for-bit.
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n + j0..kk * n + j1];
+                for (bv, cv) in brow.iter().zip(&mut crow[j0..j1]) {
+                    *cv += av * bv;
+                }
+            }
+            j0 = j1;
+        }
+    });
+}
+
+/// Allocating convenience wrapper around [`matmul_blocked_into`].
+pub fn matmul_blocked(
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    matmul_blocked_into(threads, a, b, m, k, n, &mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive_square() {
+        let mut rng = Rng::new(0x1234);
+        let (m, k, n) = (32, 32, 32);
+        let a = random_mat(&mut rng, m * k);
+        let b = random_mat(&mut rng, k * n);
+        let want = matmul_naive(&a, &b, m, k, n);
+        for t in [1, 2, 7] {
+            assert_eq!(matmul_blocked(t, &a, &b, m, k, n), want);
+        }
+    }
+
+    #[test]
+    fn zero_dims_are_fine() {
+        assert!(matmul_blocked(4, &[], &[], 0, 3, 5).is_empty());
+        assert_eq!(matmul_blocked(4, &[], &[], 2, 0, 2), vec![0f32; 4]);
+        assert!(matmul_blocked(4, &[1.0, 2.0], &[], 2, 1, 0).is_empty());
+    }
+}

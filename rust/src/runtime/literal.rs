@@ -70,6 +70,46 @@ impl HostTensor {
         }
     }
 
+    pub fn as_i32_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            HostData::I32(v) => v,
+            HostData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Re-shape this tensor in place to a zero-filled f32 slab, reusing
+    /// the existing heap block whenever its capacity suffices (the arena
+    /// contract: steady-state repeat resets never allocate).  Converts
+    /// dtype if needed.
+    pub fn reset_f32(&mut self, shape: &[usize]) -> &mut [f32] {
+        let n: usize = shape.iter().product();
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        match &mut self.data {
+            HostData::F32(v) => {
+                v.clear();
+                v.resize(n, 0.0);
+            }
+            other => *other = HostData::F32(vec![0.0; n]),
+        }
+        self.as_f32_mut()
+    }
+
+    /// i32 twin of [`HostTensor::reset_f32`].
+    pub fn reset_i32(&mut self, shape: &[usize]) -> &mut [i32] {
+        let n: usize = shape.iter().product();
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        match &mut self.data {
+            HostData::I32(v) => {
+                v.clear();
+                v.resize(n, 0);
+            }
+            other => *other = HostData::I32(vec![0; n]),
+        }
+        self.as_i32_mut()
+    }
+
     /// Shape/dtype check against a manifest input spec.
     pub fn check(&self, spec: &TensorMeta) -> Result<()> {
         if self.shape != spec.shape {
@@ -145,5 +185,25 @@ mod tests {
         let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
         assert_eq!(t.f32_chunk(3, 3), &[4., 5., 6.]);
         assert_eq!(t.f32_chunk(1, 2), &[2., 3.]);
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_zero_fills() {
+        let mut t = HostTensor::f32(vec![2, 3], vec![1.0; 6]);
+        let ptr = t.as_f32().as_ptr();
+        // Same footprint: zeroed, same heap block.
+        let s = t.reset_f32(&[3, 2]);
+        assert!(s.iter().all(|&x| x == 0.0));
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.as_f32().as_ptr(), ptr);
+        // Shrink: still the same block.
+        t.reset_f32(&[2]);
+        assert_eq!(t.elements(), 2);
+        assert_eq!(t.as_f32().as_ptr(), ptr);
+        // Dtype flip replaces the payload.
+        let s = t.reset_i32(&[4]);
+        s[0] = 7;
+        assert_eq!(t.as_i32(), &[7, 0, 0, 0]);
+        assert_eq!(t.dtype(), DType::I32);
     }
 }

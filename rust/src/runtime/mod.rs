@@ -9,7 +9,9 @@
 //! A `Runtime` is single-threaded by design; each engine thread (server
 //! replica) owns its own instance, built from a [`RuntimeSpec`].
 
+pub mod kernels;
 pub mod literal;
+pub mod pool;
 pub mod registry;
 pub mod sim;
 pub mod weights;

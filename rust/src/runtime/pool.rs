@@ -1,0 +1,184 @@
+//! Scoped-thread parallel-for over disjoint row chunks (std-only).
+//!
+//! The sim backend's hot loops are embarrassingly parallel across output
+//! rows: every row is a pure function of read-only inputs, so splitting
+//! the output slab into disjoint `chunks_mut` bands and running each band
+//! on its own `std::thread::scope` worker is bit-identical to the serial
+//! loop regardless of thread count.  `threads <= 1` short-circuits to an
+//! inline serial loop with no spawns at all — that is the deterministic
+//! *and allocation-free* reproducibility mode (`runtime.threads = 1`):
+//! spawning scoped threads heap-allocates per spawn, so the zero-alloc
+//! steady-state contract (DESIGN.md § Execution backend) is stated for
+//! single-thread mode, while output bytes are identical in every mode.
+
+use std::num::NonZeroUsize;
+
+/// Hard ceiling on worker threads; the sim's row work saturates well
+/// before this and the clamp keeps `available_parallelism` on large
+/// hosts from spawning hundreds of tiny bands.
+pub const MAX_THREADS: usize = 64;
+
+/// Default worker count: `available_parallelism`, clamped to
+/// `[1, MAX_THREADS]`.  Used when `runtime.threads = 0` (auto).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+        .clamp(1, MAX_THREADS)
+}
+
+/// Resolve a configured thread knob: `0` means auto.
+pub fn resolve_threads(configured: usize) -> usize {
+    if configured == 0 {
+        default_threads()
+    } else {
+        configured.clamp(1, MAX_THREADS)
+    }
+}
+
+/// Run `f(row_index, row)` for every `row_len`-sized row of `out`,
+/// fanning rows out across up to `threads` scoped threads.  Rows are
+/// assigned to workers in contiguous bands, so each worker touches a
+/// disjoint region of `out` and per-row work stays cache-local.
+pub fn for_each_row<F>(threads: usize, row_len: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if row_len == 0 || out.is_empty() {
+        return;
+    }
+    debug_assert_eq!(out.len() % row_len, 0, "out is not whole rows");
+    let rows = out.len() / row_len;
+    let t = threads.max(1).min(rows);
+    if t <= 1 {
+        for (i, row) in out.chunks_mut(row_len).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let per = rows.div_ceil(t);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ci, band) in out.chunks_mut(per * row_len).enumerate() {
+            s.spawn(move || {
+                for (j, row) in band.chunks_mut(row_len).enumerate() {
+                    f(ci * per + j, row);
+                }
+            });
+        }
+    });
+}
+
+/// Two-slab variant: `f(row_index, a_row, b_row)` over paired rows of
+/// two outputs (e.g. a logits slab and a medusa slab that share the lane
+/// index).  Both slabs must hold the same number of rows; `b_row = 0`
+/// (no second output, e.g. zero medusa heads) passes an empty `b` row.
+pub fn for_each_row2<F>(
+    threads: usize,
+    a_row: usize,
+    a: &mut [f32],
+    b_row: usize,
+    b: &mut [f32],
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    if a_row == 0 || a.is_empty() {
+        return;
+    }
+    if b_row == 0 {
+        return for_each_row(threads, a_row, a, |i, ra| f(i, ra, &mut []));
+    }
+    debug_assert_eq!(a.len() % a_row, 0, "a is not whole rows");
+    debug_assert_eq!(b.len() % b_row, 0, "b is not whole rows");
+    let rows = a.len() / a_row;
+    debug_assert_eq!(rows, b.len() / b_row, "row-count mismatch");
+    let t = threads.max(1).min(rows);
+    if t <= 1 {
+        for (i, (ra, rb)) in
+            a.chunks_mut(a_row).zip(b.chunks_mut(b_row)).enumerate()
+        {
+            f(i, ra, rb);
+        }
+        return;
+    }
+    let per = rows.div_ceil(t);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ci, (ba, bb)) in a
+            .chunks_mut(per * a_row)
+            .zip(b.chunks_mut(per * b_row))
+            .enumerate()
+        {
+            s.spawn(move || {
+                for (j, (ra, rb)) in
+                    ba.chunks_mut(a_row).zip(bb.chunks_mut(b_row)).enumerate()
+                {
+                    f(ci * per + j, ra, rb);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_threads_is_clamped() {
+        let t = default_threads();
+        assert!((1..=MAX_THREADS).contains(&t));
+        assert_eq!(resolve_threads(0), t);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(MAX_THREADS + 100), MAX_THREADS);
+    }
+
+    #[test]
+    fn parallel_rows_match_serial() {
+        let rows = 37;
+        let row_len = 13;
+        let fill = |i: usize, row: &mut [f32]| {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = (i * 1000 + j) as f32;
+            }
+        };
+        let mut serial = vec![0f32; rows * row_len];
+        for_each_row(1, row_len, &mut serial, fill);
+        for t in [2, 3, 8, 64] {
+            let mut par = vec![0f32; rows * row_len];
+            for_each_row(t, row_len, &mut par, fill);
+            assert_eq!(par, serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn paired_rows_match_serial() {
+        let rows = 9;
+        let (ar, br) = (7, 11);
+        let fill = |i: usize, ra: &mut [f32], rb: &mut [f32]| {
+            ra.fill(i as f32);
+            rb.fill(-(i as f32));
+        };
+        let mut a1 = vec![0f32; rows * ar];
+        let mut b1 = vec![0f32; rows * br];
+        for_each_row2(1, ar, &mut a1, br, &mut b1, fill);
+        let mut a4 = vec![0f32; rows * ar];
+        let mut b4 = vec![0f32; rows * br];
+        for_each_row2(4, ar, &mut a4, br, &mut b4, fill);
+        assert_eq!(a4, a1);
+        assert_eq!(b4, b1);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs_are_noops() {
+        let mut empty: Vec<f32> = Vec::new();
+        for_each_row(4, 8, &mut empty, |_, _| panic!("no rows expected"));
+        let mut one = vec![0f32; 5];
+        for_each_row(16, 5, &mut one, |i, row| {
+            assert_eq!(i, 0);
+            row.fill(1.0);
+        });
+        assert!(one.iter().all(|&x| x == 1.0));
+    }
+}

@@ -46,6 +46,11 @@ pub struct Executable {
     pub compile_seconds: f64,
 }
 
+/// Fixed input-resolution width: no manifest entry takes more than this
+/// many dynamic inputs, so [`Executable::run_mixed_into`] resolves args
+/// into a stack array instead of a per-call `Vec`.
+pub const MAX_INPUTS: usize = 8;
+
 impl Executable {
     /// Execute with the given dynamic inputs.  Returns the output tensors
     /// in manifest order.
@@ -57,6 +62,21 @@ impl Executable {
     /// Like [`run`](Self::run) but accepting pre-uploaded device buffers.
     /// Shape checking applies to host args; buffer args are trusted.
     pub fn run_mixed(&self, dyn_inputs: &[DynArg]) -> Result<Vec<HostTensor>> {
+        let mut outs = Vec::new();
+        self.run_mixed_into(dyn_inputs, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// Allocation-free core of [`run_mixed`](Self::run_mixed): inputs
+    /// resolve into a stack array and outputs land in caller-owned
+    /// tensors whose slabs are reused across calls (see
+    /// [`Sim::execute_into`]).  The engine's steady-state decode loop
+    /// runs entirely through this path.
+    pub fn run_mixed_into(
+        &self,
+        dyn_inputs: &[DynArg],
+        outs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
         if dyn_inputs.len() != self.meta.inputs.len() {
             bail!(
                 "{}: got {} dynamic inputs, expected {}",
@@ -65,21 +85,47 @@ impl Executable {
                 self.meta.inputs.len()
             );
         }
-        let mut resolved: Vec<&HostTensor> =
-            Vec::with_capacity(dyn_inputs.len());
-        for (arg, spec) in dyn_inputs.iter().zip(&self.meta.inputs) {
-            match arg {
+        if dyn_inputs.len() > MAX_INPUTS {
+            bail!(
+                "{}: {} dynamic inputs exceed MAX_INPUTS ({MAX_INPUTS})",
+                self.meta.key,
+                dyn_inputs.len()
+            );
+        }
+        fn resolve<'a>(
+            key: &str,
+            arg: &DynArg<'a>,
+            spec: &crate::manifest::TensorMeta,
+        ) -> Result<&'a HostTensor> {
+            match *arg {
                 DynArg::Host(t) => {
-                    t.check(spec).with_context(|| self.meta.key.clone())?;
-                    resolved.push(t);
+                    t.check(spec).with_context(|| key.to_string())?;
+                    Ok(t)
                 }
-                DynArg::Buf(b) => resolved.push(&b.tensor),
+                DynArg::Buf(b) => Ok(&b.tensor),
             }
         }
-        let outs = self
-            .sim
-            .execute(&self.meta, &self.model, &resolved)
-            .with_context(|| self.meta.key.clone())?;
+        if dyn_inputs.is_empty() {
+            self.sim
+                .execute_into(&self.meta, &self.model, &[], outs)
+                .with_context(|| self.meta.key.clone())?;
+        } else {
+            let key = self.meta.key.as_str();
+            let first = resolve(key, &dyn_inputs[0], &self.meta.inputs[0])?;
+            let mut resolved: [&HostTensor; MAX_INPUTS] = [first; MAX_INPUTS];
+            for i in 1..dyn_inputs.len() {
+                resolved[i] =
+                    resolve(key, &dyn_inputs[i], &self.meta.inputs[i])?;
+            }
+            self.sim
+                .execute_into(
+                    &self.meta,
+                    &self.model,
+                    &resolved[..dyn_inputs.len()],
+                    outs,
+                )
+                .with_context(|| self.meta.key.clone())?;
+        }
         if outs.len() != self.meta.outputs.len() {
             bail!(
                 "{}: got {} outputs, manifest says {}",
@@ -88,7 +134,7 @@ impl Executable {
                 self.meta.outputs.len()
             );
         }
-        Ok(outs)
+        Ok(())
     }
 }
 

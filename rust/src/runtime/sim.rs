@@ -18,6 +18,17 @@
 //! of the greedy continuation h+1 steps past the base prediction, so
 //! speculation is perfect and acceptance lengths are long — a best-case
 //! stand-in, useful for exercising the scheduler and planner hot paths.
+//!
+//! Execution backend (DESIGN.md § Execution backend): a context is not a
+//! `Vec<u32>` but a [`Ctx`] — the running FNV-1a fold plus the first
+//! token — because the oracle only ever consumes a context through that
+//! fold.  Entry points write into caller-owned output slabs
+//! ([`Sim::execute_into`]) and fan per-lane row work across a scoped
+//! thread pool ([`crate::runtime::pool`]).  Every row is a pure function
+//! of read-only inputs, so output bytes are identical for every
+//! `threads` value; `threads = 1` additionally runs spawn-free and
+//! allocation-free on the prefill/decode paths (the reproducibility
+//! mode).
 
 use anyhow::{bail, Result};
 
@@ -25,6 +36,7 @@ use crate::manifest::{
     ArtifactMeta, DType, Entry, Manifest, ModelMeta, TensorMeta,
 };
 use crate::runtime::literal::HostTensor;
+use crate::runtime::pool;
 use crate::tree::accept::argmax;
 use crate::util::rng::Rng;
 
@@ -56,6 +68,10 @@ pub struct SimConfig {
     /// only acceptance lengths (and therefore the per-lane allocator's
     /// decisions) diverge between request classes.
     pub medusa_flaky_below: u32,
+    /// Worker threads for per-lane row work (`runtime.threads`): 0 = auto
+    /// (`available_parallelism` clamped), 1 = serial spawn-free
+    /// reproducibility mode.  Output bytes are identical in every mode.
+    pub threads: usize,
 }
 
 impl Default for SimConfig {
@@ -76,8 +92,14 @@ impl Default for SimConfig {
             tree_buckets: vec![4, 8, 16, 32, 64],
             seed: 0x5eed,
             medusa_flaky_below: 0,
+            threads: 0,
         }
     }
+}
+
+/// Tensor-spec literal shared by the manifest builders.
+fn tensor(name: &str, dtype: DType, shape: Vec<usize>) -> TensorMeta {
+    TensorMeta { name: name.to_string(), shape, dtype }
 }
 
 impl SimConfig {
@@ -105,26 +127,18 @@ impl SimConfig {
         let (l, b_kv) = (self.n_layers, self.max_seq);
         let (h, dh) = (self.n_heads, self.head_dim);
         let mut artifacts = Vec::new();
-        let i32s = |name: &str, shape: Vec<usize>| TensorMeta {
-            name: name.to_string(),
-            shape,
-            dtype: DType::I32,
-        };
-        let f32s = |name: &str, shape: Vec<usize>| TensorMeta {
-            name: name.to_string(),
-            shape,
-            dtype: DType::F32,
-        };
         for &b in &self.batch_buckets {
-            let kv = f32s("kv", vec![l, 2, b, b_kv, h, dh]);
+            // One kv spec per batch bucket, shared by every entry in the
+            // bucket's grid cell.
+            let kv = tensor("kv", DType::F32, vec![l, 2, b, b_kv, h, dh]);
             artifacts.push(self.art(
                 Entry::Prefill,
                 None,
                 b,
                 None,
                 vec![
-                    i32s("tok", vec![b, self.max_prompt]),
-                    i32s("prompt_len", vec![b]),
+                    tensor("tok", DType::I32, vec![b, self.max_prompt]),
+                    tensor("prompt_len", DType::I32, vec![b]),
                 ],
                 vec!["logits", "medusa", "block_kv"],
             ));
@@ -133,39 +147,16 @@ impl SimConfig {
                 None,
                 b,
                 None,
-                vec![i32s("tok", vec![b]), i32s("seq_len", vec![b]), kv.clone()],
+                vec![
+                    tensor("tok", DType::I32, vec![b]),
+                    tensor("seq_len", DType::I32, vec![b]),
+                    kv.clone(),
+                ],
                 vec!["logits", "medusa", "col_kv"],
             ));
             for &n in &self.early_layers {
                 for &t in &self.tree_buckets {
-                    artifacts.push(self.art(
-                        Entry::VerifyEarly,
-                        Some(n),
-                        b,
-                        Some(t),
-                        vec![
-                            i32s("tree_tok", vec![b, t]),
-                            i32s("tree_pos", vec![b, t]),
-                            f32s("tree_mask", vec![b, t, t]),
-                            i32s("seq_len", vec![b]),
-                            kv.clone(),
-                        ],
-                        vec!["hidden", "early_logits", "tree_kv"],
-                    ));
-                    artifacts.push(self.art(
-                        Entry::VerifyLate,
-                        Some(n),
-                        b,
-                        Some(t),
-                        vec![
-                            f32s("hidden", vec![b, t, self.d_model]),
-                            i32s("tree_pos", vec![b, t]),
-                            f32s("tree_mask", vec![b, t, t]),
-                            i32s("seq_len", vec![b]),
-                            kv.clone(),
-                        ],
-                        vec!["logits", "medusa", "tree_kv"],
-                    ));
+                    artifacts.extend(self.verify_pair(n, b, t, &kv));
                 }
             }
         }
@@ -181,6 +172,52 @@ impl SimConfig {
             vec![(self.size.clone(), model)],
             artifacts,
         )
+    }
+
+    /// Shared artifact-spec helper: both verify entries of one
+    /// (prune layer, batch, tree) grid cell derive from the same tree
+    /// tensor specs and the bucket's single `kv` spec, instead of each
+    /// cell restating every input literal (the old form re-built `kv`
+    /// and four tree tensors per entry across the whole grid).
+    fn verify_pair(
+        &self,
+        n: usize,
+        b: usize,
+        t: usize,
+        kv: &TensorMeta,
+    ) -> [ArtifactMeta; 2] {
+        let tree_pos = tensor("tree_pos", DType::I32, vec![b, t]);
+        let tree_mask = tensor("tree_mask", DType::F32, vec![b, t, t]);
+        let seq_len = tensor("seq_len", DType::I32, vec![b]);
+        let early = self.art(
+            Entry::VerifyEarly,
+            Some(n),
+            b,
+            Some(t),
+            vec![
+                tensor("tree_tok", DType::I32, vec![b, t]),
+                tree_pos.clone(),
+                tree_mask.clone(),
+                seq_len.clone(),
+                kv.clone(),
+            ],
+            vec!["hidden", "early_logits", "tree_kv"],
+        );
+        let late = self.art(
+            Entry::VerifyLate,
+            Some(n),
+            b,
+            Some(t),
+            vec![
+                tensor("hidden", DType::F32, vec![b, t, self.d_model]),
+                tree_pos,
+                tree_mask,
+                seq_len,
+                kv.clone(),
+            ],
+            vec!["logits", "medusa", "tree_kv"],
+        );
+        [early, late]
     }
 
     fn art(
@@ -208,38 +245,72 @@ impl SimConfig {
     }
 }
 
+/// A token context, reduced to what the oracle actually consumes: the
+/// running FNV-1a fold (seeding the per-row RNG) and the first token
+/// (driving the flaky-medusa classification).  `Copy`, so tree
+/// verification forks a node's context from its lane prefix without
+/// cloning a `Vec` — the allocation-free equivalent of the old
+/// `Vec<u32>` contexts, bit-exact by construction.
+#[derive(Debug, Clone, Copy)]
+struct Ctx {
+    h: u64,
+    first: Option<u32>,
+}
+
+impl Ctx {
+    fn new(seed: u64) -> Self {
+        Ctx { h: 0xcbf2_9ce4_8422_2325u64 ^ seed, first: None }
+    }
+
+    #[inline]
+    fn push(&mut self, t: u32) {
+        self.h ^= t as u64 + 1;
+        self.h = self.h.wrapping_mul(0x1000_0000_01b3);
+        if self.first.is_none() {
+            self.first = Some(t);
+        }
+    }
+}
+
 /// The executor: stateless; everything derives from `seed` + inputs.
 #[derive(Debug, Clone, Copy)]
 pub struct Sim {
     pub seed: u64,
     /// See [`SimConfig::medusa_flaky_below`].
     pub medusa_flaky_below: u32,
+    /// Resolved worker-thread count (never 0; 1 = serial).
+    pub threads: usize,
 }
 
 impl Sim {
     pub fn new(seed: u64) -> Self {
-        Sim { seed, medusa_flaky_below: 0 }
+        Sim { seed, medusa_flaky_below: 0, threads: 1 }
     }
 
-    /// Executor for a [`SimConfig`] (carries the flakiness knob).
+    /// Executor for a [`SimConfig`] (carries the flakiness and threading
+    /// knobs; `threads = 0` resolves to `available_parallelism`).
     pub fn of(cfg: &SimConfig) -> Self {
-        Sim { seed: cfg.seed, medusa_flaky_below: cfg.medusa_flaky_below }
-    }
-
-    /// Deterministic logits row for a token context (FNV-1a fold → xoshiro
-    /// stream).  The same context always yields the same row, which is all
-    /// the greedy-consistency invariants need.
-    fn row(&self, ctx: &[u32], vocab: usize) -> Vec<f32> {
-        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.seed;
-        for &t in ctx {
-            h ^= t as u64 + 1;
-            h = h.wrapping_mul(0x1000_0000_01b3);
+        Sim {
+            seed: cfg.seed,
+            medusa_flaky_below: cfg.medusa_flaky_below,
+            threads: pool::resolve_threads(cfg.threads),
         }
-        let mut rng = Rng::new(h);
-        (0..vocab).map(|_| (rng.f64() * 8.0) as f32).collect()
     }
 
-    /// Base logits + medusa head rows for a context.  Head `h` carries the
+    /// Deterministic logits row for a context (FNV-1a fold → xoshiro
+    /// stream), written into a caller-owned slice.  The same context
+    /// always yields the same row, which is all the greedy-consistency
+    /// invariants need.
+    fn row_into(&self, ctx: Ctx, out: &mut [f32]) {
+        let mut rng = Rng::new(ctx.h);
+        for x in out.iter_mut() {
+            *x = (rng.f64() * 8.0) as f32;
+        }
+    }
+
+    /// Base logits + medusa head rows for a context, written into
+    /// caller-owned slices (`medusa.len()` must be a multiple of
+    /// `vocab`; its row count is the head count).  Head `h` carries the
     /// logits of the greedy continuation `h+1` steps beyond the base
     /// prediction (so its argmax is the token at offset `h+2`).
     ///
@@ -247,149 +318,187 @@ impl Sim {
     /// deterministic junk head rows, decorrelated from the true
     /// continuation by an out-of-vocabulary marker — a worst-case
     /// speculator for skewed-acceptance workloads.
-    fn base_and_medusa(
+    fn base_and_medusa_into(
         &self,
-        ctx: &[u32],
+        ctx: Ctx,
         vocab: usize,
-        heads: usize,
-    ) -> (Vec<f32>, Vec<f32>) {
-        let base = self.row(ctx, vocab);
+        base: &mut [f32],
+        medusa: &mut [f32],
+    ) {
+        self.row_into(ctx, base);
         let flaky = self.medusa_flaky_below > 0
-            && ctx.first().map_or(false, |&t| t < self.medusa_flaky_below);
-        let mut rolled = ctx.to_vec();
-        rolled.push(argmax(&base) as u32);
-        let mut medusa = Vec::with_capacity(heads * vocab);
-        for h in 0..heads {
+            && ctx.first.map_or(false, |t| t < self.medusa_flaky_below);
+        let mut rolled = ctx;
+        rolled.push(argmax(base) as u32);
+        for (h, mrow) in medusa.chunks_mut(vocab).enumerate() {
             // The true continuation row: rolled forward regardless of
             // flakiness so every head offset stays oracle-consistent.
-            let next = self.row(&rolled, vocab);
+            self.row_into(rolled, mrow);
+            let next_arg = argmax(mrow) as u32;
             if flaky {
-                let mut junk_ctx = ctx.to_vec();
-                junk_ctx.push((vocab + h) as u32);
-                medusa.extend_from_slice(&self.row(&junk_ctx, vocab));
-            } else {
-                medusa.extend_from_slice(&next);
+                let mut junk = ctx;
+                junk.push((vocab + h) as u32);
+                self.row_into(junk, mrow);
             }
-            rolled.push(argmax(&next) as u32);
+            rolled.push(next_arg);
         }
-        (base, medusa)
     }
 
     /// Recover the committed token prefix of one lane from a KV tensor
     /// shaped `[L, 2, b, S, H, Dh]` (element 0 of each column carries the
-    /// committed token; see module docs).
-    fn kv_prefix(
+    /// committed token; see module docs), folded directly into a [`Ctx`].
+    fn kv_prefix_ctx(
         &self,
         kv: &[f32],
-        b: usize,
         s: usize,
         col: usize,
         lane: usize,
         len: usize,
         vocab: usize,
-    ) -> Vec<u32> {
+    ) -> Ctx {
+        let mut ctx = Ctx::new(self.seed);
         let lane_base = lane * s * col;
-        (0..len.min(s))
-            .map(|pos| {
-                let v = kv[lane_base + pos * col];
-                (v.round().max(0.0) as usize).min(vocab - 1) as u32
-            })
-            .collect()
+        for pos in 0..len.min(s) {
+            let v = kv[lane_base + pos * col];
+            ctx.push((v.round().max(0.0) as usize).min(vocab - 1) as u32);
+        }
+        ctx
     }
 
-    /// Ancestor chain (root → node, inclusive) of tree node `j` in one
-    /// lane, recovered from the dense additive mask and position row.
-    fn path_tokens(
-        node_tok: impl Fn(usize) -> u32,
+    /// Fold the ancestor chain (root → node, inclusive) of one tree node
+    /// into `ctx`, recovered from the dense additive mask and position
+    /// row.  `anc` is caller scratch, reused across nodes.  Ancestor
+    /// positions are distinct (one per depth), so the unstable sort is
+    /// deterministic.
+    fn fold_path(
+        ctx: &mut Ctx,
+        anc: &mut Vec<usize>,
         mask_row: &[f32],
         pos_row: &[i32],
-    ) -> Vec<u32> {
-        let mut anc: Vec<usize> = (0..mask_row.len())
-            .filter(|&i| mask_row[i] >= -0.5)
-            .collect();
-        anc.sort_by_key(|&i| pos_row[i]);
-        anc.into_iter().map(node_tok).collect()
+        node_tok: impl Fn(usize) -> u32,
+    ) {
+        anc.clear();
+        anc.extend((0..mask_row.len()).filter(|&i| mask_row[i] >= -0.5));
+        anc.sort_unstable_by_key(|&i| pos_row[i]);
+        for &i in anc.iter() {
+            ctx.push(node_tok(i));
+        }
     }
 
-    /// Execute one entry point.  `inputs` are resolved host tensors in
-    /// manifest order; outputs follow `meta.outputs`.
+    /// Execute one entry point, allocating fresh outputs.  Thin wrapper
+    /// over [`Sim::execute_into`] for callers without an arena.
     pub fn execute(
         &self,
         meta: &ArtifactMeta,
         model: &ModelMeta,
         inputs: &[&HostTensor],
     ) -> Result<Vec<HostTensor>> {
-        match meta.entry {
-            Entry::Prefill => self.prefill(meta, model, inputs),
-            Entry::Decode => self.decode(meta, model, inputs),
-            Entry::VerifyEarly => self.verify_early(meta, model, inputs),
-            Entry::VerifyLate => self.verify_late(meta, model, inputs),
-        }
+        let mut outs = Vec::new();
+        self.execute_into(meta, model, inputs, &mut outs)?;
+        Ok(outs)
     }
 
-    fn prefill(
+    /// Execute one entry point into caller-owned output tensors.
+    /// `inputs` are resolved host tensors in manifest order; `outs` is
+    /// resized to `meta.outputs` order and its slabs are reused across
+    /// calls (steady-state repeat calls allocate nothing).
+    pub fn execute_into(
         &self,
         meta: &ArtifactMeta,
         model: &ModelMeta,
         inputs: &[&HostTensor],
-    ) -> Result<Vec<HostTensor>> {
+        outs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
+        match meta.entry {
+            Entry::Prefill => self.prefill_into(meta, model, inputs, outs),
+            Entry::Decode => self.decode_into(meta, model, inputs, outs),
+            Entry::VerifyEarly => {
+                self.verify_early_into(meta, model, inputs, outs)
+            }
+            Entry::VerifyLate => {
+                self.verify_late_into(meta, model, inputs, outs)
+            }
+        }
+    }
+
+    fn prefill_into(
+        &self,
+        meta: &ArtifactMeta,
+        model: &ModelMeta,
+        inputs: &[&HostTensor],
+        outs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
         let (b, p, v, m) =
             (meta.batch, model.max_prompt, model.vocab, model.n_medusa);
         let (l, col) = (model.n_layers, model.n_heads * model.head_dim);
         let toks = inputs[0].as_i32();
         let lens = inputs[1].as_i32();
-        let mut logits = vec![0f32; b * v];
-        let mut medusa = vec![0f32; b * m * v];
-        let mut block_kv = vec![0f32; l * 2 * b * p * col];
+        let (o_logits, o_medusa, o_kv) = out3(outs);
+        let logits = o_logits.reset_f32(&[b, v]);
+        let medusa = o_medusa.reset_f32(&[b, m, v]);
+        pool::for_each_row2(
+            self.threads,
+            v,
+            logits,
+            m * v,
+            medusa,
+            |lane, lrow, mrow| {
+                let len = (lens[lane].max(0) as usize).min(p);
+                let mut ctx = Ctx::new(self.seed);
+                for j in 0..len {
+                    ctx.push(toks[lane * p + j] as u32);
+                }
+                self.base_and_medusa_into(ctx, v, lrow, mrow);
+            },
+        );
+        let block_kv = o_kv
+            .reset_f32(&[l, 2, b, p, model.n_heads, model.head_dim]);
         for lane in 0..b {
             let len = (lens[lane].max(0) as usize).min(p);
-            let ctx: Vec<u32> =
-                (0..len).map(|j| toks[lane * p + j] as u32).collect();
-            let (base, med) = self.base_and_medusa(&ctx, v, m);
-            logits[lane * v..(lane + 1) * v].copy_from_slice(&base);
-            medusa[lane * m * v..(lane + 1) * m * v].copy_from_slice(&med);
             for li in 0..l {
                 for c in 0..2 {
-                    for (j, &t) in ctx.iter().enumerate() {
+                    for j in 0..len {
                         let off = (((li * 2 + c) * b + lane) * p + j) * col;
-                        block_kv[off] = t as f32;
+                        block_kv[off] = toks[lane * p + j] as u32 as f32;
                     }
                 }
             }
         }
-        Ok(vec![
-            HostTensor::f32(vec![b, v], logits),
-            HostTensor::f32(vec![b, m, v], medusa),
-            HostTensor::f32(
-                vec![l, 2, b, p, model.n_heads, model.head_dim],
-                block_kv,
-            ),
-        ])
+        Ok(())
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         meta: &ArtifactMeta,
         model: &ModelMeta,
         inputs: &[&HostTensor],
-    ) -> Result<Vec<HostTensor>> {
+        outs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
         let (b, v, m) = (meta.batch, model.vocab, model.n_medusa);
         let (l, s) = (model.n_layers, model.max_seq);
         let col = model.n_heads * model.head_dim;
         let toks = inputs[0].as_i32();
         let lens = inputs[1].as_i32();
         let kv = inputs[2].as_f32();
-        let mut logits = vec![0f32; b * v];
-        let mut medusa = vec![0f32; b * m * v];
-        let mut col_kv = vec![0f32; l * 2 * b * col];
+        let (o_logits, o_medusa, o_kv) = out3(outs);
+        let logits = o_logits.reset_f32(&[b, v]);
+        let medusa = o_medusa.reset_f32(&[b, m, v]);
+        pool::for_each_row2(
+            self.threads,
+            v,
+            logits,
+            m * v,
+            medusa,
+            |lane, lrow, mrow| {
+                let len = lens[lane].max(0) as usize;
+                let mut ctx = self.kv_prefix_ctx(kv, s, col, lane, len, v);
+                ctx.push((toks[lane].max(0) as usize).min(v - 1) as u32);
+                self.base_and_medusa_into(ctx, v, lrow, mrow);
+            },
+        );
+        let col_kv = o_kv
+            .reset_f32(&[l, 2, b, 1, model.n_heads, model.head_dim]);
         for lane in 0..b {
-            let len = lens[lane].max(0) as usize;
-            let mut ctx =
-                self.kv_prefix(kv, b, s, col, lane, len, v);
-            ctx.push((toks[lane].max(0) as usize).min(v - 1) as u32);
-            let (base, med) = self.base_and_medusa(&ctx, v, m);
-            logits[lane * v..(lane + 1) * v].copy_from_slice(&base);
-            medusa[lane * m * v..(lane + 1) * m * v].copy_from_slice(&med);
             for li in 0..l {
                 for c in 0..2 {
                     let off = ((li * 2 + c) * b + lane) * col;
@@ -397,22 +506,16 @@ impl Sim {
                 }
             }
         }
-        Ok(vec![
-            HostTensor::f32(vec![b, v], logits),
-            HostTensor::f32(vec![b, m, v], medusa),
-            HostTensor::f32(
-                vec![l, 2, b, 1, model.n_heads, model.head_dim],
-                col_kv,
-            ),
-        ])
+        Ok(())
     }
 
-    fn verify_early(
+    fn verify_early_into(
         &self,
         meta: &ArtifactMeta,
         model: &ModelMeta,
         inputs: &[&HostTensor],
-    ) -> Result<Vec<HostTensor>> {
+        outs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
         let b = meta.batch;
         let t = match meta.tree {
             Some(t) => t,
@@ -426,24 +529,28 @@ impl Sim {
         let tm = inputs[2].as_f32();
         let lens = inputs[3].as_i32();
         let kv = inputs[4].as_f32();
-        let mut hidden = vec![0f32; b * t * d];
-        let mut early = vec![0f32; b * t * v];
-        let mut tree_kv = vec![0f32; n * 2 * b * t * col];
-        for lane in 0..b {
+        let (o_hidden, o_early, o_kv) = out3(outs);
+        let early = o_early.reset_f32(&[b, t, v]);
+        pool::for_each_row(self.threads, t * v, early, |lane, erow| {
             let len = lens[lane].max(0) as usize;
-            let prefix = self.kv_prefix(kv, b, s, col, lane, len, v);
+            let prefix = self.kv_prefix_ctx(kv, s, col, lane, len, v);
             let pos_row = &tp[lane * t..(lane + 1) * t];
+            let mut anc: Vec<usize> = Vec::with_capacity(t);
+            for (j, row) in erow.chunks_mut(v).enumerate() {
+                let mask_row =
+                    &tm[(lane * t + j) * t..(lane * t + j + 1) * t];
+                let mut ctx = prefix;
+                Self::fold_path(&mut ctx, &mut anc, mask_row, pos_row, |i| {
+                    tt[lane * t + i] as u32
+                });
+                self.row_into(ctx, row);
+            }
+        });
+        let hidden = o_hidden.reset_f32(&[b, t, d]);
+        let tree_kv = o_kv
+            .reset_f32(&[n, 2, b, t, model.n_heads, model.head_dim]);
+        for lane in 0..b {
             for j in 0..t {
-                let mask_row = &tm[(lane * t + j) * t..(lane * t + j + 1) * t];
-                let mut ctx = prefix.clone();
-                ctx.extend(Self::path_tokens(
-                    |i| tt[lane * t + i] as u32,
-                    mask_row,
-                    pos_row,
-                ));
-                let row = self.row(&ctx, v);
-                early[(lane * t + j) * v..(lane * t + j + 1) * v]
-                    .copy_from_slice(&row);
                 hidden[(lane * t + j) * d] = tt[lane * t + j] as f32;
                 for li in 0..n {
                     for c in 0..2 {
@@ -453,22 +560,16 @@ impl Sim {
                 }
             }
         }
-        Ok(vec![
-            HostTensor::f32(vec![b, t, d], hidden),
-            HostTensor::f32(vec![b, t, v], early),
-            HostTensor::f32(
-                vec![n, 2, b, t, model.n_heads, model.head_dim],
-                tree_kv,
-            ),
-        ])
+        Ok(())
     }
 
-    fn verify_late(
+    fn verify_late_into(
         &self,
         meta: &ArtifactMeta,
         model: &ModelMeta,
         inputs: &[&HostTensor],
-    ) -> Result<Vec<HostTensor>> {
+        outs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
         let b = meta.batch;
         let t = match meta.tree {
             Some(t) => t,
@@ -488,26 +589,49 @@ impl Sim {
             let x = hid[(lane * t + i) * d];
             (x.round().max(0.0) as usize).min(v - 1) as u32
         };
-        let mut logits = vec![0f32; b * t * v];
-        let mut medusa = vec![0f32; b * t * m * v];
-        let mut tree_kv = vec![0f32; rest * 2 * b * t * col];
+        let (o_logits, o_medusa, o_kv) = out3(outs);
+        let logits = o_logits.reset_f32(&[b, t, v]);
+        let medusa = o_medusa.reset_f32(&[b, t, m, v]);
+        pool::for_each_row2(
+            self.threads,
+            t * v,
+            logits,
+            t * m * v,
+            medusa,
+            |lane, lrow, mrow| {
+                let len = lens[lane].max(0) as usize;
+                let prefix = self.kv_prefix_ctx(kv, s, col, lane, len, v);
+                let pos_row = &tp[lane * t..(lane + 1) * t];
+                let mut anc: Vec<usize> = Vec::with_capacity(t);
+                for j in 0..t {
+                    let mask_row =
+                        &tm[(lane * t + j) * t..(lane * t + j + 1) * t];
+                    let mut ctx = prefix;
+                    Self::fold_path(
+                        &mut ctx,
+                        &mut anc,
+                        mask_row,
+                        pos_row,
+                        |i| node_token(lane, i),
+                    );
+                    let mrow_j = if m == 0 {
+                        &mut mrow[0..0]
+                    } else {
+                        &mut mrow[j * m * v..(j + 1) * m * v]
+                    };
+                    self.base_and_medusa_into(
+                        ctx,
+                        v,
+                        &mut lrow[j * v..(j + 1) * v],
+                        mrow_j,
+                    );
+                }
+            },
+        );
+        let tree_kv = o_kv
+            .reset_f32(&[rest, 2, b, t, model.n_heads, model.head_dim]);
         for lane in 0..b {
-            let len = lens[lane].max(0) as usize;
-            let prefix = self.kv_prefix(kv, b, s, col, lane, len, v);
-            let pos_row = &tp[lane * t..(lane + 1) * t];
             for j in 0..t {
-                let mask_row = &tm[(lane * t + j) * t..(lane * t + j + 1) * t];
-                let mut ctx = prefix.clone();
-                ctx.extend(Self::path_tokens(
-                    |i| node_token(lane, i),
-                    mask_row,
-                    pos_row,
-                ));
-                let (base, med) = self.base_and_medusa(&ctx, v, m);
-                logits[(lane * t + j) * v..(lane * t + j + 1) * v]
-                    .copy_from_slice(&base);
-                medusa[(lane * t + j) * m * v..(lane * t + j + 1) * m * v]
-                    .copy_from_slice(&med);
                 let tok = node_token(lane, j) as f32;
                 for li in 0..rest {
                     for c in 0..2 {
@@ -517,15 +641,52 @@ impl Sim {
                 }
             }
         }
-        Ok(vec![
-            HostTensor::f32(vec![b, t, v], logits),
-            HostTensor::f32(vec![b, t, m, v], medusa),
-            HostTensor::f32(
-                vec![rest, 2, b, t, model.n_heads, model.head_dim],
-                tree_kv,
-            ),
-        ])
+        Ok(())
     }
+
+    /// Allocating row oracle — kept for tests that poke the oracle
+    /// directly with slice contexts.
+    #[cfg(test)]
+    fn row(&self, ctx: &[u32], vocab: usize) -> Vec<f32> {
+        let mut c = Ctx::new(self.seed);
+        for &t in ctx {
+            c.push(t);
+        }
+        let mut out = vec![0f32; vocab];
+        self.row_into(c, &mut out);
+        out
+    }
+
+    #[cfg(test)]
+    fn base_and_medusa(
+        &self,
+        ctx: &[u32],
+        vocab: usize,
+        heads: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut c = Ctx::new(self.seed);
+        for &t in ctx {
+            c.push(t);
+        }
+        let mut base = vec![0f32; vocab];
+        let mut medusa = vec![0f32; heads * vocab];
+        self.base_and_medusa_into(c, vocab, &mut base, &mut medusa);
+        (base, medusa)
+    }
+}
+
+/// Ensure `outs` holds exactly three reusable tensors and hand back
+/// disjoint borrows (the sim's entry points all emit three outputs).
+fn out3(
+    outs: &mut Vec<HostTensor>,
+) -> (&mut HostTensor, &mut HostTensor, &mut HostTensor) {
+    while outs.len() < 3 {
+        outs.push(HostTensor::f32(vec![0], Vec::new()));
+    }
+    outs.truncate(3);
+    let (a, rest) = outs.split_at_mut(1);
+    let (b, c) = rest.split_at_mut(1);
+    (&mut a[0], &mut b[0], &mut c[0])
 }
 
 #[cfg(test)]
@@ -571,6 +732,25 @@ mod tests {
             Sim::new(1).row(&[1, 2, 3], 64),
             Sim::new(2).row(&[1, 2, 3], 64)
         );
+    }
+
+    #[test]
+    fn ctx_fold_matches_reference_fnv() {
+        // The Ctx fold must reproduce the original slice-context hash:
+        // FNV-1a offset ^ seed, then per token h ^= t+1; h *= prime.
+        let sim = Sim::new(0xabcd);
+        let toks = [5u32, 0, 255, 7];
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ 0xabcd;
+        for &t in &toks {
+            h ^= t as u64 + 1;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        let mut want = vec![0f32; 32];
+        let mut rng = Rng::new(h);
+        for x in want.iter_mut() {
+            *x = (rng.f64() * 8.0) as f32;
+        }
+        assert_eq!(sim.row(&toks, 32), want);
     }
 
     #[test]
@@ -641,5 +821,114 @@ mod tests {
         let med = &outs2[1].as_f32()[..v];
         let ctx2: Vec<u32> = ctx.iter().copied().chain([r2 as u32]).collect();
         assert_eq!(argmax(med), argmax(&sim.row(&ctx2, v)));
+    }
+
+    #[test]
+    fn thread_count_never_changes_output_bytes() {
+        // Decode + both verify entries, executed at 1 and 5 threads:
+        // byte-identical outputs (rows are pure; bands are disjoint).
+        let cfg = SimConfig::default();
+        let m = cfg.manifest();
+        let model = m.model(&cfg.size).unwrap().clone();
+        let serial = Sim { threads: 1, ..Sim::of(&cfg) };
+        let par = Sim { threads: 5, ..Sim::of(&cfg) };
+        let (b, s) = (4usize, model.max_seq);
+        let col = model.n_heads * model.head_dim;
+        let mut kv = vec![0f32; model.n_layers * 2 * b * s * col];
+        for lane in 0..b {
+            for pos in 0..3 {
+                for li in 0..model.n_layers {
+                    for c in 0..2 {
+                        let off = (((li * 2 + c) * b + lane) * s + pos) * col;
+                        kv[off] = (100 + lane * 3 + pos) as f32;
+                    }
+                }
+            }
+        }
+        let d_kv = HostTensor::f32(
+            vec![model.n_layers, 2, b, s, model.n_heads, model.head_dim],
+            kv,
+        );
+        let d_tok = HostTensor::i32(vec![b], vec![10, 20, 30, 40]);
+        let d_len = HostTensor::i32(vec![b], vec![3; b]);
+        let dec = m.find(&cfg.size, Entry::Decode, None, b, None).unwrap();
+        let a = serial.execute(dec, &model, &[&d_tok, &d_len, &d_kv]).unwrap();
+        let z = par.execute(dec, &model, &[&d_tok, &d_len, &d_kv]).unwrap();
+        for (x, y) in a.iter().zip(&z) {
+            assert_eq!(x.as_f32(), y.as_f32());
+        }
+        // Tree verification: a chain tree per lane (node j attends 0..=j).
+        let t = 4usize;
+        let ve = m
+            .find(&cfg.size, Entry::VerifyEarly, Some(1), b, Some(t))
+            .unwrap();
+        let tt = HostTensor::i32(
+            vec![b, t],
+            (0..b * t).map(|i| (i % 7) as i32 + 1).collect(),
+        );
+        let tp = HostTensor::i32(
+            vec![b, t],
+            (0..b * t).map(|i| 3 + (i % t) as i32).collect(),
+        );
+        let mut mask = vec![crate::runtime::literal::NEG_INF; b * t * t];
+        for lane in 0..b {
+            for j in 0..t {
+                for i in 0..=j {
+                    mask[(lane * t + j) * t + i] = 0.0;
+                }
+            }
+        }
+        let tm = HostTensor::f32(vec![b, t, t], mask);
+        let sl = HostTensor::i32(vec![b], vec![3; b]);
+        let ea = serial
+            .execute(ve, &model, &[&tt, &tp, &tm, &sl, &d_kv])
+            .unwrap();
+        let eb = par
+            .execute(ve, &model, &[&tt, &tp, &tm, &sl, &d_kv])
+            .unwrap();
+        for (x, y) in ea.iter().zip(&eb) {
+            assert_eq!(x.as_f32(), y.as_f32());
+        }
+        let vl = m
+            .find(&cfg.size, Entry::VerifyLate, Some(1), b, Some(t))
+            .unwrap();
+        let la = serial
+            .execute(vl, &model, &[&ea[0], &tp, &tm, &sl, &d_kv])
+            .unwrap();
+        let lb = par
+            .execute(vl, &model, &[&eb[0], &tp, &tm, &sl, &d_kv])
+            .unwrap();
+        for (x, y) in la.iter().zip(&lb) {
+            assert_eq!(x.as_f32(), y.as_f32());
+        }
+    }
+
+    #[test]
+    fn execute_into_reuses_output_slabs() {
+        // Repeat decode calls through execute_into must keep the same
+        // heap blocks (pointer-stable data) and identical bytes.
+        let cfg = SimConfig::default();
+        let m = cfg.manifest();
+        let model = m.model(&cfg.size).unwrap().clone();
+        let sim = Sim::of(&cfg);
+        let s = model.max_seq;
+        let col = model.n_heads * model.head_dim;
+        let kv = HostTensor::f32(
+            vec![model.n_layers, 2, 1, s, model.n_heads, model.head_dim],
+            vec![0f32; model.n_layers * 2 * s * col],
+        );
+        let tok = HostTensor::i32(vec![1], vec![42]);
+        let len = HostTensor::i32(vec![1], vec![0]);
+        let dec = m.find(&cfg.size, Entry::Decode, None, 1, None).unwrap();
+        let mut outs = Vec::new();
+        sim.execute_into(dec, &model, &[&tok, &len, &kv], &mut outs)
+            .unwrap();
+        let first = outs[0].as_f32().to_vec();
+        let ptr0 = outs[0].as_f32().as_ptr();
+        sim.execute_into(dec, &model, &[&tok, &len, &kv], &mut outs)
+            .unwrap();
+        assert_eq!(outs[0].as_f32(), &first[..]);
+        assert_eq!(outs[0].as_f32().as_ptr(), ptr0, "slab was reallocated");
+        assert_eq!(outs.len(), 3);
     }
 }

@@ -28,7 +28,9 @@ impl Summary {
             sum: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
-            samples: Vec::new(),
+            // Reserve up front: `record` on the steady-state decode path
+            // must never grow the reservoir (zero-alloc contract).
+            samples: Vec::with_capacity(cap),
             cap,
             rng: Rng::new(0x5a3b_1e5e),
         }

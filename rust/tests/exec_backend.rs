@@ -1,0 +1,203 @@
+//! Execution backend (DESIGN.md § Execution backend): the blocked /
+//! threaded matmul must be bit-exact against the naive kernel for every
+//! shape and thread count, and the sim's `runtime.threads` knob must be
+//! byte-invisible end-to-end — every engine kind and the multi-replica
+//! scheduler decode identical token streams at any worker count.
+
+use std::time::Instant;
+
+use propd::batching::RoutingPolicy;
+use propd::config::ServingConfig;
+use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::runtime::kernels::{matmul_blocked, matmul_naive};
+use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
+use propd::server::run_offline;
+use propd::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Kernel properties
+// ---------------------------------------------------------------------------
+
+fn random_mat(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect()
+}
+
+fn assert_bit_exact(m: usize, k: usize, n: usize, rng: &mut Rng) {
+    let a = random_mat(rng, m * k);
+    let b = random_mat(rng, k * n);
+    let want = matmul_naive(&a, &b, m, k, n);
+    for t in [1, 2, 3, 4, 8] {
+        let got = matmul_blocked(t, &a, &b, m, k, n);
+        assert_eq!(got.len(), want.len(), "{m}x{k}x{n} t={t}");
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{m}x{k}x{n} t={t}: element {i} differs ({x} vs {y})"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_matmul_is_bit_exact_on_odd_shapes() {
+    // Shapes straddling the tile width (64), degenerate dims (1), and
+    // the empty-tree cases (a zero dim anywhere).
+    let mut rng = Rng::new(0xb10c);
+    for (m, k, n) in [
+        (1, 1, 1),
+        (1, 7, 3),
+        (5, 3, 2),
+        (63, 65, 64),
+        (64, 64, 64),
+        (65, 1, 129),
+        (7, 33, 191),
+        (2, 0, 2),
+        (0, 3, 5),
+        (3, 2, 0),
+    ] {
+        assert_bit_exact(m, k, n, &mut rng);
+    }
+}
+
+#[test]
+fn prop_blocked_matmul_is_bit_exact_on_random_shapes() {
+    let mut rng = Rng::new(0x5eed);
+    for _ in 0..40 {
+        let m = rng.below(70);
+        let k = rng.below(70);
+        let n = rng.below(200);
+        assert_bit_exact(m, k, n, &mut rng);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: `runtime.threads` never changes any byte
+// ---------------------------------------------------------------------------
+
+const PROMPTS: [&str; 4] = [
+    "user: Explain how the batch engine balances decode \
+     throughput.\nassistant:",
+    "user: Describe the blocked matmul tiling strategy in \
+     detail.\nassistant:",
+    "user: Summarize the kv page pool accounting rules.\nassistant:",
+    "user: Hold a steady decode cadence until the budget runs \
+     out.\nassistant:",
+];
+
+fn requests() -> Vec<(String, usize)> {
+    PROMPTS.iter().map(|p| (p.to_string(), 48)).collect()
+}
+
+fn decode_all(
+    rt: &Runtime,
+    mut cfg: EngineConfig,
+    reqs: &[(String, usize)],
+) -> Vec<Vec<u32>> {
+    cfg.max_batch = reqs.len().max(1);
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    for (p, m) in reqs {
+        engine.submit(p, *m);
+    }
+    let mut done = engine.run_to_completion().expect("run");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.tokens).collect()
+}
+
+#[test]
+fn thread_count_is_byte_invisible_across_engine_kinds() {
+    let serial = Runtime::sim(&SimConfig { threads: 1, ..Default::default() });
+    let par = Runtime::sim(&SimConfig { threads: 4, ..Default::default() });
+    let reqs = requests();
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        let size = SimConfig::default().size;
+        let a = decode_all(&serial, EngineConfig::new(&size, kind), &reqs);
+        let b = decode_all(&par, EngineConfig::new(&size, kind), &reqs);
+        assert!(a.iter().all(|t| !t.is_empty()), "{}: empty", kind.as_str());
+        assert_eq!(a, b, "{}: threads=4 diverged", kind.as_str());
+    }
+}
+
+#[test]
+fn thread_count_is_byte_invisible_across_routing_policies() {
+    let reqs = requests();
+    let serial = Runtime::sim(&SimConfig { threads: 1, ..Default::default() });
+    let size = SimConfig::default().size;
+    let ar = decode_all(
+        &serial,
+        EngineConfig::new(&size, EngineKind::Autoregressive),
+        &reqs,
+    );
+    for routing in [
+        RoutingPolicy::LeastLoaded,
+        RoutingPolicy::RoundRobin,
+        RoutingPolicy::CachePressure,
+    ] {
+        let mut cfg = ServingConfig::default_for(&size, EngineKind::ProPD);
+        cfg.server.replicas = 2;
+        cfg.server.routing = routing;
+        cfg.engine.max_batch = 2;
+        let spec =
+            RuntimeSpec::Sim(SimConfig { threads: 3, ..Default::default() });
+        let (completions, _, served) =
+            run_offline(&cfg, &spec, &reqs).expect("replica run");
+        assert_eq!(served.iter().sum::<u64>(), reqs.len() as u64);
+        for (i, c) in completions.iter().enumerate() {
+            assert_eq!(
+                c.tokens,
+                ar[i],
+                "routing {} request {i} diverged at threads=3",
+                routing.as_str()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wall-clock acceptance bar (manual)
+// ---------------------------------------------------------------------------
+
+fn tokens_per_sec(rt: &Runtime, reqs: &[(String, usize)]) -> f64 {
+    let size = SimConfig::default().size;
+    let mut cfg = EngineConfig::ablation(&size, true, false);
+    cfg.max_batch = reqs.len();
+    cfg.collect_events = false;
+    // One shakeout run compiles executables, then median of 3.
+    decode_all(rt, cfg.clone(), reqs);
+    let mut samples: Vec<f64> = (0..3)
+        .map(|_| {
+            let t0 = Instant::now();
+            let toks: usize =
+                decode_all(rt, cfg.clone(), reqs).iter().map(Vec::len).sum();
+            toks as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[1]
+}
+
+/// The acceptance bar for the threaded backend: 4 workers must at least
+/// double single-thread throughput.  Wall-clock, so it needs >= 4 idle
+/// cores — CI gates the same ratio through `bench/baseline.json`
+/// (`threads_speedup`) instead; run this one manually via
+/// `cargo test --release -- --ignored threads_speedup`.
+#[test]
+#[ignore = "wall-clock: needs >= 4 idle cores; CI gates threads_speedup via bench-smoke"]
+fn threads_speedup_reaches_2x_at_4_workers() {
+    let reqs = requests();
+    let serial = Runtime::sim(&SimConfig { threads: 1, ..Default::default() });
+    let par = Runtime::sim(&SimConfig { threads: 4, ..Default::default() });
+    let tps1 = tokens_per_sec(&serial, &reqs);
+    let tps4 = tokens_per_sec(&par, &reqs);
+    assert!(
+        tps4 >= 2.0 * tps1,
+        "threads=4 gave {tps4:.1} tok/s vs {tps1:.1} single-thread \
+         ({:.2}x < 2x)",
+        tps4 / tps1.max(1e-9)
+    );
+}
