@@ -263,6 +263,9 @@ fn skewed_acceptance_scenario() {
         cfg.max_batch = prompts.len();
         cfg.accept_alpha = 0.3; // adapt within a request's lifetime
         cfg.planner.budget_mode = mode;
+        // Isolate the budget split: keep stragglers speculating instead
+        // of letting auto mode demote them out of the tree batch.
+        cfg.decode_mode = propd::engine::DecodeMode::Spec;
         let mut engine = Engine::new(&rt, cfg).expect("engine");
         for p in &prompts {
             engine.submit(p, 56);

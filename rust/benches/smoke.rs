@@ -29,7 +29,9 @@ use anyhow::{Context, Result};
 use propd::bench::gate::{self, Baseline, Direction};
 use propd::bench::harness::{run_trace, RunSpec};
 use propd::bench::{Bencher, Table};
-use propd::engine::{AdmissionMode, Engine, EngineConfig, EngineKind};
+use propd::engine::{
+    AdmissionMode, DecodeMode, Engine, EngineConfig, EngineKind,
+};
 use propd::estimator::{
     allocate_budget, allocation_gain, gain_at, alloc::DEFAULT_MIN_GAIN,
 };
@@ -132,6 +134,72 @@ fn allocs_per_step() -> Result<f64> {
     }
     let delta = ALLOCS.load(Ordering::Relaxed) - start;
     Ok(delta as f64 / 32.0)
+}
+
+/// One full decode of the skewed-acceptance workload (one hot lane with
+/// oracle-perfect heads, three stragglers with deterministic-junk heads
+/// via `medusa_flaky_below`) under the given decode mode.  Returns the
+/// metrics report and the wall-clock tokens/sec of the run.
+fn skewed_mode_run(
+    mode: DecodeMode,
+) -> Result<(BTreeMap<String, f64>, f64)> {
+    let sim = SimConfig { medusa_flaky_below: 97, ..SimConfig::default() };
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 4;
+    cfg.accept_alpha = 0.3; // adapt (and demote) within a request
+    cfg.collect_events = false;
+    cfg.decode_mode = mode;
+    let mut engine = Engine::new(&rt, cfg).context("mode engine")?;
+    engine.submit(
+        "user: Explain how the batch engine balances decode \
+         throughput.\nassistant:",
+        56,
+    );
+    for p in [
+        "User: FIRST straggler with junk speculation.\nassistant:",
+        "User: SECOND straggler with junk speculation.\nassistant:",
+        "User: THIRD straggler with junk speculation.\nassistant:",
+    ] {
+        engine.submit(p, 56);
+    }
+    let t0 = std::time::Instant::now();
+    engine.run_to_completion().context("mode run")?;
+    let dt = t0.elapsed().as_secs_f64();
+    let report = engine.metrics.report();
+    let tps = report["tokens_generated"] / dt.max(1e-9);
+    Ok((report, tps))
+}
+
+/// Decode-mode switching on the skewed workload: auto mode's demotion /
+/// step-mix counters, plus the headline wall-clock ratio `auto over
+/// always-speculative` (median-of-5 per mode; greedy text is
+/// byte-identical across modes — tests/modes.rs — so only the clock
+/// differs).
+fn decode_mode_metrics(m: &mut BTreeMap<String, f64>) -> Result<()> {
+    // Unmeasured shakeout primes executables and page pools.
+    skewed_mode_run(DecodeMode::Auto).context("mode shakeout")?;
+    let mut auto_tps = Vec::new();
+    let mut spec_tps = Vec::new();
+    let mut auto_report = BTreeMap::new();
+    for _ in 0..5 {
+        let (r, t) = skewed_mode_run(DecodeMode::Auto)?;
+        auto_report = r;
+        auto_tps.push(t);
+        let (_, t) = skewed_mode_run(DecodeMode::Spec)?;
+        spec_tps.push(t);
+    }
+    auto_tps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    spec_tps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    m.insert("mode_demotions".into(), auto_report["mode_demotions"]);
+    m.insert("mode_ar_steps".into(), auto_report["ar_steps"]);
+    m.insert("mode_spec_steps".into(), auto_report["spec_steps"]);
+    m.insert(
+        "auto_over_spec_tps".into(),
+        auto_tps[auto_tps.len() / 2]
+            / spec_tps[spec_tps.len() / 2].max(1e-9),
+    );
+    Ok(())
 }
 
 fn measure() -> Result<BTreeMap<String, f64>> {
@@ -264,6 +332,12 @@ fn measure() -> Result<BTreeMap<String, f64>> {
         per_lane_gain / uniform_gain.max(1e-9),
     );
 
+    // ---- decode-mode switching (skewed workload) ----
+    // The stragglers' lanes demote to serial decode; counters prove the
+    // state machine fired and the batch genuinely mixed, the tps ratio
+    // gates the wall-clock win over always-speculative.
+    decode_mode_metrics(&mut m)?;
+
     // ---- execution backend: wall-clock + allocation gates ----
     // Host-dependent but gated: median-of-5 sampling and wide per-entry
     // tolerances (metric_meta) absorb runner variance, while a real
@@ -361,6 +435,15 @@ fn metric_meta(name: &str) -> (Direction, bool, Option<f64>) {
         n if n.starts_with("tree_alloc_") => {
             (Direction::Higher, true, Some(25.0))
         }
+        // Decode-mode switching: the demotion / step-mix counters must
+        // stay nonzero (a silent always-speculative regression drives
+        // them to 0, far past any tolerance); the auto-over-spec ratio
+        // is host-dependent wall-clock, so it gates with a wide
+        // tolerance.
+        "mode_demotions" | "mode_ar_steps" | "mode_spec_steps" => {
+            (Direction::Higher, true, Some(25.0))
+        }
+        "auto_over_spec_tps" => (Direction::Higher, true, Some(30.0)),
         // Execution-backend gates: wall-clock throughput and the
         // threading speedup are host-dependent, so they gate with wide
         // variance-aware tolerances; the steady-state allocation rate is

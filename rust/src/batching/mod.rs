@@ -23,8 +23,11 @@ pub struct QueuedRequest {
     /// Fleet-unique request id (issued by the server front-end; 0 lets
     /// the engine assign one — offline/test convenience).
     pub id: u64,
+    /// The prompt text.
     pub prompt: String,
+    /// Per-request generation budget.
     pub max_new_tokens: usize,
+    /// Completion channel back to the submitting connection.
     pub respond: Option<Sender<Completion>>,
     /// Streaming sink: per-step accepted-token deltas, preempt notices,
     /// and the finish event.  A hung-up receiver cancels the request
@@ -34,11 +37,16 @@ pub struct QueuedRequest {
     pub cancel: Option<Arc<AtomicBool>>,
 }
 
+/// Admission-queue counters.
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct QueueStats {
+    /// Requests accepted.
     pub submitted: u64,
+    /// Requests rejected (queue full).
     pub rejected: u64,
+    /// Requests handed to the scheduler.
     pub drained: u64,
+    /// Deepest queue occupancy seen.
     pub high_watermark: usize,
 }
 
@@ -56,6 +64,7 @@ struct QueueInner {
 }
 
 impl RequestQueue {
+    /// A bounded queue holding at most `capacity` requests.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         RequestQueue {
@@ -111,14 +120,17 @@ impl RequestQueue {
         out
     }
 
+    /// Currently queued requests.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Counter snapshot.
     pub fn stats(&self) -> QueueStats {
         self.inner.lock().unwrap().stats
     }
@@ -129,6 +141,7 @@ impl RequestQueue {
         self.cv.notify_all();
     }
 
+    /// Whether the queue is closed to new submissions.
     pub fn is_closed(&self) -> bool {
         self.inner.lock().unwrap().closed
     }

@@ -49,13 +49,18 @@ const MAX_AFFINITY_BLOCKS: usize = 8;
 /// Request routing policy for the multi-replica scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutingPolicy {
+    /// Fewest in-flight requests, then shortest decode batch.
     LeastLoaded,
+    /// Strict rotation.
     RoundRobin,
+    /// Highest free-page headroom first.
     CachePressure,
+    /// Deepest cached-prefix match first.
     PrefixAffinity,
 }
 
 impl RoutingPolicy {
+    /// Parse `server.routing`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "least-loaded" | "least_loaded" => Some(RoutingPolicy::LeastLoaded),
@@ -70,6 +75,7 @@ impl RoutingPolicy {
         }
     }
 
+    /// Canonical knob string.
     pub fn as_str(&self) -> &'static str {
         match self {
             RoutingPolicy::LeastLoaded => "least-loaded",
@@ -110,10 +116,12 @@ pub struct ReplicaLoad {
 }
 
 impl ReplicaLoad {
+    /// Record a dispatch (dispatched-not-yet-drained + 1).
     pub fn note_dispatched(&self) {
         self.queued.fetch_add(1, Ordering::SeqCst);
     }
 
+    /// Roll back a dispatch that could not be enqueued.
     pub fn undo_dispatched(&self) {
         self.queued.fetch_sub(1, Ordering::SeqCst);
     }
@@ -128,6 +136,7 @@ impl ReplicaLoad {
         self.pending.store(n, Ordering::SeqCst);
     }
 
+    /// Dispatched-but-undrained plus engine in-flight requests.
     pub fn in_flight(&self) -> usize {
         self.queued.load(Ordering::SeqCst) + self.pending.load(Ordering::SeqCst)
     }
@@ -145,6 +154,7 @@ impl ReplicaLoad {
         self.lane_budget.store(lanes, Ordering::SeqCst);
     }
 
+    /// The replica's published admittable-lane budget.
     pub fn lane_budget(&self) -> usize {
         self.lane_budget.load(Ordering::SeqCst)
     }
@@ -174,6 +184,7 @@ impl ReplicaLoad {
         self.page_size.store(page_size, Ordering::SeqCst);
     }
 
+    /// The replica's KV page size (for prefix digest blocks).
     pub fn page_size(&self) -> usize {
         self.page_size.load(Ordering::SeqCst)
     }
@@ -198,14 +209,18 @@ impl ReplicaLoad {
 /// Scheduler-visible handle to one replica: its feed plus load counters.
 #[derive(Clone)]
 pub struct ReplicaHandle {
+    /// Replica index.
     pub id: usize,
     /// The replica engine's lane budget (`engine.max_batch`).
     pub max_batch: usize,
+    /// The replica's decode feed.
     pub queue: Arc<RequestQueue>,
+    /// Dispatch-side load accounting.
     pub load: Arc<ReplicaLoad>,
 }
 
 impl ReplicaHandle {
+    /// A handle with a fresh feed and zeroed load.
     pub fn new(id: usize, max_batch: usize, feed_capacity: usize) -> Self {
         ReplicaHandle {
             id,
@@ -249,6 +264,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// A scheduler over `replicas` using `policy`.
     pub fn new(replicas: Vec<ReplicaHandle>, policy: RoutingPolicy) -> Self {
         assert!(!replicas.is_empty(), "scheduler needs >= 1 replica");
         Scheduler {
@@ -273,6 +289,7 @@ impl Scheduler {
         self
     }
 
+    /// The replica handles.
     pub fn replicas(&self) -> &[ReplicaHandle] {
         &self.replicas
     }

@@ -27,6 +27,7 @@ pub enum Direction {
 }
 
 impl Direction {
+    /// Baseline-file string.
     pub fn as_str(&self) -> &'static str {
         match self {
             Direction::Higher => "higher",
@@ -35,6 +36,7 @@ impl Direction {
         }
     }
 
+    /// Parse a direction string.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "higher" => Some(Direction::Higher),
@@ -45,9 +47,12 @@ impl Direction {
     }
 }
 
+/// One gated metric in the baseline file.
 #[derive(Debug, Clone)]
 pub struct BaselineEntry {
+    /// Expected value (last refresh).
     pub value: f64,
+    /// Which drift direction fails the gate.
     pub direction: Direction,
     /// Gated entries fail CI on regression; others are informational.
     pub gate: bool,
@@ -61,18 +66,24 @@ pub struct BaselineEntry {
     pub bootstrap: bool,
 }
 
+/// Parsed `bench/baseline.json`.
 #[derive(Debug, Clone)]
 pub struct Baseline {
+    /// Baseline-wide tolerance (entries may override).
     pub tolerance_pct: f64,
+    /// Baseline-wide bootstrap flag (gate passes vacuously).
     pub bootstrap: bool,
+    /// Entries by metric name.
     pub benchmarks: BTreeMap<String, BaselineEntry>,
 }
 
 impl Baseline {
+    /// Load and parse a baseline file.
     pub fn load(path: &Path) -> Result<Self> {
         Self::from_value(&jsonio::parse_file(path)?)
     }
 
+    /// Build from parsed JSON.
     pub fn from_value(v: &Value) -> Result<Self> {
         let tolerance_pct = match v.opt("tolerance_pct") {
             Some(t) => t.as_f64()?,
@@ -123,15 +134,19 @@ impl Baseline {
     }
 }
 
+/// Outcome of gating one result set against a baseline.
 #[derive(Debug, Default)]
 pub struct GateReport {
     /// Gated metrics actually compared.
     pub compared: usize,
+    /// Human-readable failures (empty = pass).
     pub failures: Vec<String>,
+    /// Whether the whole baseline was bootstrap (vacuous pass).
     pub bootstrap: bool,
 }
 
 impl GateReport {
+    /// True when no gated metric failed.
     pub fn passed(&self) -> bool {
         self.failures.is_empty()
     }

@@ -16,11 +16,16 @@ use crate::metrics::AggregateSnapshot;
 use crate::runtime::{Runtime, RuntimeSpec};
 use crate::workload::{generate_trace, PromptSet, TraceConfig};
 
+/// One offline bench run: engine config + workload.
 #[derive(Debug, Clone)]
 pub struct RunSpec {
+    /// Engine configuration under test.
     pub engine: EngineConfig,
+    /// Prompt profile name.
     pub profile: String,
+    /// Requests in the run.
     pub n_requests: usize,
+    /// Workload PRNG seed.
     pub seed: u64,
     /// Cap output length (None = profile default budget).
     pub max_new_tokens: Option<usize>,
@@ -32,6 +37,7 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
+    /// A spec with default request count and seed.
     pub fn new(engine: EngineConfig, profile: &str) -> Self {
         RunSpec {
             engine,
@@ -45,16 +51,26 @@ impl RunSpec {
     }
 }
 
+/// Measurements from one offline run.
 #[derive(Debug, Clone)]
 pub struct RunOutcome {
+    /// Tokens generated.
     pub tokens: u64,
+    /// Engine busy wall-clock (s).
     pub busy_seconds: f64,
+    /// Tokens per busy second.
     pub tokens_per_second: f64,
+    /// Mean accepted tokens per lane-step.
     pub accept_len: f64,
+    /// Mean early-prune fraction.
     pub prune_rate: f64,
+    /// Mean live tree size.
     pub tree_size_mean: f64,
+    /// Engine steps.
     pub steps: u64,
+    /// Requests completed.
     pub completions: usize,
+    /// The full metrics report.
     pub report: BTreeMap<String, f64>,
 }
 

@@ -8,21 +8,30 @@ use std::time::Instant;
 
 use crate::util::stats;
 
+/// Timing summary of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub median_s: f64,
+    /// Standard deviation (s).
     pub stddev_s: f64,
+    /// Fastest iteration (s).
     pub min_s: f64,
 }
 
 impl BenchResult {
+    /// Iterations per second (1 / mean).
     pub fn per_sec(&self) -> f64 {
         if self.mean_s > 0.0 { 1.0 / self.mean_s } else { 0.0 }
     }
 
+    /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
             "{:<40} {:>12} {:>12} {:>12} {:>8}",
@@ -35,6 +44,7 @@ impl BenchResult {
     }
 }
 
+/// Human-readable duration (ns / µs / ms / s).
 pub fn format_secs(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3} s")
@@ -47,8 +57,11 @@ pub fn format_secs(s: f64) -> String {
     }
 }
 
+/// Warmup + timed-iteration micro-bench driver.
 pub struct Bencher {
+    /// Untimed warmup iterations.
     pub warmup: usize,
+    /// Timed iterations.
     pub iters: usize,
 }
 
@@ -59,6 +72,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A bencher with the given warmup and iteration counts.
     pub fn new(warmup: usize, iters: usize) -> Self {
         Bencher { warmup, iters }
     }
@@ -85,6 +99,7 @@ impl Bencher {
     }
 }
 
+/// Header line matching `BenchResult::summary` columns.
 pub fn bench_header() -> String {
     format!(
         "{:<40} {:>12} {:>12} {:>12} {:>8}",
@@ -95,12 +110,16 @@ pub fn bench_header() -> String {
 /// Aligned text table with an optional markdown rendering.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table title.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Row cells.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -109,6 +128,7 @@ impl Table {
         }
     }
 
+    /// Append a row.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
@@ -125,6 +145,7 @@ impl Table {
         w
     }
 
+    /// Render as aligned plain text.
     pub fn render(&self) -> String {
         let w = self.widths();
         let mut out = String::new();
@@ -152,6 +173,7 @@ impl Table {
         out
     }
 
+    /// Render as a markdown table.
     pub fn render_markdown(&self) -> String {
         let mut out = String::new();
         if !self.title.is_empty() {

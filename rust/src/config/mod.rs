@@ -14,14 +14,17 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::batching::RoutingPolicy;
-use crate::engine::{AdmissionMode, EngineConfig, EngineKind};
+use crate::engine::{AdmissionMode, DecodeMode, EngineConfig, EngineKind};
 use toml_lite::TomlValue;
 
 /// Top-level launcher configuration.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
+    /// Artifacts directory (`artifacts.dir`).
     pub artifacts: String,
+    /// Engine section (`engine.*`, `cache.*`, `planner.*`).
     pub engine: EngineConfig,
+    /// Server section (`server.*`).
     pub server: ServerConfig,
     /// Sim-backend worker threads (`runtime.threads` / `propd --threads`):
     /// `0` = auto (`available_parallelism`, clamped), `1` = serial
@@ -30,9 +33,12 @@ pub struct ServingConfig {
     pub runtime_threads: usize,
 }
 
+/// Server section of the config (`server.*`).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// TCP listen address (`server.addr`).
     pub addr: String,
+    /// Admission-queue bound (`server.max_queue`).
     pub max_queue: usize,
     /// Engine replicas: worker threads each owning an Engine + Runtime.
     pub replicas: usize,
@@ -57,6 +63,7 @@ impl Default for ServerConfig {
 }
 
 impl ServingConfig {
+    /// Defaults for a size/kind with no file or overrides.
     pub fn default_for(size: &str, kind: EngineKind) -> Self {
         ServingConfig {
             artifacts: crate::DEFAULT_ARTIFACTS.into(),
@@ -81,6 +88,7 @@ impl ServingConfig {
         Self::from_map(&map)
     }
 
+    /// Build a validated config from a flat `section.key` map.
     pub fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self> {
         let gets = |k: &str| map.get(k).map(|v| v.as_str_lossy());
         let get_us = |k: &str, d: usize| -> Result<usize> {
@@ -135,11 +143,26 @@ impl ServingConfig {
         e.prefix_cache = get_b("cache.prefix_cache", e.prefix_cache)?;
         e.prefix_lru_pages =
             get_us("cache.prefix_lru_pages", e.prefix_lru_pages)?;
+        let dm_s = gets("engine.decode_mode")
+            .unwrap_or_else(|| e.decode_mode.as_str().into());
+        e.decode_mode = DecodeMode::parse(&dm_s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown engine.decode_mode {dm_s:?} \
+                 (expected auto, spec or ar)"
+            )
+        })?;
         e.planner.replan_interval =
             get_us("planner.replan_interval",
                    e.planner.replan_interval as usize)? as u64;
         e.planner.seq_drift = get_f("planner.seq_drift",
                                     e.planner.seq_drift)?;
+        e.planner.demote_below =
+            get_f("planner.demote_below", e.planner.demote_below)?;
+        e.planner.promote_above =
+            get_f("planner.promote_above", e.planner.promote_above)?;
+        e.planner.probe_interval =
+            get_us("planner.probe_interval",
+                   e.planner.probe_interval as usize)? as u64;
         let bm_s = gets("planner.budget_mode")
             .unwrap_or_else(|| e.planner.budget_mode.as_str().into());
         e.planner.budget_mode =
@@ -271,6 +294,62 @@ mod tests {
         assert!(ServingConfig::load(
             None,
             &["planner.budget_mode=warp".into()]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn decode_mode_knob_parses_and_validates() {
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert_eq!(d.engine.decode_mode, DecodeMode::Auto);
+        // Quoted form (what `propd --decode-mode` emits).
+        let s = ServingConfig::load(
+            None,
+            &["engine.decode_mode=\"spec\"".into()],
+        )
+        .unwrap();
+        assert_eq!(s.engine.decode_mode, DecodeMode::Spec);
+        let a =
+            ServingConfig::load(None, &["engine.decode_mode=ar".into()])
+                .unwrap();
+        assert_eq!(a.engine.decode_mode, DecodeMode::Ar);
+        assert!(ServingConfig::load(
+            None,
+            &["engine.decode_mode=warp".into()]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn hysteresis_knobs_parse_and_validate() {
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert!(d.engine.planner.demote_below
+            < d.engine.planner.promote_above);
+        assert!(d.engine.planner.probe_interval >= 1);
+        let c = ServingConfig::load(
+            None,
+            &[
+                "planner.demote_below=0.2".into(),
+                "planner.promote_above=0.8".into(),
+                "planner.probe_interval=4".into(),
+            ],
+        )
+        .unwrap();
+        assert!((c.engine.planner.demote_below - 0.2).abs() < 1e-12);
+        assert!((c.engine.planner.promote_above - 0.8).abs() < 1e-12);
+        assert_eq!(c.engine.planner.probe_interval, 4);
+        // Inverted hysteresis band is rejected at validation.
+        assert!(ServingConfig::load(
+            None,
+            &[
+                "planner.demote_below=0.9".into(),
+                "planner.promote_above=0.1".into(),
+            ],
+        )
+        .is_err());
+        assert!(ServingConfig::load(
+            None,
+            &["planner.probe_interval=0".into()]
         )
         .is_err());
     }

@@ -6,16 +6,23 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+/// A parsed TOML-subset value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// Quoted string.
     Str(String),
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Homogeneous array.
     Arr(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// The value as a string (lossy for non-strings).
     pub fn as_str_lossy(&self) -> String {
         match self {
             TomlValue::Str(s) => s.clone(),
@@ -26,6 +33,7 @@ impl TomlValue {
         }
     }
 
+    /// The value as a usize, or a type error.
     pub fn as_usize(&self) -> Result<usize> {
         match self {
             TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
@@ -33,6 +41,7 @@ impl TomlValue {
         }
     }
 
+    /// The value as an f64, or a type error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             TomlValue::Float(f) => Ok(*f),
@@ -41,6 +50,7 @@ impl TomlValue {
         }
     }
 
+    /// The value as a bool, or a type error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             TomlValue::Bool(b) => Ok(*b),
@@ -48,6 +58,7 @@ impl TomlValue {
         }
     }
 
+    /// The value as a usize vector, or a type error.
     pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
         match self {
             TomlValue::Arr(items) => {
@@ -140,6 +151,7 @@ pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>> {
     Ok(out)
 }
 
+/// Parse a TOML-subset file into a flat `section.key` map.
 pub fn parse_file(path: &Path) -> Result<BTreeMap<String, TomlValue>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;

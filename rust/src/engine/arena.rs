@@ -64,9 +64,16 @@ pub(super) struct StepArena {
     // --- shared scratch ----------------------------------------------
     /// Lane→slot layout for batch assembly (dummy lanes repeat lane 0).
     pub lanes: Vec<usize>,
+    /// Decode-mode partition: active-set indices routed to the AR
+    /// sub-batch this step (taken/restored around the sub-steps so the
+    /// steady state reuses the buffer).
+    pub ar_lanes: Vec<usize>,
+    /// Active-set indices routed to the tree sub-batch this step.
+    pub tree_lanes: Vec<usize>,
 }
 
 impl StepArena {
+    /// An empty arena; slabs size themselves on first use.
     pub fn new() -> Self {
         StepArena {
             dec_tok: empty_i32(),
@@ -85,6 +92,8 @@ impl StepArena {
             early_outs: Vec::new(),
             late_outs: Vec::new(),
             lanes: Vec::new(),
+            ar_lanes: Vec::new(),
+            tree_lanes: Vec::new(),
         }
     }
 }

@@ -11,9 +11,10 @@ use anyhow::{bail, Context, Result};
 
 use super::arena::StepArena;
 use super::requests::{
-    Completion, FinishReason, ReqState, RequestSpec, ResumeState, TokenDelta,
+    Completion, FinishReason, LaneMode, ReqState, RequestSpec, ResumeState,
+    TokenDelta,
 };
-use super::{AdmissionMode, EngineConfig, EngineKind};
+use super::{AdmissionMode, DecodeMode, EngineConfig, EngineKind};
 use crate::estimator::{AcceptanceTracker, PerfModel, Planner};
 use crate::kvcache::{BatchAssembler, KvCache, KvGeometry};
 use crate::manifest::{Entry, ModelMeta};
@@ -24,7 +25,9 @@ use crate::tokenizer::ByteTokenizer;
 use crate::tree::accept::argmax;
 use crate::tree::TreeBuilder;
 
+/// One decode engine: continuous batching over a private runtime.
 pub struct Engine<'rt> {
+    /// Engine configuration (fixed after construction).
     pub cfg: EngineConfig,
     pub(super) rt: &'rt Runtime,
     pub(super) model: ModelMeta,
@@ -46,11 +49,18 @@ pub struct Engine<'rt> {
     pub(super) perf: PerfModel,
     pub(super) planner: Planner,
     pub(super) builder: TreeBuilder,
+    /// Counters and per-step summaries for this engine.
     pub metrics: EngineMetrics,
     pub(super) clock: Instant,
     /// Persistent incremental batch assembly (§Perf: per-step copy cost is
-    /// proportional to accepted tokens, not sequence length).
+    /// proportional to accepted tokens, not sequence length).  The tree
+    /// sub-batch consumes this one.
     pub(super) assembler: BatchAssembler,
+    /// The AR sub-batch's own assembler: decode-mode switching can route
+    /// disjoint lane sets down both paths every step, and one assembler
+    /// alternating between two layouts would see foreign stamps in every
+    /// lane and rebuild both batch tensors from scratch each call.
+    pub(super) ar_assembler: BatchAssembler,
     /// Per-lane lifecycle events (token deltas, finish notices, preempt
     /// notices) buffered since the last [`Engine::take_events`].
     pub(super) events: Vec<TokenDelta>,
@@ -63,6 +73,8 @@ pub struct Engine<'rt> {
 }
 
 impl<'rt> Engine<'rt> {
+    /// Build an engine over `rt`, validating `cfg` and sizing the KV
+    /// pool.
     pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Result<Self> {
         cfg.validate()?;
         let model = rt.manifest.model(&cfg.size)?.clone();
@@ -186,16 +198,19 @@ impl<'rt> Engine<'rt> {
             metrics: EngineMetrics::default(),
             clock: Instant::now(),
             assembler: BatchAssembler::new(),
+            ar_assembler: BatchAssembler::new(),
             events: Vec::new(),
             arena: StepArena::new(),
             next_id: 1,
         })
     }
 
+    /// The model metadata in use.
     pub fn model(&self) -> &ModelMeta {
         &self.model
     }
 
+    /// Seconds since engine construction (the engine clock).
     pub fn now(&self) -> f64 {
         self.clock.elapsed().as_secs_f64()
     }
@@ -381,6 +396,7 @@ impl<'rt> Engine<'rt> {
         self.submit_spec(spec);
     }
 
+    /// Queued + active request count.
     pub fn pending(&self) -> usize {
         self.queue.len() + self.active.len()
     }
@@ -399,6 +415,7 @@ impl<'rt> Engine<'rt> {
             / self.active.len() as f64
     }
 
+    /// Drain finished requests.
     pub fn take_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.done)
     }
@@ -409,6 +426,49 @@ impl<'rt> Engine<'rt> {
         Ok(self.take_completions())
     }
 
+    /// Advance every lane's decode-mode state machine and partition the
+    /// active set into the step's AR and tree sub-batches (active-set
+    /// indices).  Forced modes (`--decode-mode spec|ar`) pin every lane;
+    /// `auto` routes by each lane's [`LaneMode`] — `Demoted` lanes decode
+    /// autoregressively, `Speculative` and `Probing` lanes go through the
+    /// tree.
+    ///
+    /// [`LaneMode`]: super::requests::LaneMode
+    fn tick_modes(&mut self, tree: &mut Vec<usize>, ar: &mut Vec<usize>) {
+        use super::requests::ModeEvent;
+        let lo = self.cfg.planner.demote_below;
+        let hi = self.cfg.planner.promote_above;
+        let probe = self.cfg.planner.probe_interval;
+        for i in 0..self.active.len() {
+            match self.cfg.decode_mode {
+                DecodeMode::Spec => {
+                    self.active[i].mode = LaneMode::Pinned;
+                    tree.push(i);
+                }
+                DecodeMode::Ar => {
+                    self.active[i].mode = LaneMode::Pinned;
+                    ar.push(i);
+                }
+                DecodeMode::Auto => {
+                    match self.active[i].tick_mode(lo, hi, probe) {
+                        Some(ModeEvent::Demoted) => {
+                            self.metrics.mode_demotions += 1;
+                        }
+                        Some(ModeEvent::Promoted) => {
+                            self.metrics.mode_promotions += 1;
+                        }
+                        None => {}
+                    }
+                    if self.active[i].mode == LaneMode::Demoted {
+                        ar.push(i);
+                    } else {
+                        tree.push(i);
+                    }
+                }
+            }
+        }
+    }
+
     /// One engine iteration.  Returns false when idle.
     pub fn step(&mut self) -> Result<bool> {
         self.admit().context("admission")?;
@@ -417,10 +477,32 @@ impl<'rt> Engine<'rt> {
             return Ok(false);
         }
         let t0 = Instant::now();
-        match self.cfg.kind {
-            EngineKind::Autoregressive => self.step_autoregressive()?,
-            _ => self.step_tree()?,
+        // Partition the active set: tree engines run the per-lane
+        // decode-mode state machine; the pure AR engine sends every lane
+        // down the decode path (no mode machinery on its zero-alloc loop).
+        let mut ar_lanes = std::mem::take(&mut self.arena.ar_lanes);
+        let mut tree_lanes = std::mem::take(&mut self.arena.tree_lanes);
+        ar_lanes.clear();
+        tree_lanes.clear();
+        if self.cfg.kind == EngineKind::Autoregressive {
+            ar_lanes.extend(0..self.active.len());
+        } else {
+            self.tick_modes(&mut tree_lanes, &mut ar_lanes);
         }
+        self.metrics.ar_steps += ar_lanes.len() as u64;
+        self.metrics.spec_steps += tree_lanes.len() as u64;
+        let res = (|| -> Result<()> {
+            if !ar_lanes.is_empty() {
+                self.step_autoregressive(&ar_lanes)?;
+            }
+            if !tree_lanes.is_empty() {
+                self.step_tree(&tree_lanes)?;
+            }
+            Ok(())
+        })();
+        self.arena.ar_lanes = ar_lanes;
+        self.arena.tree_lanes = tree_lanes;
+        res?;
         self.metrics.busy_seconds += t0.elapsed().as_secs_f64();
         self.metrics.steps += 1;
         self.retire();
@@ -478,6 +560,16 @@ impl<'rt> Engine<'rt> {
                 self.cfg.max_batch.min(self.kv.guaranteed_lanes())
             }
             AdmissionMode::Optimistic => self.cfg.max_batch,
+        }
+    }
+
+    /// Starting [`LaneMode`] for a freshly (re-)admitted lane: forced
+    /// decode modes pin it, auto starts every lane speculative (the seeded
+    /// tracker demotes a fleet-typical loser on its first tick).
+    fn initial_mode(&self) -> LaneMode {
+        match self.cfg.decode_mode {
+            DecodeMode::Auto => LaneMode::Speculative,
+            DecodeMode::Spec | DecodeMode::Ar => LaneMode::Pinned,
         }
     }
 
@@ -719,6 +811,9 @@ impl<'rt> Engine<'rt> {
             last_token_at: started,
             admit_step: self.metrics.steps,
             preemptions: 0,
+            mode: self.initial_mode(),
+            ar_since_probe: 0,
+            promotions: 0,
         };
         // Generation pushes must never regrow this vec mid-decode (+2:
         // a zero-room tree step may still commit one token past budget).
@@ -827,6 +922,9 @@ impl<'rt> Engine<'rt> {
                 last_token_at: started,
                 admit_step: self.metrics.steps,
                 preemptions: 0,
+                mode: self.initial_mode(),
+                ar_since_probe: 0,
+                promotions: 0,
             };
             req.tokens.reserve(req.max_new_tokens + 2);
             req.remember_prediction(v);
@@ -952,6 +1050,9 @@ impl<'rt> Engine<'rt> {
             last_token_at: started,
             admit_step: self.metrics.steps,
             preemptions: r.preemptions,
+            mode: self.initial_mode(),
+            ar_since_probe: 0,
+            promotions: 0,
         };
         req.tokens.reserve(req.max_new_tokens + 2);
         req.remember_prediction(v);
@@ -1094,12 +1195,13 @@ impl<'rt> Engine<'rt> {
                                                    None);
             self.rt.executable(&key)?;
             compiled += 1;
-            if self.cfg.kind == EngineKind::Autoregressive {
-                let key = crate::manifest::Manifest::key_for(
-                    &self.cfg.size, Entry::Decode, None, b, None);
-                self.rt.executable(&key)?;
-                compiled += 1;
-            }
+            // Decode serves the AR engine's whole batch AND the tree
+            // engines' demoted sub-batches / prefix replays, so every
+            // engine kind precompiles it.
+            let key = crate::manifest::Manifest::key_for(
+                &self.cfg.size, Entry::Decode, None, b, None);
+            self.rt.executable(&key)?;
+            compiled += 1;
         }
         if self.cfg.kind.uses_tree() {
             let n = self.cfg.prune_layer;

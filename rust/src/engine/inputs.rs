@@ -206,6 +206,42 @@ pub fn medusa_top_tokens(rows: &[f32], vocab: usize, r: usize) -> Vec<Vec<u32>> 
     out
 }
 
+/// Ranked top-R `(token, softmax_prob)` of each medusa head from
+/// row-major [M, V] logits.  The softmax is over the head's full vocab
+/// row (max-shifted for stability), so the returned probabilities are the
+/// head's actual distribution mass on its top candidates — the
+/// instantaneous factor of joint-product tree shaping
+/// (`tree::builder::joint_candidates`).
+pub fn medusa_top_probs(
+    rows: &[f32],
+    vocab: usize,
+    r: usize,
+) -> Vec<Vec<(u32, f64)>> {
+    let m = rows.len() / vocab;
+    let mut out = Vec::with_capacity(m);
+    for h in 0..m {
+        let row = &rows[h * vocab..(h + 1) * vocab];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let z: f64 = row.iter().map(|&x| ((x - max) as f64).exp()).sum();
+        let mut idx: Vec<u32> = (0..vocab as u32).collect();
+        idx.sort_by(|&a, &b| {
+            row[b as usize]
+                .partial_cmp(&row[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(r);
+        out.push(
+            idx.into_iter()
+                .map(|t| {
+                    (t, ((row[t as usize] - max) as f64).exp() / z.max(f64::MIN_POSITIVE))
+                })
+                .collect(),
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -326,5 +362,30 @@ mod tests {
         let rows = vec![1.0f32; 4];
         let tops = medusa_top_tokens(&rows, 4, 3);
         assert_eq!(tops[0], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn medusa_top_probs_softmax_and_order() {
+        let vocab = 4;
+        let rows = vec![
+            0.0, 2.0, 1.0, 0.0, // head 0: 1, 2, then ties 0/3
+            5.0, 5.0, 5.0, 5.0, // head 1: uniform
+        ];
+        let tops = medusa_top_probs(&rows, vocab, 2);
+        // Token order matches medusa_top_tokens exactly.
+        assert_eq!(tops[0][0].0, 1);
+        assert_eq!(tops[0][1].0, 2);
+        assert!(tops[0][0].1 > tops[0][1].1);
+        // Softmax over the FULL row: top-2 mass < 1.
+        let mass: f64 = tops[0].iter().map(|&(_, p)| p).sum();
+        assert!(mass < 1.0 && mass > 0.5, "mass {mass}");
+        // Uniform head: each kept candidate carries 1/vocab.
+        for &(_, p) in &tops[1] {
+            assert!((p - 0.25).abs() < 1e-12);
+        }
+        // Full-row probabilities normalize.
+        let full = medusa_top_probs(&rows, vocab, vocab);
+        let total: f64 = full[0].iter().map(|&(_, p)| p).sum();
+        assert!((total - 1.0).abs() < 1e-9);
     }
 }

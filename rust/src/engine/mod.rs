@@ -28,20 +28,27 @@ pub mod step_tree;
 
 pub use core::Engine;
 pub use requests::{
-    Completion, FinishReason, ReqState, RequestSpec, ResumeState, TokenDelta,
+    Completion, FinishReason, LaneMode, ModeEvent, ReqState, RequestSpec,
+    ResumeState, TokenDelta,
 };
 
 use crate::estimator::planner::PlannerConfig;
 
+/// Which decode algorithm an engine runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
+    /// One `decode` call per token (baseline).
     Autoregressive,
+    /// Blockwise parallel decoding: top-1 chain, one verify pass.
     Bpd,
+    /// Static token tree + tree-attention verification.
     Medusa,
+    /// Medusa plus §4.1 early pruning and §4.2 dynamic generation.
     ProPD,
 }
 
 impl EngineKind {
+    /// Canonical knob string.
     pub fn as_str(&self) -> &'static str {
         match self {
             EngineKind::Autoregressive => "autoregressive",
@@ -51,6 +58,7 @@ impl EngineKind {
         }
     }
 
+    /// Parse `engine.kind` (accepts the `ar` alias).
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "autoregressive" | "ar" => EngineKind::Autoregressive,
@@ -61,6 +69,7 @@ impl EngineKind {
         })
     }
 
+    /// Whether this kind runs the speculative tree path at all.
     pub fn uses_tree(&self) -> bool {
         !matches!(self, EngineKind::Autoregressive)
     }
@@ -82,6 +91,7 @@ pub enum AdmissionMode {
 }
 
 impl AdmissionMode {
+    /// Canonical knob string.
     pub fn as_str(&self) -> &'static str {
         match self {
             AdmissionMode::Reserve => "reserve",
@@ -89,6 +99,7 @@ impl AdmissionMode {
         }
     }
 
+    /// Parse `cache.admission`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "reserve" => Some(AdmissionMode::Reserve),
@@ -98,10 +109,51 @@ impl AdmissionMode {
     }
 }
 
+/// How lanes choose between speculative tree decode and plain AR decode
+/// (`engine.decode_mode` / `--decode-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Per-lane state machine (default): lanes demote to AR when their
+    /// EWMA acceptance collapses below `planner.demote_below`, probe on a
+    /// `planner.probe_interval` cadence, and promote back past
+    /// `planner.promote_above`.  Greedy text is byte-identical to either
+    /// forced mode; only wall-clock moves.
+    Auto,
+    /// Every lane always decodes through the token tree (pre-PR-7
+    /// behavior; the always-speculative baseline).
+    Spec,
+    /// Every lane always decodes autoregressively, even on tree engines.
+    Ar,
+}
+
+impl DecodeMode {
+    /// Canonical knob string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DecodeMode::Auto => "auto",
+            DecodeMode::Spec => "spec",
+            DecodeMode::Ar => "ar",
+        }
+    }
+
+    /// Parse `engine.decode_mode` (accepts `speculative` /
+    /// `autoregressive` aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(DecodeMode::Auto),
+            "spec" | "speculative" => Some(DecodeMode::Spec),
+            "ar" | "autoregressive" => Some(DecodeMode::Ar),
+            _ => None,
+        }
+    }
+}
+
 /// Engine configuration (see `config/` for file loading + CLI overrides).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
+    /// Model size name from the manifest.
     pub size: String,
+    /// Decode algorithm.
     pub kind: EngineKind,
     /// §4.1 early pruning (ProPD component 1; Table-3 ablation toggle).
     pub early_prune: bool,
@@ -121,6 +173,7 @@ pub struct EngineConfig {
     pub perf_alpha: f64,
     /// Recency decay λ for the regression weights (§4.2.1).
     pub perf_lambda: f64,
+    /// Planner section (tree sizing + decode-mode hysteresis).
     pub planner: PlannerConfig,
     /// Maximum concurrent requests (bounded by the KV slot pool).
     pub max_batch: usize,
@@ -152,9 +205,15 @@ pub struct EngineConfig {
     /// only per-step heap traffic left).  Lifecycle notices (cancel /
     /// preempt / resubmit) are emitted regardless.
     pub collect_events: bool,
+    /// Per-lane serial↔parallel switching (`engine.decode_mode`): `auto`
+    /// runs the demote/probe/promote state machine, `spec`/`ar` pin every
+    /// lane to one algorithm.  Irrelevant to `EngineKind::Autoregressive`
+    /// (which has no tree path to switch away from).
+    pub decode_mode: DecodeMode,
 }
 
 impl EngineConfig {
+    /// Defaults for a size/kind (paper components on only for ProPD).
     pub fn new(size: &str, kind: EngineKind) -> Self {
         EngineConfig {
             size: size.to_string(),
@@ -178,6 +237,7 @@ impl EngineConfig {
             prefix_cache: true,
             prefix_lru_pages: 0,
             collect_events: true,
+            decode_mode: DecodeMode::Auto,
         }
     }
 
@@ -190,6 +250,7 @@ impl EngineConfig {
         c
     }
 
+    /// Reject out-of-range knob combinations.
     pub fn validate(&self) -> anyhow::Result<()> {
         use anyhow::bail;
         if self.static_tree_size == 0 || self.static_tree_size > 64 {
@@ -209,6 +270,23 @@ impl EngineConfig {
         if self.page_size == 0 {
             bail!("cache.page_size must be >= 1");
         }
+        let p = &self.planner;
+        if !(0.0..=1.0).contains(&p.demote_below)
+            || !(0.0..=1.0).contains(&p.promote_above)
+        {
+            bail!("planner.demote_below/promote_above must be in [0,1]");
+        }
+        if p.demote_below >= p.promote_above {
+            bail!(
+                "hysteresis requires planner.demote_below ({}) < \
+                 planner.promote_above ({})",
+                p.demote_below,
+                p.promote_above
+            );
+        }
+        if p.probe_interval == 0 {
+            bail!("planner.probe_interval must be >= 1");
+        }
         Ok(())
     }
 }
@@ -216,11 +294,17 @@ impl EngineConfig {
 /// Per-step statistics surfaced to metrics and the bench harness.
 #[derive(Debug, Clone, Default)]
 pub struct StepStats {
+    /// Real (unpadded) batch size.
     pub batch: usize,
+    /// Live tree nodes before pruning (summed over lanes).
     pub tree_size: usize,
+    /// Live tree nodes after pruning.
     pub pruned_size: usize,
+    /// Accepted tokens per lane.
     pub accepted: Vec<usize>,
+    /// Wall-clock of the step.
     pub iter_seconds: f64,
+    /// Tokens committed this step.
     pub tokens_committed: usize,
 }
 
@@ -263,6 +347,30 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = EngineConfig::new("m", EngineKind::ProPD);
         c.page_size = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn decode_mode_roundtrip_and_aliases() {
+        for m in [DecodeMode::Auto, DecodeMode::Spec, DecodeMode::Ar] {
+            assert_eq!(DecodeMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(DecodeMode::parse("speculative"), Some(DecodeMode::Spec));
+        assert_eq!(DecodeMode::parse("autoregressive"), Some(DecodeMode::Ar));
+        assert_eq!(DecodeMode::parse("tree"), None);
+    }
+
+    #[test]
+    fn validate_catches_inverted_hysteresis() {
+        let mut c = EngineConfig::new("m", EngineKind::ProPD);
+        c.planner.demote_below = 0.8;
+        c.planner.promote_above = 0.4;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::new("m", EngineKind::ProPD);
+        c.planner.promote_above = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = EngineConfig::new("m", EngineKind::ProPD);
+        c.planner.probe_interval = 0;
         assert!(c.validate().is_err());
     }
 

@@ -1,5 +1,11 @@
-//! Autoregressive baseline step: one `decode` call commits one token per
-//! request per iteration.
+//! Autoregressive decode step: one `decode` call commits one token per
+//! lane per iteration.
+//!
+//! Two callers share this path: the pure AR baseline engine (whole
+//! batch, every step) and the tree engines' *demoted* sub-batch — lanes
+//! whose decode-mode state machine switched them to serial decode while
+//! speculation is losing (see `requests::LaneMode`).  `lanes` carries
+//! active-set indices; the batch row of lane `lanes[k]` is `k`.
 //!
 //! This is the loop the zero-allocation contract is stated for
 //! (DESIGN.md § Execution backend): staged inputs, entry-point outputs,
@@ -7,7 +13,9 @@
 //! batch tensor is the assembler's resident buffer, and commits land in
 //! already-allocated pages — so once shapes stabilize, a step touches the
 //! heap zero times (asserted by `tests/zero_alloc.rs` under a counting
-//! allocator).
+//! allocator).  The contract covers the AR *engine*; demoted sub-batches
+//! of tree engines additionally refresh per-lane medusa state (which
+//! copies rows) so their trackers keep learning while serial.
 //!
 //! [`StepArena`]: super::arena::StepArena
 
@@ -21,39 +29,48 @@ use crate::runtime::registry::DynArg;
 use crate::tree::accept::argmax;
 
 impl<'rt> Engine<'rt> {
-    pub(super) fn step_autoregressive(&mut self) -> Result<()> {
+    pub(super) fn step_autoregressive(
+        &mut self,
+        lanes: &[usize],
+    ) -> Result<()> {
         let t0 = Instant::now();
-        let b_real = self.active.len();
+        let b_real = lanes.len();
         let b = self.rt.manifest.batch_bucket(b_real);
 
-        // Lane layout: active requests first, dummy lanes repeat lane 0.
+        // Lane layout: sub-batch lanes first, dummy lanes repeat lane 0.
         self.arena.lanes.clear();
-        self.arena.lanes.extend(self.active.iter().map(|r| r.slot));
+        self.arena
+            .lanes
+            .extend(lanes.iter().map(|&li| self.active[li].slot));
         while self.arena.lanes.len() < b {
             let l0 = self.arena.lanes[0];
             self.arena.lanes.push(l0);
         }
         {
             let toks = self.arena.dec_tok.reset_i32(&[b]);
-            for (i, req) in self.active.iter().enumerate() {
-                toks[i] = req.pending_root as i32;
+            for (k, &li) in lanes.iter().enumerate() {
+                toks[k] = self.active[li].pending_root as i32;
             }
-            for i in b_real..b {
-                toks[i] = toks[0];
+            for k in b_real..b {
+                toks[k] = toks[0];
             }
         }
         {
             let lens = self.arena.dec_len.reset_i32(&[b]);
-            for (i, req) in self.active.iter().enumerate() {
-                lens[i] = req.seq_len() as i32;
+            for (k, &li) in lanes.iter().enumerate() {
+                lens[k] = self.active[li].seq_len() as i32;
             }
-            for i in b_real..b {
-                lens[i] = lens[0];
+            for k in b_real..b {
+                lens[k] = lens[0];
             }
         }
         // Incremental assembly: in the steady state only the single column
-        // committed last step is copied per lane (§Perf).
-        let (kv_buf, asm) = self.assembler.assemble(&mut self.kv, &self.arena.lanes);
+        // committed last step is copied per lane (§Perf).  The AR path has
+        // its own assembler — in auto mode the tree sub-batch assembles a
+        // different lane layout every step, and sharing one would force
+        // full rebuilds on both sides.
+        let (kv_buf, asm) =
+            self.ar_assembler.assemble(&mut self.kv, &self.arena.lanes);
         let host_ready = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
@@ -76,37 +93,62 @@ impl<'rt> Engine<'rt> {
         .context("decode")?;
         let exec = t1.elapsed().as_secs_f64();
 
-        // dec_outs: [0] logits [b, V], [2] col_kv [L, 2, b, 1, H, Dh].
+        // dec_outs: [0] logits [b, V], [1] medusa [b, M, V],
+        // [2] col_kv [L, 2, b, 1, H, Dh].
         let v = self.model.vocab;
+        let m_heads = self.model.n_medusa;
         let layers = self.model.n_layers;
-        for i in 0..b_real {
-            let pos = self.active[i].seq_len();
-            let committed = self.active[i].pending_root;
-            let slot = self.active[i].slot;
+        // The AR baseline engine never reads the medusa rows; demoted
+        // lanes of tree engines must keep theirs fresh (the probe tree is
+        // built from the current tip's rows) and keep resolving their
+        // prediction ledger so the EWMA signal can recover and trigger
+        // promotion.
+        let track_medusa = self.cfg.kind.uses_tree();
+        for (k, &li) in lanes.iter().enumerate() {
+            let pos = self.active[li].seq_len();
+            let committed = self.active[li].pending_root;
+            let slot = self.active[li].slot;
             self.kv.commit_columns(
                 slot,
                 self.arena.dec_outs[2].as_f32(),
                 (layers, b, 1),
                 0,
-                i,
+                k,
                 &[(0, pos)],
             ).context("decode kv commit")?;
             let next = {
-                let row = self.arena.dec_outs[0].f32_chunk(i * v, v);
+                let row = self.arena.dec_outs[0].f32_chunk(k * v, v);
                 argmax(row) as u32
             };
-            let req = &mut self.active[i];
-            req.tokens.push(committed);
-            req.pending_root = next;
-            req.steps += 1;
+            {
+                let req = &mut self.active[li];
+                req.tokens.push(committed);
+                req.pending_root = next;
+                req.steps += 1;
+            }
+            if track_medusa {
+                let rows = self.arena.dec_outs[1]
+                    .f32_chunk(k * m_heads * v, m_heads * v);
+                let req = &mut self.active[li];
+                req.medusa_rows.clear();
+                req.medusa_rows.extend_from_slice(rows);
+                req.remember_prediction(v);
+                let mut updates: Vec<(usize, usize)> = Vec::new();
+                self.active[li]
+                    .resolve_predictions(|h, r| updates.push((h, r)));
+                for (h, rank) in updates {
+                    self.tracker.record(h, Some(rank));
+                    self.active[li].tracker.record(h, Some(rank));
+                }
+            }
             self.metrics.tokens_generated += 1;
             self.metrics.accept_len.record(1.0);
             // Freeze any newly completed page into the prefix index so
             // identical prefixes (e.g. a preempt-resume of this very
             // request) can adopt it.
-            self.kv.freeze_prefix(slot, &self.active[i].tokens);
-            self.check_done(i);
-            self.emit_progress(i, &[committed]);
+            self.kv.freeze_prefix(slot, &self.active[li].tokens);
+            self.check_done(li);
+            self.emit_progress(li, &[committed]);
         }
         let total = t0.elapsed().as_secs_f64();
         self.metrics.step_time.record(total);

@@ -32,16 +32,18 @@ use anyhow::{Context, Result};
 
 use super::core::Engine;
 use super::inputs::{
-    compact_hidden_into, medusa_top_tokens, pack_seq_lens_into,
-    pack_tree_masks_into, pack_tree_positions_into, pack_tree_tokens_into,
+    compact_hidden_into, medusa_top_probs, medusa_top_tokens,
+    pack_seq_lens_into, pack_tree_masks_into, pack_tree_positions_into,
+    pack_tree_tokens_into,
 };
-use super::EngineKind;
-use crate::estimator::alloc::{allocate_budget, allocation_gain};
+use super::requests::LaneMode;
+use super::{DecodeMode, EngineKind};
+use crate::estimator::alloc::{allocate_budget, allocation_gain, donor_cap};
 use crate::estimator::BudgetMode;
 use crate::manifest::Entry;
 use crate::runtime::registry::DynArg;
 use crate::tree::accept::accept_path;
-use crate::tree::builder::static_head_profile;
+use crate::tree::builder::{joint_candidates, static_head_profile};
 use crate::tree::prune::prune_tree;
 use crate::tree::{TokenTree, TreeMask};
 
@@ -67,15 +69,38 @@ struct TreeAlloc {
 
 impl<'rt> Engine<'rt> {
     /// Decide this iteration's per-lane tree sizes and padded bucket.
-    fn plan_allocation(&mut self, b_bucket: usize) -> TreeAlloc {
-        let b_real = self.active.len();
-        let mean_seq = self.active.iter().map(|r| r.seq_len()).sum::<usize>()
-            as f64
+    ///
+    /// `lanes` is the speculative sub-batch (active-set indices); any
+    /// demoted lanes outside it are *budget donors* — they stop consuming
+    /// verify tokens, and in per-lane mode their share of the step budget
+    /// is released for the surviving lanes to water-fill.
+    fn plan_allocation(
+        &mut self,
+        lanes: &[usize],
+        b_bucket: usize,
+    ) -> TreeAlloc {
+        let b_real = lanes.len();
+        let mean_seq = lanes
+            .iter()
+            .map(|&li| self.active[li].seq_len())
+            .sum::<usize>() as f64
             / b_real.max(1) as f64;
         let max_cap = *self.tree_buckets.last().unwrap_or(&64);
-        // Never speculate past a lane's remaining generation budget.
-        let caps: Vec<usize> = (0..b_real)
-            .map(|i| max_cap.min(self.room(&self.active[i]) + 1).max(1))
+        let min_bucket = *self.tree_buckets.first().unwrap_or(&4);
+        // Never speculate past a lane's remaining generation budget; a
+        // probing lane gets one cheap smallest-bucket tree — the point of
+        // the probe is a fresh acceptance sample, not throughput.
+        let caps: Vec<usize> = lanes
+            .iter()
+            .map(|&li| {
+                let r = &self.active[li];
+                let c = max_cap.min(self.room(r) + 1).max(1);
+                if r.mode == LaneMode::Probing {
+                    c.min(min_bucket)
+                } else {
+                    c
+                }
+            })
             .collect();
         if !self.cfg.dynamic_tree {
             let bucket = crate::manifest::bucket_for(
@@ -103,8 +128,10 @@ impl<'rt> Engine<'rt> {
             && self.cfg.kind == EngineKind::ProPD
         {
             Some(
-                (0..b_real)
-                    .map(|i| self.build_tree(i, caps[i]))
+                lanes
+                    .iter()
+                    .zip(&caps)
+                    .map(|(&li, &c)| self.build_tree(li, c))
                     .collect(),
             )
         } else {
@@ -126,9 +153,10 @@ impl<'rt> Engine<'rt> {
                     .map(|_| (0..self.cfg.max_rank as u32).collect())
                     .collect();
                 Some(
-                    self.active
+                    lanes
                         .iter()
-                        .map(|r| {
+                        .map(|&li| {
+                            let r = &self.active[li];
                             self.builder.gain_curve(
                                 &r.tracker.candidates(&fake_tokens),
                                 max_cap,
@@ -154,28 +182,35 @@ impl<'rt> Engine<'rt> {
         };
         let bucket =
             self.planner.plan(b_bucket, mean_seq, &pooled, &self.perf);
-        let budget = b_real * bucket;
         if !per_lane {
             let sizes: Vec<usize> =
                 caps.iter().map(|&c| bucket.min(c)).collect();
             return TreeAlloc {
                 sizes,
                 bucket,
-                budget,
+                budget: b_real * bucket,
                 gain: None,
                 prebuilt: None,
             };
         }
         let curves = curves.expect("per-lane mode always builds curves");
-        // Cap every lane at the planner's bucket: the perf model costed
-        // `lanes × bucket` padded tokens, and the step's padded bucket is
-        // driven by the max lane — letting one lane outgrow the costed
-        // bucket would silently execute a step the planner just rejected
-        // as too slow.  Concentration therefore shows up as stragglers
+        // Demoted lanes are budget donors: the planner's per-lane grant
+        // for the lanes that left the tree batch is folded back into the
+        // shared pool so surviving speculative lanes water-fill deeper
+        // trees out of acceptance the donors were wasting.
+        let donors = self.active.len().saturating_sub(b_real);
+        let budget = (b_real + donors) * bucket;
+        // Cap every lane at the donor-lifted bucket: the perf model
+        // costed `(lanes + donors) × bucket` verified tokens, and the
+        // step's padded bucket is driven by the max lane — `donor_cap`
+        // returns the largest grid bucket whose padded cost stays inside
+        // that envelope (the planner's own bucket when there are no
+        // donors).  Concentration therefore shows up as stragglers
         // releasing budget (unspent → tree_alloc_util < 1), never as a
         // costlier step.
+        let lifted = donor_cap(bucket, b_real, donors, &self.tree_buckets);
         let lane_caps: Vec<usize> =
-            caps.iter().map(|&c| c.min(bucket)).collect();
+            caps.iter().map(|&c| c.min(lifted)).collect();
         let sizes = allocate_budget(
             &curves,
             &lane_caps,
@@ -234,6 +269,25 @@ impl<'rt> Engine<'rt> {
                 self.builder.build(root, &cands, size)
             }
             EngineKind::ProPD => {
+                // A lane that earned its way back from AR demotion gets
+                // joint-product shaping: candidate scores multiply the
+                // head's softmax probability for the *current* tip into
+                // the tracked marginal, so the probe's fresh distribution
+                // steers the first post-promotion trees instead of the
+                // stale pre-demotion EWMA alone.
+                if self.cfg.decode_mode == DecodeMode::Auto
+                    && req.promotions > 0
+                {
+                    let probs = medusa_top_probs(
+                        &req.medusa_rows,
+                        v,
+                        self.cfg.max_rank,
+                    );
+                    let cands = joint_candidates(&probs, |h, k| {
+                        req.tracker.marginal(h, k)
+                    });
+                    return self.builder.build(root, &cands, size);
+                }
                 let tops = medusa_top_tokens(
                     &req.medusa_rows,
                     v,
@@ -248,9 +302,13 @@ impl<'rt> Engine<'rt> {
         }
     }
 
-    pub(super) fn step_tree(&mut self) -> Result<()> {
+    /// Run one tree-verification iteration over `lanes` (active-set
+    /// indices).  The batch bucket is keyed on the *sub-batch* size, so a
+    /// step where half the lanes are demoted to AR pads half the tensor —
+    /// that shrinkage is the decode-mode switch's wall-clock win.
+    pub(super) fn step_tree(&mut self, lanes: &[usize]) -> Result<()> {
         let t0 = Instant::now();
-        let b_real = self.active.len();
+        let b_real = lanes.len();
         let b = crate::manifest::bucket_for(b_real, &self.batch_buckets);
         let n = self.cfg.prune_layer;
         let size = self.cfg.size.clone();
@@ -259,7 +317,7 @@ impl<'rt> Engine<'rt> {
         let m_heads = self.model.n_medusa;
 
         // ------------------------------------------------- 1. generation
-        let mut alloc = self.plan_allocation(b);
+        let mut alloc = self.plan_allocation(lanes, b);
         let t_bucket = alloc.bucket;
         let trees: Vec<TokenTree> = match alloc.prebuilt.take() {
             Some(full) => full
@@ -267,21 +325,27 @@ impl<'rt> Engine<'rt> {
                 .zip(&alloc.sizes)
                 .map(|(t, &s)| t.truncated(s))
                 .collect(),
-            None => (0..b_real)
-                .map(|i| self.build_tree(i, alloc.sizes[i]))
+            None => lanes
+                .iter()
+                .enumerate()
+                .map(|(i, &li)| self.build_tree(li, alloc.sizes[i]))
                 .collect(),
         };
         let masks: Vec<TreeMask> =
             trees.iter().map(|t| TreeMask::build(t, t_bucket)).collect();
-        let seq_lens_real: Vec<usize> =
-            self.active.iter().map(|r| r.seq_len()).collect();
+        let seq_lens_real: Vec<usize> = lanes
+            .iter()
+            .map(|&li| self.active[li].seq_len())
+            .collect();
 
         // Dummy lanes replicate lane 0.
         let mut tr: Vec<&TokenTree> = trees.iter().collect();
         let mut mr: Vec<&TreeMask> = masks.iter().collect();
         let mut sl = seq_lens_real.clone();
         self.arena.lanes.clear();
-        self.arena.lanes.extend(self.active.iter().map(|r| r.slot));
+        self.arena
+            .lanes
+            .extend(lanes.iter().map(|&li| self.active[li].slot));
         while tr.len() < b {
             tr.push(&trees[0]);
             mr.push(&masks[0]);
@@ -401,9 +465,9 @@ impl<'rt> Engine<'rt> {
         // no live output borrows.
         let t3 = Instant::now();
         let mut committed_total = 0usize;
-        for i in 0..b_real {
+        for (i, &li) in lanes.iter().enumerate() {
             let ptree = &pruned[i];
-            let room = self.room(&self.active[i]);
+            let room = self.room(&self.active[li]);
             let mut res = {
                 let rows = self.arena.late_outs[0]
                     .f32_chunk(i * tp_bucket * v, ptree.len() * v);
@@ -416,7 +480,7 @@ impl<'rt> Engine<'rt> {
             // and the outputs must stay byte-identical (§4.1).
             {
                 let mut prev =
-                    self.active[i].generated_tokens().last().copied();
+                    self.active[li].generated_tokens().last().copied();
                 for (l, &t) in res.tokens.iter().take(cut).enumerate() {
                     if self.tokenizer.is_stop_step(prev, t) {
                         cut = l + 1;
@@ -433,7 +497,7 @@ impl<'rt> Engine<'rt> {
                     (i * tp_bucket + last) * v, v);
                 res.bonus = crate::tree::accept::argmax(row) as u32;
             }
-            let base_pos = self.active[i].seq_len();
+            let base_pos = self.active[li].seq_len();
             // KV commits: early layers use original indices, late layers
             // use pruned indices.
             let pairs_early: Vec<(usize, usize)> = res
@@ -448,7 +512,7 @@ impl<'rt> Engine<'rt> {
                 .enumerate()
                 .map(|(d, &pi)| (pi, base_pos + d))
                 .collect();
-            let slot = self.active[i].slot;
+            let slot = self.active[li].slot;
             self.kv.commit_columns(
                 slot,
                 self.arena.early_outs[2].as_f32(),
@@ -475,7 +539,7 @@ impl<'rt> Engine<'rt> {
                 .to_vec();
             let accept_len = res.path.len();
             {
-                let req = &mut self.active[i];
+                let req = &mut self.active[li];
                 req.tokens.extend(&res.tokens);
                 req.pending_root = res.bonus;
                 req.medusa_rows = med_rows;
@@ -485,16 +549,16 @@ impl<'rt> Engine<'rt> {
             // Both split-layer commits for these positions are done:
             // freeze any newly completed page into the prefix index.
             self.kv
-                .freeze_prefix(self.active[i].slot, &self.active[i].tokens);
+                .freeze_prefix(self.active[li].slot, &self.active[li].tokens);
             // Acceptance-tracker updates from resolved ledger entries:
             // the request-local tracker drives this lane's future
             // allocation; the engine-global one seeds new admissions.
             let mut updates: Vec<(usize, usize)> = Vec::new();
-            self.active[i]
+            self.active[li]
                 .resolve_predictions(|h, rank| updates.push((h, rank)));
             for (h, rank) in updates {
                 self.tracker.record(h, Some(rank));
-                self.active[i].tracker.record(h, Some(rank));
+                self.active[li].tracker.record(h, Some(rank));
             }
             committed_total += accept_len;
             self.metrics.accept_len.record(accept_len as f64);
@@ -503,8 +567,8 @@ impl<'rt> Engine<'rt> {
             self.metrics
                 .prune_rate
                 .record(1.0 - (pruned[i].len() as f64 / t_live as f64));
-            self.check_done(i);
-            self.emit_progress(i, &res.tokens);
+            self.check_done(li);
+            self.emit_progress(li, &res.tokens);
         }
         let host_post = t3.elapsed().as_secs_f64();
 

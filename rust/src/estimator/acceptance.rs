@@ -14,6 +14,7 @@
 
 use crate::tree::builder::HeadCandidates;
 
+/// EWMA per-(head, rank) acceptance statistics (§4.2.2).
 #[derive(Debug, Clone)]
 pub struct AcceptanceTracker {
     alpha: f64,
@@ -42,14 +43,17 @@ impl AcceptanceTracker {
         AcceptanceTracker { alpha, cumulative, updates: 0 }
     }
 
+    /// Tracked medusa heads.
     pub fn n_heads(&self) -> usize {
         self.cumulative.len()
     }
 
+    /// Ranks tracked per head.
     pub fn max_rank(&self) -> usize {
         self.cumulative.first().map_or(0, |c| c.len())
     }
 
+    /// Resolved predictions recorded so far.
     pub fn updates(&self) -> u64 {
         self.updates
     }

@@ -142,6 +142,34 @@ fn push_increment(
     }
 }
 
+/// Per-lane cap when demoted lanes donate their budget share.
+///
+/// The planner grants `bucket` verified tokens per lane for the whole
+/// batch, including lanes a decode-mode demotion routed to the serial
+/// path.  Donors consume none of it, so the speculative survivors may
+/// grow past `bucket` — but only up to the largest `grid` bucket whose
+/// per-lane padded cost stays inside the donated envelope
+/// `(spec_lanes + donors) · bucket / spec_lanes`, because the step's
+/// padded tree bucket (what the perf model costed) is driven by the
+/// deepest lane.  With no donors this is exactly `bucket`.
+pub fn donor_cap(
+    bucket: usize,
+    spec_lanes: usize,
+    donors: usize,
+    grid: &[usize],
+) -> usize {
+    if donors == 0 || spec_lanes == 0 {
+        return bucket;
+    }
+    let envelope = (spec_lanes + donors) * bucket / spec_lanes;
+    grid.iter()
+        .copied()
+        .filter(|&g| g <= envelope)
+        .max()
+        .unwrap_or(bucket)
+        .max(bucket)
+}
+
 /// Summed expected acceptance length of an allocation (metrics: the "gain
 /// captured" by this step's trees).
 pub fn allocation_gain(curves: &[Vec<f64>], sizes: &[usize]) -> f64 {
@@ -225,6 +253,24 @@ mod tests {
         let curves = vec![linear(1.0, 8), linear(0.0, 8)];
         let g = allocation_gain(&curves, &[3, 1]);
         assert!((g - (3.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn donor_cap_lifts_on_the_grid_only() {
+        let grid = [4, 8, 16, 32, 64];
+        // No donors → planner's bucket, untouched.
+        assert_eq!(donor_cap(16, 4, 0, &grid), 16);
+        // 2 of 4 lanes demoted: envelope = 4·16/2 = 32.
+        assert_eq!(donor_cap(16, 2, 2, &grid), 32);
+        // 3 of 4 demoted: envelope = 4·16/1 = 64.
+        assert_eq!(donor_cap(16, 1, 3, &grid), 64);
+        // 1 of 4 demoted: envelope = 4·16/3 = 21 → snaps down to 16.
+        assert_eq!(donor_cap(16, 3, 1, &grid), 16);
+        // Never below the planner's bucket even on a sparse grid.
+        assert_eq!(donor_cap(16, 2, 1, &[4]), 16);
+        // Degenerate spec_lanes=0 (all demoted): callers skip the tree
+        // step entirely, but the helper must not divide by zero.
+        assert_eq!(donor_cap(16, 0, 4, &grid), 16);
     }
 
     #[test]

@@ -19,6 +19,7 @@ struct SizeStat {
     last_update: u64,
 }
 
+/// EWMA iteration-time model over total verified tokens (§4.2.1).
 #[derive(Debug, Clone)]
 pub struct PerfModel {
     alpha: f64,
@@ -28,6 +29,7 @@ pub struct PerfModel {
 }
 
 impl PerfModel {
+    /// A model with EWMA factor `alpha` and recency decay `lambda`.
     pub fn new(alpha: f64, lambda: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha) && lambda >= 0.0);
         PerfModel { alpha, lambda, stats: Vec::new(), clock: 0 }
@@ -50,6 +52,7 @@ impl PerfModel {
         }
     }
 
+    /// Recorded (tokens, seconds) observations.
     pub fn observations(&self) -> usize {
         self.stats.len()
     }

@@ -33,6 +33,7 @@ pub enum BudgetMode {
 }
 
 impl BudgetMode {
+    /// Canonical knob string.
     pub fn as_str(&self) -> &'static str {
         match self {
             BudgetMode::Uniform => "uniform",
@@ -40,6 +41,7 @@ impl BudgetMode {
         }
     }
 
+    /// Parse the `planner.budget_mode` knob.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "uniform" => Some(BudgetMode::Uniform),
@@ -49,6 +51,7 @@ impl BudgetMode {
     }
 }
 
+/// Planner section of the config (`planner.*`).
 #[derive(Debug, Clone)]
 pub struct PlannerConfig {
     /// Re-plan when |seq_len - last_seq_len| / max_seq exceeds this.
@@ -59,6 +62,17 @@ pub struct PlannerConfig {
     pub buckets: Vec<usize>,
     /// Per-lane budgeted allocation vs the uniform-bucket baseline.
     pub budget_mode: BudgetMode,
+    /// Demote a lane to plain AR decode when its EWMA head-0 acceptance
+    /// signal falls below this (decode-mode state machine; only read when
+    /// `engine.decode_mode = auto`).
+    pub demote_below: f64,
+    /// Promote a probed lane back to speculative decode when the signal
+    /// recovers above this.  Must exceed `demote_below` — the gap is the
+    /// hysteresis band that bounds the oscillation rate.
+    pub promote_above: f64,
+    /// While demoted, run one cheap smallest-bucket probe tree every this
+    /// many AR steps to re-measure acceptance.
+    pub probe_interval: u64,
 }
 
 impl Default for PlannerConfig {
@@ -68,10 +82,14 @@ impl Default for PlannerConfig {
             replan_interval: 32,
             buckets: vec![4, 8, 16, 32, 64],
             budget_mode: BudgetMode::PerLane,
+            demote_below: 0.3,
+            promote_above: 0.6,
+            probe_interval: 16,
         }
     }
 }
 
+/// The dynamic tree-size planner (§4.2.3).
 #[derive(Debug, Clone)]
 pub struct Planner {
     cfg: PlannerConfig,
@@ -90,6 +108,7 @@ pub struct Planner {
 }
 
 impl Planner {
+    /// A fresh planner; `max_seq` bounds usable tree depth.
     pub fn new(cfg: PlannerConfig, max_seq: usize) -> Self {
         Planner {
             cfg,
@@ -103,6 +122,7 @@ impl Planner {
         }
     }
 
+    /// Bucket re-decisions made so far.
     pub fn replans(&self) -> u64 {
         self.replans
     }

@@ -14,15 +14,22 @@ use anyhow::{anyhow, bail, Context, Result};
 /// small integers and floats, well within f64's exact-integer range).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object (sorted keys).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Object field by key (error when missing or not an object).
     pub fn get(&self, key: &str) -> Result<&Value> {
         match self {
             Value::Obj(m) => m
@@ -32,6 +39,7 @@ impl Value {
         }
     }
 
+    /// Object field by key, if present.
     pub fn opt(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key).filter(|v| !matches!(v, Value::Null)),
@@ -39,6 +47,7 @@ impl Value {
         }
     }
 
+    /// The value as a string, or a type error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -46,6 +55,7 @@ impl Value {
         }
     }
 
+    /// The value as an f64, or a type error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -53,6 +63,7 @@ impl Value {
         }
     }
 
+    /// The value as a usize, or a type error.
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -61,6 +72,7 @@ impl Value {
         Ok(f as usize)
     }
 
+    /// The value as an array, or a type error.
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(a) => Ok(a),
@@ -68,6 +80,7 @@ impl Value {
         }
     }
 
+    /// The value as an object, or a type error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Ok(m),
@@ -75,6 +88,7 @@ impl Value {
         }
     }
 
+    /// The value as a bool, or a type error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -87,6 +101,7 @@ impl Value {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
+    /// The value as a vector of strings, or a type error.
     pub fn as_string_vec(&self) -> Result<Vec<String>> {
         self.as_arr()?
             .iter()
@@ -323,6 +338,7 @@ fn escape_into(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Serialize `v` into `out`.
 pub fn write_value(v: &Value, out: &mut String) {
     match v {
         Value::Null => out.push_str("null"),
@@ -360,6 +376,7 @@ pub fn write_value(v: &Value, out: &mut String) {
     }
 }
 
+/// Serialize to a string.
 pub fn to_string(v: &Value) -> String {
     let mut s = String::new();
     write_value(v, &mut s);
@@ -371,14 +388,17 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
     Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// A number value.
 pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
 
+/// A string value.
 pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
 }
 
+/// An array value.
 pub fn arr(items: Vec<Value>) -> Value {
     Value::Arr(items)
 }

@@ -48,6 +48,7 @@ pub struct AssemblyStats {
     pub lanes_rebuilt: usize,
 }
 
+/// The persistent batch tensor + per-lane sync state for one consumer.
 #[derive(Debug, Default)]
 pub struct BatchAssembler {
     bucket: usize,
@@ -56,6 +57,7 @@ pub struct BatchAssembler {
 }
 
 impl BatchAssembler {
+    /// An empty assembler; the first `assemble` call sizes the tensor.
     pub fn new() -> Self {
         Self::default()
     }
@@ -64,8 +66,12 @@ impl BatchAssembler {
     /// return it alongside this step's copy statistics.
     ///
     /// Takes the cache mutably to advance each slot's synced watermark
-    /// (`note_synced`) — a cache therefore has a single consuming
-    /// assembler, which is the engine topology (one per replica).
+    /// (`note_synced`).  Multiple assemblers may consume one cache as
+    /// long as each slot appears in at most one assembler's layout per
+    /// step (the engine topology: the AR and tree sub-batches partition
+    /// the active set, each with its own assembler); commits during
+    /// decode are appends at or past the watermark, so the watermark
+    /// being the *latest* consumer's never invalidates another's state.
     pub fn assemble(
         &mut self,
         kv: &mut KvCache,

@@ -41,13 +41,18 @@ pub const DEFAULT_PAGE_SIZE: usize = 64;
 /// Geometry of one model size's cache.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct KvGeometry {
+    /// Transformer layer count.
     pub layers: usize,
+    /// Maximum sequence length (columns per lane).
     pub max_seq: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
 }
 
 impl KvGeometry {
+    /// The KV geometry of a model.
     pub fn of(m: &ModelMeta) -> Self {
         KvGeometry {
             layers: m.n_layers,
@@ -73,8 +78,11 @@ impl KvGeometry {
 /// already synced are still valid" from "rebuild this lane".
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SlotStamp {
+    /// The slot index.
     pub slot: usize,
+    /// Bumped every time the slot is acquired.
     pub generation: u64,
+    /// Bumped on shrinking truncation.
     pub trunc_epoch: u64,
 }
 
@@ -155,6 +163,7 @@ impl KvCache {
         self.prefix = Some(PrefixIndex::new(self.page_size, lru_pages));
     }
 
+    /// Whether the shared-prefix index is active.
     pub fn prefix_enabled(&self) -> bool {
         self.prefix.is_some()
     }
@@ -175,18 +184,22 @@ impl KvCache {
         self.prefix.as_ref().map_or_else(Vec::new, |ix| ix.digests())
     }
 
+    /// The cache's tensor geometry.
     pub fn geometry(&self) -> KvGeometry {
         self.geom
     }
 
+    /// Total KV slots.
     pub fn capacity(&self) -> usize {
         self.slots.len()
     }
 
+    /// Currently unoccupied slots.
     pub fn free_slots(&self) -> usize {
         self.alloc.free_count()
     }
 
+    /// Sequence positions per KV page.
     pub fn page_size(&self) -> usize {
         self.page_size
     }
@@ -342,6 +355,7 @@ impl KvCache {
         self.alloc.release(slot);
     }
 
+    /// Committed sequence length of `slot`.
     pub fn seq_len(&self, slot: usize) -> usize {
         self.slots[slot].seq_len
     }

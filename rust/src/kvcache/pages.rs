@@ -15,6 +15,8 @@
 //! with other owners must copy it first ([`PagePool::copy_page`] is the
 //! copy-on-write primitive the [`KvCache`](super::KvCache) uses).
 
+/// Fixed-size page free-list shared by every slot (and the prefix
+/// index); pages are refcounted for copy-on-write sharing.
 #[derive(Debug)]
 pub struct PagePool {
     page_elems: usize,
@@ -35,6 +37,8 @@ pub struct PagePool {
 }
 
 impl PagePool {
+    /// A pool of `max_pages` pages of `page_elems` f32 elements each
+    /// (the backing store grows lazily with actual usage).
     pub fn new(page_elems: usize, max_pages: usize) -> Self {
         assert!(page_elems > 0, "page_elems must be >= 1");
         PagePool {
@@ -150,20 +154,24 @@ impl PagePool {
         self.data.copy_within(s..s + self.page_elems, d);
     }
 
+    /// A page's payload.
     pub fn page(&self, page: u32) -> &[f32] {
         let off = page as usize * self.page_elems;
         &self.data[off..off + self.page_elems]
     }
 
+    /// Mutable access to a page's payload.
     pub fn page_mut(&mut self, page: u32) -> &mut [f32] {
         let off = page as usize * self.page_elems;
         &mut self.data[off..off + self.page_elems]
     }
 
+    /// Elements per page.
     pub fn page_elems(&self) -> usize {
         self.page_elems
     }
 
+    /// Pool capacity in pages.
     pub fn max_pages(&self) -> usize {
         self.max_pages
     }

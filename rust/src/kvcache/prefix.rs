@@ -97,6 +97,8 @@ pub struct PrefixIndex {
 }
 
 impl PrefixIndex {
+    /// An empty index over `page_size`-token chunks, pinning at most
+    /// `max_pages` pages (0 = unbounded).
     pub fn new(page_size: usize, max_pages: usize) -> Self {
         assert!(page_size > 0, "page_size must be >= 1");
         PrefixIndex {
@@ -122,6 +124,7 @@ impl PrefixIndex {
         self.live
     }
 
+    /// True when the index holds no cached chains.
     pub fn is_empty(&self) -> bool {
         self.live == 0
     }

@@ -1,5 +1,6 @@
 //! Slot allocator: a tiny LIFO free list with occupancy accounting.
 
+/// Free-list of KV slot indices.
 #[derive(Debug)]
 pub struct SlotAllocator {
     free: Vec<usize>,
@@ -7,6 +8,7 @@ pub struct SlotAllocator {
 }
 
 impl SlotAllocator {
+    /// An allocator with all `capacity` slots free.
     pub fn new(capacity: usize) -> Self {
         SlotAllocator {
             free: (0..capacity).rev().collect(),
@@ -14,26 +16,31 @@ impl SlotAllocator {
         }
     }
 
+    /// Take a free slot, if any.
     pub fn acquire(&mut self) -> Option<usize> {
         let s = self.free.pop()?;
         self.in_use[s] = true;
         Some(s)
     }
 
+    /// Return a slot to the free list.
     pub fn release(&mut self, slot: usize) {
         assert!(self.in_use[slot], "double release of slot {slot}");
         self.in_use[slot] = false;
         self.free.push(slot);
     }
 
+    /// Currently free slots.
     pub fn free_count(&self) -> usize {
         self.free.len()
     }
 
+    /// Currently held slots.
     pub fn used_count(&self) -> usize {
         self.in_use.len() - self.free.len()
     }
 
+    /// Whether `slot` is currently held.
     pub fn is_used(&self, slot: usize) -> bool {
         self.in_use[slot]
     }

@@ -17,6 +17,8 @@
 //! shaped so a compiled-HLO backend slots back in (DESIGN.md § Runtime
 //! backends).
 
+#![warn(missing_docs)]
+
 pub mod batching;
 pub mod bench;
 pub mod config;

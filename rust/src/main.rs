@@ -4,25 +4,11 @@
 //!   propd generate [--prompt "..."] [--set k=v]...     one-shot generation
 //!   propd inspect  [--artifacts dir]                   manifest summary
 //!   propd selftest [--set k=v]...                      tiny end-to-end run
+//!   propd help                                         this usage block
 //!
-//! `--replicas N` scales the server to N engine replicas; `--sim` swaps
-//! the artifacts runtime for the deterministic reference backend (no
-//! artifacts directory needed).  `--routing cache-pressure` steers new
-//! requests away from page-starved replicas; `--page-size N` sets the KV
-//! cache page granularity (positions per page).  `--tree-budget per-lane`
-//! (default) water-fills each step's verified-token budget across lanes
-//! by per-request acceptance; `--tree-budget uniform` restores the
-//! uniform-bucket baseline (ablation).  `--admission optimistic` lets a
-//! finite page pool over-subscribe lanes and preempt/resume under
-//! pressure instead of capping concurrency up front; streaming clients
-//! send `{"stream": true}` for per-step token deltas and `{"cancel": id}`
-//! to abort mid-flight.  `--prefix-cache on|off` (default on) toggles
-//! cross-request shared-prefix KV reuse (`cache.prefix_lru_pages` caps
-//! the pages it may pin); `--routing prefix-affinity` steers
-//! same-prefix traffic to the replica already holding the cached head.
-//! `--threads N` sets the sim backend's worker-thread count (0 = auto,
-//! 1 = deterministic spawn-free reproducibility mode; output bytes are
-//! identical at every setting).
+//! Every flag is described by the [`FLAGS`] table — `propd --help` renders
+//! it, and a unit test asserts the parser accepts exactly that set, so the
+//! help text cannot drift from the accepted flags.
 //!
 //! (The offline crate mirror has no clap; argument parsing is hand-rolled.)
 
@@ -33,6 +19,77 @@ use anyhow::{bail, Context, Result};
 use propd::config::ServingConfig;
 use propd::engine::{Engine, EngineKind};
 use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
+
+/// One CLI flag: `(name, value_placeholder, description)`.  A `None`
+/// placeholder means the flag is a bare switch.  This table is the single
+/// source of truth for `propd help` and the parser-coverage test.
+const FLAGS: &[(&str, Option<&str>, &str)] = &[
+    ("--config", Some("f.toml"),
+     "TOML-subset config file (defaults applied for missing keys)"),
+    ("--set", Some("k=v"),
+     "override any config key, repeatable (e.g. engine.max_batch=8)"),
+    ("--prompt", Some("text"),
+     "prompt for `generate` (default: a built-in demo prompt)"),
+    ("--artifacts", Some("dir"),
+     "compiled-artifacts directory (default: ./artifacts)"),
+    ("--max-new", Some("n"),
+     "max new tokens for `generate` (default: 64)"),
+    ("--engine", Some("kind"),
+     "engine.kind: autoregressive | bpd | medusa | propd (default propd)"),
+    ("--size", Some("s"),
+     "engine.size: model size name from the manifest (default m)"),
+    ("--replicas", Some("n"),
+     "server.replicas: engine replica count for `serve` (default 1)"),
+    ("--routing", Some("policy"),
+     "server.routing: round-robin | least-loaded | cache-pressure | \
+      prefix-affinity"),
+    ("--page-size", Some("n"),
+     "cache.page_size: KV page granularity in positions"),
+    ("--admission", Some("mode"),
+     "cache.admission: reserve (cap lanes up front) | optimistic \
+      (preempt under pressure)"),
+    ("--prefix-cache", Some("on|off"),
+     "cache.prefix_cache: cross-request shared-prefix KV reuse \
+      (default on)"),
+    ("--tree-budget", Some("mode"),
+     "planner.budget_mode: per-lane (water-filled, default) | uniform \
+      (ablation)"),
+    ("--decode-mode", Some("mode"),
+     "engine.decode_mode: auto (per-lane serial<->parallel switching, \
+      default) | spec (always tree) | ar (always serial)"),
+    ("--threads", Some("n"),
+     "runtime.threads: sim worker threads (0 = auto, 1 = spawn-free \
+      deterministic; output bytes identical at every setting)"),
+    ("--sim", None,
+     "use the deterministic sim backend (no artifacts needed)"),
+    ("--help", None, "print this usage block (also -h, `propd help`)"),
+];
+
+/// Render the full usage block ([`FLAGS`]-driven; see `propd help`).
+fn usage() -> String {
+    let mut s = String::from(
+        "propd — ProPD parallel-decoding server\n\
+         \n\
+         usage: propd <command> [flags]\n\
+         \n\
+         commands:\n\
+         \x20 serve      run the TCP server (replicated engines)\n\
+         \x20 generate   one-shot generation to stdout\n\
+         \x20 inspect    print the artifact manifest summary\n\
+         \x20 selftest   tiny end-to-end run across engine kinds\n\
+         \x20 help       this usage block\n\
+         \n\
+         flags:\n",
+    );
+    for &(name, val, desc) in FLAGS {
+        let head = match val {
+            Some(v) => format!("{name} <{v}>"),
+            None => name.to_string(),
+        };
+        s.push_str(&format!("  {head:<24} {desc}\n"));
+    }
+    s
+}
 
 struct Args {
     cmd: String,
@@ -45,7 +102,10 @@ struct Args {
 }
 
 fn parse_args() -> Result<Args> {
-    let mut it = std::env::args().skip(1);
+    parse_args_from(std::env::args().skip(1))
+}
+
+fn parse_args_from(mut it: impl Iterator<Item = String>) -> Result<Args> {
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
     let mut a = Args {
         cmd,
@@ -56,6 +116,9 @@ fn parse_args() -> Result<Args> {
         max_new: 64,
         sim: false,
     };
+    if matches!(a.cmd.as_str(), "-h" | "--help") {
+        a.cmd = "help".into();
+    }
     while let Some(flag) = it.next() {
         let mut val = |name: &str| -> Result<String> {
             it.next().ok_or_else(|| anyhow::anyhow!("{name} needs a value"))
@@ -110,11 +173,16 @@ fn parse_args() -> Result<Args> {
                 let v = val("--tree-budget")?;
                 a.sets.push(format!("planner.budget_mode=\"{v}\""));
             }
+            "--decode-mode" => {
+                let v = val("--decode-mode")?;
+                a.sets.push(format!("engine.decode_mode=\"{v}\""));
+            }
             "--threads" => {
                 let v = val("--threads")?;
                 a.sets.push(format!("runtime.threads={v}"));
             }
             "--sim" => a.sim = true,
+            "-h" | "--help" => a.cmd = "help".into(),
             other => bail!("unknown flag {other:?} (try `propd help`)"),
         }
     }
@@ -239,17 +307,83 @@ fn main() -> Result<()> {
             println!("selftest OK");
             Ok(())
         }
-        _ => {
-            eprintln!(
-                "propd — ProPD parallel-decoding server\n\
-                 usage: propd <serve|generate|inspect|selftest> \
-                 [--config f.toml] [--set k=v] [--engine kind] [--size s] \
-                 [--prompt p] [--max-new n] [--artifacts dir] \
-                 [--replicas n] [--routing policy] [--page-size n] \
-                 [--admission reserve|optimistic] [--prefix-cache on|off] \
-                 [--tree-budget per-lane|uniform] [--threads n] [--sim]"
-            );
+        "help" => {
+            print!("{}", usage());
             Ok(())
         }
+        other => {
+            eprint!("unknown command {other:?}\n\n{}", usage());
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        parse_args_from(args.iter().map(|s| s.to_string()))
+    }
+
+    /// The help text and the parser cannot drift: every table entry must
+    /// be accepted by the parser (with a dummy value when it takes one),
+    /// and the rendered usage block must mention every flag.
+    #[test]
+    fn help_lists_exactly_the_accepted_flags() {
+        let text = usage();
+        for &(name, val, desc) in FLAGS {
+            assert!(text.contains(name), "usage() missing {name}");
+            assert!(text.contains(desc), "usage() missing desc of {name}");
+            let argv: Vec<&str> = match val {
+                Some(_) => vec!["generate", name, "x"],
+                None => vec!["generate", name],
+            };
+            let parsed = parse(&argv);
+            assert!(parsed.is_ok(), "{name} rejected: {parsed:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_flag_is_rejected() {
+        assert!(parse(&["generate", "--warp-speed"]).is_err());
+        assert!(parse(&["generate", "--decode-mode"]).is_err(),
+                "missing value must error");
+    }
+
+    #[test]
+    fn decode_mode_flag_maps_to_config_override() {
+        let a = parse(&["generate", "--decode-mode", "ar", "--sim"]).unwrap();
+        assert_eq!(a.sets, vec!["engine.decode_mode=\"ar\"".to_string()]);
+        assert!(a.sim);
+        // The override round-trips through config loading.
+        let cfg = ServingConfig::load(None, &a.sets).unwrap();
+        assert_eq!(cfg.engine.decode_mode.as_str(), "ar");
+    }
+
+    #[test]
+    fn help_flag_reroutes_any_command() {
+        assert_eq!(parse(&["--help"]).unwrap().cmd, "help");
+        assert_eq!(parse(&["-h"]).unwrap().cmd, "help");
+        assert_eq!(parse(&["serve", "--help"]).unwrap().cmd, "help");
+        assert_eq!(parse(&[]).unwrap().cmd, "help");
+    }
+
+    #[test]
+    fn flag_values_land_in_sets() {
+        let a = parse(&[
+            "serve", "--engine", "propd", "--threads", "2",
+            "--tree-budget", "uniform", "--prefix-cache", "off",
+        ])
+        .unwrap();
+        assert_eq!(
+            a.sets,
+            vec![
+                "engine.kind=propd".to_string(),
+                "runtime.threads=2".to_string(),
+                "planner.budget_mode=\"uniform\"".to_string(),
+                "cache.prefix_cache=false".to_string(),
+            ]
+        );
     }
 }

@@ -16,7 +16,9 @@ use crate::jsonio::{self, Value};
 /// Element type of an artifact input.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -33,12 +35,16 @@ impl DType {
 /// One named tensor (input or weight) with its static shape.
 #[derive(Debug, Clone)]
 pub struct TensorMeta {
+    /// Parameter / input name.
     pub name: String,
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element dtype.
     pub dtype: DType,
 }
 
 impl TensorMeta {
+    /// Element count (product of dims).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -55,9 +61,13 @@ impl TensorMeta {
 /// Which serving entry point an artifact implements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Entry {
+    /// Whole-prompt prefill.
     Prefill,
+    /// One-token-per-lane decode.
     Decode,
+    /// Tree verification through the pruning layer.
     VerifyEarly,
+    /// Tree verification from the pruning layer to the logits.
     VerifyLate,
 }
 
@@ -72,6 +82,7 @@ impl Entry {
         })
     }
 
+    /// Manifest key segment for this entry point.
     pub fn as_str(&self) -> &'static str {
         match self {
             Entry::Prefill => "prefill",
@@ -85,32 +96,54 @@ impl Entry {
 /// Metadata for one AOT-lowered HLO module.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Unique artifact key (`size/entry_n{n}_b{b}_t{t}`).
     pub key: String,
+    /// HLO text path relative to the artifacts root.
     pub path: String,
+    /// Model size this artifact belongs to.
     pub size: String,
+    /// Entry point.
     pub entry: Entry,
+    /// Batch bucket the entry was lowered for.
     pub batch: usize,
+    /// Tree bucket (verification entries only).
     pub tree: Option<usize>,
+    /// Pruning layer n (verify entries only).
     pub n_layer: Option<usize>,
+    /// Parameter tensors in call order.
     pub params: Vec<TensorMeta>,
+    /// Runtime inputs in call order.
     pub inputs: Vec<TensorMeta>,
+    /// Output names in result order.
     pub outputs: Vec<String>,
 }
 
 /// Model architecture for one size (mirrors python ModelConfig).
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
+    /// Size name (manifest key).
     pub name: String,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Feed-forward width.
     pub d_ff: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Maximum sequence length.
     pub max_seq: usize,
+    /// Longest prompt a single prefill call covers.
     pub max_prompt: usize,
+    /// Medusa head count.
     pub n_medusa: usize,
+    /// Layers exposing early-exit logits (valid pruning layers).
     pub early_layers: Vec<usize>,
+    /// Total parameter elements.
     pub param_count: usize,
 }
 
@@ -137,6 +170,7 @@ impl ModelMeta {
         [self.n_layers, 2, batch, self.max_seq, self.n_heads, self.head_dim]
     }
 
+    /// Elements of the batched KV tensor at batch size `batch`.
     pub fn kv_elements(&self, batch: usize) -> usize {
         self.kv_shape(batch).iter().product()
     }
@@ -145,22 +179,31 @@ impl ModelMeta {
 /// The parsed artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifacts directory this manifest was loaded from.
     pub root: PathBuf,
+    /// Batch buckets entry points were lowered for.
     pub batch_buckets: Vec<usize>,
+    /// Tree buckets verification entries were lowered for.
     pub tree_buckets: Vec<usize>,
+    /// Pruning layer the verify artifacts were built with.
     pub default_prune_layer: usize,
+    /// Size used when none is specified.
     pub default_size: String,
+    /// Model metadata by size name.
     pub sizes: BTreeMap<String, ModelMeta>,
+    /// Every lowered artifact.
     pub artifacts: Vec<ArtifactMeta>,
     index: BTreeMap<String, usize>,
 }
 
 impl Manifest {
+    /// Load `manifest.json` from `artifacts_dir`.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let v = jsonio::parse_file(&artifacts_dir.join("manifest.json"))?;
         Self::from_value(artifacts_dir.to_path_buf(), &v)
     }
 
+    /// Build from parsed JSON; `root` becomes the artifacts directory.
     pub fn from_value(root: PathBuf, v: &Value) -> Result<Self> {
         let mut sizes = BTreeMap::new();
         for (name, sv) in v.get("sizes")?.as_obj()? {
@@ -234,12 +277,14 @@ impl Manifest {
         }
     }
 
+    /// Model metadata for `size`.
     pub fn model(&self, size: &str) -> Result<&ModelMeta> {
         self.sizes
             .get(size)
             .ok_or_else(|| anyhow!("unknown model size {size:?}"))
     }
 
+    /// Artifact metadata by exact key.
     pub fn by_key(&self, key: &str) -> Result<&ArtifactMeta> {
         self.index
             .get(key)
@@ -287,6 +332,7 @@ impl Manifest {
         bucket_for(b, &self.batch_buckets)
     }
 
+    /// Smallest configured tree bucket covering `t`.
     pub fn tree_bucket(&self, t: usize) -> usize {
         bucket_for(t, &self.tree_buckets)
     }
@@ -311,19 +357,23 @@ impl Manifest {
             .collect()
     }
 
+    /// Path of a size's packed weights binary.
     pub fn weights_path(&self, size: &str) -> PathBuf {
         self.root.join(size).join("weights.bin")
     }
 
+    /// Path of a size's weights metadata JSON.
     pub fn weights_meta_path(&self, size: &str) -> PathBuf {
         self.root.join(size).join("weights.json")
     }
 
+    /// Absolute path of an artifact's HLO text.
     pub fn artifact_path(&self, art: &ArtifactMeta) -> PathBuf {
         self.root.join(&art.path)
     }
 }
 
+/// Smallest bucket >= `value`, or the largest when none covers it.
 pub fn bucket_for(value: usize, buckets: &[usize]) -> usize {
     for &b in buckets {
         if value <= b {

@@ -19,11 +19,13 @@ use super::EngineMetrics;
 /// report keys).
 #[derive(Debug, Clone, Default)]
 pub struct ReplicaSnapshot {
+    /// Replica index.
     pub replica: usize,
     /// Requests completed and replied by this replica's worker loop.
     pub served: u64,
     /// Engine in-flight count (queue + active lanes) at publish time.
     pub pending: usize,
+    /// The replica's full metrics report.
     pub report: BTreeMap<String, f64>,
 }
 
@@ -34,6 +36,7 @@ pub struct MetricsHub {
 }
 
 impl MetricsHub {
+    /// A hub with one slot per replica.
     pub fn new(replicas: usize) -> Self {
         MetricsHub {
             slots: Mutex::new(
@@ -44,6 +47,7 @@ impl MetricsHub {
         }
     }
 
+    /// Number of replica slots.
     pub fn replica_count(&self) -> usize {
         self.slots.lock().unwrap().len()
     }
@@ -101,7 +105,9 @@ impl MetricsHub {
                   "preempt_total", "requeue_total", "cancelled_total",
                   "resume_prefills", "reprefill_tokens_total",
                   "kv_prefix_hit_tokens", "kv_prefix_miss_tokens",
-                  "kv_prefix_evictions"] {
+                  "kv_prefix_evictions",
+                  "mode_demotions", "mode_promotions",
+                  "ar_steps", "spec_steps"] {
             totals.insert(k.into(), sum(k));
         }
         // Fleet prefix-reuse economics: hit rate as a ratio of summed
@@ -173,11 +179,14 @@ impl MetricsHub {
 /// Point-in-time fleet view: per-replica snapshots + rolled-up totals.
 #[derive(Debug, Clone)]
 pub struct AggregateSnapshot {
+    /// Per-replica snapshots.
     pub replicas: Vec<ReplicaSnapshot>,
+    /// Rolled-up fleet totals by key.
     pub totals: BTreeMap<String, f64>,
 }
 
 impl AggregateSnapshot {
+    /// An aggregated value by key (0.0 when absent).
     pub fn total(&self, key: &str) -> f64 {
         self.totals.get(key).copied().unwrap_or(0.0)
     }
@@ -365,6 +374,31 @@ mod tests {
         // (300 + 10) / (400 + 100) = 0.62, not (0.75 + 0.1) / 2.
         assert!((hub.aggregate().total("kv_prefix_hit_rate") - 0.62).abs()
             < 1e-12);
+    }
+
+    #[test]
+    fn decode_mode_counters_sum_across_replicas() {
+        let hub = MetricsHub::new(2);
+        let a = EngineMetrics {
+            mode_demotions: 2,
+            mode_promotions: 1,
+            ar_steps: 40,
+            spec_steps: 60,
+            ..Default::default()
+        };
+        let b = EngineMetrics {
+            mode_demotions: 3,
+            ar_steps: 10,
+            spec_steps: 90,
+            ..Default::default()
+        };
+        hub.publish(0, 0, 0, &a);
+        hub.publish(1, 0, 0, &b);
+        let agg = hub.aggregate();
+        assert_eq!(agg.total("mode_demotions"), 5.0);
+        assert_eq!(agg.total("mode_promotions"), 1.0);
+        assert_eq!(agg.total("ar_steps"), 50.0);
+        assert_eq!(agg.total("spec_steps"), 150.0);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 
 use crate::util::stats::Summary;
 
+/// Per-engine counters and per-step summaries.
 #[derive(Debug, Default)]
 pub struct EngineMetrics {
     /// Wall-clock spent inside engine steps (s).
@@ -56,12 +57,16 @@ pub struct EngineMetrics {
     /// Bytes copied into the batch KV tensor per step by incremental
     /// assembly (only columns committed since the previous step).
     pub assembly_bytes: Summary,
+    /// Engine steps taken.
     pub steps: u64,
+    /// Tokens committed (excludes prompts).
     pub tokens_generated: u64,
     /// Total live tree nodes verified across steps (real lanes only) —
     /// the denominator of `accept_per_verified`.
     pub verify_tokens: u64,
+    /// Requests finished.
     pub requests_completed: u64,
+    /// Prefill calls.
     pub prefills: u64,
     /// Engine wall-clock while at least one request was active (s).
     pub busy_seconds: f64,
@@ -72,6 +77,7 @@ pub struct EngineMetrics {
     pub assembly_bytes_full: u64,
     /// KV page-pool gauges sampled after the latest step.
     pub kv_pages_in_use: u64,
+    /// Page-pool capacity (pages).
     pub kv_page_capacity: u64,
     /// Lanes preempted under KV-page pressure (pages released, request
     /// requeued with its committed prefix).
@@ -96,9 +102,21 @@ pub struct EngineMetrics {
     /// LRU evictions from the prefix index (cap + pool pressure), sampled
     /// after the latest step.
     pub kv_prefix_evictions: u64,
+    /// Lane transitions Speculative→Demoted (decode-mode state machine:
+    /// acceptance fell below `planner.demote_below`).
+    pub mode_demotions: u64,
+    /// Lane transitions Probing→Speculative (a probe tree cleared
+    /// `planner.promote_above`).
+    pub mode_promotions: u64,
+    /// Lane-steps decoded serially (one per lane per AR sub-step; the AR
+    /// engine counts every lane-step here).
+    pub ar_steps: u64,
+    /// Lane-steps decoded speculatively (one per lane per tree sub-step).
+    pub spec_steps: u64,
 }
 
 impl EngineMetrics {
+    /// Generated tokens over busy seconds.
     pub fn tokens_per_second(&self) -> f64 {
         if self.busy_seconds <= 0.0 {
             0.0
@@ -107,10 +125,12 @@ impl EngineMetrics {
         }
     }
 
+    /// Mean accepted tokens per lane-step.
     pub fn mean_accept_len(&self) -> f64 {
         self.accept_len.mean()
     }
 
+    /// Mean fraction of tree nodes pruned at the early stage.
     pub fn mean_prune_rate(&self) -> f64 {
         self.prune_rate.mean()
     }
@@ -221,6 +241,10 @@ impl EngineMetrics {
         m.insert("kv_prefix_hit_rate".into(), self.kv_prefix_hit_rate());
         m.insert("kv_prefix_evictions".into(),
                  self.kv_prefix_evictions as f64);
+        m.insert("mode_demotions".into(), self.mode_demotions as f64);
+        m.insert("mode_promotions".into(), self.mode_promotions as f64);
+        m.insert("ar_steps".into(), self.ar_steps as f64);
+        m.insert("spec_steps".into(), self.spec_steps as f64);
         m
     }
 }
@@ -268,6 +292,10 @@ mod tests {
             "kv_prefix_miss_tokens",
             "kv_prefix_hit_rate",
             "kv_prefix_evictions",
+            "mode_demotions",
+            "mode_promotions",
+            "ar_steps",
+            "spec_steps",
         ] {
             assert!(r.contains_key(k), "missing {k}");
         }

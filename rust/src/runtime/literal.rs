@@ -8,9 +8,12 @@ use crate::manifest::{DType, TensorMeta};
 /// Additive-mask "minus infinity" — matches python kernels (NEG_INF).
 pub const NEG_INF: f32 = -1e9;
 
+/// Typed storage behind a `HostTensor`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostData {
+    /// f32 payload.
     F32(Vec<f32>),
+    /// i32 payload.
     I32(Vec<i32>),
 }
 
@@ -18,30 +21,37 @@ pub enum HostData {
 /// artifact contract).
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Typed payload.
     pub data: HostData,
 }
 
 impl HostTensor {
+    /// An f32 tensor from shape + data.
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostTensor { shape, data: HostData::F32(data) }
     }
 
+    /// An i32 tensor from shape + data.
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostTensor { shape, data: HostData::I32(data) }
     }
 
+    /// A zero-filled f32 tensor.
     pub fn zeros_f32(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         HostTensor { shape, data: HostData::F32(vec![0.0; n]) }
     }
 
+    /// Element count (product of dims).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// The element dtype.
     pub fn dtype(&self) -> DType {
         match self.data {
             HostData::F32(_) => DType::F32,
@@ -49,6 +59,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow as f32 (panics on dtype mismatch).
     pub fn as_f32(&self) -> &[f32] {
         match &self.data {
             HostData::F32(v) => v,
@@ -56,6 +67,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow as i32 (panics on dtype mismatch).
     pub fn as_i32(&self) -> &[i32] {
         match &self.data {
             HostData::I32(v) => v,
@@ -63,6 +75,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow mutably as f32 (panics on dtype mismatch).
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match &mut self.data {
             HostData::F32(v) => v,
@@ -70,6 +83,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow mutably as i32 (panics on dtype mismatch).
     pub fn as_i32_mut(&mut self) -> &mut [i32] {
         match &mut self.data {
             HostData::I32(v) => v,

@@ -34,6 +34,7 @@ pub enum RuntimeSpec {
 }
 
 impl RuntimeSpec {
+    /// Materialize a private `Runtime` from this recipe.
     pub fn create(&self) -> Result<Runtime> {
         match self {
             RuntimeSpec::Artifacts(dir) => Runtime::load(dir),

@@ -28,21 +28,26 @@ use crate::runtime::weights::Weights;
 /// discipline a real device runtime requires.
 #[derive(Debug, Clone)]
 pub struct DeviceBuffer {
+    /// The resident tensor (host memory under the sim backend).
     pub tensor: HostTensor,
 }
 
 /// A dynamic argument: host data passed per call, or an already-resident
 /// device buffer.
 pub enum DynArg<'a> {
+    /// Borrowed host tensor staged per call.
     Host(&'a HostTensor),
+    /// Persistent device-resident buffer.
     Buf(&'a DeviceBuffer),
 }
 
 /// One runnable entry point plus its manifest metadata.
 pub struct Executable {
+    /// Manifest entry this executable was built from.
     pub meta: ArtifactMeta,
     model: ModelMeta,
     sim: Sim,
+    /// Time spent compiling/loading this executable.
     pub compile_seconds: f64,
 }
 
@@ -145,10 +150,12 @@ impl Executable {
 /// owns its own `Runtime` — the multi-replica server constructs one per
 /// worker thread.
 pub struct Runtime {
+    /// The artifact manifest this runtime serves.
     pub manifest: Manifest,
     sim: Sim,
     exes: RefCell<HashMap<String, Rc<Executable>>>,
     host_weights: RefCell<HashMap<String, Rc<Weights>>>,
+    /// (key, seconds) per compiled executable, in compile order.
     pub compile_log: RefCell<Vec<(String, f64)>>,
 }
 

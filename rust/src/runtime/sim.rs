@@ -45,18 +45,29 @@ use crate::util::rng::Rng;
 pub struct SimConfig {
     /// Model-size name registered in the manifest (engines select by it).
     pub size: String,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Feed-forward width.
     pub d_ff: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Maximum sequence length.
     pub max_seq: usize,
+    /// Longest prompt one prefill call covers.
     pub max_prompt: usize,
+    /// Medusa head count.
     pub n_medusa: usize,
     /// Layers with an early-exit head (valid `prune_layer` values).
     pub early_layers: Vec<usize>,
+    /// Batch buckets the synthetic manifest advertises.
     pub batch_buckets: Vec<usize>,
+    /// Tree buckets the synthetic manifest advertises.
     pub tree_buckets: Vec<usize>,
     /// Stream seed: different seeds give different deterministic corpora.
     pub seed: u64,
@@ -103,6 +114,7 @@ fn tensor(name: &str, dtype: DType, shape: Vec<usize>) -> TensorMeta {
 }
 
 impl SimConfig {
+    /// Manifest-style model metadata for this config.
     pub fn model_meta(&self) -> ModelMeta {
         ModelMeta {
             name: self.size.clone(),
@@ -275,6 +287,7 @@ impl Ctx {
 /// The executor: stateless; everything derives from `seed` + inputs.
 #[derive(Debug, Clone, Copy)]
 pub struct Sim {
+    /// Seed folded into every logits stream.
     pub seed: u64,
     /// See [`SimConfig::medusa_flaky_below`].
     pub medusa_flaky_below: u32,
@@ -283,6 +296,7 @@ pub struct Sim {
 }
 
 impl Sim {
+    /// A sim oracle with the given seed.
     pub fn new(seed: u64) -> Self {
         Sim { seed, medusa_flaky_below: 0, threads: 1 }
     }

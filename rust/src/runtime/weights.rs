@@ -12,12 +12,16 @@ use crate::runtime::literal::HostTensor;
 /// One model size's parameters, in artifact argument order (sorted names).
 #[derive(Debug)]
 pub struct Weights {
+    /// Parameter names in pack order.
     pub names: Vec<String>,
+    /// Parameter tensors, parallel to `names`.
     pub tensors: Vec<HostTensor>,
+    /// Total payload bytes on disk.
     pub total_bytes: usize,
 }
 
 impl Weights {
+    /// Load packed weights + metadata from disk.
     pub fn load(bin_path: &Path, meta_path: &Path) -> Result<Self> {
         let meta = jsonio::parse_file(meta_path)?;
         let blob = std::fs::read(bin_path)
@@ -68,6 +72,7 @@ impl Weights {
         Ok(Weights { names, tensors, total_bytes: total })
     }
 
+    /// Tensor by parameter name.
     pub fn by_name(&self, name: &str) -> Option<&HostTensor> {
         self.names
             .iter()
@@ -75,6 +80,7 @@ impl Weights {
             .map(|i| &self.tensors[i])
     }
 
+    /// Total parameter elements.
     pub fn param_count(&self) -> usize {
         self.tensors.iter().map(|t| t.elements()).sum()
     }

@@ -48,6 +48,7 @@ pub use replicas::{
 pub struct Shared {
     /// Admission queue: bounded FCFS with backpressure.
     pub queue: RequestQueue,
+    /// Set to stop the acceptor loop.
     pub shutdown: AtomicBool,
     /// Per-replica metrics roll-up point.
     pub hub: MetricsHub,
@@ -59,6 +60,7 @@ pub struct Shared {
 }
 
 impl Shared {
+    /// Fresh shared state for `replicas` replicas and a bounded queue.
     pub fn new(max_queue: usize, replicas: usize) -> Self {
         Shared {
             queue: RequestQueue::new(max_queue),
@@ -106,6 +108,7 @@ impl Shared {
         self.queue.close();
     }
 
+    /// Whether shutdown has been requested.
     pub fn is_shutting_down(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
     }

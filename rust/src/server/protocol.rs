@@ -17,6 +17,7 @@ use crate::metrics::{AggregateSnapshot, ReplicaSnapshot};
 /// A parsed client request line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
+    /// A generation request (`{"prompt": ...}`).
     Generate { prompt: String, max_new: usize, stream: bool },
     /// `{"cancel": <id>}` — cancel an in-flight request fleet-wide.
     Cancel { id: u64 },
@@ -79,6 +80,7 @@ pub fn parse_request(line: &str) -> Result<(String, usize)> {
     Ok((prompt, max_new))
 }
 
+/// Serialize a completion summary frame.
 pub fn render_completion(c: &Completion) -> String {
     jsonio::to_string(&obj(vec![
         ("id", num(c.id as f64)),
@@ -138,6 +140,7 @@ pub fn render_cancel_ack(id: u64, known: bool) -> String {
     ]))
 }
 
+/// Serialize an error frame.
 pub fn render_error(msg: &str) -> String {
     jsonio::to_string(&obj(vec![("error", s(msg))]))
 }
@@ -181,6 +184,7 @@ pub fn parse_completion(line: &str) -> Result<(u64, String, f64)> {
     ))
 }
 
+/// Client-side: serialize a generate request line.
 pub fn render_request(prompt: &str, max_new: usize) -> String {
     jsonio::to_string(&obj(vec![
         ("prompt", s(prompt)),
@@ -188,6 +192,7 @@ pub fn render_request(prompt: &str, max_new: usize) -> String {
     ]))
 }
 
+/// Client-side: serialize a streaming generate request line.
 pub fn render_stream_request(prompt: &str, max_new: usize) -> String {
     jsonio::to_string(&obj(vec![
         ("prompt", s(prompt)),
@@ -196,6 +201,7 @@ pub fn render_stream_request(prompt: &str, max_new: usize) -> String {
     ]))
 }
 
+/// Client-side: serialize a `{"cancel": id}` line.
 pub fn render_cancel_request(id: u64) -> String {
     jsonio::to_string(&obj(vec![("cancel", num(id as f64))]))
 }

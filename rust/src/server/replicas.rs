@@ -188,7 +188,9 @@ fn run_replica(
 
 /// N replicas + scheduler over one shared admission queue.
 pub struct ReplicaSet<'a> {
+    /// Serving configuration (replica count, routing, engine).
     pub cfg: &'a ServingConfig,
+    /// Recipe each worker builds its private runtime from.
     pub spec: &'a RuntimeSpec,
 }
 
@@ -243,7 +245,9 @@ impl ReplicaSet<'_> {
 /// the streaming/cancellation tests exercise.
 #[derive(Clone)]
 pub struct OfflineRequest {
+    /// The prompt text.
     pub prompt: String,
+    /// Per-request generation budget.
     pub max_new_tokens: usize,
     /// Collect per-step token deltas for this request.
     pub stream: bool,
@@ -252,6 +256,7 @@ pub struct OfflineRequest {
 }
 
 impl OfflineRequest {
+    /// A plain non-streaming request.
     pub fn new(prompt: &str, max_new_tokens: usize) -> Self {
         OfflineRequest {
             prompt: prompt.to_string(),
@@ -266,11 +271,14 @@ impl OfflineRequest {
 /// in submission order, plus the aggregate metrics and per-replica served
 /// counts.
 pub struct OfflineOutcome {
+    /// Completions in submission order.
     pub completions: Vec<Completion>,
     /// `deltas[i]` holds request i's streamed events (empty unless its
     /// `stream` flag was set).
     pub deltas: Vec<Vec<TokenDelta>>,
+    /// Aggregated fleet metrics.
     pub snapshot: AggregateSnapshot,
+    /// Requests served per replica.
     pub served: Vec<u64>,
 }
 

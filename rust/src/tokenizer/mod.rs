@@ -4,19 +4,23 @@
 //! the identity on bytes.  The stop convention mirrors the corpus framing:
 //! an assistant turn ends at a double newline (`\n\n`).
 
+/// Vocabulary size: one token per byte.
 pub const VOCAB: usize = 256;
 
 /// Token id type used across the coordinator.
 pub type Token = u32;
 
+/// Identity byte-level tokenizer (token = byte).
 #[derive(Debug, Clone, Default)]
 pub struct ByteTokenizer;
 
 impl ByteTokenizer {
+    /// Text to one token per UTF-8 byte.
     pub fn encode(&self, text: &str) -> Vec<Token> {
         text.as_bytes().iter().map(|&b| b as Token).collect()
     }
 
+    /// Tokens to text (lossy on invalid UTF-8).
     pub fn decode(&self, tokens: &[Token]) -> String {
         let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xff) as u8).collect();
         String::from_utf8_lossy(&bytes).into_owned()

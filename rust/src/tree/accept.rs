@@ -11,6 +11,7 @@
 use super::node::TokenTree;
 use crate::tokenizer::Token;
 
+/// Outcome of greedy tree verification for one lane.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AcceptResult {
     /// Indices (into the verified tree) of the accepted path, root first.
@@ -30,6 +31,7 @@ impl AcceptResult {
     }
 }
 
+/// Index of the largest element (first on ties).
 #[inline]
 pub fn argmax(row: &[f32]) -> usize {
     let mut best = 0usize;

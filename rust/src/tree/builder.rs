@@ -25,8 +25,11 @@ pub type HeadCandidates = Vec<Vec<(Token, f64)>>;
 /// Shape summary of a built tree (used in metrics/reports).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TreeShape {
+    /// Node count.
     pub size: usize,
+    /// Deepest node's depth (root = 0).
     pub depth: usize,
+    /// Sum of path probabilities (§4.2's expected accept length).
     pub expected_accept_len: f64,
 }
 
@@ -62,6 +65,7 @@ impl Ord for Candidate {
     }
 }
 
+/// Builds token trees from ranked head candidates (§4.2).
 #[derive(Debug, Clone)]
 pub struct TreeBuilder {
     /// Highest medusa-head rank considered per level.
@@ -75,6 +79,7 @@ impl Default for TreeBuilder {
 }
 
 impl TreeBuilder {
+    /// A builder considering at most `max_rank` candidates per head.
     pub fn new(max_rank: usize) -> Self {
         TreeBuilder { max_rank }
     }
@@ -194,6 +199,7 @@ impl TreeBuilder {
         curve
     }
 
+    /// Shape summary of a built tree.
     pub fn shape_of(tree: &TokenTree) -> TreeShape {
         TreeShape {
             size: tree.len(),
@@ -201,6 +207,40 @@ impl TreeBuilder {
             expected_accept_len: tree.expected_accept_len(),
         }
     }
+}
+
+/// Joint-product candidate scoring for tree shaping.
+///
+/// `probs[h]` holds head `h`'s top candidates for the *current* tip with
+/// their softmax probabilities; `marginal(h, k)` is the tracked per-rank
+/// acceptance marginal (EWMA).  Each candidate is scored by the product
+/// of the two — the head's instantaneous confidence tempered by how often
+/// that rank has actually been accepted — and each head's list is
+/// re-sorted by the joint score (descending, token id tie-break) so the
+/// greedy builder's rank order follows the joint distribution.  Used for
+/// lanes freshly promoted out of AR demotion, where the pre-demotion
+/// EWMA alone is stale.
+pub fn joint_candidates(
+    probs: &[Vec<(Token, f64)>],
+    mut marginal: impl FnMut(usize, usize) -> f64,
+) -> HeadCandidates {
+    probs
+        .iter()
+        .enumerate()
+        .map(|(h, row)| {
+            let mut scored: Vec<(Token, f64)> = row
+                .iter()
+                .enumerate()
+                .map(|(k, &(t, p))| (t, p * marginal(h, k)))
+                .collect();
+            scored.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1)
+                    .unwrap_or(Ordering::Equal)
+                    .then_with(|| a.0.cmp(&b.0))
+            });
+            scored
+        })
+        .collect()
 }
 
 /// The static Medusa-baseline head profile: a fixed, plausible acceptance
@@ -346,6 +386,32 @@ mod tests {
                 assert!(p[h][0].1 < p[h - 1][0].1);
             }
         }
+    }
+
+    #[test]
+    fn joint_candidates_multiply_and_resort() {
+        // Head 0: token 5 has high softmax but rank 1 rarely accepts;
+        // token 3's softmax is lower but rank 0's marginal is strong.
+        let probs = vec![vec![(3, 0.4), (5, 0.5)], vec![(7, 1.0)]];
+        let marginals = [[0.9, 0.1], [0.5, 0.5]];
+        let j = joint_candidates(&probs, |h, k| marginals[h][k]);
+        assert_eq!(j.len(), 2);
+        // 0.4·0.9 = 0.36 beats 0.5·0.1 = 0.05 → token 3 leads after
+        // the joint re-sort.
+        assert_eq!(j[0][0].0, 3);
+        assert!((j[0][0].1 - 0.36).abs() < 1e-12);
+        assert_eq!(j[0][1].0, 5);
+        assert!((j[0][1].1 - 0.05).abs() < 1e-12);
+        assert_eq!(j[1], vec![(7, 0.5)]);
+    }
+
+    #[test]
+    fn joint_candidates_tie_break_is_deterministic() {
+        let probs = vec![vec![(9, 0.5), (2, 0.5)]];
+        let j = joint_candidates(&probs, |_, _| 1.0);
+        // Equal joint scores order by token id.
+        assert_eq!(j[0][0].0, 2);
+        assert_eq!(j[0][1].0, 9);
     }
 
     #[test]

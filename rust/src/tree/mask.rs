@@ -37,14 +37,17 @@ impl TreeMask {
         TreeMask { rows, live: tree.len() }
     }
 
+    /// Padded row count (the tree bucket).
     pub fn bucket(&self) -> usize {
         self.rows.len()
     }
 
+    /// Live (non-padding) rows.
     pub fn live(&self) -> usize {
         self.live
     }
 
+    /// Row `i`'s ancestor bitset.
     pub fn row(&self, i: usize) -> u64 {
         self.rows[i]
     }

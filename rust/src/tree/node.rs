@@ -13,8 +13,10 @@ use crate::tokenizer::Token;
 /// the AOT artifact grid tops out at 64-node trees.
 pub const MAX_TREE: usize = 64;
 
+/// One candidate token in a tree (parent link + head/rank origin).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TreeNode {
+    /// The candidate token.
     pub token: Token,
     /// Parent index; `None` only for the root (index 0).
     pub parent: Option<usize>,
@@ -67,28 +69,34 @@ impl TokenTree {
         TokenTree { nodes }
     }
 
+    /// A tree from pre-linked nodes (root first).
     pub fn from_nodes(nodes: Vec<TreeNode>) -> Self {
         let tree = TokenTree { nodes };
         debug_assert!(tree.validate().is_ok(), "{:?}", tree.validate());
         tree
     }
 
+    /// Node count.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// True for a zero-node tree.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// Node `i`.
     pub fn node(&self, i: usize) -> &TreeNode {
         &self.nodes[i]
     }
 
+    /// All nodes, root first.
     pub fn nodes(&self) -> &[TreeNode] {
         &self.nodes
     }
 
+    /// The node tokens in index order.
     pub fn tokens(&self) -> Vec<Token> {
         self.nodes.iter().map(|n| n.token).collect()
     }

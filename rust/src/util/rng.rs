@@ -3,12 +3,14 @@
 //! Used by the workload generator, schedulers and property tests — every
 //! experiment in EXPERIMENTS.md is reproducible from its seed.
 
+/// xoshiro256** state (seed-expanded via SplitMix64).
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
 }
 
 impl Rng {
+    /// A generator seeded deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         // SplitMix64 expansion of the seed (never all-zero state).
         let mut x = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -22,6 +24,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// The next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]

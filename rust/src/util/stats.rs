@@ -22,6 +22,7 @@ impl Default for Summary {
 }
 
 impl Summary {
+    /// A summary keeping a `cap`-sample reservoir for percentiles.
     pub fn with_capacity(cap: usize) -> Self {
         Summary {
             count: 0,
@@ -36,6 +37,7 @@ impl Summary {
         }
     }
 
+    /// Add one observation.
     pub fn record(&mut self, x: f64) {
         self.count += 1;
         self.sum += x;
@@ -54,10 +56,12 @@ impl Summary {
         }
     }
 
+    /// Observations recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -66,14 +70,17 @@ impl Summary {
         }
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         if self.count == 0 { 0.0 } else { self.min }
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         if self.count == 0 { 0.0 } else { self.max }
     }
 
+    /// Sum of observations.
     pub fn sum(&self) -> f64 {
         self.sum
     }
@@ -89,10 +96,12 @@ impl Summary {
         xs[idx.min(xs.len() - 1)]
     }
 
+    /// Median (reservoir-estimated past `cap` samples).
     pub fn p50(&self) -> f64 {
         self.percentile(0.50)
     }
 
+    /// 99th percentile (reservoir-estimated past `cap` samples).
     pub fn p99(&self) -> f64 {
         self.percentile(0.99)
     }

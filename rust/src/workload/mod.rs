@@ -17,6 +17,7 @@ use anyhow::{bail, Context, Result};
 use crate::jsonio;
 use crate::util::rng::Rng;
 
+/// Built-in prompt-profile names.
 pub const PROFILES: [&str; 3] = ["mtbench", "chatgpt", "alpaca"];
 
 /// Per-profile generation budget (mirrors python data.PROFILE_LENGTHS —
@@ -33,10 +34,12 @@ pub fn output_budget(profile: &str) -> usize {
 /// Prompt pools loaded from `artifacts/prompts.json`.
 #[derive(Debug, Clone)]
 pub struct PromptSet {
+    /// (profile name, prompts) pairs.
     pub profiles: Vec<(String, Vec<String>)>,
 }
 
 impl PromptSet {
+    /// Load prompt profiles from the artifacts directory.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let v = jsonio::parse_file(&artifacts_dir.join("prompts.json"))?;
         let obj = v.as_obj()?;
@@ -71,6 +74,7 @@ impl PromptSet {
         PromptSet { profiles }
     }
 
+    /// Prompts for a named profile.
     pub fn profile(&self, name: &str) -> Result<&[String]> {
         self.profiles
             .iter()
@@ -85,25 +89,32 @@ impl PromptSet {
 pub struct TraceRequest {
     /// Arrival time offset in seconds from trace start.
     pub arrival: f64,
+    /// The prompt text.
     pub prompt: String,
+    /// Per-request generation budget.
     pub max_new_tokens: usize,
+    /// Profile the prompt was drawn from.
     pub profile: String,
 }
 
 /// Trace generator configuration.
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
+    /// Profile to draw prompts from.
     pub profile: String,
+    /// Requests to generate.
     pub n_requests: usize,
     /// Mean arrival rate (requests/second); `None` = all at t=0 (closed
     /// loop / offline throughput mode, the paper's setting).
     pub rate: Option<f64>,
+    /// PRNG seed.
     pub seed: u64,
     /// Override output budget (None = profile default).
     pub max_new_tokens: Option<usize>,
 }
 
 impl TraceConfig {
+    /// A deterministic trace of `n` requests from a profile.
     pub fn offline(profile: &str, n: usize, seed: u64) -> Self {
         TraceConfig {
             profile: profile.to_string(),
@@ -149,6 +160,7 @@ pub fn generate_trace(
 /// first serves its header from the cache).  Deterministic from `seed`.
 #[derive(Debug, Clone)]
 pub struct SharedPrefixConfig {
+    /// Requests to generate.
     pub n_requests: usize,
     /// Distinct shared headers (templates); requests cycle round-robin,
     /// so hit depth stays high even with several tenants.
@@ -158,7 +170,9 @@ pub struct SharedPrefixConfig {
     pub header_len: usize,
     /// Unique tail length in tokens (bytes) per request.
     pub tail_len: usize,
+    /// Per-request generation budget.
     pub max_new_tokens: usize,
+    /// PRNG seed.
     pub seed: u64,
 }
 

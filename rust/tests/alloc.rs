@@ -7,7 +7,7 @@
 
 use propd::batching::RoutingPolicy;
 use propd::config::ServingConfig;
-use propd::engine::{Engine, EngineConfig, EngineKind};
+use propd::engine::{DecodeMode, Engine, EngineConfig, EngineKind};
 use propd::estimator::{allocate_budget, gain_at, BudgetMode};
 use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
 use propd::server::run_offline;
@@ -268,6 +268,10 @@ fn run_skewed(mode: BudgetMode) -> std::collections::BTreeMap<String, f64> {
     cfg.max_batch = 4;
     cfg.accept_alpha = 0.3; // per-request trackers adapt within a request
     cfg.planner.budget_mode = mode;
+    // Pin always-speculative: this test isolates the budget-*split*
+    // mechanism, so the cold lanes must stay in the tree batch instead of
+    // demoting to serial decode (tests/modes.rs covers that interaction).
+    cfg.decode_mode = DecodeMode::Spec;
     let mut engine = Engine::new(&rt, cfg).expect("engine");
     engine.submit(HOT_PROMPT, 56);
     for p in COLD_PROMPTS {

@@ -1,0 +1,182 @@
+//! Decode-mode switching (DESIGN.md § Decode-mode state machine): any
+//! mix of per-lane serial and speculative decode must be byte-identical
+//! to the forced modes — switching is a wall-clock optimization only —
+//! and demoted lanes must actually stop consuming verify-token budget.
+//!
+//! The anti-oscillation property (a lane cannot flip modes faster than
+//! the hysteresis gap allows) is unit-tested next to the state machine
+//! in `engine/requests.rs`.
+
+use propd::engine::{DecodeMode, Engine, EngineConfig, EngineKind};
+use propd::estimator::BudgetMode;
+use propd::runtime::{Runtime, SimConfig};
+
+/// Skewed-acceptance sim: prompts starting with an uppercase byte get
+/// deterministic-junk medusa heads (they demote under auto mode);
+/// lowercase prompts keep the oracle's near-perfect heads.  Greedy text
+/// is unaffected either way.
+fn skewed_sim() -> SimConfig {
+    SimConfig { medusa_flaky_below: 97, ..Default::default() }
+}
+
+const HOT_PROMPT: &str = "user: Explain how the batch engine balances \
+                          decode throughput.\nassistant:";
+const COLD_PROMPTS: [&str; 3] = [
+    "User: FIRST straggler with junk speculation.\nassistant:",
+    "User: SECOND straggler with junk speculation.\nassistant:",
+    "User: THIRD straggler with junk speculation.\nassistant:",
+];
+
+fn skewed_requests() -> Vec<(String, usize)> {
+    let mut reqs = vec![(HOT_PROMPT.to_string(), 48)];
+    for p in COLD_PROMPTS {
+        reqs.push((p.to_string(), 48));
+    }
+    reqs
+}
+
+fn decode_all(
+    rt: &Runtime,
+    mut cfg: EngineConfig,
+    reqs: &[(String, usize)],
+) -> Vec<Vec<u32>> {
+    cfg.max_batch = reqs.len().max(1);
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    for (p, m) in reqs {
+        engine.submit(p, *m);
+    }
+    let mut done = engine.run_to_completion().expect("run");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.tokens).collect()
+}
+
+/// The fourth byte-identity invariant (CONTRIBUTING.md): greedy output
+/// is identical across `auto`, `spec`, and `ar` for every engine kind
+/// and both budget modes, on a workload where auto mode actually
+/// demotes, probes, and re-demotes lanes.
+#[test]
+fn mode_mix_is_byte_identical_across_engines_and_budgets() {
+    let sim = skewed_sim();
+    let rt = Runtime::sim(&sim);
+    let reqs = skewed_requests();
+    let reference = decode_all(
+        &rt,
+        EngineConfig::new(&sim.size, EngineKind::Autoregressive),
+        &reqs,
+    );
+    assert!(reference.iter().all(|t| !t.is_empty()));
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        for budget in [BudgetMode::Uniform, BudgetMode::PerLane] {
+            for mode in [DecodeMode::Auto, DecodeMode::Spec, DecodeMode::Ar] {
+                let mut cfg = EngineConfig::new(&sim.size, kind);
+                cfg.planner.budget_mode = budget;
+                cfg.decode_mode = mode;
+                // Fast adaptation so demotion happens well within a
+                // 48-token request.
+                cfg.accept_alpha = 0.3;
+                let out = decode_all(&rt, cfg, &reqs);
+                assert_eq!(
+                    out,
+                    reference,
+                    "{} budget={} decode_mode={} diverged",
+                    kind.as_str(),
+                    budget.as_str(),
+                    mode.as_str()
+                );
+            }
+        }
+    }
+}
+
+fn run_skewed(mode: DecodeMode) -> std::collections::BTreeMap<String, f64> {
+    let sim = skewed_sim();
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 4;
+    cfg.accept_alpha = 0.3;
+    cfg.decode_mode = mode;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    engine.submit(HOT_PROMPT, 56);
+    for p in COLD_PROMPTS {
+        engine.submit(p, 56);
+    }
+    engine.run_to_completion().expect("run");
+    engine.metrics.report()
+}
+
+/// The economics of demotion: on the skewed workload the three junk-head
+/// lanes demote to serial decode and stop burning verify-token budget,
+/// while the hot lane keeps speculating.
+#[test]
+fn demoted_lanes_stop_consuming_verify_budget() {
+    let auto = run_skewed(DecodeMode::Auto);
+    let spec = run_skewed(DecodeMode::Spec);
+    // All three cold lanes demoted (re-demotions after failed probes may
+    // push the count higher).
+    assert!(
+        auto["mode_demotions"] >= 3.0,
+        "expected >= 3 demotions, got {}",
+        auto["mode_demotions"]
+    );
+    // The step mix is genuinely mixed: serial sub-steps for demoted
+    // lanes, tree sub-steps for the hot lane and probes.
+    assert!(auto["ar_steps"] > 0.0);
+    assert!(auto["spec_steps"] > 0.0);
+    // Demoted lanes left the tree batch, so auto mode verifies strictly
+    // fewer tree nodes than always-speculative for the same output...
+    assert!(
+        auto["verify_tokens_total"] < spec["verify_tokens_total"],
+        "auto verified {} >= spec {}",
+        auto["verify_tokens_total"],
+        spec["verify_tokens_total"]
+    );
+    // ...and the same completed requests and token count.
+    assert_eq!(auto["requests_completed"], spec["requests_completed"]);
+    assert_eq!(auto["tokens_generated"], spec["tokens_generated"]);
+}
+
+/// Forced modes never transition and produce pure step mixes.
+#[test]
+fn forced_modes_have_pure_step_mixes() {
+    let spec = run_skewed(DecodeMode::Spec);
+    assert_eq!(spec["mode_demotions"], 0.0);
+    assert_eq!(spec["mode_promotions"], 0.0);
+    assert_eq!(spec["ar_steps"], 0.0);
+    assert!(spec["spec_steps"] > 0.0);
+    assert!(spec["verify_tokens_total"] > 0.0);
+
+    let ar = run_skewed(DecodeMode::Ar);
+    assert_eq!(ar["mode_demotions"], 0.0);
+    assert_eq!(ar["spec_steps"], 0.0);
+    assert!(ar["ar_steps"] > 0.0);
+    assert_eq!(ar["verify_tokens_total"], 0.0);
+}
+
+/// The pure AR engine bypasses the mode machinery entirely regardless of
+/// the knob: whole batch on the serial path, no mode events.
+#[test]
+fn ar_engine_ignores_the_mode_machine() {
+    let sim = skewed_sim();
+    let rt = Runtime::sim(&sim);
+    for mode in [DecodeMode::Auto, DecodeMode::Spec, DecodeMode::Ar] {
+        let mut cfg =
+            EngineConfig::new(&sim.size, EngineKind::Autoregressive);
+        cfg.decode_mode = mode;
+        cfg.max_batch = 4;
+        let mut engine = Engine::new(&rt, cfg).expect("engine");
+        for (p, m) in skewed_requests() {
+            engine.submit(&p, m);
+        }
+        engine.run_to_completion().expect("run");
+        let r = engine.metrics.report();
+        assert!(r["ar_steps"] > 0.0);
+        assert_eq!(r["spec_steps"], 0.0);
+        assert_eq!(r["mode_demotions"], 0.0);
+        assert_eq!(r["mode_promotions"], 0.0);
+    }
+}
