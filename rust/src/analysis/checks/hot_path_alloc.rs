@@ -1,0 +1,69 @@
+//! **hot_path_alloc** — the step-path files must not allocate.
+//!
+//! The static complement to `tests/zero_alloc.rs`: the counting
+//! allocator proves the autoregressive decode loop allocation-free at
+//! runtime, but only for the shapes the test drives.  This check denies
+//! allocating constructs in every file on the step path — including the
+//! tree step the dynamic test cannot pin — so new allocations show up in
+//! review as either a fix or an explicit `// lint: allow(hot_path_alloc)`
+//! with a stated reason (cold path, constructor, reference kernel, …).
+
+use super::has_token;
+use crate::analysis::{Diagnostic, Workspace};
+
+/// Step-path files (relative to `rust/src`).
+const HOT_FILES: &[&str] = &[
+    "engine/step_ar.rs",
+    "engine/step_tree.rs",
+    "engine/arena.rs",
+    "kvcache/assembler.rs",
+    "runtime/kernels.rs",
+    "runtime/pool.rs",
+];
+
+/// Allocating constructs denied outside test code.
+const NEEDLES: &[&str] = &[
+    "Vec::new",
+    "String::new",
+    "Box::new",
+    "vec!",
+    "format!",
+    "to_string",
+    "to_vec",
+    "to_owned",
+    "with_capacity",
+    "collect",
+    "clone",
+];
+
+/// Run the check over `ws`.
+pub fn check(ws: &Workspace) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in &ws.files {
+        if !HOT_FILES.contains(&f.rel.as_str()) {
+            continue;
+        }
+        for (idx, code) in f.lex.code.iter().enumerate() {
+            let line = idx + 1;
+            if f.lex.in_test(line) {
+                continue;
+            }
+            for needle in NEEDLES {
+                if has_token(code, needle)
+                    && !f.allows.allowed("hot_path_alloc", line)
+                {
+                    out.push(Diagnostic {
+                        check: "hot_path_alloc",
+                        file: f.rel.clone(),
+                        line,
+                        message: format!(
+                            "`{needle}` in a step-path file — reuse an \
+                             arena slab, or exempt the site with a reason"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}

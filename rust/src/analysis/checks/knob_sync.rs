@@ -1,0 +1,151 @@
+//! **knob_sync** — config knobs, CLI help, and README stay in sync.
+//!
+//! Ground truth is the set of `"section.key"` literals the
+//! `config/mod.rs` parse arms consume.  The check generalizes the
+//! help↔parser sync test in `main.rs`:
+//!
+//! - every dotted knob a `main.rs` string mentions (FLAGS rows, `--set`
+//!   examples, flag-to-override mappings) must be a registered knob —
+//!   renaming or removing a knob can't leave a stale flag behind;
+//! - the README knob tables (`|`-delimited rows, knobs in backticks)
+//!   must list exactly the registered knob set, in both directions.
+//!
+//! Knob tokens are `section.key` with both halves lowercase `[a-z_]+`
+//! and the section one of the registered sections — so `f.toml` in a
+//! usage string or `e.g.` in prose never parses as a knob.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::{Diagnostic, Workspace};
+
+/// The parse-arm file (relative to `rust/src`).
+const CONFIG_FILE: &str = "config/mod.rs";
+/// The CLI file (relative to `rust/src`).
+const MAIN_FILE: &str = "main.rs";
+
+/// Whether `s` has the `section.key` shape.
+fn is_dotted_knob(s: &str) -> bool {
+    let Some((sect, key)) = s.split_once('.') else {
+        return false;
+    };
+    !sect.is_empty()
+        && !key.is_empty()
+        && !key.contains('.')
+        && sect.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+        && key.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+}
+
+/// Extract candidate dotted tokens from free text: maximal runs of
+/// `[a-z_.]` with surrounding dots trimmed (`engine.max_batch=8` yields
+/// `engine.max_batch`; `e.g.` trims to `e.g`, rejected by the section
+/// filter downstream).
+fn dotted_tokens(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut run = String::new();
+    for c in text.chars().chain(std::iter::once(' ')) {
+        if c.is_ascii_lowercase() || c == '_' || c == '.' {
+            run.push(c);
+        } else if !run.is_empty() {
+            let t = run.trim_matches('.');
+            if is_dotted_knob(t) {
+                out.push(t.to_string());
+            }
+            run.clear();
+        }
+    }
+    out
+}
+
+/// Run the check over `ws`.
+pub fn check(ws: &Workspace) -> Vec<Diagnostic> {
+    let Some(cfg) = ws.file(CONFIG_FILE) else {
+        return Vec::new();
+    };
+    // Registered knobs: full-string `section.key` literals in non-test
+    // config code (the parse arms; error strings never match whole).
+    let mut knobs: BTreeMap<&str, usize> = BTreeMap::new();
+    for (line, s) in &cfg.lex.strings {
+        if !cfg.lex.in_test(*line) && is_dotted_knob(s) {
+            knobs.entry(s.as_str()).or_insert(*line);
+        }
+    }
+    if knobs.is_empty() {
+        return Vec::new();
+    }
+    let sections: BTreeSet<&str> = knobs
+        .keys()
+        .filter_map(|k| k.split('.').next())
+        .collect();
+    let known_section =
+        |t: &str| t.split('.').next().is_some_and(|s| sections.contains(s));
+
+    let mut out = Vec::new();
+
+    // main.rs may only reference registered knobs.
+    if let Some(main) = ws.file(MAIN_FILE) {
+        for (line, s) in &main.lex.strings {
+            if main.lex.in_test(*line) {
+                continue;
+            }
+            for t in dotted_tokens(s) {
+                if known_section(&t)
+                    && !knobs.contains_key(t.as_str())
+                    && !main.allows.allowed("knob_sync", *line)
+                {
+                    out.push(Diagnostic {
+                        check: "knob_sync",
+                        file: MAIN_FILE.to_string(),
+                        line: *line,
+                        message: format!(
+                            "references knob `{t}` which has no \
+                             config/mod.rs parse arm"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // README knob tables must match the registered set exactly.
+    let mut readme_knobs: BTreeMap<String, usize> = BTreeMap::new();
+    for (idx, line) in ws.readme.lines().enumerate() {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        // Odd-indexed `` ` `` splits are backticked spans.
+        for (i, span) in line.split('`').enumerate() {
+            if i % 2 == 1 && is_dotted_knob(span) && known_section(span) {
+                readme_knobs.entry(span.to_string()).or_insert(idx + 1);
+            }
+        }
+    }
+    for (knob, line) in &knobs {
+        if !readme_knobs.contains_key(*knob)
+            && !cfg.allows.allowed("knob_sync", *line)
+        {
+            out.push(Diagnostic {
+                check: "knob_sync",
+                file: CONFIG_FILE.to_string(),
+                line: *line,
+                message: format!(
+                    "knob `{knob}` is parsed here but missing from the \
+                     README knob table"
+                ),
+            });
+        }
+    }
+    for (knob, line) in &readme_knobs {
+        if !knobs.contains_key(knob.as_str()) {
+            out.push(Diagnostic {
+                check: "knob_sync",
+                file: "README.md".to_string(),
+                line: *line,
+                message: format!(
+                    "README documents knob `{knob}` which has no \
+                     config/mod.rs parse arm"
+                ),
+            });
+        }
+    }
+    out
+}

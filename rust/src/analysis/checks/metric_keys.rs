@@ -1,0 +1,151 @@
+//! **metric_keys** — metric keys live in the registry, nowhere else.
+//!
+//! `metrics/keys.rs` is the single source of truth: every key is a named
+//! `pub const` paired with a `Rollup` declaration that drives
+//! `aggregate.rs` by construction.  This check closes the remaining
+//! drift paths: a raw key literal at an emit/rollup site (bypassing the
+//! registry), a registered key nothing emits, a const that never made it
+//! into `REGISTRY`, and a key missing from the README metrics table.
+
+use std::collections::BTreeSet;
+
+use super::has_token;
+use crate::analysis::{Diagnostic, Workspace};
+
+/// The registry file (relative to `rust/src`).
+const KEYS_FILE: &str = "metrics/keys.rs";
+
+struct KeyDef {
+    name: String,
+    literal: String,
+    line: usize,
+}
+
+/// Recover `(const name, key literal, line)` triples from the lexed
+/// registry: a `pub const NAME: &str = "literal";` definition is a code
+/// line carrying both markers plus exactly the literal's string entry.
+fn parse_registry(ws: &Workspace) -> Vec<KeyDef> {
+    let Some(f) = ws.file(KEYS_FILE) else {
+        return Vec::new();
+    };
+    let mut defs = Vec::new();
+    for (idx, code) in f.lex.code.iter().enumerate() {
+        let line = idx + 1;
+        if f.lex.in_test(line) {
+            continue;
+        }
+        let Some(p) = code.find("pub const ") else { continue };
+        if !code.contains(": &str") {
+            continue;
+        }
+        let after = &code[p + "pub const ".len()..];
+        let Some(q) = after.find(':') else { continue };
+        let Some((_, literal)) =
+            f.lex.strings.iter().find(|(l, _)| *l == line)
+        else {
+            continue;
+        };
+        defs.push(KeyDef {
+            name: after[..q].trim().to_string(),
+            literal: literal.clone(),
+            line,
+        });
+    }
+    defs
+}
+
+/// Run the check over `ws`.
+pub fn check(ws: &Workspace) -> Vec<Diagnostic> {
+    let defs = parse_registry(ws);
+    if defs.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let literals: BTreeSet<&str> =
+        defs.iter().map(|d| d.literal.as_str()).collect();
+
+    // (1) No raw key literals outside the registry (test code may spell
+    // keys out — pinning the public names is exactly what tests are for).
+    for f in &ws.files {
+        if f.rel == KEYS_FILE {
+            continue;
+        }
+        for (line, s) in &f.lex.strings {
+            if literals.contains(s.as_str())
+                && !f.lex.in_test(*line)
+                && !f.allows.allowed("metric_keys", *line)
+            {
+                out.push(Diagnostic {
+                    check: "metric_keys",
+                    file: f.rel.clone(),
+                    line: *line,
+                    message: format!(
+                        "raw metric-key literal {s:?} — use the \
+                         `metrics::keys` const (or exempt with a reason \
+                         if the string only coincides with a key)"
+                    ),
+                });
+            }
+        }
+    }
+
+    let keys_file = ws.file(KEYS_FILE).expect("registry parsed above");
+    for def in &defs {
+        // (2) Every registered key is emitted (referenced by const name
+        // somewhere outside the registry, non-test).
+        let emitted = ws.files.iter().any(|f| {
+            f.rel != KEYS_FILE
+                && f.lex.code.iter().enumerate().any(|(idx, code)| {
+                    !f.lex.in_test(idx + 1) && has_token(code, &def.name)
+                })
+        });
+        if !emitted {
+            out.push(Diagnostic {
+                check: "metric_keys",
+                file: KEYS_FILE.to_string(),
+                line: def.line,
+                message: format!(
+                    "key `{}` ({:?}) is registered but never emitted",
+                    def.name, def.literal
+                ),
+            });
+        }
+        // (3) Every const is entered in REGISTRY (name appears on a
+        // second line of the registry file — its `KeyDef` row — which is
+        // what declares the rollup or its explicit exemption).
+        let mentions = keys_file
+            .lex
+            .code
+            .iter()
+            .enumerate()
+            .filter(|(idx, code)| {
+                !keys_file.lex.in_test(idx + 1) && has_token(code, &def.name)
+            })
+            .count();
+        if mentions < 2 {
+            out.push(Diagnostic {
+                check: "metric_keys",
+                file: KEYS_FILE.to_string(),
+                line: def.line,
+                message: format!(
+                    "key `{}` has no REGISTRY entry declaring its rollup",
+                    def.name
+                ),
+            });
+        }
+        // (4) Every key is documented in the README metrics table.
+        if !ws.readme.contains(&format!("`{}`", def.literal)) {
+            out.push(Diagnostic {
+                check: "metric_keys",
+                file: KEYS_FILE.to_string(),
+                line: def.line,
+                message: format!(
+                    "key {:?} is not documented in the README metrics \
+                     table",
+                    def.literal
+                ),
+            });
+        }
+    }
+    out
+}

@@ -1,0 +1,48 @@
+//! The `propd lint` check catalog.  Each check is a pure pass over a
+//! [`Workspace`](super::Workspace) returning line-anchored
+//! [`Diagnostic`](super::Diagnostic)s; exemptions were already resolved
+//! into per-file [`Allows`](super::Allows) sets by the orchestrator.
+
+pub mod hot_path_alloc;
+pub mod knob_sync;
+pub mod metric_keys;
+pub mod serving_panic;
+
+/// Whether `needle` occurs in `line` as a standalone token: the
+/// characters flanking the match must not be identifier characters, so
+/// `unwrap` does not match `unwrap_or_else` and `clone` does not match
+/// `Clones` (matching is case-sensitive — `derive(Clone)` never matches
+/// the `clone` needle).
+pub(crate) fn has_token(line: &str, needle: &str) -> bool {
+    let bytes = line.as_bytes();
+    for (start, _) in line.match_indices(needle) {
+        let end = start + needle.len();
+        let prev_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let next_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if prev_ok && next_ok {
+            return true;
+        }
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::has_token;
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("x.unwrap()", "unwrap"));
+        assert!(!has_token("x.unwrap_or(0)", "unwrap"));
+        assert!(!has_token("let unwrapped = 1;", "unwrap"));
+        assert!(has_token("let v = Vec::new();", "Vec::new"));
+        assert!(!has_token("let v = MyVec::new();", "Vec::new"));
+        assert!(has_token("a.clone()", "clone"));
+        assert!(!has_token("#[derive(Clone)]", "clone"));
+        assert!(has_token("panic!(\"\")", "panic!"));
+    }
+}

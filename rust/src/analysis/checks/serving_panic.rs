@@ -1,0 +1,58 @@
+//! **serving_panic** — the serving path must not be able to panic.
+//!
+//! A replica worker that panics takes every in-flight request on that
+//! replica with it (ROADMAP north star: fleet-scale serving), so code in
+//! `server/`, `batching/`, and `engine/` must propagate errors with
+//! `anyhow` (or recover, e.g. [`crate::util::lock_recover`] for mutex
+//! poisoning) instead of unwrapping.  Test code is exempt; remaining
+//! provably-unreachable sites carry `// lint: allow(serving_panic)` with
+//! a reason.
+
+use super::has_token;
+use crate::analysis::{Diagnostic, Workspace};
+
+/// Directories (relative to `rust/src`) forming the serving path.
+const DIRS: &[&str] = &["server/", "batching/", "engine/"];
+
+/// Panicking constructs denied outside test code.
+const NEEDLES: &[&str] = &[
+    "unwrap",
+    "expect",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Run the check over `ws`.
+pub fn check(ws: &Workspace) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in &ws.files {
+        if !DIRS.iter().any(|d| f.rel.starts_with(d)) {
+            continue;
+        }
+        for (idx, code) in f.lex.code.iter().enumerate() {
+            let line = idx + 1;
+            if f.lex.in_test(line) {
+                continue;
+            }
+            for needle in NEEDLES {
+                if has_token(code, needle)
+                    && !f.allows.allowed("serving_panic", line)
+                {
+                    out.push(Diagnostic {
+                        check: "serving_panic",
+                        file: f.rel.clone(),
+                        line,
+                        message: format!(
+                            "`{needle}` on the serving path — propagate \
+                             an error instead, or exempt the line with a \
+                             reason"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,15 @@
+// A snippet every check must pass, whichever checked path it is lexed
+// as: errors propagate instead of panicking, the only allocating
+// construct carries an exemption with a reason, and no raw metric-key
+// or knob literals appear.
+pub fn pick(xs: &[u32]) -> anyhow::Result<u32> {
+    match xs.first() {
+        Some(&x) => Ok(x),
+        None => anyhow::bail!("empty input"),
+    }
+}
+
+// lint: allow(hot_path_alloc) fixture: demonstrates an exempted site
+pub fn label(x: u32) -> String {
+    format!("x={x}")
+}

@@ -1,0 +1,9 @@
+// Seeded violation: the `Vec::new` below must fire `hot_path_alloc`
+// at the exact line the fixture test asserts.
+pub fn gather(xs: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for &x in xs {
+        out.push(x);
+    }
+    out
+}

@@ -1,0 +1,3 @@
+// Seeded violation: the dotted knob below has no config parse arm;
+// `knob_sync` must fire at the exact line the fixture test asserts.
+pub const HELP: &str = "--warp <n>  engine.warp_factor: warp drive gain";

@@ -1,0 +1,5 @@
+// Seeded violation: the raw "steps" literal must fire `metric_keys`
+// at the exact line the fixture test asserts.
+pub fn emit(m: &mut std::collections::BTreeMap<String, f64>, steps: u64) {
+    m.insert("steps".into(), steps as f64);
+}

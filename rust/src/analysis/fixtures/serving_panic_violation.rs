@@ -1,0 +1,6 @@
+// Seeded violation for the linter's own tests: the `unwrap` below
+// must fire `serving_panic` at the exact line the fixture test
+// asserts.
+pub fn lookup(map: &std::collections::HashMap<u32, u32>, id: u32) -> u32 {
+    *map.get(&id).unwrap()
+}

@@ -1,0 +1,349 @@
+//! A lightweight Rust lexer for `propd lint` — just enough structure to
+//! anchor diagnostics: per-line *code* with comments and literal contents
+//! stripped, the comment text (exemption annotations live there), every
+//! string literal with its line, and which lines sit inside test code.
+//!
+//! This is deliberately not a real parser.  The checks only need to know
+//! (a) whether a token occurrence is code rather than prose, (b) what
+//! string literals a file carries, and (c) whether a line belongs to a
+//! `#[cfg(test)]` / `#[test]` region — all of which a character scanner
+//! recovers without building a syntax tree.  Handled: line comments,
+//! nested block comments, cooked strings (escapes, `\` line
+//! continuations), raw strings (`r"…"`, `r#"…"#`, byte variants), char
+//! literals vs. lifetimes.
+
+/// One lexed source file: parallel per-line views plus the string table.
+#[derive(Debug, Default)]
+pub struct LexedFile {
+    /// Per-line code with comments removed and string/char literal
+    /// contents replaced by empty placeholders (`""`).  Index 0 is line 1.
+    pub code: Vec<String>,
+    /// Per-line comment text (line + block comments, concatenated).
+    pub comments: Vec<String>,
+    /// String literal contents, each with the 1-based line its opening
+    /// quote is on.  Escape sequences are kept verbatim (`\n` stays two
+    /// characters) — the checks only match plain identifiers and dotted
+    /// keys, which never contain escapes.
+    pub strings: Vec<(usize, String)>,
+    /// Per-line flag: inside a `#[cfg(test)]` item or `#[test]` function.
+    pub is_test: Vec<bool>,
+}
+
+impl LexedFile {
+    /// Number of lines in the file.
+    pub fn lines(&self) -> usize {
+        self.code.len()
+    }
+
+    /// Whether the 1-based `line` is inside test code.
+    pub fn in_test(&self, line: usize) -> bool {
+        line >= 1 && self.is_test.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+/// Whether the character before position `i` glues to an identifier
+/// (used to reject `r`/`b` raw-string prefixes mid-identifier).
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Lex `src` into per-line code/comment views plus the string table.
+pub fn lex(src: &str) -> LexedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = LexedFile::default();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0usize;
+
+    // Flushing on '\n' keeps `code`/`comments` aligned by construction.
+    macro_rules! flush_line {
+        () => {
+            out.code.push(std::mem::take(&mut code));
+            out.comments.push(std::mem::take(&mut comment));
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            flush_line!();
+            i += 1;
+            continue;
+        }
+        // Line comment: the annotation parser reads this text later.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            i += 2;
+            while i < n && chars[i] != '\n' {
+                comment.push(chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    flush_line!();
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*'
+                {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/'
+                {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    comment.push(chars[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string: optional `b`, `r`, any number of `#`, then `"`.
+        if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+            let mut j = i;
+            if chars[j] == 'b' {
+                j += 1;
+            }
+            if j < n && chars[j] == 'r' {
+                j += 1;
+                let mut hashes = 0usize;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    code.push('"');
+                    code.push('"');
+                    let start_line = out.code.len() + 1;
+                    let mut content = String::new();
+                    i = j + 1;
+                    while i < n {
+                        if chars[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes
+                                && i + 1 + k < n
+                                && chars[i + 1 + k] == '#'
+                            {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        if chars[i] == '\n' {
+                            content.push('\n');
+                            flush_line!();
+                        } else {
+                            content.push(chars[i]);
+                        }
+                        i += 1;
+                    }
+                    out.strings.push((start_line, content));
+                    continue;
+                }
+            }
+            // Not a raw-string prefix: fall through as plain code.
+        }
+        // Cooked string, including byte strings.
+        let (is_str, skip) = if c == '"' {
+            (true, 1)
+        } else if c == 'b'
+            && !prev_is_ident(&chars, i)
+            && i + 1 < n
+            && chars[i + 1] == '"'
+        {
+            (true, 2)
+        } else {
+            (false, 0)
+        };
+        if is_str {
+            code.push('"');
+            code.push('"');
+            let start_line = out.code.len() + 1;
+            let mut content = String::new();
+            i += skip;
+            while i < n {
+                let d = chars[i];
+                if d == '\\' && i + 1 < n {
+                    // `\<newline>` is a line continuation: the literal
+                    // spans lines but contributes no content.
+                    if chars[i + 1] == '\n' {
+                        flush_line!();
+                    } else {
+                        content.push(d);
+                        content.push(chars[i + 1]);
+                    }
+                    i += 2;
+                    continue;
+                }
+                if d == '"' {
+                    i += 1;
+                    break;
+                }
+                if d == '\n' {
+                    content.push('\n');
+                    flush_line!();
+                } else {
+                    content.push(d);
+                }
+                i += 1;
+            }
+            out.strings.push((start_line, content));
+            continue;
+        }
+        // Char literal vs. lifetime: `'` + `\` is always a char escape;
+        // `'x'` closes two ahead; anything else (`'a>`, `'static`) is a
+        // lifetime and stays in the code view.
+        if c == '\'' {
+            let is_char = (i + 1 < n && chars[i + 1] == '\\')
+                || (i + 2 < n && chars[i + 2] == '\'');
+            if is_char {
+                code.push('\'');
+                code.push('\'');
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' && i + 1 < n {
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '\'' {
+                        i += 1;
+                        break;
+                    }
+                    if chars[i] == '\n' {
+                        // Malformed literal; keep line bookkeeping sane.
+                        flush_line!();
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            code.push(c);
+            i += 1;
+            continue;
+        }
+        code.push(c);
+        i += 1;
+    }
+    if !src.is_empty()
+        && (!code.is_empty() || !comment.is_empty() || !src.ends_with('\n'))
+    {
+        flush_line!();
+    }
+    out.is_test = mark_test_lines(&out.code);
+    out
+}
+
+/// Mark lines inside `#[cfg(test)]` items / `#[test]` functions by brace
+/// tracking over the stripped code (braces inside strings, chars, and
+/// comments are already gone).
+fn mark_test_lines(code: &[String]) -> Vec<bool> {
+    let mut out = vec![false; code.len()];
+    let mut depth: i32 = 0;
+    // Depth at which a test attribute armed a region, if any.
+    let mut region: Option<i32> = None;
+    let mut entered = false;
+    for (idx, line) in code.iter().enumerate() {
+        if region.is_none()
+            && (line.contains("#[cfg(test)]") || line.contains("#[test]"))
+        {
+            region = Some(depth);
+            entered = false;
+        }
+        let marked_at_start = region.is_some();
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if !entered && region == Some(depth - 1) {
+                        entered = true;
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if entered && region == Some(depth) {
+                        region = None;
+                        entered = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out[idx] = marked_at_start || region.is_some();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_string_contents() {
+        let lx = lex("let a = \"steps\"; // trailing\nlet b = 1; /* x */\n");
+        assert_eq!(lx.code[0], "let a = \"\"; ");
+        assert_eq!(lx.comments[0], " trailing");
+        assert_eq!(lx.code[1], "let b = 1; ");
+        assert_eq!(lx.strings, vec![(1, "steps".to_string())]);
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let lx = lex("let a = r#\"x \"quoted\" y\"#;\nlet b = \"a\\\"b\";\n");
+        assert_eq!(lx.strings[0], (1, "x \"quoted\" y".to_string()));
+        assert_eq!(lx.strings[1], (2, "a\\\"b".to_string()));
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_numbers() {
+        let lx = lex("let a = \"one \\\n  two\";\nlet b = 0;\n");
+        assert_eq!(lx.lines(), 3);
+        assert_eq!(lx.code[2], "let b = 0;");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) -> char { 'y' }\n");
+        assert!(lx.code[0].contains("<'a>"));
+        assert!(lx.code[0].contains("''"), "char literal stripped");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let lx = lex("a /* one /* two */ still */ b\n/* open\nclose */ c\n");
+        assert_eq!(lx.code[0], "a  b");
+        assert_eq!(lx.code[1], "");
+        assert_eq!(lx.code[2], " c");
+    }
+
+    #[test]
+    fn test_regions_are_marked() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn helper() {}\n\
+                   }\n\
+                   fn live2() {}\n";
+        let lx = lex(src);
+        assert!(!lx.in_test(1));
+        assert!(lx.in_test(2));
+        assert!(lx.in_test(3));
+        assert!(lx.in_test(4));
+        assert!(lx.in_test(5));
+        assert!(!lx.in_test(6));
+    }
+
+    #[test]
+    fn test_attribute_on_single_fn() {
+        let src = "#[test]\nfn t() {\n    let x = 1;\n}\nfn live() {}\n";
+        let lx = lex(src);
+        assert!(lx.in_test(1) && lx.in_test(3) && lx.in_test(4));
+        assert!(!lx.in_test(5));
+    }
+}

@@ -1,0 +1,394 @@
+//! `propd lint` — an in-repo static analysis pass enforcing the
+//! invariants the crate otherwise keeps by convention (DESIGN.md §
+//! Static analysis):
+//!
+//! - **metric_keys** — every metric key is a named const in
+//!   [`crate::metrics::keys`]; raw key literals outside the registry are
+//!   forbidden; every registered key must be emitted, rolled up (the
+//!   registry's `Rollup` declaration drives `aggregate.rs` by
+//!   construction), and documented in the README metrics table.
+//! - **serving_panic** — no `unwrap`/`expect`/`panic!`/`unreachable!` in
+//!   `server/`, `batching/`, `engine/` outside test code.
+//! - **hot_path_alloc** — no allocating constructs in the step-path
+//!   files, the static complement to `tests/zero_alloc.rs`.
+//! - **knob_sync** — `main.rs` may only mention registered config knobs,
+//!   and the README knob table must match the `config/mod.rs` parse arms
+//!   exactly, in both directions.
+//!
+//! Exemptions are spelled in source as `// lint: allow(<check>) <reason>`
+//! — trailing on a line it covers that line; on its own line it covers
+//! the next statement or item (tracked by bracket depth, so an annotation
+//! before an `fn` covers the whole body).  A missing reason or an unknown
+//! check name is itself a diagnostic.  The pass runs on the crate's own
+//! source via `propd lint` and in CI; it is std-only and built on a
+//! purpose-sized lexer ([`lexer`]) rather than a full parser.
+
+pub mod checks;
+pub mod lexer;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use lexer::LexedFile;
+
+/// The check names `lint: allow(...)` may reference.
+pub const CHECKS: &[&str] =
+    &["metric_keys", "serving_panic", "hot_path_alloc", "knob_sync"];
+
+/// One line-anchored finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Which check fired (or `"allow"` for malformed exemptions).
+    pub check: &'static str,
+    /// File the finding is in: source paths relative to `rust/src`,
+    /// or `README.md` relative to the repo root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// What is wrong and what to do about it.
+    pub message: String,
+}
+
+/// Exemptions granted in one file: check name → allowed 1-based lines.
+#[derive(Debug, Default)]
+pub struct Allows {
+    granted: BTreeMap<String, BTreeSet<usize>>,
+}
+
+impl Allows {
+    /// Whether `check` is exempted on `line`.
+    pub fn allowed(&self, check: &str, line: usize) -> bool {
+        self.granted.get(check).is_some_and(|s| s.contains(&line))
+    }
+}
+
+/// Parse `// lint: allow(<check>) <reason>` annotations out of a lexed
+/// file.  Malformed annotations (unknown check, missing reason) are
+/// reported as diagnostics rather than silently granting an exemption.
+fn collect_allows(
+    rel: &str,
+    lex: &LexedFile,
+    diags: &mut Vec<Diagnostic>,
+) -> Allows {
+    const MARKER: &str = "lint: allow(";
+    let mut allows = Allows::default();
+    for (idx, comment) in lex.comments.iter().enumerate() {
+        // Only comments that *begin* with the marker are annotations;
+        // prose that merely mentions the syntax (like this module's own
+        // docs) is not.  Doc comments (`///`) don't qualify either — the
+        // stripped content starts with a third `/`.
+        let trimmed = comment.trim_start();
+        if !trimmed.starts_with(MARKER) {
+            continue;
+        }
+        let line = idx + 1;
+        let rest = &trimmed[MARKER.len()..];
+        let Some(q) = rest.find(')') else {
+            diags.push(Diagnostic {
+                check: "allow",
+                file: rel.to_string(),
+                line,
+                message: "malformed exemption: missing `)` after the \
+                          check name"
+                    .to_string(),
+            });
+            continue;
+        };
+        let name = rest[..q].trim();
+        let reason = rest[q + 1..].trim();
+        if !CHECKS.contains(&name) {
+            diags.push(Diagnostic {
+                check: "allow",
+                file: rel.to_string(),
+                line,
+                message: format!(
+                    "exemption names unknown check {name:?} \
+                     (known: {})",
+                    CHECKS.join(", ")
+                ),
+            });
+            continue;
+        }
+        if reason.is_empty() {
+            diags.push(Diagnostic {
+                check: "allow",
+                file: rel.to_string(),
+                line,
+                message: format!(
+                    "exemption for `{name}` has no reason — \
+                     `// lint: allow({name}) <why this is sound>`"
+                ),
+            });
+            continue;
+        }
+        let granted = allows.granted.entry(name.to_string()).or_default();
+        if !lex.code[idx].trim().is_empty() {
+            // Trailing annotation: covers its own line only.
+            granted.insert(line);
+            continue;
+        }
+        // Standalone annotation: covers the next statement or item.  The
+        // scope runs from the next code line until bracket depth returns
+        // to the level it started at, so an annotation before an `fn`
+        // signature covers the whole body.
+        let Some(anchor) =
+            (idx + 1..lex.code.len()).find(|&j| !lex.code[j].trim().is_empty())
+        else {
+            continue;
+        };
+        let mut depth: i64 = 0;
+        for j in anchor..lex.code.len() {
+            for ch in lex.code[j].chars() {
+                match ch {
+                    '(' | '[' | '{' => depth += 1,
+                    ')' | ']' | '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            granted.insert(j + 1);
+            if depth <= 0 {
+                break;
+            }
+        }
+    }
+    allows
+}
+
+/// One source file as the checks see it.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to `rust/src`, with `/` separators.
+    pub rel: String,
+    /// The lexed view.
+    pub lex: LexedFile,
+    /// Exemptions granted in this file.
+    pub allows: Allows,
+}
+
+/// Everything one lint run looks at: the crate sources plus README.md
+/// (the knob and metrics tables are part of the checked surface).
+#[derive(Debug)]
+pub struct Workspace {
+    /// Lexed source files, sorted by path.
+    pub files: Vec<SourceFile>,
+    /// Repo-root README.md contents (may be empty in fixture runs).
+    pub readme: String,
+    /// Diagnostics from malformed exemption annotations.
+    pub allow_diags: Vec<Diagnostic>,
+}
+
+impl Workspace {
+    /// Build a workspace from in-memory sources — the path the linter's
+    /// own fixture tests use.  `files` are `(rel_path, contents)`.
+    pub fn from_sources<'a>(
+        files: impl IntoIterator<Item = (&'a str, &'a str)>,
+        readme: &str,
+    ) -> Workspace {
+        let mut allow_diags = Vec::new();
+        let mut out: Vec<SourceFile> = files
+            .into_iter()
+            .map(|(rel, src)| {
+                let lex = lexer::lex(src);
+                let allows = collect_allows(rel, &lex, &mut allow_diags);
+                SourceFile { rel: rel.to_string(), lex, allows }
+            })
+            .collect();
+        out.sort_by(|a, b| a.rel.cmp(&b.rel));
+        Workspace { files: out, readme: readme.to_string(), allow_diags }
+    }
+
+    /// Look a file up by its `rust/src`-relative path.
+    pub fn file(&self, rel: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.rel == rel)
+    }
+}
+
+/// Run every check over a workspace; diagnostics come back sorted by
+/// file, line, then check.
+pub fn run_checks(ws: &Workspace) -> Vec<Diagnostic> {
+    let mut diags = ws.allow_diags.clone();
+    diags.extend(checks::metric_keys::check(ws));
+    diags.extend(checks::serving_panic::check(ws));
+    diags.extend(checks::hot_path_alloc::check(ws));
+    diags.extend(checks::knob_sync::check(ws));
+    diags.sort_by(|a, b| {
+        (&a.file, a.line, a.check, &a.message)
+            .cmp(&(&b.file, b.line, b.check, &b.message))
+    });
+    diags
+}
+
+/// The outcome of a repo lint run.
+#[derive(Debug)]
+pub struct Report {
+    /// All findings, sorted.
+    pub diagnostics: Vec<Diagnostic>,
+    /// How many source files were scanned.
+    pub files: usize,
+}
+
+impl Report {
+    /// No findings.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Render the human-readable report (one line per finding plus a
+    /// summary; source paths are relative to `rust/src`).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                d.file, d.line, d.check, d.message
+            ));
+        }
+        s.push_str(&format!(
+            "propd lint: {} file(s) scanned, {} diagnostic(s)\n",
+            self.files,
+            self.diagnostics.len()
+        ));
+        s
+    }
+}
+
+/// Collect `.rs` files under `dir` (recursively), as paths relative to
+/// `base`.  The linter's seeded-violation fixtures are skipped — they
+/// exist to *fail* the checks in the linter's own tests.
+fn walk(base: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let entries = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        if path.is_dir() {
+            if name == "fixtures" {
+                continue;
+            }
+            walk(base, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(base)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the repo rooted at `root` (the directory holding `rust/` and
+/// `README.md`).
+pub fn run(root: &Path) -> Result<Report> {
+    let src_root = root.join("rust").join("src");
+    let mut rels = Vec::new();
+    walk(&src_root, &src_root, &mut rels)?;
+    rels.sort();
+    let mut sources = Vec::with_capacity(rels.len());
+    for rel in &rels {
+        let path = src_root.join(rel);
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        sources.push((rel.clone(), text));
+    }
+    let readme = fs::read_to_string(root.join("README.md"))
+        .unwrap_or_default();
+    let ws = Workspace::from_sources(
+        sources.iter().map(|(r, t)| (r.as_str(), t.as_str())),
+        &readme,
+    );
+    Ok(Report { diagnostics: run_checks(&ws), files: ws.files.len() })
+}
+
+/// Locate the repo root by probing for `rust/src/lib.rs` from the
+/// current directory upward (also handles being invoked from inside
+/// `rust/`, which `cargo run` makes the working directory).
+pub fn find_root() -> Result<PathBuf> {
+    let cwd = std::env::current_dir().context("resolving cwd")?;
+    let mut p: &Path = &cwd;
+    loop {
+        if p.join("rust").join("src").join("lib.rs").is_file() {
+            return Ok(p.to_path_buf());
+        }
+        if p.join("src").join("lib.rs").is_file() {
+            if let Some(parent) = p.parent() {
+                if parent.join("rust").join("src").join("lib.rs").is_file() {
+                    return Ok(parent.to_path_buf());
+                }
+            }
+        }
+        match p.parent() {
+            Some(q) => p = q,
+            None => bail!(
+                "could not locate the repo root (rust/src/lib.rs) from {}",
+                cwd.display()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trailing_allow_covers_its_line_only() {
+        let src = "fn f() {\n\
+                   let a = x.unwrap(); // lint: allow(serving_panic) safe\n\
+                   let b = y.unwrap();\n\
+                   }\n";
+        let mut diags = Vec::new();
+        let lex = lexer::lex(src);
+        let allows = collect_allows("t.rs", &lex, &mut diags);
+        assert!(diags.is_empty());
+        assert!(allows.allowed("serving_panic", 2));
+        assert!(!allows.allowed("serving_panic", 3));
+        assert!(!allows.allowed("hot_path_alloc", 2), "check-scoped");
+    }
+
+    #[test]
+    fn standalone_allow_covers_the_next_item() {
+        let src = "// lint: allow(hot_path_alloc) constructor only\n\
+                   fn build() -> Vec<u8> {\n\
+                       let v = Vec::new();\n\
+                       v\n\
+                   }\n\
+                   fn other() {}\n";
+        let mut diags = Vec::new();
+        let lex = lexer::lex(src);
+        let allows = collect_allows("t.rs", &lex, &mut diags);
+        assert!(diags.is_empty());
+        for line in 2..=5 {
+            assert!(allows.allowed("hot_path_alloc", line), "line {line}");
+        }
+        assert!(!allows.allowed("hot_path_alloc", 6));
+    }
+
+    #[test]
+    fn missing_reason_and_unknown_check_are_diagnostics() {
+        let src = "// lint: allow(serving_panic)\n\
+                   fn a() {}\n\
+                   // lint: allow(warp_drive) because\n\
+                   fn b() {}\n";
+        let mut diags = Vec::new();
+        let lex = lexer::lex(src);
+        let allows = collect_allows("t.rs", &lex, &mut diags);
+        assert_eq!(diags.len(), 2);
+        assert!(diags[0].message.contains("no reason"));
+        assert!(diags[1].message.contains("unknown check"));
+        assert!(!allows.allowed("serving_panic", 2));
+    }
+
+    #[test]
+    fn find_root_resolves_from_the_crate_dir() {
+        let root = find_root().unwrap();
+        assert!(root.join("rust").join("src").join("lib.rs").is_file());
+    }
+}

@@ -15,6 +15,7 @@ use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::engine::{Completion, TokenDelta};
+use crate::util::lock_recover;
 
 /// A queued inference call: identity + prompt + budget + the client's
 /// response plumbing (whole completion, optional streaming deltas, and an
@@ -80,7 +81,7 @@ impl RequestQueue {
 
     /// Non-blocking submit; `Err` = backpressure (queue full) or closed.
     pub fn submit(&self, req: QueuedRequest) -> Result<(), QueuedRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.closed || g.items.len() >= self.capacity {
             g.stats.rejected += 1;
             return Err(req);
@@ -96,16 +97,19 @@ impl RequestQueue {
     /// Drain up to `max` requests; blocks until at least one is available
     /// (or the queue is closed → returns empty).
     pub fn drain_blocking(&self, max: usize) -> Vec<QueuedRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         while g.items.is_empty() && !g.closed {
-            g = self.cv.wait(g).unwrap();
+            g = self
+                .cv
+                .wait(g)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
         self.drain_locked(&mut g, max)
     }
 
     /// Drain without blocking (engine loop between steps).
     pub fn drain_now(&self, max: usize) -> Vec<QueuedRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         self.drain_locked(&mut g, max)
     }
 
@@ -122,7 +126,7 @@ impl RequestQueue {
 
     /// Currently queued requests.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        lock_recover(&self.inner).items.len()
     }
 
     /// True when nothing is queued.
@@ -132,18 +136,18 @@ impl RequestQueue {
 
     /// Counter snapshot.
     pub fn stats(&self) -> QueueStats {
-        self.inner.lock().unwrap().stats
+        lock_recover(&self.inner).stats
     }
 
     /// Close: subsequent submits fail; blocked drains return.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_recover(&self.inner).closed = true;
         self.cv.notify_all();
     }
 
     /// Whether the queue is closed to new submissions.
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        lock_recover(&self.inner).closed
     }
 }
 

@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::{QueuedRequest, RequestQueue};
+use crate::util::lock_recover;
 
 /// How many admission-queue entries the scheduler pulls per wakeup.
 const DISPATCH_BURST: usize = 32;
@@ -174,7 +175,7 @@ impl ReplicaLoad {
     /// (`Engine::prefix_digests`); kept sorted for binary search.
     pub fn set_prefix_digests(&self, mut digests: Vec<u64>) {
         digests.sort_unstable();
-        *self.prefix_digests.lock().unwrap() = digests;
+        *lock_recover(&self.prefix_digests) = digests;
     }
 
     /// Worker-side: publish the engine's effective KV page size
@@ -193,7 +194,7 @@ impl ReplicaLoad {
     /// replica holds (the prefix-affinity score: a depth-k match means
     /// the first k page-aligned blocks are cached there).
     pub fn prefix_match_depth(&self, wanted: &[u64]) -> usize {
-        let g = self.prefix_digests.lock().unwrap();
+        let g = lock_recover(&self.prefix_digests);
         let mut depth = 0usize;
         for d in wanted {
             if g.binary_search(d).is_ok() {

@@ -136,7 +136,7 @@ pub fn run_trace(
         tokens_per_second: engine.metrics.tokens_per_second(),
         accept_len: engine.metrics.mean_accept_len(),
         prune_rate: engine.metrics.mean_prune_rate(),
-        tree_size_mean: report["tree_size_mean"],
+        tree_size_mean: report[crate::metrics::keys::TREE_SIZE_MEAN],
         steps: engine.metrics.steps,
         completions,
         report,

@@ -21,10 +21,13 @@ use crate::runtime::literal::HostTensor;
 /// Placeholder for a not-yet-shaped slab.  Shape `[0]` (not `[]`): an
 /// empty shape's element product is 1, which would fail the length
 /// invariant with no data.
+// lint: allow(hot_path_alloc) constructor-only placeholders; slabs size
+// themselves on first use and are reused thereafter
 fn empty_i32() -> HostTensor {
     HostTensor::i32(vec![0], Vec::new())
 }
 
+// lint: allow(hot_path_alloc) constructor-only placeholder (see above)
 fn empty_f32() -> HostTensor {
     HostTensor::f32(vec![0], Vec::new())
 }
@@ -74,6 +77,7 @@ pub(super) struct StepArena {
 
 impl StepArena {
     /// An empty arena; slabs size themselves on first use.
+    // lint: allow(hot_path_alloc) one-time constructor, not a step path
     pub fn new() -> Self {
         StepArena {
             dec_tok: empty_i32(),

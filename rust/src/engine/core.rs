@@ -146,11 +146,15 @@ impl<'rt> Engine<'rt> {
         if late_buckets.is_empty() {
             late_buckets = tree_buckets.clone();
         }
-        if cfg.max_batch > *batch_buckets.last().unwrap() {
+        let largest_batch = match batch_buckets.last().copied() {
+            Some(b) => b,
+            None => bail!("manifest lists no batch buckets"),
+        };
+        if cfg.max_batch > largest_batch {
             bail!(
                 "max_batch {} exceeds largest covered batch bucket {}",
                 cfg.max_batch,
-                batch_buckets.last().unwrap()
+                largest_batch
             );
         }
         let planner_cfg = crate::estimator::planner::PlannerConfig {
@@ -254,7 +258,9 @@ impl<'rt> Engine<'rt> {
     pub fn cancel(&mut self, id: u64) -> bool {
         let now = self.now();
         if let Some(pos) = self.queue.iter().position(|s| s.id == id) {
-            let spec = self.queue.remove(pos).unwrap();
+            let Some(spec) = self.queue.remove(pos) else {
+                return false;
+            };
             // A preempted (requeued) request may still owe the stream
             // bytes generated before preemption but past its emission
             // watermark (including a held-back incomplete UTF-8 tail):
@@ -632,7 +638,10 @@ impl<'rt> Engine<'rt> {
                 break;
             }
             reserved += need;
-            picked.push(self.queue.pop_front().unwrap());
+            match self.queue.pop_front() {
+                Some(spec) => picked.push(spec),
+                None => break,
+            }
         }
         // Idle engine + non-empty queue must always make progress, even
         // under an over-tight watermark: with no active lanes every page
@@ -946,7 +955,9 @@ impl<'rt> Engine<'rt> {
     /// byte-identical to an uninterrupted run.
     fn resume_prefill(&mut self, spec: RequestSpec) -> Result<()> {
         let started = self.now();
-        let r = spec.resume.expect("resume_prefill needs resume state");
+        let Some(r) = spec.resume else {
+            bail!("resume_prefill called without resume state");
+        };
         let slot = self.kv.acquire().context("kv slots (resume)")?;
         let v = self.model.vocab;
         let m_heads = self.model.n_medusa;

@@ -61,7 +61,9 @@ impl<'rt> Engine<'rt> {
             .filter(|&&(bb, _)| bb == b)
             .map(|&(_, t)| t)
             .max()
-            .unwrap();
+            .ok_or_else(|| {
+                anyhow!("no tree bucket covered at batch bucket {b}")
+            })?;
         Ok((b, t))
     }
 

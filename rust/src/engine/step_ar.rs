@@ -133,6 +133,9 @@ impl<'rt> Engine<'rt> {
                 req.medusa_rows.clear();
                 req.medusa_rows.extend_from_slice(rows);
                 req.remember_prediction(v);
+                // lint: allow(hot_path_alloc) Vec::new is allocation-free;
+                // pushes only occur for ledger entries of demoted lanes,
+                // which the AR zero-alloc contract does not cover
                 let mut updates: Vec<(usize, usize)> = Vec::new();
                 self.active[li]
                     .resolve_predictions(|h, r| updates.push((h, r)));

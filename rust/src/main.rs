@@ -4,6 +4,7 @@
 //!   propd generate [--prompt "..."] [--set k=v]...     one-shot generation
 //!   propd inspect  [--artifacts dir]                   manifest summary
 //!   propd selftest [--set k=v]...                      tiny end-to-end run
+//!   propd lint     [--lint-out file]                   static analysis
 //!   propd help                                         this usage block
 //!
 //! Every flag is described by the [`FLAGS`] table — `propd --help` renders
@@ -60,6 +61,8 @@ const FLAGS: &[(&str, Option<&str>, &str)] = &[
     ("--threads", Some("n"),
      "runtime.threads: sim worker threads (0 = auto, 1 = spawn-free \
       deterministic; output bytes identical at every setting)"),
+    ("--lint-out", Some("file"),
+     "for `lint`: also write the diagnostics report to this file"),
     ("--sim", None,
      "use the deterministic sim backend (no artifacts needed)"),
     ("--help", None, "print this usage block (also -h, `propd help`)"),
@@ -77,6 +80,7 @@ fn usage() -> String {
          \x20 generate   one-shot generation to stdout\n\
          \x20 inspect    print the artifact manifest summary\n\
          \x20 selftest   tiny end-to-end run across engine kinds\n\
+         \x20 lint       static analysis over the crate's own source\n\
          \x20 help       this usage block\n\
          \n\
          flags:\n",
@@ -99,6 +103,7 @@ struct Args {
     artifacts: Option<String>,
     max_new: usize,
     sim: bool,
+    lint_out: Option<PathBuf>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -115,6 +120,7 @@ fn parse_args_from(mut it: impl Iterator<Item = String>) -> Result<Args> {
         artifacts: None,
         max_new: 64,
         sim: false,
+        lint_out: None,
     };
     if matches!(a.cmd.as_str(), "-h" | "--help") {
         a.cmd = "help".into();
@@ -180,6 +186,9 @@ fn parse_args_from(mut it: impl Iterator<Item = String>) -> Result<Args> {
             "--threads" => {
                 let v = val("--threads")?;
                 a.sets.push(format!("runtime.threads={v}"));
+            }
+            "--lint-out" => {
+                a.lint_out = Some(PathBuf::from(val("--lint-out")?))
             }
             "--sim" => a.sim = true,
             "-h" | "--help" => a.cmd = "help".into(),
@@ -255,9 +264,9 @@ fn main() -> Result<()> {
             let report = engine.metrics.report();
             println!(
                 "tok/s={:.2} accept_len={:.2} prune_rate={:.2}",
-                report["tokens_per_second"],
-                report["accept_len_mean"],
-                report["prune_rate_mean"]
+                report[propd::metrics::keys::TOKENS_PER_SECOND],
+                report[propd::metrics::keys::ACCEPT_LEN_MEAN],
+                report[propd::metrics::keys::PRUNE_RATE_MEAN]
             );
             Ok(())
         }
@@ -306,6 +315,22 @@ fn main() -> Result<()> {
             }
             println!("selftest OK");
             Ok(())
+        }
+        "lint" => {
+            let root = propd::analysis::find_root()?;
+            let report = propd::analysis::run(&root)?;
+            let rendered = report.render();
+            print!("{rendered}");
+            if let Some(path) = &args.lint_out {
+                std::fs::write(path, &rendered).with_context(|| {
+                    format!("writing lint report to {}", path.display())
+                })?;
+            }
+            if report.is_clean() {
+                Ok(())
+            } else {
+                std::process::exit(1);
+            }
         }
         "help" => {
             print!("{}", usage());

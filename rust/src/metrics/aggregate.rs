@@ -13,7 +13,9 @@
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
+use super::keys::{self, Rollup};
 use super::EngineMetrics;
+use crate::util::lock_recover;
 
 /// One replica's published state (see [`EngineMetrics::report`] for the
 /// report keys).
@@ -49,7 +51,7 @@ impl MetricsHub {
 
     /// Number of replica slots.
     pub fn replica_count(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        lock_recover(&self.slots).len()
     }
 
     /// Publish a replica's current state (overwrites the previous one).
@@ -60,7 +62,7 @@ impl MetricsHub {
         pending: usize,
         metrics: &EngineMetrics,
     ) {
-        let mut g = self.slots.lock().unwrap();
+        let mut g = lock_recover(&self.slots);
         if replica < g.len() {
             g[replica] = ReplicaSnapshot {
                 replica,
@@ -72,8 +74,14 @@ impl MetricsHub {
     }
 
     /// Roll every replica's latest snapshot into a fleet view.
+    ///
+    /// The per-key rules come from [`keys::REGISTRY`] — there is no
+    /// hand-maintained key list here to drift out of sync with the emit
+    /// sites.  Only the `Derived` ratios (which need their own
+    /// numerator/denominator pairing) and the hub-computed fleet-only
+    /// gauges are spelled out below.
     pub fn aggregate(&self) -> AggregateSnapshot {
-        let replicas = self.slots.lock().unwrap().clone();
+        let replicas = lock_recover(&self.slots).clone();
         let get = |r: &ReplicaSnapshot, k: &str| -> f64 {
             r.report.get(k).copied().unwrap_or(0.0)
         };
@@ -88,89 +96,75 @@ impl MetricsHub {
             }
         };
         let mut totals = BTreeMap::new();
-        totals.insert("replicas".into(), replicas.len() as f64);
+        totals.insert(keys::REPLICAS.into(), replicas.len() as f64);
         totals.insert(
-            "served".into(),
+            keys::SERVED.into(),
             replicas.iter().map(|r| r.served as f64).sum(),
         );
         totals.insert(
-            "pending".into(),
+            keys::PENDING.into(),
             replicas.iter().map(|r| r.pending as f64).sum(),
         );
-        for k in ["steps", "tokens_generated", "requests_completed",
-                  "busy_seconds", "tokens_per_second",
-                  "assembly_bytes_copied_total", "assembly_bytes_full_total",
-                  "verify_tokens_total",
-                  "kv_pages_in_use", "kv_page_capacity",
-                  "preempt_total", "requeue_total", "cancelled_total",
-                  "resume_prefills", "reprefill_tokens_total",
-                  "kv_prefix_hit_tokens", "kv_prefix_miss_tokens",
-                  "kv_prefix_evictions",
-                  "mode_demotions", "mode_promotions",
-                  "ar_steps", "spec_steps"] {
-            totals.insert(k.into(), sum(k));
+        for def in keys::REGISTRY {
+            let v = match def.rollup {
+                Rollup::Sum => sum(def.name),
+                Rollup::WeightedBySteps => weighted(def.name, keys::STEPS),
+                Rollup::WeightedByCompletions => {
+                    weighted(def.name, keys::REQUESTS_COMPLETED)
+                }
+                Rollup::WeightedByTokens => {
+                    weighted(def.name, keys::TOKENS_GENERATED)
+                }
+                Rollup::MaxOfMax => replicas
+                    .iter()
+                    .map(|r| get(r, def.name))
+                    .fold(0.0, f64::max),
+                // Derived ratios are inserted below; per-replica
+                // diagnostics and fleet-only gauges never roll up here.
+                Rollup::Derived
+                | Rollup::PerReplica(_)
+                | Rollup::FleetOnly => continue,
+            };
+            totals.insert(def.name.into(), v);
         }
-        // Fleet prefix-reuse economics: hit rate as a ratio of summed
-        // token counts (not a mean of per-replica ratios).
+        // Derived ratios recompute from the summed parts (a ratio of
+        // sums, never a mean of per-replica ratios).
         let prefix_total =
-            sum("kv_prefix_hit_tokens") + sum("kv_prefix_miss_tokens");
+            sum(keys::KV_PREFIX_HIT_TOKENS) + sum(keys::KV_PREFIX_MISS_TOKENS);
         totals.insert(
-            "kv_prefix_hit_rate".into(),
+            keys::KV_PREFIX_HIT_RATE.into(),
             if prefix_total <= 0.0 {
                 0.0
             } else {
-                sum("kv_prefix_hit_tokens") / prefix_total
+                sum(keys::KV_PREFIX_HIT_TOKENS) / prefix_total
             },
         );
-        // Fleet speculation economics: accepted per verified token as a
-        // ratio of sums (not a mean of per-replica ratios).
-        let verified = sum("verify_tokens_total");
+        let verified = sum(keys::VERIFY_TOKENS_TOTAL);
         totals.insert(
-            "accept_per_verified".into(),
+            keys::ACCEPT_PER_VERIFIED.into(),
             if verified <= 0.0 {
                 0.0
             } else {
-                sum("tokens_generated") / verified
+                sum(keys::TOKENS_GENERATED) / verified
             },
         );
-        // Fleet cache economics: ratios recomputed from the summed parts
-        // (a ratio-of-sums, not a mean-of-ratios).
-        let full = sum("assembly_bytes_full_total");
+        let full = sum(keys::ASSEMBLY_BYTES_FULL_TOTAL);
         totals.insert(
-            "assembly_savings_ratio".into(),
+            keys::ASSEMBLY_SAVINGS_RATIO.into(),
             if full <= 0.0 {
                 0.0
             } else {
-                1.0 - sum("assembly_bytes_copied_total") / full
+                1.0 - sum(keys::ASSEMBLY_BYTES_COPIED_TOTAL) / full
             },
         );
-        let cap = sum("kv_page_capacity");
+        let cap = sum(keys::KV_PAGE_CAPACITY);
         totals.insert(
-            "kv_page_occupancy".into(),
-            if cap <= 0.0 { 0.0 } else { sum("kv_pages_in_use") / cap },
-        );
-        for k in ["step_time_mean_s", "accept_len_mean", "tree_size_mean",
-                  "pruned_size_mean", "prune_rate_mean",
-                  "tree_alloc_lane_size_mean", "tree_alloc_budget_mean",
-                  "tree_alloc_util_mean", "tree_alloc_gain_mean"] {
-            totals.insert(k.into(), weighted(k, "steps"));
-        }
-        // The fleet's deepest lane allocation is a max-of-maxes.
-        totals.insert(
-            "tree_alloc_lane_size_max".into(),
-            replicas
-                .iter()
-                .map(|r| get(r, "tree_alloc_lane_size_max"))
-                .fold(0.0, f64::max),
-        );
-        for k in ["request_latency_mean_s", "queue_delay_mean_s",
-                  "ttft_mean_s", "ttft_steps_mean"] {
-            totals.insert(k.into(), weighted(k, "requests_completed"));
-        }
-        // Inter-token gaps occur once per generated token: weight by it.
-        totals.insert(
-            "itl_mean_s".into(),
-            weighted("itl_mean_s", "tokens_generated"),
+            keys::KV_PAGE_OCCUPANCY.into(),
+            if cap <= 0.0 {
+                0.0
+            } else {
+                sum(keys::KV_PAGES_IN_USE) / cap
+            },
         );
         AggregateSnapshot { replicas, totals }
     }
@@ -199,9 +193,9 @@ impl AggregateSnapshot {
             "replicas={} served=[{}] tok/s={:.1} steps={} accept_len={:.2}",
             self.replicas.len(),
             served.join(", "),
-            self.total("tokens_per_second"),
-            self.total("steps") as u64,
-            self.total("accept_len_mean"),
+            self.total(keys::TOKENS_PER_SECOND),
+            self.total(keys::STEPS) as u64,
+            self.total(keys::ACCEPT_LEN_MEAN),
         )
     }
 }
@@ -399,6 +393,26 @@ mod tests {
         assert_eq!(agg.total("mode_promotions"), 1.0);
         assert_eq!(agg.total("ar_steps"), 50.0);
         assert_eq!(agg.total("spec_steps"), 150.0);
+    }
+
+    #[test]
+    fn totals_cover_registry_minus_per_replica() {
+        // Pins rollup ↔ registry sync: the fleet view must contain
+        // exactly the registered keys that are not per-replica
+        // diagnostics.  Catches a key registered but dropped from the
+        // aggregator (or aggregated without being registered).
+        let hub = MetricsHub::new(2);
+        hub.publish(0, 1, 0, &metrics(10, 40, 2.0));
+        let agg = hub.aggregate();
+        let rolled: Vec<&str> =
+            agg.totals.keys().map(|k| k.as_str()).collect();
+        let mut expected: Vec<&str> = keys::REGISTRY
+            .iter()
+            .filter(|d| !matches!(d.rollup, keys::Rollup::PerReplica(_)))
+            .map(|d| d.name)
+            .collect();
+        expected.sort_unstable();
+        assert_eq!(rolled, expected);
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! The metric-key registry: every report key as a named const, plus how
+//! each key rolls up across replicas.
+//!
+//! This is the single place a metric key may appear as a string literal —
+//! `propd lint`'s `metric_keys` check rejects raw key literals anywhere
+//! else in non-test code (annotate `// lint: allow(metric_keys) <reason>`
+//! for deliberate collisions such as wire field names).  [`REGISTRY`]
+//! drives [`MetricsHub::aggregate`](super::MetricsHub::aggregate), so
+//! registering a key is also the act of choosing its fleet roll-up; a
+//! key that must not be rolled up carries its reason in
+//! [`Rollup::PerReplica`].  The lint cross-checks that every registered
+//! key is emitted (its const is referenced outside this file), present
+//! in [`REGISTRY`], and documented in the README metrics table.
+
+/// How one report key rolls up from per-replica reports into the fleet
+/// view ([`MetricsHub::aggregate`](super::MetricsHub::aggregate)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rollup {
+    /// Counters (and concurrent rates): the fleet value is the sum.
+    Sum,
+    /// Per-step mean: weighted by each replica's [`STEPS`].
+    WeightedBySteps,
+    /// Per-request mean: weighted by each replica's
+    /// [`REQUESTS_COMPLETED`].
+    WeightedByCompletions,
+    /// Per-token mean: weighted by each replica's [`TOKENS_GENERATED`].
+    WeightedByTokens,
+    /// Gauge maximum: the fleet value is the max of per-replica maxima.
+    MaxOfMax,
+    /// Ratio recomputed by the aggregator from summed numerator and
+    /// denominator keys (a ratio of sums, never a mean of ratios).
+    Derived,
+    /// Deliberately not rolled up; the string states why.  `propd lint`
+    /// treats this as the explicit exemption from the "every key is
+    /// rolled up" rule.
+    PerReplica(&'static str),
+    /// Computed by the hub itself, never emitted by a replica report.
+    FleetOnly,
+}
+
+/// One registered metric key and its roll-up rule.
+#[derive(Debug, Clone, Copy)]
+pub struct KeyDef {
+    /// The report key.
+    pub name: &'static str,
+    /// Fleet roll-up rule.
+    pub rollup: Rollup,
+}
+
+/// Engine steps taken.
+pub const STEPS: &str = "steps";
+/// Tokens committed (excludes prompts).
+pub const TOKENS_GENERATED: &str = "tokens_generated";
+/// Requests finished.
+pub const REQUESTS_COMPLETED: &str = "requests_completed";
+/// Generated tokens over busy seconds (sums across replicas: they
+/// decode concurrently, so fleet throughput is the sum of rates).
+pub const TOKENS_PER_SECOND: &str = "tokens_per_second";
+/// Engine wall-clock while at least one request was active (s).
+pub const BUSY_SECONDS: &str = "busy_seconds";
+/// Mean wall-clock per engine step (s).
+pub const STEP_TIME_MEAN_S: &str = "step_time_mean_s";
+/// Median wall-clock per engine step (s).
+pub const STEP_TIME_P50_S: &str = "step_time_p50_s";
+/// p99 wall-clock per engine step (s).
+pub const STEP_TIME_P99_S: &str = "step_time_p99_s";
+/// Mean verify_early stage time per step (s).
+pub const EARLY_TIME_MEAN_S: &str = "early_time_mean_s";
+/// Mean verify_late stage time per step (s).
+pub const LATE_TIME_MEAN_S: &str = "late_time_mean_s";
+/// Mean host-side overhead per step (s).
+pub const HOST_TIME_MEAN_S: &str = "host_time_mean_s";
+/// Mean accepted tokens per lane-step (the paper's AccLength).
+pub const ACCEPT_LEN_MEAN: &str = "accept_len_mean";
+/// Mean tree size chosen per step (initial, pre-pruning).
+pub const TREE_SIZE_MEAN: &str = "tree_size_mean";
+/// Mean post-pruning tree size per step.
+pub const PRUNED_SIZE_MEAN: &str = "pruned_size_mean";
+/// Mean fraction of nodes eliminated by early pruning per step.
+pub const PRUNE_RATE_MEAN: &str = "prune_rate_mean";
+/// Mean live tree size granted to each lane each step.
+pub const TREE_ALLOC_LANE_SIZE_MEAN: &str = "tree_alloc_lane_size_mean";
+/// Deepest per-lane tree allocation seen.
+pub const TREE_ALLOC_LANE_SIZE_MAX: &str = "tree_alloc_lane_size_max";
+/// Mean verified-token budget the planner granted per step.
+pub const TREE_ALLOC_BUDGET_MEAN: &str = "tree_alloc_budget_mean";
+/// Mean budget utilization per step (Σ live sizes / budget).
+pub const TREE_ALLOC_UTIL_MEAN: &str = "tree_alloc_util_mean";
+/// Mean expected accepted tokens captured by the step's allocation.
+pub const TREE_ALLOC_GAIN_MEAN: &str = "tree_alloc_gain_mean";
+/// Total live tree nodes verified across steps (real lanes only).
+pub const VERIFY_TOKENS_TOTAL: &str = "verify_tokens_total";
+/// Accepted tokens per verified token (ratio of sums at the fleet).
+pub const ACCEPT_PER_VERIFIED: &str = "accept_per_verified";
+/// Mean request latency, submit → completion (s).
+pub const REQUEST_LATENCY_MEAN_S: &str = "request_latency_mean_s";
+/// p99 request latency (s).
+pub const REQUEST_LATENCY_P99_S: &str = "request_latency_p99_s";
+/// Mean queueing delay before prefill (s).
+pub const QUEUE_DELAY_MEAN_S: &str = "queue_delay_mean_s";
+/// Mean time to first committed token (s).
+pub const TTFT_MEAN_S: &str = "ttft_mean_s";
+/// p99 time to first committed token (s).
+pub const TTFT_P99_S: &str = "ttft_p99_s";
+/// Mean engine steps from (re-)admission to the first committed token.
+pub const TTFT_STEPS_MEAN: &str = "ttft_steps_mean";
+/// Mean inter-token latency (s).
+pub const ITL_MEAN_S: &str = "itl_mean_s";
+/// p99 inter-token latency (s).
+pub const ITL_P99_S: &str = "itl_p99_s";
+/// Lanes preempted under KV-page pressure.
+pub const PREEMPT_TOTAL: &str = "preempt_total";
+/// Preempted requests requeued with priority.
+pub const REQUEUE_TOTAL: &str = "requeue_total";
+/// Requests cancelled mid-flight.
+pub const CANCELLED_TOTAL: &str = "cancelled_total";
+/// Resume re-admissions (each pairs with a preemption).
+pub const RESUME_PREFILLS: &str = "resume_prefills";
+/// Committed-prefix tokens re-run on resume (the preemption tax).
+pub const REPREFILL_TOKENS_TOTAL: &str = "reprefill_tokens_total";
+/// Mean bytes copied into the batch KV tensor per step.
+pub const ASSEMBLY_BYTES_PER_STEP_MEAN: &str = "assembly_bytes_per_step_mean";
+/// Total bytes incremental assembly actually copied.
+pub const ASSEMBLY_BYTES_COPIED_TOTAL: &str = "assembly_bytes_copied_total";
+/// Bytes a full per-step prefix re-assembly would have copied.
+pub const ASSEMBLY_BYTES_FULL_TOTAL: &str = "assembly_bytes_full_total";
+/// Fraction of full re-assembly traffic avoided (ratio of sums).
+pub const ASSEMBLY_SAVINGS_RATIO: &str = "assembly_savings_ratio";
+/// KV pages in use after the latest step.
+pub const KV_PAGES_IN_USE: &str = "kv_pages_in_use";
+/// KV page-pool capacity (pages).
+pub const KV_PAGE_CAPACITY: &str = "kv_page_capacity";
+/// KV page occupancy in [0, 1] (ratio of sums at the fleet).
+pub const KV_PAGE_OCCUPANCY: &str = "kv_page_occupancy";
+/// Prompt/prefix tokens served from the shared-prefix KV cache.
+pub const KV_PREFIX_HIT_TOKENS: &str = "kv_prefix_hit_tokens";
+/// Prompt/prefix tokens actually run through prefill or replay.
+pub const KV_PREFIX_MISS_TOKENS: &str = "kv_prefix_miss_tokens";
+/// Fraction of prefix tokens served from cache (ratio of sums).
+pub const KV_PREFIX_HIT_RATE: &str = "kv_prefix_hit_rate";
+/// LRU evictions from the prefix index.
+pub const KV_PREFIX_EVICTIONS: &str = "kv_prefix_evictions";
+/// Lane transitions Speculative→Demoted.
+pub const MODE_DEMOTIONS: &str = "mode_demotions";
+/// Lane transitions Probing→Speculative.
+pub const MODE_PROMOTIONS: &str = "mode_promotions";
+/// Lane-steps decoded serially.
+pub const AR_STEPS: &str = "ar_steps";
+/// Lane-steps decoded speculatively.
+pub const SPEC_STEPS: &str = "spec_steps";
+/// Fleet-only: number of replica slots in the hub.
+pub const REPLICAS: &str = "replicas";
+/// Fleet-only: requests completed and replied across worker loops.
+pub const SERVED: &str = "served";
+/// Fleet-only: in-flight count (queue + active lanes) at publish time.
+pub const PENDING: &str = "pending";
+
+/// Reason p50/p99 keys stay per-replica: a fleet percentile cannot be
+/// recovered from per-replica percentiles.
+const PCTL: &str = "percentile: not derivable from replica percentiles";
+/// Reason stage timings stay per-replica: they are host-speed
+/// diagnostics inspected replica by replica.
+const STAGE: &str = "host-speed stage diagnostic; inspected per replica";
+
+/// Every metric key the crate emits or aggregates, with its roll-up.
+pub const REGISTRY: &[KeyDef] = &[
+    KeyDef { name: STEPS, rollup: Rollup::Sum },
+    KeyDef { name: TOKENS_GENERATED, rollup: Rollup::Sum },
+    KeyDef { name: REQUESTS_COMPLETED, rollup: Rollup::Sum },
+    KeyDef { name: TOKENS_PER_SECOND, rollup: Rollup::Sum },
+    KeyDef { name: BUSY_SECONDS, rollup: Rollup::Sum },
+    KeyDef { name: STEP_TIME_MEAN_S, rollup: Rollup::WeightedBySteps },
+    KeyDef { name: STEP_TIME_P50_S, rollup: Rollup::PerReplica(PCTL) },
+    KeyDef { name: STEP_TIME_P99_S, rollup: Rollup::PerReplica(PCTL) },
+    KeyDef { name: EARLY_TIME_MEAN_S, rollup: Rollup::PerReplica(STAGE) },
+    KeyDef { name: LATE_TIME_MEAN_S, rollup: Rollup::PerReplica(STAGE) },
+    KeyDef { name: HOST_TIME_MEAN_S, rollup: Rollup::PerReplica(STAGE) },
+    KeyDef { name: ACCEPT_LEN_MEAN, rollup: Rollup::WeightedBySteps },
+    KeyDef { name: TREE_SIZE_MEAN, rollup: Rollup::WeightedBySteps },
+    KeyDef { name: PRUNED_SIZE_MEAN, rollup: Rollup::WeightedBySteps },
+    KeyDef { name: PRUNE_RATE_MEAN, rollup: Rollup::WeightedBySteps },
+    KeyDef {
+        name: TREE_ALLOC_LANE_SIZE_MEAN,
+        rollup: Rollup::WeightedBySteps,
+    },
+    KeyDef { name: TREE_ALLOC_LANE_SIZE_MAX, rollup: Rollup::MaxOfMax },
+    KeyDef { name: TREE_ALLOC_BUDGET_MEAN, rollup: Rollup::WeightedBySteps },
+    KeyDef { name: TREE_ALLOC_UTIL_MEAN, rollup: Rollup::WeightedBySteps },
+    KeyDef { name: TREE_ALLOC_GAIN_MEAN, rollup: Rollup::WeightedBySteps },
+    KeyDef { name: VERIFY_TOKENS_TOTAL, rollup: Rollup::Sum },
+    KeyDef { name: ACCEPT_PER_VERIFIED, rollup: Rollup::Derived },
+    KeyDef {
+        name: REQUEST_LATENCY_MEAN_S,
+        rollup: Rollup::WeightedByCompletions,
+    },
+    KeyDef { name: REQUEST_LATENCY_P99_S, rollup: Rollup::PerReplica(PCTL) },
+    KeyDef {
+        name: QUEUE_DELAY_MEAN_S,
+        rollup: Rollup::WeightedByCompletions,
+    },
+    KeyDef { name: TTFT_MEAN_S, rollup: Rollup::WeightedByCompletions },
+    KeyDef { name: TTFT_P99_S, rollup: Rollup::PerReplica(PCTL) },
+    KeyDef { name: TTFT_STEPS_MEAN, rollup: Rollup::WeightedByCompletions },
+    KeyDef { name: ITL_MEAN_S, rollup: Rollup::WeightedByTokens },
+    KeyDef { name: ITL_P99_S, rollup: Rollup::PerReplica(PCTL) },
+    KeyDef { name: PREEMPT_TOTAL, rollup: Rollup::Sum },
+    KeyDef { name: REQUEUE_TOTAL, rollup: Rollup::Sum },
+    KeyDef { name: CANCELLED_TOTAL, rollup: Rollup::Sum },
+    KeyDef { name: RESUME_PREFILLS, rollup: Rollup::Sum },
+    KeyDef { name: REPREFILL_TOKENS_TOTAL, rollup: Rollup::Sum },
+    KeyDef {
+        name: ASSEMBLY_BYTES_PER_STEP_MEAN,
+        rollup: Rollup::PerReplica(
+            "per-replica copy-traffic diagnostic; the fleet view reads \
+             the _total counters",
+        ),
+    },
+    KeyDef { name: ASSEMBLY_BYTES_COPIED_TOTAL, rollup: Rollup::Sum },
+    KeyDef { name: ASSEMBLY_BYTES_FULL_TOTAL, rollup: Rollup::Sum },
+    KeyDef { name: ASSEMBLY_SAVINGS_RATIO, rollup: Rollup::Derived },
+    KeyDef { name: KV_PAGES_IN_USE, rollup: Rollup::Sum },
+    KeyDef { name: KV_PAGE_CAPACITY, rollup: Rollup::Sum },
+    KeyDef { name: KV_PAGE_OCCUPANCY, rollup: Rollup::Derived },
+    KeyDef { name: KV_PREFIX_HIT_TOKENS, rollup: Rollup::Sum },
+    KeyDef { name: KV_PREFIX_MISS_TOKENS, rollup: Rollup::Sum },
+    KeyDef { name: KV_PREFIX_HIT_RATE, rollup: Rollup::Derived },
+    KeyDef { name: KV_PREFIX_EVICTIONS, rollup: Rollup::Sum },
+    KeyDef { name: MODE_DEMOTIONS, rollup: Rollup::Sum },
+    KeyDef { name: MODE_PROMOTIONS, rollup: Rollup::Sum },
+    KeyDef { name: AR_STEPS, rollup: Rollup::Sum },
+    KeyDef { name: SPEC_STEPS, rollup: Rollup::Sum },
+    KeyDef { name: REPLICAS, rollup: Rollup::FleetOnly },
+    KeyDef { name: SERVED, rollup: Rollup::FleetOnly },
+    KeyDef { name: PENDING, rollup: Rollup::FleetOnly },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique() {
+        let mut names: Vec<&str> =
+            REGISTRY.iter().map(|d| d.name).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate key in REGISTRY");
+    }
+
+    #[test]
+    fn weight_denominators_are_summed_counters() {
+        // Weighted means divide by the fleet sum of their denominator
+        // key, so that key must itself roll up as a sum.
+        for denom in [STEPS, REQUESTS_COMPLETED, TOKENS_GENERATED] {
+            let def = REGISTRY
+                .iter()
+                .find(|d| d.name == denom)
+                .expect("denominator registered");
+            assert_eq!(def.rollup, Rollup::Sum, "{denom}");
+        }
+    }
+
+    #[test]
+    fn per_replica_exemptions_state_a_reason() {
+        for def in REGISTRY {
+            if let Rollup::PerReplica(reason) = def.rollup {
+                assert!(
+                    !reason.trim().is_empty(),
+                    "{} has an empty exemption reason",
+                    def.name
+                );
+            }
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! for the bench harness, and the cross-replica [`aggregate`] roll-up.
 
 pub mod aggregate;
+pub mod keys;
 
 pub use aggregate::{AggregateSnapshot, MetricsHub, ReplicaSnapshot};
 
@@ -178,73 +179,84 @@ impl EngineMetrics {
     }
 
     /// Render a flat key→value report (stable keys; json/markdown-friendly).
+    ///
+    /// Every key inserted here is a named const from [`keys`]; the
+    /// `metric_keys` lint check keeps it that way, and the registry-sync
+    /// test below keeps this emit set equal to [`keys::REGISTRY`] minus
+    /// the hub-computed fleet-only keys.
     pub fn report(&self) -> BTreeMap<String, f64> {
         let mut m = BTreeMap::new();
-        m.insert("steps".into(), self.steps as f64);
-        m.insert("tokens_generated".into(), self.tokens_generated as f64);
-        m.insert("requests_completed".into(),
+        m.insert(keys::STEPS.into(), self.steps as f64);
+        m.insert(keys::TOKENS_GENERATED.into(),
+                 self.tokens_generated as f64);
+        m.insert(keys::REQUESTS_COMPLETED.into(),
                  self.requests_completed as f64);
-        m.insert("tokens_per_second".into(), self.tokens_per_second());
-        m.insert("busy_seconds".into(), self.busy_seconds);
-        m.insert("step_time_mean_s".into(), self.step_time.mean());
-        m.insert("step_time_p50_s".into(), self.step_time.p50());
-        m.insert("step_time_p99_s".into(), self.step_time.p99());
-        m.insert("early_time_mean_s".into(), self.early_time.mean());
-        m.insert("late_time_mean_s".into(), self.late_time.mean());
-        m.insert("host_time_mean_s".into(), self.host_time.mean());
-        m.insert("accept_len_mean".into(), self.accept_len.mean());
-        m.insert("tree_size_mean".into(), self.tree_size.mean());
-        m.insert("pruned_size_mean".into(), self.pruned_size.mean());
-        m.insert("prune_rate_mean".into(), self.prune_rate.mean());
-        m.insert("tree_alloc_lane_size_mean".into(),
+        m.insert(keys::TOKENS_PER_SECOND.into(), self.tokens_per_second());
+        m.insert(keys::BUSY_SECONDS.into(), self.busy_seconds);
+        m.insert(keys::STEP_TIME_MEAN_S.into(), self.step_time.mean());
+        m.insert(keys::STEP_TIME_P50_S.into(), self.step_time.p50());
+        m.insert(keys::STEP_TIME_P99_S.into(), self.step_time.p99());
+        m.insert(keys::EARLY_TIME_MEAN_S.into(), self.early_time.mean());
+        m.insert(keys::LATE_TIME_MEAN_S.into(), self.late_time.mean());
+        m.insert(keys::HOST_TIME_MEAN_S.into(), self.host_time.mean());
+        m.insert(keys::ACCEPT_LEN_MEAN.into(), self.accept_len.mean());
+        m.insert(keys::TREE_SIZE_MEAN.into(), self.tree_size.mean());
+        m.insert(keys::PRUNED_SIZE_MEAN.into(), self.pruned_size.mean());
+        m.insert(keys::PRUNE_RATE_MEAN.into(), self.prune_rate.mean());
+        m.insert(keys::TREE_ALLOC_LANE_SIZE_MEAN.into(),
                  self.tree_alloc_lane_size.mean());
-        m.insert("tree_alloc_lane_size_max".into(),
+        m.insert(keys::TREE_ALLOC_LANE_SIZE_MAX.into(),
                  self.tree_alloc_lane_size.max());
-        m.insert("tree_alloc_budget_mean".into(),
+        m.insert(keys::TREE_ALLOC_BUDGET_MEAN.into(),
                  self.tree_alloc_budget.mean());
-        m.insert("tree_alloc_util_mean".into(),
+        m.insert(keys::TREE_ALLOC_UTIL_MEAN.into(),
                  self.tree_alloc_util.mean());
-        m.insert("tree_alloc_gain_mean".into(),
+        m.insert(keys::TREE_ALLOC_GAIN_MEAN.into(),
                  self.tree_alloc_gain.mean());
-        m.insert("verify_tokens_total".into(), self.verify_tokens as f64);
-        m.insert("accept_per_verified".into(), self.accept_per_verified());
-        m.insert("request_latency_mean_s".into(),
+        m.insert(keys::VERIFY_TOKENS_TOTAL.into(),
+                 self.verify_tokens as f64);
+        m.insert(keys::ACCEPT_PER_VERIFIED.into(),
+                 self.accept_per_verified());
+        m.insert(keys::REQUEST_LATENCY_MEAN_S.into(),
                  self.request_latency.mean());
-        m.insert("request_latency_p99_s".into(), self.request_latency.p99());
-        m.insert("queue_delay_mean_s".into(), self.queue_delay.mean());
-        m.insert("ttft_mean_s".into(), self.ttft.mean());
-        m.insert("ttft_p99_s".into(), self.ttft.p99());
-        m.insert("ttft_steps_mean".into(), self.ttft_steps.mean());
-        m.insert("itl_mean_s".into(), self.itl.mean());
-        m.insert("itl_p99_s".into(), self.itl.p99());
-        m.insert("preempt_total".into(), self.preempt_total as f64);
-        m.insert("requeue_total".into(), self.requeue_total as f64);
-        m.insert("cancelled_total".into(), self.cancelled_total as f64);
-        m.insert("resume_prefills".into(), self.resume_prefills as f64);
-        m.insert("reprefill_tokens_total".into(),
+        m.insert(keys::REQUEST_LATENCY_P99_S.into(),
+                 self.request_latency.p99());
+        m.insert(keys::QUEUE_DELAY_MEAN_S.into(), self.queue_delay.mean());
+        m.insert(keys::TTFT_MEAN_S.into(), self.ttft.mean());
+        m.insert(keys::TTFT_P99_S.into(), self.ttft.p99());
+        m.insert(keys::TTFT_STEPS_MEAN.into(), self.ttft_steps.mean());
+        m.insert(keys::ITL_MEAN_S.into(), self.itl.mean());
+        m.insert(keys::ITL_P99_S.into(), self.itl.p99());
+        m.insert(keys::PREEMPT_TOTAL.into(), self.preempt_total as f64);
+        m.insert(keys::REQUEUE_TOTAL.into(), self.requeue_total as f64);
+        m.insert(keys::CANCELLED_TOTAL.into(), self.cancelled_total as f64);
+        m.insert(keys::RESUME_PREFILLS.into(), self.resume_prefills as f64);
+        m.insert(keys::REPREFILL_TOKENS_TOTAL.into(),
                  self.reprefill_tokens as f64);
-        m.insert("assembly_bytes_per_step_mean".into(),
+        m.insert(keys::ASSEMBLY_BYTES_PER_STEP_MEAN.into(),
                  self.assembly_bytes.mean());
-        m.insert("assembly_bytes_copied_total".into(),
+        m.insert(keys::ASSEMBLY_BYTES_COPIED_TOTAL.into(),
                  self.assembly_bytes_copied as f64);
-        m.insert("assembly_bytes_full_total".into(),
+        m.insert(keys::ASSEMBLY_BYTES_FULL_TOTAL.into(),
                  self.assembly_bytes_full as f64);
-        m.insert("assembly_savings_ratio".into(),
+        m.insert(keys::ASSEMBLY_SAVINGS_RATIO.into(),
                  self.assembly_savings_ratio());
-        m.insert("kv_pages_in_use".into(), self.kv_pages_in_use as f64);
-        m.insert("kv_page_capacity".into(), self.kv_page_capacity as f64);
-        m.insert("kv_page_occupancy".into(), self.kv_page_occupancy());
-        m.insert("kv_prefix_hit_tokens".into(),
+        m.insert(keys::KV_PAGES_IN_USE.into(), self.kv_pages_in_use as f64);
+        m.insert(keys::KV_PAGE_CAPACITY.into(),
+                 self.kv_page_capacity as f64);
+        m.insert(keys::KV_PAGE_OCCUPANCY.into(), self.kv_page_occupancy());
+        m.insert(keys::KV_PREFIX_HIT_TOKENS.into(),
                  self.kv_prefix_hit_tokens as f64);
-        m.insert("kv_prefix_miss_tokens".into(),
+        m.insert(keys::KV_PREFIX_MISS_TOKENS.into(),
                  self.kv_prefix_miss_tokens as f64);
-        m.insert("kv_prefix_hit_rate".into(), self.kv_prefix_hit_rate());
-        m.insert("kv_prefix_evictions".into(),
+        m.insert(keys::KV_PREFIX_HIT_RATE.into(),
+                 self.kv_prefix_hit_rate());
+        m.insert(keys::KV_PREFIX_EVICTIONS.into(),
                  self.kv_prefix_evictions as f64);
-        m.insert("mode_demotions".into(), self.mode_demotions as f64);
-        m.insert("mode_promotions".into(), self.mode_promotions as f64);
-        m.insert("ar_steps".into(), self.ar_steps as f64);
-        m.insert("spec_steps".into(), self.spec_steps as f64);
+        m.insert(keys::MODE_DEMOTIONS.into(), self.mode_demotions as f64);
+        m.insert(keys::MODE_PROMOTIONS.into(), self.mode_promotions as f64);
+        m.insert(keys::AR_STEPS.into(), self.ar_steps as f64);
+        m.insert(keys::SPEC_STEPS.into(), self.spec_steps as f64);
         m
     }
 }
@@ -299,6 +311,22 @@ mod tests {
         ] {
             assert!(r.contains_key(k), "missing {k}");
         }
+    }
+
+    #[test]
+    fn report_keys_equal_registry_minus_fleet_only() {
+        // Pins emit-site ↔ registry sync in both directions: a key
+        // added to report() without registering it (or vice versa)
+        // fails here before `propd lint` even runs.
+        let emitted: Vec<String> =
+            EngineMetrics::default().report().keys().cloned().collect();
+        let mut registered: Vec<String> = keys::REGISTRY
+            .iter()
+            .filter(|d| d.rollup != keys::Rollup::FleetOnly)
+            .map(|d| d.name.to_string())
+            .collect();
+        registered.sort();
+        assert_eq!(emitted, registered);
     }
 
     #[test]

@@ -18,6 +18,8 @@ const TILE_J: usize = 64;
 /// Reference kernel: `C[i,j] = sum_k A[i,k] * B[k,j]`, plain triple loop
 /// with ascending-k accumulation.  A is `[m,k]` row-major, B `[k,n]`,
 /// C `[m,n]`.
+// lint: allow(hot_path_alloc) bit-exactness reference, never on the
+// step path (which uses matmul_blocked_into with a caller-owned slab)
 pub fn matmul_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
@@ -73,6 +75,8 @@ pub fn matmul_blocked_into(
 }
 
 /// Allocating convenience wrapper around [`matmul_blocked_into`].
+// lint: allow(hot_path_alloc) bench/test convenience wrapper; the step
+// path calls matmul_blocked_into
 pub fn matmul_blocked(
     threads: usize,
     a: &[f32],

@@ -37,6 +37,7 @@ use crate::batching::{QueuedRequest, RequestQueue};
 use crate::config::ServingConfig;
 use crate::metrics::MetricsHub;
 use crate::runtime::RuntimeSpec;
+use crate::util::lock_recover;
 
 pub use protocol::{parse_request, render_completion, Request};
 pub use replicas::{
@@ -79,14 +80,14 @@ impl Shared {
     /// Register a cancellation flag for an issued id.
     pub fn register_cancel(&self, id: u64) -> Arc<AtomicBool> {
         let flag = Arc::new(AtomicBool::new(false));
-        self.cancels.lock().unwrap().insert(id, flag.clone());
+        lock_recover(&self.cancels).insert(id, flag.clone());
         flag
     }
 
     /// Raise a request's cancellation flag; false when the id is unknown
     /// (never issued, or already finished and unregistered).
     pub fn cancel(&self, id: u64) -> bool {
-        match self.cancels.lock().unwrap().get(&id) {
+        match lock_recover(&self.cancels).get(&id) {
             Some(flag) => {
                 flag.store(true, Ordering::SeqCst);
                 true
@@ -97,7 +98,7 @@ impl Shared {
 
     /// Drop a finished request's cancellation flag.
     pub fn unregister_cancel(&self, id: u64) {
-        self.cancels.lock().unwrap().remove(&id);
+        lock_recover(&self.cancels).remove(&id);
     }
 
     /// Request a graceful drain: new submissions are rejected, in-flight

@@ -12,7 +12,7 @@ use anyhow::{Context, Result};
 
 use crate::engine::{Completion, TokenDelta};
 use crate::jsonio::{self, num, obj, s, Value};
-use crate::metrics::{AggregateSnapshot, ReplicaSnapshot};
+use crate::metrics::{keys, AggregateSnapshot, ReplicaSnapshot};
 
 /// A parsed client request line.
 #[derive(Debug, Clone, PartialEq)]
@@ -86,6 +86,8 @@ pub fn render_completion(c: &Completion) -> String {
         ("id", num(c.id as f64)),
         ("text", s(&c.text)),
         ("tokens", num(c.tokens.len() as f64)),
+        // lint: allow(metric_keys) wire field of the completion frame that
+        // happens to share its name with the metrics-report key
         ("steps", num(c.steps as f64)),
         ("latency_s", num(c.latency_seconds)),
         ("queue_s", num(c.queue_seconds)),
@@ -154,8 +156,8 @@ fn report_value(report: &BTreeMap<String, f64>) -> Value {
 fn replica_value(r: &ReplicaSnapshot) -> Value {
     obj(vec![
         ("replica", num(r.replica as f64)),
-        ("served", num(r.served as f64)),
-        ("pending", num(r.pending as f64)),
+        (keys::SERVED, num(r.served as f64)),
+        (keys::PENDING, num(r.pending as f64)),
         ("report", report_value(&r.report)),
     ])
 }
@@ -164,7 +166,7 @@ fn replica_value(r: &ReplicaSnapshot) -> Value {
 pub fn render_metrics(agg: &AggregateSnapshot) -> String {
     jsonio::to_string(&obj(vec![
         (
-            "replicas",
+            keys::REPLICAS,
             Value::Arr(agg.replicas.iter().map(replica_value).collect()),
         ),
         ("totals", report_value(&agg.totals)),

@@ -5,3 +5,36 @@ pub mod stats;
 
 pub use rng::Rng;
 pub use stats::Summary;
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// The serving path must not propagate panics (`propd lint`'s
+/// `serving_panic` check): every structure the crate shares across
+/// worker threads is kept valid at each lock release (counters and
+/// queue entries, never half-applied multi-step updates), so a
+/// poisoned lock means at worst a stale snapshot, and recovering the
+/// guard is always safe.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7_u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+    }
+}

@@ -1,0 +1,73 @@
+//! Regression: malformed client frames must produce structured error
+//! frames — never a worker panic, never a dropped connection.  Each
+//! garbage line below gets a JSON `{"error": ...}` reply, and a valid
+//! request on the *same* connection afterwards still completes, proving
+//! the read loop survived every one of them.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use propd::config::ServingConfig;
+use propd::engine::EngineKind;
+use propd::runtime::{RuntimeSpec, SimConfig};
+use propd::server::protocol::{parse_completion, render_request};
+
+/// Frames that are each wrong in a different way: not JSON, wrong
+/// top-level type, wrong field types, out-of-range values, and
+/// truncated syntax.
+const GARBAGE: &[&str] = &[
+    "not json at all",
+    "{unterminated",
+    "[1, 2, 3]",
+    "42",
+    "\"just a string\"",
+    "{}",
+    "{\"prompt\": 12}",
+    "{\"prompt\": \"\"}",
+    "{\"prompt\": \"x\", \"max_new_tokens\": 0}",
+    "{\"prompt\": \"x\", \"max_new_tokens\": -3}",
+    "{\"cancel\": \"nope\"}",
+];
+
+#[test]
+fn garbage_frames_get_error_replies_and_the_connection_survives() {
+    let sim = SimConfig::default();
+    let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+    cfg.server.addr = "127.0.0.1:0".into();
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let spec = RuntimeSpec::Sim(sim);
+        propd::server::serve(&cfg, &spec, Some(tx)).expect("serve");
+    });
+    let addr = rx.recv().expect("server ready");
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    for garbage in GARBAGE {
+        writer.write_all(garbage.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains("\"error\""),
+            "garbage frame {garbage:?} got a non-error reply: {line:?}"
+        );
+        assert!(
+            parse_completion(line.trim()).is_err(),
+            "garbage frame {garbage:?} parsed as a completion: {line:?}"
+        );
+    }
+
+    // The same connection must still serve a well-formed request.
+    writer
+        .write_all(format!("{}\n", render_request("the propd", 8)).as_bytes())
+        .unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let (_, text, _) = parse_completion(line.trim())
+        .expect("valid request after garbage must complete");
+    assert!(!text.is_empty());
+}
