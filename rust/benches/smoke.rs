@@ -26,9 +26,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
 
+use propd::batching::RoleMode;
 use propd::bench::gate::{self, Baseline, Direction};
 use propd::bench::harness::{run_trace, RunSpec};
 use propd::bench::{Bencher, Table};
+use propd::config::ServingConfig;
 use propd::engine::{
     AdmissionMode, DecodeMode, Engine, EngineConfig, EngineKind,
 };
@@ -36,9 +38,12 @@ use propd::estimator::{
     allocate_budget, allocation_gain, gain_at, alloc::DEFAULT_MIN_GAIN,
 };
 use propd::kvcache::{BatchAssembler, KvCache, KvGeometry};
-use propd::runtime::{Runtime, SimConfig};
+use propd::metrics::{keys, AggregateSnapshot};
+use propd::runtime::{Runtime, RuntimeSpec, SimConfig};
+use propd::server::run_offline;
 use propd::workload::{
-    shared_prefix_requests, PromptSet, SharedPrefixConfig,
+    mixed_trace_requests, shared_prefix_requests, MixedTraceConfig,
+    PromptSet, SharedPrefixConfig,
 };
 
 /// Counts heap allocations (`alloc` + `realloc`) for the whole bench
@@ -202,6 +207,82 @@ fn decode_mode_metrics(m: &mut BTreeMap<String, f64>) -> Result<()> {
     Ok(())
 }
 
+/// One mixed-trace offline serving run at the given role split; returns
+/// the fleet ITL p99 (pooled rollup) plus the full aggregate snapshot.
+fn disagg_run(
+    cfg: &ServingConfig,
+    spec: &RuntimeSpec,
+    trace: &[(String, usize)],
+) -> Result<(f64, AggregateSnapshot)> {
+    let (_, agg, _) = run_offline(cfg, spec, trace)?;
+    Ok((agg.total(keys::ITL_P99_S), agg))
+}
+
+/// Disaggregated-serving fixture: the mixed long/short trace through a
+/// two-replica fleet, colocated vs disaggregated (the prefill replica
+/// hands each ready lane's frozen KV page chain to the decode replica).
+/// The migration economics are pure functions of the trace + page math,
+/// so they gate as exact canaries — any drift means the migration or
+/// resume accounting changed; the headline ITL-p99 ratio is
+/// host-dependent wall-clock (median-of-3 per topology, interleaved) and
+/// gates with a wide tolerance — splitting the fleet must not cost
+/// decode tail latency on this trace.
+fn disagg_metrics(m: &mut BTreeMap<String, f64>) -> Result<()> {
+    let sim = SimConfig::default();
+    let spec = RuntimeSpec::Sim(sim.clone());
+    let trace = mixed_trace_requests(&MixedTraceConfig::default());
+    let mut cfg = ServingConfig::default_for(&sim.size, EngineKind::ProPD);
+    cfg.server.replicas = 2;
+    cfg.engine.max_batch = 4;
+    // Whole prompts page-align at 16: a long lane migrates its full
+    // committed prefix and replays only one page on resume.
+    cfg.engine.page_size = 16;
+
+    cfg.server.roles = RoleMode::Disaggregated;
+    disagg_run(&cfg, &spec, &trace)?; // unmeasured shakeout rep
+    let mut dis_itl = Vec::new();
+    let mut col_itl = Vec::new();
+    let mut dis_agg = None;
+    for _ in 0..3 {
+        cfg.server.roles = RoleMode::Disaggregated;
+        let (itl, agg) = disagg_run(&cfg, &spec, &trace)?;
+        dis_itl.push(itl);
+        dis_agg = Some(agg);
+        cfg.server.roles = RoleMode::Colocated;
+        let (itl, _) = disagg_run(&cfg, &spec, &trace)?;
+        col_itl.push(itl);
+    }
+    let dis_agg = dis_agg.expect("three disaggregated reps ran");
+    dis_itl.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    col_itl.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let dis_p99 = dis_itl[dis_itl.len() / 2];
+    let col_p99 = col_itl[col_itl.len() / 2];
+    m.insert("disagg_itl_p99_ms".into(), dis_p99 * 1e3);
+    m.insert("colocated_itl_p99_ms".into(), col_p99 * 1e3);
+    m.insert(
+        "disagg_itl_p99_over_colocated".into(),
+        dis_p99 / col_p99.max(1e-9),
+    );
+    m.insert(
+        "disagg_migration_lanes".into(),
+        dis_agg.total(keys::KV_MIGRATION_LANES),
+    );
+    m.insert(
+        "disagg_migration_tokens".into(),
+        dis_agg.total(keys::KV_MIGRATION_TOKENS),
+    );
+    // Tokens migration saved the decode fleet from re-prefilling: the
+    // full committed prefix of every lane minus the uncached tail each
+    // resume actually replayed (reprefill_tokens_total).
+    let prompt_tokens: usize = trace.iter().map(|(p, _)| p.len()).sum();
+    m.insert(
+        "disagg_reprefill_avoided_tokens".into(),
+        prompt_tokens as f64
+            - dis_agg.total(keys::REPREFILL_TOKENS_TOTAL),
+    );
+    Ok(())
+}
+
 fn measure() -> Result<BTreeMap<String, f64>> {
     let mut m = BTreeMap::new();
     let sim = SimConfig::default();
@@ -338,6 +419,11 @@ fn measure() -> Result<BTreeMap<String, f64>> {
     // gates the wall-clock win over always-speculative.
     decode_mode_metrics(&mut m)?;
 
+    // ---- disaggregated serving (mixed trace) ----
+    // Prefill/decode role split with KV page-chain migration; see
+    // DESIGN.md § Disaggregated serving.
+    disagg_metrics(&mut m)?;
+
     // ---- execution backend: wall-clock + allocation gates ----
     // Host-dependent but gated: median-of-5 sampling and wide per-entry
     // tolerances (metric_meta) absorb runner variance, while a real
@@ -444,6 +530,18 @@ fn metric_meta(name: &str) -> (Direction, bool, Option<f64>) {
             (Direction::Higher, true, Some(25.0))
         }
         "auto_over_spec_tps" => (Direction::Higher, true, Some(30.0)),
+        // Disaggregated serving: migration economics are deterministic
+        // canaries (drift = the migration or resume accounting changed);
+        // the ITL tail ratio is host-dependent wall-clock, gated wide —
+        // the split fleet must stay no worse than colocated.
+        "disagg_migration_lanes"
+        | "disagg_migration_tokens"
+        | "disagg_reprefill_avoided_tokens" => {
+            (Direction::Exact, true, None)
+        }
+        "disagg_itl_p99_over_colocated" => {
+            (Direction::Lower, true, Some(40.0))
+        }
         // Execution-backend gates: wall-clock throughput and the
         // threading speedup are host-dependent, so they gate with wide
         // variance-aware tolerances; the steady-state allocation rate is

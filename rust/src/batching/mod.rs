@@ -7,14 +7,18 @@
 
 pub mod scheduler;
 
-pub use scheduler::{ReplicaHandle, ReplicaLoad, RoutingPolicy, Scheduler};
+pub use scheduler::{
+    ReplicaHandle, ReplicaLoad, ReplicaRole, RoleMode, RoutingPolicy,
+    Scheduler,
+};
 
 use std::collections::VecDeque;
 use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::engine::{Completion, TokenDelta};
+use crate::engine::{Completion, ResumeState, TokenDelta};
+use crate::kvcache::MigratedChain;
 use crate::util::lock_recover;
 
 /// A queued inference call: identity + prompt + budget + the client's
@@ -36,6 +40,15 @@ pub struct QueuedRequest {
     pub deltas: Option<Sender<TokenDelta>>,
     /// Raised (by any holder of the flag) to cancel mid-flight.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Committed progress carried by a migrated request (disaggregated
+    /// serving): the receiving replica resumes from this state instead
+    /// of starting over.  `None` for fresh admissions.
+    pub resume: Option<ResumeState>,
+    /// The migrated KV page chain matching `resume` — adopted into the
+    /// receiving replica's pool so the committed prefix is not
+    /// re-prefilled.  `None` when no chain could be exported (short
+    /// prompt, prefix cache off): the resume path re-prefills instead.
+    pub chain: Option<MigratedChain>,
 }
 
 /// Admission-queue counters.
@@ -92,6 +105,23 @@ impl RequestQueue {
         g.stats.high_watermark = g.stats.high_watermark.max(len);
         self.cv.notify_one();
         Ok(())
+    }
+
+    /// Re-enqueue an already-admitted request at the FRONT of the queue.
+    ///
+    /// Migration transport (disaggregated serving): a prefill replica
+    /// hands a lane back through the shared admission queue so the
+    /// scheduler can route it to a decode replica.  The request was
+    /// already admitted once, so this bypasses both backpressure (it
+    /// holds no new client work) and the closed check (drain finishes
+    /// in-flight work after close; migrations are in-flight work).
+    pub fn requeue(&self, req: QueuedRequest) {
+        let mut g = lock_recover(&self.inner);
+        g.items.push_front(req);
+        g.stats.submitted += 1;
+        let len = g.items.len();
+        g.stats.high_watermark = g.stats.high_watermark.max(len);
+        self.cv.notify_one();
     }
 
     /// Drain up to `max` requests; blocks until at least one is available
@@ -164,6 +194,8 @@ mod tests {
             respond: None,
             deltas: None,
             cancel: None,
+            resume: None,
+            chain: None,
         }
     }
 
@@ -208,6 +240,21 @@ mod tests {
         assert_eq!(h.join().unwrap(), 0);
         assert!(q.submit(req("x")).is_err());
         assert!(q.is_closed());
+    }
+
+    #[test]
+    fn requeue_front_bypasses_capacity_and_close() {
+        let q = RequestQueue::new(1);
+        q.submit(req("fresh")).map_err(|_| ()).unwrap();
+        // Full queue: a migration still lands, and at the front.
+        q.requeue(req("migrated"));
+        q.close();
+        // Closed queue: in-flight migrations still drain.
+        q.requeue(req("late"));
+        let drained = q.drain_now(10);
+        let prompts: Vec<&str> =
+            drained.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, ["late", "migrated", "fresh"]);
     }
 
     #[test]

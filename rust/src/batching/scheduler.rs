@@ -87,6 +87,90 @@ impl RoutingPolicy {
     }
 }
 
+/// Fleet topology for prefill/decode disaggregation (`server.roles`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoleMode {
+    /// Every replica runs both phases (the default).
+    #[default]
+    Colocated,
+    /// The fleet splits into prefill-role and decode-role replicas;
+    /// ready lanes migrate prefill→decode with their KV page chain.
+    Disaggregated,
+}
+
+impl RoleMode {
+    /// Parse `server.roles`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "colocated" => Some(RoleMode::Colocated),
+            "disaggregated" | "disagg" => Some(RoleMode::Disaggregated),
+            _ => None,
+        }
+    }
+
+    /// Canonical knob string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoleMode::Colocated => "colocated",
+            RoleMode::Disaggregated => "disaggregated",
+        }
+    }
+
+    /// Per-replica role assignment for a fleet of `replicas`: colocated
+    /// fleets are uniform; disaggregated fleets give the first
+    /// `replicas / 2` slots (floor, at least one) to prefill and the
+    /// rest to decode.
+    pub fn role_of(&self, replica: usize, replicas: usize) -> ReplicaRole {
+        match self {
+            RoleMode::Colocated => ReplicaRole::Colocated,
+            RoleMode::Disaggregated => {
+                let prefill = (replicas / 2).max(1);
+                if replica < prefill {
+                    ReplicaRole::Prefill
+                } else {
+                    ReplicaRole::Decode
+                }
+            }
+        }
+    }
+}
+
+/// One replica's phase assignment under [`RoleMode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplicaRole {
+    /// Runs both phases; accepts any request.
+    #[default]
+    Colocated,
+    /// Prefill-only: accepts fresh admissions, prefills them, then
+    /// migrates the lane (with its KV page chain) back through the
+    /// admission queue toward a decode replica.
+    Prefill,
+    /// Decode-only: accepts migrated lanes, adopts their chain, and
+    /// decodes to completion.
+    Decode,
+}
+
+impl ReplicaRole {
+    /// Whether this role accepts a request (`migrated` = the request
+    /// carries committed progress from a prefill replica).
+    pub fn accepts(&self, migrated: bool) -> bool {
+        match self {
+            ReplicaRole::Colocated => true,
+            ReplicaRole::Prefill => !migrated,
+            ReplicaRole::Decode => migrated,
+        }
+    }
+
+    /// Short label for logs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplicaRole::Colocated => "colocated",
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+        }
+    }
+}
+
 /// Dispatch-side load accounting for one replica.
 ///
 /// `queued` counts requests handed to the replica's feed but not yet
@@ -114,6 +198,9 @@ pub struct ReplicaLoad {
     /// (worker-published; 0 = not yet published).  The affinity router
     /// must hash prompts at this granularity or digests never match.
     page_size: AtomicUsize,
+    /// The replica's phase role, encoded as the [`ReplicaRole`]
+    /// discriminant (0 = colocated) so the load block stays lock-free.
+    role: AtomicUsize,
 }
 
 impl ReplicaLoad {
@@ -190,6 +277,25 @@ impl ReplicaLoad {
         self.page_size.load(Ordering::SeqCst)
     }
 
+    /// Assign the replica's phase role (set once at fleet construction).
+    pub fn set_role(&self, role: ReplicaRole) {
+        let code = match role {
+            ReplicaRole::Colocated => 0,
+            ReplicaRole::Prefill => 1,
+            ReplicaRole::Decode => 2,
+        };
+        self.role.store(code, Ordering::SeqCst);
+    }
+
+    /// The replica's phase role.
+    pub fn role(&self) -> ReplicaRole {
+        match self.role.load(Ordering::SeqCst) {
+            1 => ReplicaRole::Prefill,
+            2 => ReplicaRole::Decode,
+            _ => ReplicaRole::Colocated,
+        }
+    }
+
     /// How many of the prompt's leading cumulative block digests this
     /// replica holds (the prefix-affinity score: a depth-k match means
     /// the first k page-aligned blocks are cached there).
@@ -214,6 +320,9 @@ pub struct ReplicaHandle {
     pub id: usize,
     /// The replica engine's lane budget (`engine.max_batch`).
     pub max_batch: usize,
+    /// The replica's phase role (static for the run; mirrored in
+    /// [`ReplicaLoad`] for lock-free routing reads).
+    pub role: ReplicaRole,
     /// The replica's decode feed.
     pub queue: Arc<RequestQueue>,
     /// Dispatch-side load accounting.
@@ -221,14 +330,22 @@ pub struct ReplicaHandle {
 }
 
 impl ReplicaHandle {
-    /// A handle with a fresh feed and zeroed load.
+    /// A handle with a fresh feed, zeroed load, and the colocated role.
     pub fn new(id: usize, max_batch: usize, feed_capacity: usize) -> Self {
         ReplicaHandle {
             id,
             max_batch,
+            role: ReplicaRole::Colocated,
             queue: Arc::new(RequestQueue::new(feed_capacity.max(1))),
             load: Arc::new(ReplicaLoad::default()),
         }
+    }
+
+    /// Assign a phase role (builder; keeps the load mirror in sync).
+    pub fn with_role(mut self, role: ReplicaRole) -> Self {
+        self.role = role;
+        self.load.set_role(role);
+        self
     }
 
     /// Lanes this replica could fill immediately (0 when saturated).
@@ -311,11 +428,40 @@ impl Scheduler {
 
     /// Like [`pick`](Self::pick), but with the request's prompt so the
     /// prefix-affinity policy can score digest matches.  The other
-    /// policies ignore the prompt.
+    /// policies ignore the prompt.  Routes as a fresh admission (see
+    /// [`pick_routed`](Self::pick_routed) for role-aware dispatch).
     pub fn pick_for(&self, prompt: Option<&str>) -> Option<&ReplicaHandle> {
+        self.pick_routed(prompt, false)
+    }
+
+    /// Role-aware pick: migrated requests go to decode-role replicas,
+    /// fresh admissions to prefill-role replicas; colocated replicas
+    /// accept both.  When no role-eligible feed is open the role filter
+    /// relaxes (work lands on any open replica rather than being
+    /// dropped while part of the fleet lives) — the worker loops handle
+    /// either request kind, just without the phase split.
+    pub fn pick_routed(
+        &self,
+        prompt: Option<&str>,
+        migrated: bool,
+    ) -> Option<&ReplicaHandle> {
+        self.pick_filtered(prompt, Some(migrated))
+            .or_else(|| self.pick_filtered(prompt, None))
+    }
+
+    /// One pick pass; `migrated` of `None` disables the role filter.
+    fn pick_filtered(
+        &self,
+        prompt: Option<&str>,
+        migrated: Option<bool>,
+    ) -> Option<&ReplicaHandle> {
+        let eligible = |r: &ReplicaHandle| {
+            !r.queue.is_closed()
+                && migrated.map_or(true, |m| r.role.accepts(m))
+        };
         let any_above = self.watermark_permille > 0
             && self.replicas.iter().any(|r| {
-                !r.queue.is_closed()
+                eligible(r)
                     && r.load.free_page_permille() >= self.watermark_permille
             });
         match self.policy {
@@ -324,17 +470,12 @@ impl Scheduler {
                 let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
                 (0..n)
                     .map(|k| &self.replicas[(start + k) % n])
-                    .find(|r| {
-                        !r.queue.is_closed()
-                            && self.clears_watermark(r, any_above)
-                    })
+                    .find(|r| eligible(r) && self.clears_watermark(r, any_above))
             }
             RoutingPolicy::LeastLoaded => self
                 .replicas
                 .iter()
-                .filter(|r| {
-                    !r.queue.is_closed() && self.clears_watermark(r, any_above)
-                })
+                .filter(|r| eligible(r) && self.clears_watermark(r, any_above))
                 .min_by_key(|r| {
                     (Reverse(r.free_lanes()), r.load.in_flight(), r.id)
                 }),
@@ -345,9 +486,7 @@ impl Scheduler {
             RoutingPolicy::CachePressure => self
                 .replicas
                 .iter()
-                .filter(|r| {
-                    !r.queue.is_closed() && self.clears_watermark(r, any_above)
-                })
+                .filter(|r| eligible(r) && self.clears_watermark(r, any_above))
                 .min_by_key(|r| {
                     (
                         Reverse(r.free_lanes().min(1)),
@@ -394,8 +533,7 @@ impl Scheduler {
                 self.replicas
                     .iter()
                     .filter(|r| {
-                        !r.queue.is_closed()
-                            && self.clears_watermark(r, any_above)
+                        eligible(r) && self.clears_watermark(r, any_above)
                     })
                     .min_by_key(|r| {
                         (
@@ -413,10 +551,13 @@ impl Scheduler {
 
     /// Route one request; blocks (with a short backoff) while every open
     /// feed is full.  Returns false iff the request was dropped because
-    /// every feed is closed.
+    /// every feed is closed.  A request carrying migrated progress
+    /// (`resume`) routes to decode-role replicas; fresh ones to
+    /// prefill-role replicas; colocated fleets ignore the distinction.
     pub fn dispatch_one(&self, mut req: QueuedRequest) -> bool {
+        let migrated = req.resume.is_some();
         loop {
-            let Some(r) = self.pick_for(Some(&req.prompt)) else {
+            let Some(r) = self.pick_routed(Some(&req.prompt), migrated) else {
                 return false; // all replicas gone; drop → client errors out
             };
             r.load.note_dispatched();
@@ -431,15 +572,37 @@ impl Scheduler {
         }
     }
 
+    /// True while any prefill-role replica still holds work it will
+    /// migrate back through the admission queue.
+    fn prefill_work_outstanding(&self) -> bool {
+        self.replicas.iter().any(|r| {
+            r.role == ReplicaRole::Prefill && r.load.in_flight() > 0
+        })
+    }
+
     /// Pump the admission queue until it closes and drains, then close all
     /// replica feeds (letting idle workers exit).  Returns the number of
     /// requests dispatched.
+    ///
+    /// With a disaggregated fleet "drained" must also cover migrations
+    /// still inside a prefill replica: those come *back* through the
+    /// admission queue (via [`RequestQueue::requeue`]) after the close,
+    /// so the feeds stay open until every prefill replica reports idle.
     pub fn run(&self, admission: &RequestQueue) -> u64 {
         let mut dispatched = 0u64;
         loop {
             let batch = admission.drain_blocking(DISPATCH_BURST);
             if batch.is_empty() {
-                break; // closed and empty
+                // Closed and empty — but a prefill replica may still
+                // requeue migrated lanes.  Wait for the handoff.
+                if self.prefill_work_outstanding() {
+                    std::thread::park_timeout(Duration::from_micros(200));
+                    continue;
+                }
+                if admission.is_empty() {
+                    break;
+                }
+                continue; // a migration landed between checks
             }
             for req in batch {
                 if self.dispatch_one(req) {
@@ -466,6 +629,23 @@ mod tests {
             respond: None,
             deltas: None,
             cancel: None,
+            resume: None,
+            chain: None,
+        }
+    }
+
+    fn migrated(p: &str) -> QueuedRequest {
+        QueuedRequest {
+            resume: Some(crate::engine::ResumeState {
+                tokens: vec![1, 2, 3],
+                prompt_len: 3,
+                emitted: 0,
+                first_token: None,
+                steps: 0,
+                started: 0.0,
+                preemptions: 0,
+            }),
+            ..req(p)
         }
     }
 
@@ -739,6 +919,104 @@ mod tests {
         handles[1].queue.close();
         let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
         assert!(!s.dispatch_one(req("x")));
+    }
+
+    #[test]
+    fn role_mode_parses_and_assigns() {
+        assert_eq!(RoleMode::parse("colocated"), Some(RoleMode::Colocated));
+        assert_eq!(
+            RoleMode::parse("disaggregated"),
+            Some(RoleMode::Disaggregated)
+        );
+        assert_eq!(RoleMode::parse("disagg"), Some(RoleMode::Disaggregated));
+        assert_eq!(RoleMode::parse("split"), None);
+        assert_eq!(RoleMode::Disaggregated.as_str(), "disaggregated");
+        // Colocated fleets are uniform.
+        assert_eq!(RoleMode::Colocated.role_of(1, 4), ReplicaRole::Colocated);
+        // floor(n/2) prefill, rest decode; 2-replica minimum split 1/1.
+        assert_eq!(RoleMode::Disaggregated.role_of(0, 2), ReplicaRole::Prefill);
+        assert_eq!(RoleMode::Disaggregated.role_of(1, 2), ReplicaRole::Decode);
+        let roles: Vec<ReplicaRole> =
+            (0..5).map(|i| RoleMode::Disaggregated.role_of(i, 5)).collect();
+        assert_eq!(
+            roles,
+            [
+                ReplicaRole::Prefill,
+                ReplicaRole::Prefill,
+                ReplicaRole::Decode,
+                ReplicaRole::Decode,
+                ReplicaRole::Decode,
+            ]
+        );
+    }
+
+    #[test]
+    fn roles_split_fresh_from_migrated_dispatch() {
+        let handles = vec![
+            ReplicaHandle::new(0, 2, 8).with_role(ReplicaRole::Prefill),
+            ReplicaHandle::new(1, 2, 8).with_role(ReplicaRole::Decode),
+        ];
+        assert_eq!(handles[0].load.role(), ReplicaRole::Prefill);
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
+        // Fresh admissions land on the prefill replica (even though the
+        // decode replica ties on load), migrated lanes on the decode one.
+        assert!(s.dispatch_one(req("fresh")));
+        assert!(s.dispatch_one(migrated("moved")));
+        assert_eq!(s.replicas()[0].queue.len(), 1);
+        assert_eq!(s.replicas()[1].queue.len(), 1);
+        assert_eq!(s.replicas()[0].queue.drain_now(8)[0].prompt, "fresh");
+        assert_eq!(s.replicas()[1].queue.drain_now(8)[0].prompt, "moved");
+    }
+
+    #[test]
+    fn role_filter_relaxes_when_no_eligible_feed_is_open() {
+        // Decode feed closed: a migrated request must still land (on the
+        // prefill replica) instead of being dropped while a feed lives.
+        let handles = vec![
+            ReplicaHandle::new(0, 2, 8).with_role(ReplicaRole::Prefill),
+            ReplicaHandle::new(1, 2, 8).with_role(ReplicaRole::Decode),
+        ];
+        handles[1].queue.close();
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
+        assert_eq!(s.pick_routed(None, true).unwrap().id, 0);
+        // Both closed → genuinely nowhere to go.
+        s.replicas()[0].queue.close();
+        assert!(s.pick_routed(None, true).is_none());
+    }
+
+    #[test]
+    fn run_waits_for_prefill_replicas_to_hand_back_migrations() {
+        // Admission closes while the prefill replica still "holds" a
+        // lane; the scheduler must keep feeds open until the migration
+        // comes back through the admission queue.
+        let admission = Arc::new(RequestQueue::new(16));
+        admission.submit(req("a")).map_err(|_| ()).unwrap();
+        admission.close();
+        let handles = vec![
+            ReplicaHandle::new(0, 2, 8).with_role(ReplicaRole::Prefill),
+            ReplicaHandle::new(1, 2, 8).with_role(ReplicaRole::Decode),
+        ];
+        let s = Scheduler::new(handles, RoutingPolicy::LeastLoaded);
+        let prefill = s.replicas()[0].clone();
+        let adm = admission.clone();
+        let worker = std::thread::spawn(move || {
+            // Simulate the prefill worker: drain the feed, then (still
+            // counted in-flight) requeue the lane as migrated.
+            loop {
+                let got = prefill.queue.drain_blocking(8);
+                if got.is_empty() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+                adm.requeue(migrated("a"));
+                prefill.load.note_drained(got.len());
+            }
+        });
+        let dispatched = s.run(&admission);
+        worker.join().unwrap();
+        assert_eq!(dispatched, 2, "fresh + migrated both dispatched");
+        assert_eq!(s.replicas()[1].queue.len(), 1, "migration reached decode");
+        assert!(s.replicas().iter().all(|r| r.queue.is_closed()));
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::batching::RoutingPolicy;
+use crate::batching::{RoleMode, RoutingPolicy};
 use crate::engine::{AdmissionMode, DecodeMode, EngineConfig, EngineKind};
 use toml_lite::TomlValue;
 
@@ -48,6 +48,11 @@ pub struct ServerConfig {
     /// control: replicas below it receive no new work while any replica
     /// clears it.  0 disables.
     pub watermark_permille: usize,
+    /// Fleet role topology (`server.roles`): `colocated` (every replica
+    /// prefills and decodes) or `disaggregated` (the fleet splits into
+    /// prefill-only and decode-only replicas with KV page-chain
+    /// migration between them).
+    pub roles: RoleMode,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +63,7 @@ impl Default for ServerConfig {
             replicas: 1,
             routing: RoutingPolicy::LeastLoaded,
             watermark_permille: 0,
+            roles: RoleMode::Colocated,
         }
     }
 }
@@ -183,6 +189,14 @@ impl ServingConfig {
                  prefix-affinity)"
             )
         })?;
+        let roles_s = gets("server.roles")
+            .unwrap_or_else(|| RoleMode::Colocated.as_str().into());
+        let roles = RoleMode::parse(&roles_s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown server.roles {roles_s:?} \
+                 (expected colocated or disaggregated)"
+            )
+        })?;
         let server = ServerConfig {
             addr: gets("server.addr")
                 .unwrap_or_else(|| ServerConfig::default().addr),
@@ -190,6 +204,7 @@ impl ServingConfig {
             replicas: get_us("server.replicas", 1)?,
             routing,
             watermark_permille: get_us("server.watermark_permille", 0)?,
+            roles,
         };
         let artifacts = gets("artifacts.dir")
             .unwrap_or_else(|| crate::DEFAULT_ARTIFACTS.into());
@@ -201,6 +216,12 @@ impl ServingConfig {
         }
         if server.watermark_permille > 1000 {
             bail!("server.watermark_permille must be <= 1000");
+        }
+        if server.roles == RoleMode::Disaggregated && server.replicas < 2 {
+            bail!(
+                "server.roles=disaggregated needs server.replicas >= 2 \
+                 (at least one prefill and one decode replica)"
+            );
         }
         let runtime_threads = get_us("runtime.threads", 0)?;
         Ok(ServingConfig { artifacts, engine: e, server, runtime_threads })
@@ -402,6 +423,37 @@ mod tests {
             &["server.routing=\"warp\"".into()]
         )
         .is_err());
+    }
+
+    #[test]
+    fn roles_knob_parses_and_validates() {
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert_eq!(d.server.roles, RoleMode::Colocated);
+        // Quoted form (what `propd --roles` emits).
+        let c = ServingConfig::load(
+            None,
+            &[
+                "server.roles=\"disaggregated\"".into(),
+                "server.replicas=2".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.server.roles, RoleMode::Disaggregated);
+        // Shorthand accepted.
+        let s = ServingConfig::load(
+            None,
+            &["server.roles=disagg".into(), "server.replicas=3".into()],
+        )
+        .unwrap();
+        assert_eq!(s.server.roles, RoleMode::Disaggregated);
+        // A split fleet needs at least one replica per role.
+        assert!(ServingConfig::load(
+            None,
+            &["server.roles=disaggregated".into()]
+        )
+        .is_err());
+        assert!(ServingConfig::load(None, &["server.roles=warp".into()])
+            .is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use super::requests::{
 };
 use super::{AdmissionMode, DecodeMode, EngineConfig, EngineKind};
 use crate::estimator::{AcceptanceTracker, PerfModel, Planner};
-use crate::kvcache::{BatchAssembler, KvCache, KvGeometry};
+use crate::kvcache::{BatchAssembler, KvCache, KvGeometry, MigratedChain};
 use crate::manifest::{Entry, ModelMeta};
 use crate::metrics::EngineMetrics;
 use crate::runtime::literal::HostTensor;
@@ -400,6 +400,47 @@ impl<'rt> Engine<'rt> {
     pub fn resubmit(&mut self, spec: RequestSpec) {
         self.metrics.requeue_total += 1;
         self.submit_spec(spec);
+    }
+
+    /// Admit queued requests into free lanes (running their prefills)
+    /// without taking a decode step.  Prefill-role replicas drive
+    /// admission through this and then migrate the resulting lanes —
+    /// they never step.
+    pub fn admit_pending(&mut self) -> Result<()> {
+        self.admit().context("admission")
+    }
+
+    /// Preempt the lowest-priority lane and export its frozen KV page
+    /// chain for adoption on another replica (disaggregated serving:
+    /// the prefill→decode handoff).  The chain is `None` when nothing
+    /// was frozen for the lane — sub-page committed prefix, or prefix
+    /// cache off — in which case the receiver re-prefills instead (the
+    /// output stays byte-identical either way; only the economics
+    /// differ).  Counts migration metrics; returns `None` when no lane
+    /// is active.
+    pub fn migrate_lowest(
+        &mut self,
+    ) -> Option<(RequestSpec, Option<MigratedChain>)> {
+        let spec = self.preempt_lowest()?;
+        let chain = spec
+            .resume
+            .as_ref()
+            .and_then(|r| self.kv.export_chain(&r.tokens));
+        self.metrics.kv_migration_lanes += 1;
+        if let Some(c) = &chain {
+            self.metrics.kv_migration_tokens += c.covered_tokens() as u64;
+            self.metrics.kv_migration_bytes += c.bytes() as u64;
+        }
+        Some((spec, chain))
+    }
+
+    /// Adopt a migrated KV page chain into this engine's pool and
+    /// prefix index, so resuming its request replays only the uncached
+    /// tail instead of re-prefilling the whole committed prefix.
+    /// Returns the pages newly inserted (0 = already cached or prefix
+    /// cache off; both degrade to a plain resume).
+    pub fn import_chain(&mut self, chain: &MigratedChain) -> Result<usize> {
+        self.kv.import_chain(chain)
     }
 
     /// Queued + active request count.

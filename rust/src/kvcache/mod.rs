@@ -73,6 +73,37 @@ impl KvGeometry {
     }
 }
 
+/// A frozen page chain serialized out of one cache's [`PagePool`] for
+/// adoption by another (disaggregated prefill→decode lane migration).
+/// Carries the covered tokens plus a byte-for-byte copy of every page
+/// payload; the geometry fields let an importer reject chains from a
+/// differently-shaped pool instead of corrupting pages.
+#[derive(Debug, Clone)]
+pub struct MigratedChain {
+    page_size: usize,
+    page_elems: usize,
+    tokens: Vec<Token>,
+    payloads: Vec<Vec<f32>>,
+}
+
+impl MigratedChain {
+    /// Sequence positions the chain covers (full pages only).
+    pub fn covered_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Pages in the chain.
+    pub fn pages(&self) -> usize {
+        self.payloads.len()
+    }
+
+    /// Serialized KV payload size in bytes (what a real deployment would
+    /// move over the interconnect).
+    pub fn bytes(&self) -> usize {
+        self.payloads.len() * self.page_elems * std::mem::size_of::<f32>()
+    }
+}
+
 /// Identity of a slot's current occupancy: changes whenever the slot is
 /// re-acquired or truncated, so the [`BatchAssembler`] can tell "columns I
 /// already synced are still valid" from "rebuild this lane".
@@ -579,6 +610,89 @@ impl KvCache {
             }
             None => &self.zero_col[..col],
         }
+    }
+
+    /// Serialize the longest frozen page chain covering `tokens` out of
+    /// this cache (the export half of prefill→decode lane migration).
+    /// The chain carries a byte-for-byte copy of every page payload, so
+    /// an importer reproduces the exact KV contents; the source index
+    /// keeps its own references (export is a read, not a hand-off).
+    /// Returns `None` when nothing is cached for `tokens` (e.g. the
+    /// prompt is shorter than one page, or the cache is disabled).
+    pub fn export_chain(&mut self, tokens: &[Token]) -> Option<MigratedChain> {
+        let (pages, matched) = self.prefix_lookup(tokens, tokens.len());
+        if pages.is_empty() {
+            return None;
+        }
+        let payloads: Vec<Vec<f32>> =
+            pages.iter().map(|&p| self.pool.page(p).to_vec()).collect();
+        self.release_prefix(pages);
+        Some(MigratedChain {
+            page_size: self.page_size,
+            page_elems: self.pool.page_elems(),
+            tokens: tokens[..matched].to_vec(),
+            payloads,
+        })
+    }
+
+    /// Adopt a migrated chain into this cache's prefix index (the import
+    /// half): allocate pages, copy the payloads byte-for-byte, and
+    /// insert the chain so the next prefill/resume lookup of the same
+    /// tokens adopts it instead of recomputing.  Returns the pages newly
+    /// pinned by the index — 0 when the chain is already fully cached
+    /// here (the import is idempotent) or the prefix cache is disabled.
+    /// Errors only on pool exhaustion or mismatched pool geometry.
+    pub fn import_chain(&mut self, chain: &MigratedChain) -> Result<usize> {
+        if self.prefix.is_none() || chain.payloads.is_empty() {
+            return Ok(0);
+        }
+        if chain.page_size != self.page_size
+            || chain.page_elems != self.pool.page_elems()
+        {
+            bail!(
+                "migrated chain geometry mismatch (page_size {} vs {}, \
+                 page elems {} vs {})",
+                chain.page_size,
+                self.page_size,
+                chain.page_elems,
+                self.pool.page_elems()
+            );
+        }
+        // Idempotence fast path: fully cached already — nothing to copy.
+        let (held, matched) =
+            self.prefix_lookup(&chain.tokens, chain.tokens.len());
+        self.release_prefix(held);
+        if matched >= chain.tokens.len() {
+            return Ok(0);
+        }
+        let mut pages = Vec::with_capacity(chain.payloads.len());
+        for payload in &chain.payloads {
+            let p = match self.alloc_page() {
+                Ok(p) => p,
+                Err(e) => {
+                    // Unwind the partial allocation before surfacing.
+                    for q in pages {
+                        self.pool.release(q);
+                    }
+                    return Err(e);
+                }
+            };
+            self.pool.page_mut(p).copy_from_slice(payload);
+            pages.push(p);
+        }
+        let inserted = match self.prefix.as_mut() {
+            Some(ix) => {
+                ix.insert_chain(&chain.tokens, &pages, &mut self.pool)
+            }
+            None => 0,
+        };
+        // Drop the allocation references: pages the index took stay
+        // pinned by it; duplicates of already-cached chunks go back to
+        // the pool, so double-import cannot leak.
+        for p in pages {
+            self.pool.release(p);
+        }
+        Ok(inserted)
     }
 
     /// Truncate a slot (e.g. when rolling back speculative state), freeing

@@ -44,6 +44,9 @@ const FLAGS: &[(&str, Option<&str>, &str)] = &[
     ("--routing", Some("policy"),
      "server.routing: round-robin | least-loaded | cache-pressure | \
       prefix-affinity"),
+    ("--roles", Some("mode"),
+     "server.roles: colocated | disaggregated (split the fleet into \
+      prefill and decode replicas)"),
     ("--page-size", Some("n"),
      "cache.page_size: KV page granularity in positions"),
     ("--admission", Some("mode"),
@@ -155,6 +158,10 @@ fn parse_args_from(mut it: impl Iterator<Item = String>) -> Result<Args> {
             "--routing" => {
                 let v = val("--routing")?;
                 a.sets.push(format!("server.routing=\"{v}\""));
+            }
+            "--roles" => {
+                let v = val("--roles")?;
+                a.sets.push(format!("server.roles=\"{v}\""));
             }
             "--page-size" => {
                 let v = val("--page-size")?;

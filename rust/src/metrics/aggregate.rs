@@ -8,7 +8,10 @@
 //! Aggregation rules: counters sum; per-step means are weighted by each
 //! replica's step count; per-request means by its completion count;
 //! `tokens_per_second` sums across replicas (they decode concurrently, so
-//! fleet throughput is the sum of per-replica rates).
+//! fleet throughput is the sum of per-replica rates); latency percentiles
+//! pool the replicas' raw reservoir samples and take the quantile over
+//! the merged sample ([`Rollup::Pooled`]) — a per-replica p99 cannot be
+//! averaged into a fleet p99.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -16,6 +19,7 @@ use std::sync::Mutex;
 use super::keys::{self, Rollup};
 use super::EngineMetrics;
 use crate::util::lock_recover;
+use crate::util::stats::percentile_of;
 
 /// One replica's published state (see [`EngineMetrics::report`] for the
 /// report keys).
@@ -29,6 +33,10 @@ pub struct ReplicaSnapshot {
     pub pending: usize,
     /// The replica's full metrics report.
     pub report: BTreeMap<String, f64>,
+    /// Raw reservoir samples per pooled summary name ([`Rollup::Pooled`]
+    /// names one of these) — the fleet percentile is computed over the
+    /// concatenation across replicas.
+    pub samples: BTreeMap<String, Vec<f64>>,
 }
 
 /// Shared collection point for per-replica snapshots.
@@ -64,11 +72,19 @@ impl MetricsHub {
     ) {
         let mut g = lock_recover(&self.slots);
         if replica < g.len() {
+            let mut samples = BTreeMap::new();
+            samples.insert(
+                "request_latency".to_string(),
+                metrics.request_latency.samples().to_vec(),
+            );
+            samples.insert("ttft".to_string(), metrics.ttft.samples().to_vec());
+            samples.insert("itl".to_string(), metrics.itl.samples().to_vec());
             g[replica] = ReplicaSnapshot {
                 replica,
                 served,
                 pending,
                 report: metrics.report(),
+                samples,
             };
         }
     }
@@ -119,6 +135,15 @@ impl MetricsHub {
                     .iter()
                     .map(|r| get(r, def.name))
                     .fold(0.0, f64::max),
+                Rollup::Pooled { summary, q_permille } => {
+                    let pooled: Vec<f64> = replicas
+                        .iter()
+                        .filter_map(|r| r.samples.get(summary))
+                        .flatten()
+                        .copied()
+                        .collect();
+                    percentile_of(&pooled, q_permille as f64 / 1000.0)
+                }
                 // Derived ratios are inserted below; per-replica
                 // diagnostics and fleet-only gauges never roll up here.
                 Rollup::Derived
@@ -393,6 +418,70 @@ mod tests {
         assert_eq!(agg.total("mode_promotions"), 1.0);
         assert_eq!(agg.total("ar_steps"), 50.0);
         assert_eq!(agg.total("spec_steps"), 150.0);
+    }
+
+    #[test]
+    fn pooled_percentiles_merge_reservoirs() {
+        // Two replicas with skewed latency distributions: the fleet
+        // percentile must be the quantile of the MERGED sample.  No
+        // combination of the two per-replica p99s (mean, max, weighted
+        // mean) produces it — replica 0 never saw the outliers.
+        let hub = MetricsHub::new(2);
+        let mut a = EngineMetrics::default();
+        let mut b = EngineMetrics::default();
+        for _ in 0..95 {
+            a.itl.record(0.010);
+            a.ttft.record(0.1);
+            a.request_latency.record(1.0);
+        }
+        for _ in 0..5 {
+            b.itl.record(5.0);
+            b.ttft.record(9.0);
+            b.request_latency.record(30.0);
+        }
+        hub.publish(0, 0, 0, &a);
+        hub.publish(1, 0, 0, &b);
+        let agg = hub.aggregate();
+        // 100 merged samples, 5% slow tail: p99 lands in the tail, p50
+        // in the fast mass.  A mean of the per-replica p99s would give
+        // (0.010 + 5.0) / 2 instead.
+        assert_eq!(agg.total(keys::ITL_P99_S), 5.0);
+        assert_eq!(agg.total(keys::ITL_P50_S), 0.010);
+        assert_eq!(agg.total(keys::TTFT_P99_S), 9.0);
+        assert_eq!(agg.total(keys::TTFT_P50_S), 0.1);
+        assert_eq!(agg.total(keys::REQUEST_LATENCY_P99_S), 30.0);
+        assert_eq!(agg.total(keys::REQUEST_LATENCY_P50_S), 1.0);
+        // Merge-vs-pooled correctness: merging the published reservoirs
+        // equals taking the percentile over the pooled raw streams
+        // (exact here — both reservoirs are under their cap, so the
+        // reservoir IS the stream).
+        for (key, q) in [(keys::ITL_P50_S, 0.50), (keys::ITL_P99_S, 0.99)] {
+            let mut pooled = a.itl.samples().to_vec();
+            pooled.extend_from_slice(b.itl.samples());
+            assert_eq!(
+                agg.total(key),
+                crate::util::stats::percentile_of(&pooled, q),
+                "{key}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_pooled_summary_is_published() {
+        // Guards the registry's Pooled summary names against drifting
+        // from the sample sets publish() actually extracts.
+        let hub = MetricsHub::new(1);
+        hub.publish(0, 0, 0, &EngineMetrics::default());
+        let snap = hub.aggregate();
+        for def in keys::REGISTRY {
+            if let Rollup::Pooled { summary, .. } = def.rollup {
+                assert!(
+                    snap.replicas[0].samples.contains_key(summary),
+                    "{}: pooled summary {summary:?} never published",
+                    def.name
+                );
+            }
+        }
     }
 
     #[test]

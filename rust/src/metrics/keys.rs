@@ -34,6 +34,18 @@ pub enum Rollup {
     /// treats this as the explicit exemption from the "every key is
     /// rolled up" rule.
     PerReplica(&'static str),
+    /// Percentile recomputed by the aggregator from the replicas'
+    /// pooled reservoir samples: the named summary's reservoirs are
+    /// merged across replicas and the quantile (in permille, to keep
+    /// this type `Eq`) is taken over the merged sample — a true fleet
+    /// percentile, never a mean of per-replica percentiles.
+    Pooled {
+        /// Which published sample set to pool (see
+        /// [`ReplicaSnapshot::samples`](super::ReplicaSnapshot)).
+        summary: &'static str,
+        /// Quantile × 1000 (990 = p99).
+        q_permille: u32,
+    },
     /// Computed by the hub itself, never emitted by a replica report.
     FleetOnly,
 }
@@ -94,19 +106,28 @@ pub const VERIFY_TOKENS_TOTAL: &str = "verify_tokens_total";
 pub const ACCEPT_PER_VERIFIED: &str = "accept_per_verified";
 /// Mean request latency, submit → completion (s).
 pub const REQUEST_LATENCY_MEAN_S: &str = "request_latency_mean_s";
-/// p99 request latency (s).
+/// Median request latency (s; fleet value pools replica reservoirs).
+pub const REQUEST_LATENCY_P50_S: &str = "request_latency_p50_s";
+/// p99 request latency (s; fleet value pools replica reservoirs).
 pub const REQUEST_LATENCY_P99_S: &str = "request_latency_p99_s";
 /// Mean queueing delay before prefill (s).
 pub const QUEUE_DELAY_MEAN_S: &str = "queue_delay_mean_s";
 /// Mean time to first committed token (s).
 pub const TTFT_MEAN_S: &str = "ttft_mean_s";
-/// p99 time to first committed token (s).
+/// Median time to first committed token (s; fleet value pools
+/// replica reservoirs).
+pub const TTFT_P50_S: &str = "ttft_p50_s";
+/// p99 time to first committed token (s; fleet value pools replica
+/// reservoirs).
 pub const TTFT_P99_S: &str = "ttft_p99_s";
 /// Mean engine steps from (re-)admission to the first committed token.
 pub const TTFT_STEPS_MEAN: &str = "ttft_steps_mean";
 /// Mean inter-token latency (s).
 pub const ITL_MEAN_S: &str = "itl_mean_s";
-/// p99 inter-token latency (s).
+/// Median inter-token latency (s; fleet value pools replica
+/// reservoirs).
+pub const ITL_P50_S: &str = "itl_p50_s";
+/// p99 inter-token latency (s; fleet value pools replica reservoirs).
 pub const ITL_P99_S: &str = "itl_p99_s";
 /// Lanes preempted under KV-page pressure.
 pub const PREEMPT_TOTAL: &str = "preempt_total";
@@ -148,6 +169,17 @@ pub const MODE_PROMOTIONS: &str = "mode_promotions";
 pub const AR_STEPS: &str = "ar_steps";
 /// Lane-steps decoded speculatively.
 pub const SPEC_STEPS: &str = "spec_steps";
+/// Lanes handed prefill→decode with their KV page chain.
+pub const KV_MIGRATION_LANES: &str = "kv_migration_lanes";
+/// Committed tokens whose KV moved inside a migrated chain (re-prefill
+/// avoided on the decode replica).
+pub const KV_MIGRATION_TOKENS: &str = "kv_migration_tokens";
+/// KV payload bytes serialized into migrated chains.
+pub const KV_MIGRATION_BYTES: &str = "kv_migration_bytes";
+/// Admission/migration iterations run by prefill-role replicas.
+pub const ROLE_PREFILL_STEPS: &str = "role_prefill_steps";
+/// Engine steps run by decode-role replicas.
+pub const ROLE_DECODE_STEPS: &str = "role_decode_steps";
 /// Fleet-only: number of replica slots in the hub.
 pub const REPLICAS: &str = "replicas";
 /// Fleet-only: requests completed and replied across worker loops.
@@ -155,8 +187,11 @@ pub const SERVED: &str = "served";
 /// Fleet-only: in-flight count (queue + active lanes) at publish time.
 pub const PENDING: &str = "pending";
 
-/// Reason p50/p99 keys stay per-replica: a fleet percentile cannot be
-/// recovered from per-replica percentiles.
+/// Reason the step-time percentiles stay per-replica: step wall-clock
+/// is a host-speed diagnostic (like the stage timings below), and a
+/// fleet percentile cannot be recovered from per-replica percentiles.
+/// Request-latency/ttft/itl percentiles instead roll up via
+/// [`Rollup::Pooled`], which merges the raw reservoir samples.
 const PCTL: &str = "percentile: not derivable from replica percentiles";
 /// Reason stage timings stay per-replica: they are host-speed
 /// diagnostics inspected replica by replica.
@@ -193,16 +228,37 @@ pub const REGISTRY: &[KeyDef] = &[
         name: REQUEST_LATENCY_MEAN_S,
         rollup: Rollup::WeightedByCompletions,
     },
-    KeyDef { name: REQUEST_LATENCY_P99_S, rollup: Rollup::PerReplica(PCTL) },
+    KeyDef {
+        name: REQUEST_LATENCY_P50_S,
+        rollup: Rollup::Pooled { summary: "request_latency", q_permille: 500 },
+    },
+    KeyDef {
+        name: REQUEST_LATENCY_P99_S,
+        rollup: Rollup::Pooled { summary: "request_latency", q_permille: 990 },
+    },
     KeyDef {
         name: QUEUE_DELAY_MEAN_S,
         rollup: Rollup::WeightedByCompletions,
     },
     KeyDef { name: TTFT_MEAN_S, rollup: Rollup::WeightedByCompletions },
-    KeyDef { name: TTFT_P99_S, rollup: Rollup::PerReplica(PCTL) },
+    KeyDef {
+        name: TTFT_P50_S,
+        rollup: Rollup::Pooled { summary: "ttft", q_permille: 500 },
+    },
+    KeyDef {
+        name: TTFT_P99_S,
+        rollup: Rollup::Pooled { summary: "ttft", q_permille: 990 },
+    },
     KeyDef { name: TTFT_STEPS_MEAN, rollup: Rollup::WeightedByCompletions },
     KeyDef { name: ITL_MEAN_S, rollup: Rollup::WeightedByTokens },
-    KeyDef { name: ITL_P99_S, rollup: Rollup::PerReplica(PCTL) },
+    KeyDef {
+        name: ITL_P50_S,
+        rollup: Rollup::Pooled { summary: "itl", q_permille: 500 },
+    },
+    KeyDef {
+        name: ITL_P99_S,
+        rollup: Rollup::Pooled { summary: "itl", q_permille: 990 },
+    },
     KeyDef { name: PREEMPT_TOTAL, rollup: Rollup::Sum },
     KeyDef { name: REQUEUE_TOTAL, rollup: Rollup::Sum },
     KeyDef { name: CANCELLED_TOTAL, rollup: Rollup::Sum },
@@ -229,6 +285,11 @@ pub const REGISTRY: &[KeyDef] = &[
     KeyDef { name: MODE_PROMOTIONS, rollup: Rollup::Sum },
     KeyDef { name: AR_STEPS, rollup: Rollup::Sum },
     KeyDef { name: SPEC_STEPS, rollup: Rollup::Sum },
+    KeyDef { name: KV_MIGRATION_LANES, rollup: Rollup::Sum },
+    KeyDef { name: KV_MIGRATION_TOKENS, rollup: Rollup::Sum },
+    KeyDef { name: KV_MIGRATION_BYTES, rollup: Rollup::Sum },
+    KeyDef { name: ROLE_PREFILL_STEPS, rollup: Rollup::Sum },
+    KeyDef { name: ROLE_DECODE_STEPS, rollup: Rollup::Sum },
     KeyDef { name: REPLICAS, rollup: Rollup::FleetOnly },
     KeyDef { name: SERVED, rollup: Rollup::FleetOnly },
     KeyDef { name: PENDING, rollup: Rollup::FleetOnly },

@@ -114,6 +114,20 @@ pub struct EngineMetrics {
     pub ar_steps: u64,
     /// Lane-steps decoded speculatively (one per lane per tree sub-step).
     pub spec_steps: u64,
+    /// Lanes handed prefill→decode with their KV page chain
+    /// (disaggregated serving; 0 when colocated).
+    pub kv_migration_lanes: u64,
+    /// Committed tokens whose KV moved inside a migrated chain, i.e.
+    /// re-prefill the decode replica avoided by adopting pages.
+    pub kv_migration_tokens: u64,
+    /// KV payload bytes serialized into migrated chains.
+    pub kv_migration_bytes: u64,
+    /// Admission/migration iterations this engine ran while its replica
+    /// held the prefill role.
+    pub role_prefill_steps: u64,
+    /// Engine steps this engine ran while its replica held the decode
+    /// role.
+    pub role_decode_steps: u64,
 }
 
 impl EngineMetrics {
@@ -219,13 +233,17 @@ impl EngineMetrics {
                  self.accept_per_verified());
         m.insert(keys::REQUEST_LATENCY_MEAN_S.into(),
                  self.request_latency.mean());
+        m.insert(keys::REQUEST_LATENCY_P50_S.into(),
+                 self.request_latency.p50());
         m.insert(keys::REQUEST_LATENCY_P99_S.into(),
                  self.request_latency.p99());
         m.insert(keys::QUEUE_DELAY_MEAN_S.into(), self.queue_delay.mean());
         m.insert(keys::TTFT_MEAN_S.into(), self.ttft.mean());
+        m.insert(keys::TTFT_P50_S.into(), self.ttft.p50());
         m.insert(keys::TTFT_P99_S.into(), self.ttft.p99());
         m.insert(keys::TTFT_STEPS_MEAN.into(), self.ttft_steps.mean());
         m.insert(keys::ITL_MEAN_S.into(), self.itl.mean());
+        m.insert(keys::ITL_P50_S.into(), self.itl.p50());
         m.insert(keys::ITL_P99_S.into(), self.itl.p99());
         m.insert(keys::PREEMPT_TOTAL.into(), self.preempt_total as f64);
         m.insert(keys::REQUEUE_TOTAL.into(), self.requeue_total as f64);
@@ -257,6 +275,16 @@ impl EngineMetrics {
         m.insert(keys::MODE_PROMOTIONS.into(), self.mode_promotions as f64);
         m.insert(keys::AR_STEPS.into(), self.ar_steps as f64);
         m.insert(keys::SPEC_STEPS.into(), self.spec_steps as f64);
+        m.insert(keys::KV_MIGRATION_LANES.into(),
+                 self.kv_migration_lanes as f64);
+        m.insert(keys::KV_MIGRATION_TOKENS.into(),
+                 self.kv_migration_tokens as f64);
+        m.insert(keys::KV_MIGRATION_BYTES.into(),
+                 self.kv_migration_bytes as f64);
+        m.insert(keys::ROLE_PREFILL_STEPS.into(),
+                 self.role_prefill_steps as f64);
+        m.insert(keys::ROLE_DECODE_STEPS.into(),
+                 self.role_decode_steps as f64);
         m
     }
 }

@@ -161,6 +161,8 @@ pub fn handle_connection(stream: TcpStream, shared: &Shared) {
                     respond: Some(tx),
                     deltas: dtx,
                     cancel: Some(flag.clone()),
+                    resume: None,
+                    chain: None,
                 };
                 let reply = match shared.queue.submit(queued) {
                     Ok(()) => {
@@ -213,11 +215,12 @@ pub fn serve(
     let addr = listener.local_addr()?;
     eprintln!(
         "propd: serving on {addr} (engine={}, size={}, replicas={}, \
-         routing={})",
+         routing={}, roles={})",
         cfg.engine.kind.as_str(),
         cfg.engine.size,
         replicas,
-        cfg.server.routing.as_str()
+        cfg.server.routing.as_str(),
+        cfg.server.roles.as_str()
     );
     if let Some(tx) = ready {
         let _ = tx.send(addr);

@@ -14,7 +14,9 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
-use crate::batching::{QueuedRequest, ReplicaHandle, Scheduler};
+use crate::batching::{
+    QueuedRequest, ReplicaHandle, ReplicaRole, RequestQueue, Scheduler,
+};
 use crate::config::ServingConfig;
 use crate::engine::{Completion, Engine, RequestSpec, TokenDelta};
 use crate::metrics::{AggregateSnapshot, MetricsHub};
@@ -44,16 +46,47 @@ impl ClientHooks {
     }
 }
 
+/// Forward per-lane lifecycle events to streaming clients, marking
+/// hung-up receivers for the next cancellation sweep.
+fn forward_events(
+    engine: &mut Engine,
+    clients: &mut BTreeMap<u64, ClientHooks>,
+) {
+    for ev in engine.take_events() {
+        if let Some(c) = clients.get_mut(&ev.id) {
+            if let Some(tx) = &c.deltas {
+                if tx.send(ev).is_err() {
+                    c.gone = true;
+                }
+            }
+        }
+    }
+}
+
 /// Drive one replica: drain its feed, sweep cancellations, step the
 /// engine, forward streaming deltas, reply, publish load + metrics.
 /// Returns the number of requests served once the feed closes and drains.
+///
+/// `admission` is the shared admission queue, used only by prefill-role
+/// replicas (disaggregated serving) to hand prefilled lanes back for
+/// rerouting to a decode replica.  `None` degrades a prefill replica to
+/// colocated behaviour — there is nowhere to hand lanes back to.
 pub fn replica_loop(
     engine: &mut Engine,
     replica: &ReplicaHandle,
     hub: &MetricsHub,
+    admission: Option<&RequestQueue>,
 ) -> Result<u64> {
     let mut clients: BTreeMap<u64, ClientHooks> = BTreeMap::new();
     let mut served = 0u64;
+    let is_prefill =
+        replica.role == ReplicaRole::Prefill && admission.is_some();
+    // Set when the role-blind routing fallback lands a migrated lane on
+    // this prefill replica — possible only when no decode feed is open
+    // (decode worker death).  Re-migrating would ping-pong the lane
+    // through the admission queue forever, so the replica degrades to
+    // colocated for the rest of its life and decodes what it holds.
+    let mut degraded = false;
     // Publish the effective (post-clamp) page size once so the
     // prefix-affinity scheduler hashes prompts at the granularity this
     // engine actually freezes chains at.
@@ -69,11 +102,26 @@ pub fn replica_loop(
         } else {
             replica.queue.drain_now(free)
         };
-        if !new.is_empty() {
-            replica.load.note_drained(new.len());
+        let drained = new.len();
+        if is_prefill && new.iter().any(|q| q.resume.is_some()) {
+            degraded = true;
+        }
+        let prefill_now = is_prefill && !degraded;
+        // A prefill replica defers its drain note until after it has
+        // requeued this cycle's migrations: the scheduler keeps the fleet
+        // alive while any prefill replica shows in-flight work, so the
+        // count must not dip to zero mid-handoff.
+        if drained > 0 && !prefill_now {
+            replica.load.note_drained(drained);
         }
         for q in new {
-            let id = if q.id == 0 {
+            if let Some(chain) = &q.chain {
+                // Adopt the migrated page chain before submitting the
+                // resume spec, so its prefill hits the prefix cache and
+                // re-prefills only the uncached tail.
+                engine.import_chain(chain)?;
+            }
+            let id = if q.id == 0 && q.resume.is_none() {
                 engine.submit(&q.prompt, q.max_new_tokens)
             } else {
                 engine.submit_spec(RequestSpec {
@@ -81,7 +129,7 @@ pub fn replica_loop(
                     prompt: q.prompt,
                     max_new_tokens: q.max_new_tokens,
                     arrival: engine.now(),
-                    resume: None,
+                    resume: q.resume,
                 });
                 q.id
             };
@@ -109,17 +157,60 @@ pub fn replica_loop(
             }
             engine.cancel(id);
         }
-        let progressed = engine.step()?;
-        // Forward per-lane lifecycle events to streaming clients.
-        for ev in engine.take_events() {
-            if let Some(c) = clients.get_mut(&ev.id) {
-                if let Some(tx) = &c.deltas {
-                    if tx.send(ev).is_err() {
-                        c.gone = true;
-                    }
+        let progressed = if prefill_now {
+            // Prefill role: admit (which runs the prefills), then hand
+            // every lane back through the shared admission queue for a
+            // decode replica to adopt.  This replica never decodes.
+            engine.admit_pending()?;
+            let mut handoff = Vec::new();
+            while let Some(mig) = engine.migrate_lowest() {
+                handoff.push(mig);
+            }
+            let progressed = !handoff.is_empty();
+            if progressed {
+                engine.metrics.role_prefill_steps += 1;
+            }
+            // Preempt notices must reach the delta streams before the
+            // hooks move out of `clients` with the migration.
+            forward_events(engine, &mut clients);
+            if let Some(adm) = admission {
+                for (spec, chain) in handoff {
+                    let (respond, deltas, cancel) =
+                        match clients.remove(&spec.id) {
+                            Some(h) => (h.respond, h.deltas, h.cancel),
+                            None => (None, None, None),
+                        };
+                    adm.requeue(QueuedRequest {
+                        id: spec.id,
+                        prompt: spec.prompt,
+                        max_new_tokens: spec.max_new_tokens,
+                        respond,
+                        deltas,
+                        cancel,
+                        resume: spec.resume,
+                        chain,
+                    });
                 }
             }
-        }
+            // Deferred drain note (see above): only after the requeue is
+            // visible may this replica's in-flight count drop — and the
+            // pending gauge must already cover any still-unadmitted
+            // engine queue remainder, or the scheduler could observe a
+            // zero in-flight count mid-batch and shut the fleet down
+            // with work still held here.
+            replica.load.set_pending(engine.pending());
+            if drained > 0 {
+                replica.load.note_drained(drained);
+            }
+            progressed
+        } else {
+            let progressed = engine.step()?;
+            if progressed && replica.role == ReplicaRole::Decode {
+                engine.metrics.role_decode_steps += 1;
+            }
+            forward_events(engine, &mut clients);
+            progressed
+        };
         let mut completed = false;
         for c in engine.take_completions() {
             served += 1;
@@ -179,11 +270,12 @@ fn run_replica(
     ecfg: crate::engine::EngineConfig,
     replica: &ReplicaHandle,
     hub: &MetricsHub,
+    admission: Option<&RequestQueue>,
 ) -> Result<u64> {
     let rt = spec.create()?;
     let mut engine = Engine::new(&rt, ecfg)?;
     engine.precompile()?;
-    replica_loop(&mut engine, replica, hub)
+    replica_loop(&mut engine, replica, hub, admission)
 }
 
 /// N replicas + scheduler over one shared admission queue.
@@ -200,6 +292,7 @@ impl ReplicaSet<'_> {
     /// never closes the queue, so this blocks for the process lifetime.
     pub fn run(&self, shared: &Shared) -> Result<Vec<u64>> {
         let n = self.cfg.server.replicas.max(1);
+        let roles = self.cfg.server.roles;
         let handles: Vec<ReplicaHandle> = (0..n)
             .map(|i| {
                 ReplicaHandle::new(
@@ -207,6 +300,7 @@ impl ReplicaSet<'_> {
                     self.cfg.engine.max_batch,
                     self.cfg.server.max_queue,
                 )
+                .with_role(roles.role_of(i, n))
             })
             .collect();
         let scheduler =
@@ -220,9 +314,10 @@ impl ReplicaSet<'_> {
                 let spec = self.spec;
                 let ecfg = self.cfg.engine.clone();
                 let hub = &shared.hub;
+                let admission = &shared.queue;
                 workers.push(s.spawn(move || -> Result<u64> {
                     let _guard = FeedGuard(h.clone());
-                    run_replica(spec, ecfg, &h, hub)
+                    run_replica(spec, ecfg, &h, hub, Some(admission))
                 }));
             }
             let sched = s.spawn(|| scheduler.run(&shared.queue));
@@ -314,6 +409,8 @@ pub fn run_offline_requests(
                 respond: Some(tx),
                 deltas: dtx,
                 cancel: r.cancel.clone(),
+                resume: None,
+                chain: None,
             })
             .map_err(|_| anyhow!("admission queue rejected request"))?;
         rxs.push(rx);

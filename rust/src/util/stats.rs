@@ -87,13 +87,15 @@ impl Summary {
 
     /// q in [0,1]; nearest-rank on the retained sample.
     pub fn percentile(&self, q: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        let mut xs = self.samples.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((xs.len() as f64 - 1.0) * q).round() as usize;
-        xs[idx.min(xs.len() - 1)]
+        percentile_of(&self.samples, q)
+    }
+
+    /// The retained reservoir (equal-probability sample of everything
+    /// recorded).  Fleet rollups pool the reservoirs of every replica and
+    /// take percentiles over the merged sample — the per-replica
+    /// percentiles themselves do not aggregate.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
     }
 
     /// Median (reservoir-estimated past `cap` samples).
@@ -105,6 +107,20 @@ impl Summary {
     pub fn p99(&self) -> f64 {
         self.percentile(0.99)
     }
+}
+
+/// Nearest-rank percentile of an arbitrary sample (q in [0,1]; 0 when
+/// empty).  The same estimator [`Summary::percentile`] uses, exposed so
+/// fleet rollups over pooled reservoirs agree with the per-replica
+/// numbers by construction.
+pub fn percentile_of(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((xs.len() as f64 - 1.0) * q).round() as usize;
+    xs[idx.min(xs.len() - 1)]
 }
 
 /// Mean of a slice (bench helper).

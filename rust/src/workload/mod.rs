@@ -230,6 +230,96 @@ pub fn shared_prefix_requests(
         .collect()
 }
 
+/// Mixed long/short-prompt open-loop workload: the traffic shape that
+/// motivates disaggregated prefill/decode serving.  Long-prompt requests
+/// spend their time in prefill (and their committed KV spans several
+/// pages, so migration has something to move); short-prompt requests are
+/// decode-dominated and suffer ITL spikes when a long prefill lands in
+/// their batch.  Deterministic from `seed`.
+#[derive(Debug, Clone)]
+pub struct MixedTraceConfig {
+    /// Requests to generate.
+    pub n_requests: usize,
+    /// Fraction of long-prompt requests, in permille.
+    pub long_permille: usize,
+    /// Long prompt length in tokens (bytes) — size to span several KV
+    /// pages so a migrated chain carries real pages.
+    pub long_prompt_len: usize,
+    /// Short prompt length in tokens (bytes).
+    pub short_prompt_len: usize,
+    /// Generation budget for long-prompt requests (prefill-heavy, short
+    /// answers).
+    pub long_max_new: usize,
+    /// Generation budget for short-prompt requests (decode-heavy).
+    pub short_max_new: usize,
+    /// Open-loop Poisson arrival rate (requests/second).
+    pub rate: f64,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for MixedTraceConfig {
+    fn default() -> Self {
+        MixedTraceConfig {
+            n_requests: 24,
+            long_permille: 333,
+            // Sized to the sim backend's max_prompt (96): the longest
+            // prompt the engine will actually prefill, spanning several
+            // KV pages at the page sizes the serving tests use.
+            long_prompt_len: 96,
+            short_prompt_len: 40,
+            long_max_new: 12,
+            short_max_new: 24,
+            rate: 64.0,
+            seed: 17,
+        }
+    }
+}
+
+/// Generate the mixed long/short trace.  Every prompt is unique from its
+/// first bytes (no shared prefixes), so prefix-cache hits on a receiving
+/// replica come only from migrated chains — which keeps the
+/// reprefill-avoided accounting honest.
+pub fn mixed_trace(cfg: &MixedTraceConfig) -> Vec<TraceRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.n_requests)
+        .map(|i| {
+            let long = rng.below(1000) < cfg.long_permille;
+            let (len, budget, profile) = if long {
+                (cfg.long_prompt_len, cfg.long_max_new, "long")
+            } else {
+                (cfg.short_prompt_len, cfg.short_max_new, "short")
+            };
+            let head = format!("user {i} ({profile}): ");
+            let body =
+                filler(&mut rng, len.saturating_sub(head.len() + 11));
+            let arrival = rng.exponential(cfg.rate);
+            TraceRequest {
+                arrival,
+                prompt: format!("{head}{body}\nassistant:"),
+                max_new_tokens: budget.max(1),
+                profile: profile.to_string(),
+            }
+        })
+        .scan(0.0f64, |t, mut r| {
+            *t += r.arrival;
+            r.arrival = *t;
+            Some(r)
+        })
+        .collect()
+}
+
+/// The mixed trace as `(prompt, max_new_tokens)` pairs in arrival order,
+/// ready for [`crate::server::run_offline`].
+pub fn mixed_trace_requests(
+    cfg: &MixedTraceConfig,
+) -> Vec<(String, usize)> {
+    mixed_trace(cfg)
+        .into_iter()
+        .map(|r| (r.prompt, r.max_new_tokens))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +389,45 @@ mod tests {
             ..cfg
         });
         assert_ne!(reqs[0].0, other[0].0);
+    }
+
+    #[test]
+    fn mixed_trace_is_deterministic_and_mixed() {
+        let cfg = MixedTraceConfig::default();
+        let a = mixed_trace(&cfg);
+        assert_eq!(a, mixed_trace(&cfg));
+        assert_eq!(a.len(), cfg.n_requests);
+        let longs = a.iter().filter(|r| r.profile == "long").count();
+        assert!(longs > 0 && longs < a.len(), "both classes present");
+        // Arrivals are open-loop and nondecreasing.
+        for w in a.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        assert!(a.last().unwrap().arrival > 0.0);
+        // Long prompts really are long (span several KV pages) and
+        // short ones short.
+        for r in &a {
+            if r.profile == "long" {
+                assert!(r.prompt.len() >= cfg.long_prompt_len - 16);
+                assert_eq!(r.max_new_tokens, cfg.long_max_new);
+            } else {
+                assert!(r.prompt.len() <= cfg.short_prompt_len + 16);
+                assert_eq!(r.max_new_tokens, cfg.short_max_new);
+            }
+        }
+        // Prompts are pairwise distinct from the first bytes (no shared
+        // prefix for the cache to find).
+        for (i, r) in a.iter().enumerate() {
+            for s in &a[i + 1..] {
+                assert_ne!(
+                    &r.prompt[..12.min(r.prompt.len())],
+                    &s.prompt[..12.min(s.prompt.len())]
+                );
+            }
+        }
+        let pairs = mixed_trace_requests(&cfg);
+        assert_eq!(pairs.len(), a.len());
+        assert_eq!(pairs[0].0, a[0].prompt);
     }
 
     #[test]

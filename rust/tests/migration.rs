@@ -1,0 +1,329 @@
+//! KV page-chain migration: the primitive under disaggregated
+//! prefill/decode serving.
+//!
+//! Layer 1 (cache-level property tests): export→import round-trips are
+//! byte-identical, idempotent, refuse mismatched pool geometry, unwind
+//! cleanly on pool exhaustion, and leave both pools balanced after a
+//! full drain.
+//!
+//! Layer 2 (serving-level): a disaggregated fleet (prefill replicas
+//! handing chains to decode replicas) produces byte-identical greedy
+//! output to a colocated fleet on the same mixed trace, across every
+//! engine kind and routing policy, with the cache on or off — and the
+//! migrated lanes re-prefill only their uncached tails.
+
+use propd::batching::{RoleMode, RoutingPolicy};
+use propd::config::ServingConfig;
+use propd::engine::EngineKind;
+use propd::kvcache::{KvCache, KvGeometry};
+use propd::metrics::keys;
+use propd::runtime::{RuntimeSpec, SimConfig};
+use propd::server::run_offline;
+use propd::tokenizer::Token;
+use propd::workload::{mixed_trace, mixed_trace_requests, MixedTraceConfig};
+
+// ---------------------------------------------------------------------------
+// Layer 1: cache-level export/import properties
+// ---------------------------------------------------------------------------
+
+fn geom() -> KvGeometry {
+    KvGeometry { layers: 2, max_seq: 16, heads: 2, head_dim: 3 }
+}
+
+/// Commit `n` recognizable columns into a slot (values encode their
+/// block offset, so byte-identity checks are meaningful).
+fn commit_n(c: &mut KvCache, slot: usize, n: usize) {
+    let g = c.geometry();
+    let blk: Vec<f32> = (0..g.layers * 2 * n * g.col())
+        .map(|i| i as f32 + 1.0)
+        .collect();
+    let pairs: Vec<(usize, usize)> = (0..n).map(|j| (j, j)).collect();
+    c.commit_columns(slot, &blk, (g.layers, 1, n), 0, 0, &pairs)
+        .unwrap();
+}
+
+/// A source cache holding a frozen `n`-token chain (page size 4).
+fn frozen_source(n: usize) -> (KvCache, Vec<Token>) {
+    let mut c = KvCache::with_pages(geom(), 2, 4, 0);
+    c.enable_prefix_cache(0);
+    let toks: Vec<Token> = (0..n as Token).collect();
+    let s = c.acquire().unwrap();
+    commit_n(&mut c, s, n);
+    c.freeze_prefix(s, &toks);
+    c.release(s);
+    (c, toks)
+}
+
+#[test]
+fn export_import_roundtrip_is_byte_identical() {
+    let (mut src, toks) = frozen_source(8);
+    let chain = src.export_chain(&toks).expect("chain");
+    assert_eq!(chain.covered_tokens(), 8);
+    assert_eq!(chain.pages(), 2);
+    assert!(chain.bytes() > 0);
+    // Export is a read: the source still serves the chain afterwards.
+    let (held, matched) = src.prefix_lookup(&toks, toks.len());
+    assert_eq!(matched, 8, "source index must keep the chain");
+    src.release_prefix(held);
+
+    let mut dst = KvCache::with_pages(geom(), 2, 4, 0);
+    dst.enable_prefix_cache(0);
+    let inserted = dst.import_chain(&chain).unwrap();
+    assert_eq!(inserted, 2, "both pages newly pinned by the index");
+    assert_eq!(dst.prefix_pages(), 2);
+    assert_eq!(dst.pages_in_use(), 0, "index-only pages are headroom");
+
+    // Adopt on the receiver and compare every committed column against
+    // the donor, byte for byte.
+    let s_src = src.acquire().unwrap();
+    let (pages, m) = src.prefix_lookup(&toks, toks.len());
+    assert_eq!(m, 8);
+    src.adopt_prefix(s_src, pages);
+    let s_dst = dst.acquire().unwrap();
+    let (pages, m) = dst.prefix_lookup(&toks, toks.len());
+    assert_eq!(m, 8, "receiver resolves the imported chain");
+    dst.adopt_prefix(s_dst, pages);
+    let g = geom();
+    for layer in 0..g.layers {
+        for kv in 0..2 {
+            for pos in 0..8 {
+                assert_eq!(
+                    dst.read_column(s_dst, layer, kv, pos),
+                    src.read_column(s_src, layer, kv, pos),
+                    "layer {layer} kv {kv} pos {pos} diverged"
+                );
+            }
+        }
+    }
+    // Full drain balances both pools.
+    src.release(s_src);
+    dst.release(s_dst);
+    assert_eq!(src.pages_in_use(), 0);
+    assert_eq!(dst.pages_in_use(), 0);
+}
+
+#[test]
+fn double_import_is_idempotent_and_double_export_is_stable() {
+    let (mut src, toks) = frozen_source(8);
+    let chain = src.export_chain(&toks).expect("chain");
+    // Exporting again (the source never gave its copy up) yields an
+    // equivalent chain.
+    let again = src.export_chain(&toks).expect("second export");
+    assert_eq!(again.covered_tokens(), chain.covered_tokens());
+    assert_eq!(again.pages(), chain.pages());
+    assert_eq!(again.bytes(), chain.bytes());
+
+    let mut dst = KvCache::with_pages(geom(), 2, 4, 0);
+    dst.enable_prefix_cache(0);
+    assert_eq!(dst.import_chain(&chain).unwrap(), 2);
+    let before = dst.prefix_pages();
+    // Double adopt: the second import finds the chain cached and pins
+    // nothing new — no leak, no duplicate pages.
+    assert_eq!(dst.import_chain(&chain).unwrap(), 0);
+    assert_eq!(dst.import_chain(&again).unwrap(), 0);
+    assert_eq!(dst.prefix_pages(), before);
+    assert_eq!(dst.pages_in_use(), 0);
+    // Importing into the source itself is also a no-op.
+    assert_eq!(src.import_chain(&chain).unwrap(), 0);
+}
+
+#[test]
+fn import_rejects_mismatched_geometry() {
+    let (mut src, toks) = frozen_source(8);
+    let chain = src.export_chain(&toks).expect("chain");
+    // Different page size → different chain granularity.
+    let mut other_ps = KvCache::with_pages(geom(), 2, 8, 0);
+    other_ps.enable_prefix_cache(0);
+    assert!(other_ps.import_chain(&chain).is_err());
+    assert_eq!(other_ps.pages_in_use(), 0);
+    assert_eq!(other_ps.prefix_pages(), 0);
+    // Different column width → different page payload size.
+    let wide = KvGeometry { heads: 3, ..geom() };
+    let mut other_col = KvCache::with_pages(wide, 2, 4, 0);
+    other_col.enable_prefix_cache(0);
+    assert!(other_col.import_chain(&chain).is_err());
+    assert_eq!(other_col.pages_in_use(), 0);
+}
+
+#[test]
+fn import_unwinds_cleanly_on_pool_exhaustion() {
+    let (mut src, toks) = frozen_source(8);
+    let chain = src.export_chain(&toks).expect("chain"); // 2 pages
+    let mut tiny = KvCache::with_pages(geom(), 1, 4, 1); // 1-page pool
+    tiny.enable_prefix_cache(0);
+    assert!(tiny.import_chain(&chain).is_err());
+    // The partial allocation was released: nothing pinned, nothing
+    // leaked, the pool is whole again.
+    assert_eq!(tiny.pages_in_use(), 0);
+    assert_eq!(tiny.prefix_pages(), 0);
+    assert_eq!(tiny.free_pages(), 1);
+}
+
+#[test]
+fn export_returns_none_when_nothing_is_cached() {
+    // Prefix cache disabled: freeze is inert, export finds nothing.
+    let mut off = KvCache::with_pages(geom(), 1, 4, 0);
+    let toks: Vec<Token> = (0..8).collect();
+    let s = off.acquire().unwrap();
+    commit_n(&mut off, s, 8);
+    off.freeze_prefix(s, &toks);
+    assert!(off.export_chain(&toks).is_none());
+    off.release(s);
+    // Sub-page prefix: no full page to freeze, so no chain either.
+    let (mut src, _) = frozen_source(3);
+    let short: Vec<Token> = (0..3).collect();
+    assert!(src.export_chain(&short).is_none());
+    // Import of a chain into a cache with the prefix cache off is a
+    // no-op, not an error (migration degrades to plain re-prefill).
+    let (mut with_chain, toks8) = frozen_source(8);
+    let chain = with_chain.export_chain(&toks8).unwrap();
+    let mut receiver_off = KvCache::with_pages(geom(), 1, 4, 0);
+    assert_eq!(receiver_off.import_chain(&chain).unwrap(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Layer 2: disaggregated == colocated, byte for byte
+// ---------------------------------------------------------------------------
+
+fn trace(n: usize) -> Vec<(String, usize)> {
+    mixed_trace_requests(&MixedTraceConfig {
+        n_requests: n,
+        ..MixedTraceConfig::default()
+    })
+}
+
+fn serving_cfg(kind: EngineKind, sim: &SimConfig) -> ServingConfig {
+    let mut cfg = ServingConfig::default_for(&sim.size, kind);
+    cfg.server.replicas = 2;
+    cfg.engine.max_batch = 2;
+    cfg.engine.page_size = 16;
+    cfg
+}
+
+#[test]
+fn disaggregated_is_byte_identical_across_engines_and_routing() {
+    let sim = SimConfig::default();
+    let spec = RuntimeSpec::Sim(sim.clone());
+    let reqs = trace(8);
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        let mut cfg = serving_cfg(kind, &sim);
+        cfg.server.roles = RoleMode::Colocated;
+        let (truth, _, _) =
+            run_offline(&cfg, &spec, &reqs).expect("colocated run");
+        for routing in [
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::CachePressure,
+            RoutingPolicy::PrefixAffinity,
+        ] {
+            let mut cfg = serving_cfg(kind, &sim);
+            cfg.server.roles = RoleMode::Disaggregated;
+            cfg.server.routing = routing;
+            let (done, snap, _) =
+                run_offline(&cfg, &spec, &reqs).expect("disagg run");
+            for (i, c) in done.iter().enumerate() {
+                assert_eq!(
+                    c.text,
+                    truth[i].text,
+                    "{} × {} request {i} diverged under disaggregation",
+                    kind.as_str(),
+                    routing.as_str()
+                );
+            }
+            // Every request flowed through the migration path.
+            assert!(
+                snap.total(keys::KV_MIGRATION_LANES) >= reqs.len() as f64,
+                "{} × {}: no migrations recorded",
+                kind.as_str(),
+                routing.as_str()
+            );
+            assert!(snap.total(keys::ROLE_PREFILL_STEPS) > 0.0);
+            assert!(snap.total(keys::ROLE_DECODE_STEPS) > 0.0);
+        }
+    }
+}
+
+#[test]
+fn disaggregation_without_prefix_cache_degrades_but_stays_identical() {
+    // With the cache off no chain can be exported: every migrated lane
+    // re-prefills from its committed tokens.  Slower, still correct.
+    let sim = SimConfig::default();
+    let spec = RuntimeSpec::Sim(sim.clone());
+    let reqs = trace(6);
+    let mut cfg = serving_cfg(EngineKind::ProPD, &sim);
+    cfg.engine.prefix_cache = false;
+    cfg.server.roles = RoleMode::Colocated;
+    let (truth, _, _) =
+        run_offline(&cfg, &spec, &reqs).expect("colocated run");
+    cfg.server.roles = RoleMode::Disaggregated;
+    let (done, snap, _) =
+        run_offline(&cfg, &spec, &reqs).expect("disagg run");
+    for (i, c) in done.iter().enumerate() {
+        assert_eq!(c.text, truth[i].text, "request {i} diverged");
+    }
+    assert!(snap.total(keys::KV_MIGRATION_LANES) >= reqs.len() as f64);
+    assert_eq!(
+        snap.total(keys::KV_MIGRATION_TOKENS),
+        0.0,
+        "no chains move when the cache is off"
+    );
+}
+
+#[test]
+fn migrated_lanes_reprefill_only_uncached_tails() {
+    // Ample pool, one migration per request, page size 16: a migrated
+    // lane's resume adopts the imported chain and replays only the
+    // positions past the last full frozen page (the resume path leaves
+    // at least one tail position to recompute, so the tail of an
+    // n-token prefix is n - ⌊(n-1)/16⌋·16 positions).
+    let sim = SimConfig::default();
+    let spec = RuntimeSpec::Sim(sim.clone());
+    let cfg_trace = MixedTraceConfig {
+        n_requests: 8,
+        ..MixedTraceConfig::default()
+    };
+    let reqs = mixed_trace_requests(&cfg_trace);
+    let ps = 16usize;
+    let expected_tail: usize = mixed_trace(&cfg_trace)
+        .iter()
+        .map(|r| {
+            let plen = r.prompt.len(); // byte tokenizer
+            plen - (plen - 1) / ps * ps
+        })
+        .sum();
+    let expected_chain: usize = mixed_trace(&cfg_trace)
+        .iter()
+        .map(|r| r.prompt.len() / ps * ps)
+        .sum();
+
+    let mut cfg = serving_cfg(EngineKind::ProPD, &sim);
+    cfg.server.roles = RoleMode::Disaggregated;
+    let (done, snap, _) =
+        run_offline(&cfg, &spec, &reqs).expect("disagg run");
+    // Exactly one migration (hence one preemption) per request.
+    assert_eq!(
+        snap.total(keys::KV_MIGRATION_LANES),
+        reqs.len() as f64
+    );
+    for c in &done {
+        assert_eq!(c.preemptions, 1, "request {} migrations", c.id);
+    }
+    assert_eq!(
+        snap.total(keys::KV_MIGRATION_TOKENS),
+        expected_chain as f64,
+        "chains carry exactly the full frozen pages of each prompt"
+    );
+    assert_eq!(
+        snap.total(keys::REPREFILL_TOKENS_TOTAL),
+        expected_tail as f64,
+        "migrated lanes must re-prefill only their uncached tails"
+    );
+    // The whole point: far less than re-prefilling every prompt.
+    let full: usize = reqs.iter().map(|(p, _)| p.len()).sum();
+    assert!(expected_tail < full / 2);
+}
