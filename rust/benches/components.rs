@@ -239,6 +239,7 @@ fn main() {
     }
 
     skewed_acceptance_scenario();
+    packed_verification_scenario();
 }
 
 /// End-to-end skewed-acceptance workload on the sim backend: one
@@ -293,5 +294,75 @@ fn skewed_acceptance_scenario() {
     println!(
         "  per-lane / uniform accept-per-verified: {:.2}x",
         pl_ratio / uni_ratio.max(1e-9)
+    );
+}
+
+/// Padded-vs-packed verification on the same skewed-acceptance workload
+/// (DESIGN.md § Packed verification): both layouts make identical tree
+/// decisions (greedy text and live rows are byte-identical —
+/// tests/packing.rs), so the only differences are how many verify rows
+/// each forward pass pays for and the wall-clock per step.  Rows are a
+/// pure function of the oracle + bucket math; the clock is median-of-5.
+fn packed_verification_scenario() {
+    let sim = SimConfig { medusa_flaky_below: 97, ..Default::default() };
+    let rt = Runtime::sim(&sim);
+    let prompts = [
+        "user: Explain how the batch engine balances decode \
+         throughput.\nassistant:",
+        "User: ONE straggler prompt with junk speculation.\nassistant:",
+        "User: TWO straggler prompt with junk speculation.\nassistant:",
+        "User: SIX straggler prompt with junk speculation.\nassistant:",
+    ];
+    let run = |packing: propd::estimator::Packing| -> (f64, f64, f64, f64) {
+        let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+        cfg.max_batch = prompts.len();
+        cfg.accept_alpha = 0.3;
+        cfg.decode_mode = propd::engine::DecodeMode::Spec;
+        cfg.collect_events = false;
+        cfg.planner.packing = packing;
+        let mut engine = Engine::new(&rt, cfg).expect("engine");
+        for p in &prompts {
+            engine.submit(p, 56);
+        }
+        let t0 = std::time::Instant::now();
+        engine.run_to_completion().expect("run");
+        let dt = t0.elapsed().as_secs_f64();
+        let r = engine.metrics.report();
+        (
+            r["verify_rows_computed"],
+            r["verify_rows_live"],
+            r["spec_steps"],
+            dt,
+        )
+    };
+    let median5 =
+        |packing: propd::estimator::Packing| -> (f64, f64, f64, f64) {
+            run(packing); // unmeasured shakeout
+            let mut reps: Vec<(f64, f64, f64, f64)> =
+                (0..5).map(|_| run(packing)).collect();
+            reps.sort_by(|a, b| a.3.partial_cmp(&b.3).unwrap());
+            reps[reps.len() / 2]
+        };
+    let (pad_rows, pad_live, pad_steps, pad_dt) =
+        median5(propd::estimator::Packing::Padded);
+    let (pk_rows, pk_live, pk_steps, pk_dt) =
+        median5(propd::estimator::Packing::Packed);
+    println!();
+    println!("packed verification (same skewed workload):");
+    println!(
+        "  padded : {pad_rows:.0} verify rows computed ({pad_live:.0} \
+         live), {:.3} ms/step",
+        pad_dt / pad_steps.max(1.0) * 1e3
+    );
+    println!(
+        "  packed : {pk_rows:.0} verify rows computed ({pk_live:.0} \
+         live), {:.3} ms/step",
+        pk_dt / pk_steps.max(1.0) * 1e3
+    );
+    println!(
+        "  padded / packed rows computed: {:.2}x (wall-clock \
+         {:.2}x per step)",
+        pad_rows / pk_rows.max(1.0),
+        (pad_dt / pad_steps.max(1.0)) / (pk_dt / pk_steps.max(1.0)).max(1e-12)
     );
 }

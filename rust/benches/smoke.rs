@@ -5,6 +5,14 @@
 //!     cargo bench --bench smoke -- --gate bench/baseline.json \
 //!                                  --out BENCH_ci.json
 //!     cargo bench --bench smoke -- --update bench/baseline.json
+//!     cargo bench --bench smoke -- --update-all bench/baseline.json
+//!
+//! `--update` is a *partial* refresh: deterministic entries are armed
+//! with this run's values while host-dependent wall-clock entries keep
+//! their recorded baseline state (including `"bootstrap": true`
+//! markers, which the gate run counts and prints so never-refreshed
+//! entries stay visible).  `--update-all`, run on a designated runner,
+//! refreshes everything.
 //!
 //! Gated metrics are chosen to be machine-independent: end-to-end token /
 //! step counts from the deterministic oracle (the planner's time-fed
@@ -36,6 +44,7 @@ use propd::engine::{
 };
 use propd::estimator::{
     allocate_budget, allocation_gain, gain_at, alloc::DEFAULT_MIN_GAIN,
+    Packing,
 };
 use propd::kvcache::{BatchAssembler, KvCache, KvGeometry};
 use propd::metrics::{keys, AggregateSnapshot};
@@ -203,6 +212,86 @@ fn decode_mode_metrics(m: &mut BTreeMap<String, f64>) -> Result<()> {
         "auto_over_spec_tps".into(),
         auto_tps[auto_tps.len() / 2]
             / spec_tps[spec_tps.len() / 2].max(1e-9),
+    );
+    Ok(())
+}
+
+/// One full decode of the skewed-acceptance workload with every lane
+/// held in speculative mode, under the given verification packing.
+/// Returns the metrics report and the wall-clock tokens/sec of the run.
+fn skewed_packing_run(
+    packing: Packing,
+) -> Result<(BTreeMap<String, f64>, f64)> {
+    let sim = SimConfig { medusa_flaky_below: 97, ..SimConfig::default() };
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 4;
+    cfg.accept_alpha = 0.3; // stragglers' budgets shrink within a request
+    cfg.collect_events = false;
+    cfg.decode_mode = DecodeMode::Spec; // keep all lanes tree-verifying
+    cfg.planner.packing = packing;
+    let mut engine = Engine::new(&rt, cfg).context("packing engine")?;
+    engine.submit(
+        "user: Explain how the batch engine balances decode \
+         throughput.\nassistant:",
+        56,
+    );
+    for p in [
+        "User: FIRST straggler with junk speculation.\nassistant:",
+        "User: SECOND straggler with junk speculation.\nassistant:",
+        "User: THIRD straggler with junk speculation.\nassistant:",
+    ] {
+        engine.submit(p, 56);
+    }
+    let t0 = std::time::Instant::now();
+    engine.run_to_completion().context("packing run")?;
+    let dt = t0.elapsed().as_secs_f64();
+    let report = engine.metrics.report();
+    let tps = report["tokens_generated"] / dt.max(1e-9);
+    Ok((report, tps))
+}
+
+/// Token-packed vs padded verification on the skewed workload.  The
+/// verify-row ratio is a pure function of the oracle + bucket math
+/// (greedy text is byte-identical across packing modes —
+/// tests/packing.rs — so both runs make identical tree decisions) and
+/// gates machine-independently at the >= 1.5x acceptance floor; the
+/// headline wall-clock ratio `packed over padded` is host-dependent
+/// (median-of-5 per mode, interleaved) and gates with a wide tolerance.
+fn packing_metrics(m: &mut BTreeMap<String, f64>) -> Result<()> {
+    // Unmeasured shakeout primes executables and page pools.
+    skewed_packing_run(Packing::Packed).context("packing shakeout")?;
+    let mut packed_tps = Vec::new();
+    let mut padded_tps = Vec::new();
+    let mut packed_report = BTreeMap::new();
+    let mut padded_report = BTreeMap::new();
+    for _ in 0..5 {
+        let (r, t) = skewed_packing_run(Packing::Packed)?;
+        packed_report = r;
+        packed_tps.push(t);
+        let (r, t) = skewed_packing_run(Packing::Padded)?;
+        padded_report = r;
+        padded_tps.push(t);
+    }
+    packed_tps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    padded_tps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    m.insert(
+        "verify_rows_padded_over_packed".into(),
+        padded_report["verify_rows_computed"]
+            / packed_report["verify_rows_computed"].max(1.0),
+    );
+    m.insert(
+        "verify_rows_util_packed".into(),
+        packed_report["verify_rows_util"],
+    );
+    m.insert(
+        "verify_rows_util_padded".into(),
+        padded_report["verify_rows_util"],
+    );
+    m.insert(
+        "packed_over_padded_tps".into(),
+        packed_tps[packed_tps.len() / 2]
+            / padded_tps[padded_tps.len() / 2].max(1e-9),
     );
     Ok(())
 }
@@ -419,6 +508,11 @@ fn measure() -> Result<BTreeMap<String, f64>> {
     // gates the wall-clock win over always-speculative.
     decode_mode_metrics(&mut m)?;
 
+    // ---- token-packed verification (skewed workload) ----
+    // Pay for live tree tokens, not padded buckets; see DESIGN.md
+    // § Packed verification.
+    packing_metrics(&mut m)?;
+
     // ---- disaggregated serving (mixed trace) ----
     // Prefill/decode role split with KV page-chain migration; see
     // DESIGN.md § Disaggregated serving.
@@ -530,6 +624,19 @@ fn metric_meta(name: &str) -> (Direction, bool, Option<f64>) {
             (Direction::Higher, true, Some(25.0))
         }
         "auto_over_spec_tps" => (Direction::Higher, true, Some(30.0)),
+        // Token-packed verification: the verify-row ratio is a pure
+        // function of the oracle + bucket math, gated with zero
+        // tolerance at the >= 1.5x acceptance floor (the baseline value
+        // is the floor until a refresh arms the measured ratio); the
+        // utilization figures are informational; the wall-clock ratio
+        // gates wide.
+        "verify_rows_padded_over_packed" => {
+            (Direction::Higher, true, Some(0.0))
+        }
+        "verify_rows_util_packed" | "verify_rows_util_padded" => {
+            (Direction::Higher, false, None)
+        }
+        "packed_over_padded_tps" => (Direction::Higher, true, Some(30.0)),
         // Disaggregated serving: migration economics are deterministic
         // canaries (drift = the migration or resume accounting changed);
         // the ITL tail ratio is host-dependent wall-clock, gated wide —
@@ -560,10 +667,30 @@ fn metric_meta(name: &str) -> (Direction, bool, Option<f64>) {
     }
 }
 
+/// Host-dependent wall-clock metrics: a `--update` on an arbitrary dev
+/// machine must not lock these into the gate, so the partial refresh
+/// preserves their existing baseline state — armed values stay armed,
+/// `"bootstrap": true` markers stay visible (see
+/// `gate::render_baseline_deterministic`).  `--update-all` on a
+/// designated runner refreshes everything.
+fn wall_clock_metric(name: &str) -> bool {
+    matches!(
+        name,
+        "auto_over_spec_tps"
+            | "disagg_itl_p99_over_colocated"
+            | "tokens_per_sec"
+            | "tokens_per_sec_single_thread"
+            | "threads_speedup"
+            | "packed_over_padded_tps"
+            | "kv_assemble_speedup"
+    ) || name.ends_with("_ms")
+}
+
 struct Args {
     out: PathBuf,
     gate: Option<PathBuf>,
     update: Option<PathBuf>,
+    update_all: Option<PathBuf>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -571,6 +698,7 @@ fn parse_args() -> Result<Args> {
         out: PathBuf::from("BENCH_ci.json"),
         gate: None,
         update: None,
+        update_all: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(flag) = it.next() {
@@ -582,6 +710,9 @@ fn parse_args() -> Result<Args> {
             "--out" => a.out = PathBuf::from(val("--out")?),
             "--gate" => a.gate = Some(PathBuf::from(val("--gate")?)),
             "--update" => a.update = Some(PathBuf::from(val("--update")?)),
+            "--update-all" => {
+                a.update_all = Some(PathBuf::from(val("--update-all")?))
+            }
             // `cargo bench` forwards its own flags (e.g. --bench); ignore.
             _ => {}
         }
@@ -599,12 +730,38 @@ fn run() -> Result<ExitCode> {
     }
     println!("{}", table.render());
 
-    if let Some(up) = &args.update {
+    if let Some(up) = &args.update_all {
         let text =
             gate::render_baseline(&measured, &metric_meta, 25.0);
         std::fs::write(up, text)
             .with_context(|| format!("writing {}", up.display()))?;
-        println!("baseline refreshed: {}", up.display());
+        println!("baseline refreshed (all entries): {}", up.display());
+        return Ok(ExitCode::SUCCESS);
+    }
+    if let Some(up) = &args.update {
+        let text = match Baseline::load(up) {
+            // Partial refresh: arm the deterministic entries with this
+            // run's values; wall-clock entries keep their recorded
+            // state so a dev-machine refresh can't gate CI on this
+            // host's clock.
+            Ok(existing) => gate::render_baseline_deterministic(
+                &measured,
+                &existing,
+                &metric_meta,
+                &wall_clock_metric,
+                25.0,
+            ),
+            // No existing baseline to preserve: full refresh.
+            Err(_) => gate::render_baseline(&measured, &metric_meta, 25.0),
+        };
+        std::fs::write(up, text)
+            .with_context(|| format!("writing {}", up.display()))?;
+        println!(
+            "baseline refreshed: {} (deterministic entries; wall-clock \
+             entries keep their recorded state — use --update-all on a \
+             designated runner to arm those too)",
+            up.display()
+        );
         return Ok(ExitCode::SUCCESS);
     }
 
@@ -625,6 +782,14 @@ fn run() -> Result<ExitCode> {
             "bench gate: baseline is bootstrap-only — gate passes \
              vacuously.  Refresh with:\n  cargo bench --bench smoke -- \
              --update bench/baseline.json"
+        );
+    }
+    if !report.bootstrap_entries.is_empty() {
+        println!(
+            "bench gate: {} baseline entries still \"bootstrap\": true \
+             (declared but never refreshed, skipped by the gate): {}",
+            report.bootstrap_entries.len(),
+            report.bootstrap_entries.join(", ")
         );
     }
     for f in &report.failures {

@@ -16,6 +16,7 @@ const HOT_FILES: &[&str] = &[
     "engine/step_ar.rs",
     "engine/step_tree.rs",
     "engine/arena.rs",
+    "engine/pack.rs",
     "kvcache/assembler.rs",
     "runtime/kernels.rs",
     "runtime/pool.rs",

@@ -143,6 +143,12 @@ pub struct GateReport {
     pub failures: Vec<String>,
     /// Whether the whole baseline was bootstrap (vacuous pass).
     pub bootstrap: bool,
+    /// Baseline entries still carrying a per-entry `"bootstrap": true`
+    /// marker: declared (direction/gating recorded) but never refreshed
+    /// with a measured value, so the gate skipped them.  Surfaced in the
+    /// report artifact and the CI log so a stale never-refreshed
+    /// baseline cannot hide behind a green gate.
+    pub bootstrap_entries: Vec<String>,
 }
 
 impl GateReport {
@@ -161,6 +167,12 @@ pub fn check(
 ) -> GateReport {
     let mut rep =
         GateReport { bootstrap: baseline.bootstrap, ..Default::default() };
+    rep.bootstrap_entries = baseline
+        .benchmarks
+        .iter()
+        .filter(|(_, e)| e.bootstrap)
+        .map(|(name, _)| name.clone())
+        .collect();
     if baseline.bootstrap {
         return rep;
     }
@@ -205,10 +217,15 @@ pub fn render_report(
     );
     let failures =
         arr(report.failures.iter().map(|f| s(f)).collect::<Vec<_>>());
+    let bootstrap_entries = arr(
+        report.bootstrap_entries.iter().map(|n| s(n)).collect::<Vec<_>>(),
+    );
     jsonio::to_string(&obj(vec![
         ("schema", num(1.0)),
         ("gate_passed", Value::Bool(report.passed())),
         ("gate_bootstrap", Value::Bool(report.bootstrap)),
+        ("gate_bootstrap_entries", num(report.bootstrap_entries.len() as f64)),
+        ("bootstrap_entries", bootstrap_entries),
         ("gate_compared", num(report.compared as f64)),
         ("failures", failures),
         ("benchmarks", benchmarks),
@@ -238,6 +255,60 @@ pub fn render_baseline(
                 ];
                 if let Some(t) = tol {
                     fields.push(("tolerance_pct", num(t)));
+                }
+                (k.clone(), obj(fields))
+            })
+            .collect(),
+    );
+    jsonio::to_string(&obj(vec![
+        ("schema", num(1.0)),
+        ("bootstrap", Value::Bool(false)),
+        ("tolerance_pct", num(tolerance_pct)),
+        ("benchmarks", benchmarks),
+    ]))
+}
+
+/// Like [`render_baseline`], but a *partial* refresh: deterministic
+/// entries are armed with this run's measured values, while wall-clock
+/// entries (per the `wall_clock` predicate) keep whatever the existing
+/// baseline recorded — an armed value stays armed, a
+/// `"bootstrap": true` marker stays visible — so refreshing on an
+/// arbitrary dev machine never locks that machine's clock into the
+/// gate.  A wall-clock metric absent from the existing baseline lands
+/// as a fresh bootstrap entry.  Direction / gating / per-entry
+/// tolerance always come from `meta` (overrides must survive a
+/// refresh).
+pub fn render_baseline_deterministic(
+    measured: &BTreeMap<String, f64>,
+    existing: &Baseline,
+    meta: &dyn Fn(&str) -> (Direction, bool, Option<f64>),
+    wall_clock: &dyn Fn(&str) -> bool,
+    tolerance_pct: f64,
+) -> String {
+    use crate::jsonio::{num, obj, s};
+    let benchmarks = Value::Obj(
+        measured
+            .iter()
+            .map(|(k, &v)| {
+                let (direction, gate, tol) = meta(k);
+                let (value, bootstrap) = if wall_clock(k) {
+                    match existing.benchmarks.get(k) {
+                        Some(e) => (e.value, e.bootstrap),
+                        None => (0.0, true),
+                    }
+                } else {
+                    (v, false)
+                };
+                let mut fields = vec![
+                    ("value", num(value)),
+                    ("direction", s(direction.as_str())),
+                    ("gate", Value::Bool(gate)),
+                ];
+                if let Some(t) = tol {
+                    fields.push(("tolerance_pct", num(t)));
+                }
+                if bootstrap {
+                    fields.push(("bootstrap", Value::Bool(true)));
                 }
                 (k.clone(), obj(fields))
             })
@@ -405,6 +476,81 @@ mod tests {
             Baseline::from_value(&jsonio::parse(&text).unwrap()).unwrap();
         assert!(!b2.benchmarks["x"].bootstrap);
         assert!(!check(&b2, &measured(&[("x", 9.0)])).passed());
+    }
+
+    #[test]
+    fn bootstrap_entries_are_counted_and_reported() {
+        let mut b = baseline(&[
+            ("armed", 1.0, Direction::Lower, true),
+            ("fresh", 0.0, Direction::Lower, true),
+        ]);
+        b.benchmarks.get_mut("fresh").unwrap().bootstrap = true;
+        let m = measured(&[("armed", 1.0)]);
+        let rep = check(&b, &m);
+        assert!(rep.passed(), "{:?}", rep.failures);
+        assert_eq!(rep.bootstrap_entries, vec!["fresh".to_string()]);
+        // The report artifact carries both the count and the names.
+        let art = render_report(&m, &rep);
+        let v = jsonio::parse(&art).unwrap();
+        assert_eq!(
+            v.get("gate_bootstrap_entries").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        let names = v.get("bootstrap_entries").unwrap().as_arr().unwrap();
+        assert_eq!(names.len(), 1);
+        assert_eq!(names[0].as_str().unwrap(), "fresh");
+    }
+
+    #[test]
+    fn deterministic_refresh_preserves_wall_clock_state() {
+        // Existing baseline: one armed wall-clock entry, one bootstrap
+        // wall-clock entry, one stale bootstrap deterministic entry.
+        let v = jsonio::parse(
+            r#"{"schema":1,"bootstrap":false,"tolerance_pct":25,
+                "benchmarks":{
+                  "tps":{"value":100,"direction":"higher","gate":true},
+                  "tps_new":{"value":0,"direction":"higher","gate":true,
+                             "bootstrap":true},
+                  "steps":{"value":0,"direction":"lower","gate":true,
+                           "bootstrap":true}}}"#,
+        )
+        .unwrap();
+        let existing = Baseline::from_value(&v).unwrap();
+        let m = measured(&[
+            ("tps", 5.0),
+            ("tps_new", 7.0),
+            ("steps", 4.0),
+            ("tps_added", 9.0),
+        ]);
+        let text = render_baseline_deterministic(
+            &m,
+            &existing,
+            &|n| {
+                if n == "steps" {
+                    (Direction::Lower, true, None)
+                } else {
+                    (Direction::Higher, true, Some(40.0))
+                }
+            },
+            &|n| n.starts_with("tps"),
+            25.0,
+        );
+        let b =
+            Baseline::from_value(&jsonio::parse(&text).unwrap()).unwrap();
+        // Deterministic entry armed with the measured value.
+        assert!(!b.benchmarks["steps"].bootstrap);
+        assert!((b.benchmarks["steps"].value - 4.0).abs() < 1e-12);
+        // Armed wall-clock entry keeps its recorded value, not this
+        // host's measurement.
+        assert!(!b.benchmarks["tps"].bootstrap);
+        assert!((b.benchmarks["tps"].value - 100.0).abs() < 1e-12);
+        // Still-bootstrap wall-clock entry stays bootstrap.
+        assert!(b.benchmarks["tps_new"].bootstrap);
+        // A wall-clock metric new to the baseline lands bootstrap.
+        assert!(b.benchmarks["tps_added"].bootstrap);
+        // Per-entry tolerance from meta survives the partial refresh.
+        assert_eq!(b.benchmarks["tps"].tolerance_pct, Some(40.0));
+        assert_eq!(b.benchmarks["steps"].tolerance_pct, None);
     }
 
     #[test]

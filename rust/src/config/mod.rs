@@ -178,6 +178,15 @@ impl ServingConfig {
                      (expected per-lane or uniform)"
                 )
             })?;
+        let pk_s = gets("planner.packing")
+            .unwrap_or_else(|| e.planner.packing.as_str().into());
+        e.planner.packing =
+            crate::estimator::Packing::parse(&pk_s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown planner.packing {pk_s:?} \
+                     (expected packed or padded)"
+                )
+            })?;
         e.validate()?;
 
         let routing_s = gets("server.routing")
@@ -315,6 +324,26 @@ mod tests {
         assert!(ServingConfig::load(
             None,
             &["planner.budget_mode=warp".into()]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn packing_knob_parses_and_validates() {
+        use crate::estimator::Packing;
+        // Default: token-packed ragged verification.
+        let d = ServingConfig::load(None, &[]).unwrap();
+        assert_eq!(d.engine.planner.packing, Packing::Packed);
+        // Explicit fallback to the padded-grid ablation baseline.
+        let p = ServingConfig::load(
+            None,
+            &["planner.packing=padded".into()],
+        )
+        .unwrap();
+        assert_eq!(p.engine.planner.packing, Packing::Padded);
+        assert!(ServingConfig::load(
+            None,
+            &["planner.packing=ragged".into()]
         )
         .is_err());
     }

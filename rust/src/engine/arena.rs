@@ -64,6 +64,30 @@ pub(super) struct StepArena {
     /// verify_late outputs (logits / medusa / late tree_kv).
     pub late_outs: Vec<HostTensor>,
 
+    // --- tree step: token-packed (ragged) verify inputs ---------------
+    // Slabs for the packed verification path: one `[p_bucket]` token
+    // axis holding every lane's live nodes back-to-back, sized by the
+    // packed-total bucket instead of `b × t_bucket`.
+    /// `tree_tok [p]` i32 for the packed early entry.
+    pub pk_tok: HostTensor,
+    /// `tree_pos [p]` i32.
+    pub pk_pos: HostTensor,
+    /// `tree_mask [p, 2]` i32 lane-local ancestor bitset halves.
+    pub pk_mask: HostTensor,
+    /// `row_lane [p]` i32 (`-1` = bucket padding).
+    pub pk_lane: HostTensor,
+    /// `seq_len [b_key]` i32 at the packed artifacts' batch bucket.
+    pub pk_seq: HostTensor,
+    /// Compacted hidden `[p', d]` staged for the packed late entry.
+    pub pk_hidden: HostTensor,
+    /// Post-prune packed late inputs (positions / bitsets / row→lane).
+    pub pk_lpos: HostTensor,
+    pub pk_lmask: HostTensor,
+    pub pk_llane: HostTensor,
+    /// Per-lane packed row offsets, pre- and post-prune.
+    pub pk_off: Vec<usize>,
+    pub pk_off2: Vec<usize>,
+
     // --- shared scratch ----------------------------------------------
     /// Lane→slot layout for batch assembly (dummy lanes repeat lane 0).
     pub lanes: Vec<usize>,
@@ -95,6 +119,17 @@ impl StepArena {
             pseq: empty_i32(),
             early_outs: Vec::new(),
             late_outs: Vec::new(),
+            pk_tok: empty_i32(),
+            pk_pos: empty_i32(),
+            pk_mask: empty_i32(),
+            pk_lane: empty_i32(),
+            pk_seq: empty_i32(),
+            pk_hidden: empty_f32(),
+            pk_lpos: empty_i32(),
+            pk_lmask: empty_i32(),
+            pk_llane: empty_i32(),
+            pk_off: Vec::new(),
+            pk_off2: Vec::new(),
             lanes: Vec::new(),
             ar_lanes: Vec::new(),
             tree_lanes: Vec::new(),

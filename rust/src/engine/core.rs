@@ -40,6 +40,14 @@ pub struct Engine<'rt> {
     /// layer-sweep artifacts exist only at BS=4, so non-default layers pad
     /// up to that batch.
     pub(super) batch_buckets: Vec<usize>,
+    /// Total-packed-token buckets covered by the token-packed
+    /// verification entries for this (size, prune_layer); empty means the
+    /// manifest carries no packed artifacts and the engine stays on the
+    /// padded grid regardless of `planner.packing`.
+    pub(super) packed_buckets: Vec<usize>,
+    /// The batch bucket the packed entries' KV/seq_len axis was lowered
+    /// at (their lane capacity; the manifest's largest batch bucket).
+    pub(super) packed_batch: usize,
     pub(super) kv: KvCache,
     pub(super) tokenizer: ByteTokenizer,
     pub(super) queue: VecDeque<RequestSpec>,
@@ -146,6 +154,30 @@ impl<'rt> Engine<'rt> {
         if late_buckets.is_empty() {
             late_buckets = tree_buckets.clone();
         }
+        // Token-packed verification coverage: the ladder of total-packed-
+        // token buckets where BOTH packed stages exist, plus the batch
+        // bucket the packed entries were lowered at (their KV-lane
+        // capacity).  An empty ladder (e.g. a legacy manifest) means the
+        // engine silently stays on the padded grid.
+        let mut packed_buckets: Vec<usize> = Vec::new();
+        let mut packed_batch = 0usize;
+        if cfg.kind.uses_tree() {
+            for p in rt
+                .manifest
+                .available_packed_buckets(&cfg.size, cfg.prune_layer)
+            {
+                let late = rt.manifest.artifacts.iter().find(|a| {
+                    a.size == cfg.size
+                        && a.entry == Entry::VerifyLatePacked
+                        && a.n_layer == Some(cfg.prune_layer)
+                        && a.tree == Some(p)
+                });
+                if let Some(a) = late {
+                    packed_buckets.push(p);
+                    packed_batch = packed_batch.max(a.batch);
+                }
+            }
+        }
         let largest_batch = match batch_buckets.last().copied() {
             Some(b) => b,
             None => bail!("manifest lists no batch buckets"),
@@ -183,6 +215,8 @@ impl<'rt> Engine<'rt> {
             tree_buckets,
             late_buckets,
             batch_buckets,
+            packed_buckets,
+            packed_batch,
             tracker: AcceptanceTracker::new(
                 model.n_medusa,
                 cfg.max_rank,
@@ -1271,6 +1305,21 @@ impl<'rt> Engine<'rt> {
                     let key = crate::manifest::Manifest::key_for(
                         &self.cfg.size, Entry::VerifyLate, Some(n), b,
                         Some(t));
+                    if self.rt.manifest.by_key(&key).is_ok() {
+                        self.rt.executable(&key)?;
+                        compiled += 1;
+                    }
+                }
+            }
+            // Token-packed verification ladder (keyed on the total-packed
+            // bucket at the packed entries' fixed batch bucket).
+            for &p in &self.packed_buckets.clone() {
+                for entry in
+                    [Entry::VerifyEarlyPacked, Entry::VerifyLatePacked]
+                {
+                    let key = crate::manifest::Manifest::key_for(
+                        &self.cfg.size, entry, Some(n), self.packed_batch,
+                        Some(p));
                     if self.rt.manifest.by_key(&key).is_ok() {
                         self.rt.executable(&key)?;
                         compiled += 1;

@@ -21,6 +21,7 @@
 pub(crate) mod arena;
 pub mod core;
 pub mod inputs;
+pub mod pack;
 pub mod probe;
 pub mod requests;
 pub mod step_ar;

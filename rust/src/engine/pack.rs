@@ -1,0 +1,233 @@
+//! Token-packed (ragged) batch assembly for the packed verification
+//! path: all lanes' live tree nodes flattened into one `[P]` token axis.
+//!
+//! Layout contract (DESIGN.md § Packed verification): lane `i`'s live
+//! nodes occupy rows `offsets[i] .. offsets[i] + live_i` of every packed
+//! tensor, in tree-node order; rows past `Σ live` up to the packed
+//! bucket are padding (`row_lane = -1`, never executed).  The attention
+//! mask is a per-row *lane-local* u64 ancestor bitset carried as two i32
+//! halves — block-diagonal by construction, since a row can only name
+//! ancestors inside its own lane's span.
+//!
+//! Every helper writes into a reused arena slab ([`HostTensor::reset_i32`]
+//! / [`reset_f32`](HostTensor::reset_f32)) or a caller-owned `Vec` that
+//! is cleared, not reallocated — the packed tree step stays inside the
+//! same steady-state no-allocation regime as the padded packers in
+//! `engine/inputs.rs`.
+
+use crate::runtime::literal::HostTensor;
+use crate::tree::{TokenTree, TreeMask};
+
+/// Compute the per-lane offset table for live sizes, reusing `offsets`'
+/// heap block, and return the packed total `Σ live_i`.  `offsets[i]` is
+/// the first packed row of lane `i`.
+pub fn lane_offsets_into(sizes: &[usize], offsets: &mut Vec<usize>) -> usize {
+    offsets.clear();
+    let mut total = 0usize;
+    for &s in sizes {
+        offsets.push(total);
+        total += s;
+    }
+    total
+}
+
+/// Pack per-lane tree tokens into `tree_tok [p_bucket]` (i32), reusing
+/// `out`'s slab.  Padding rows stay 0 — the packed kernels stop at the
+/// first `row_lane = -1` row and never read them.
+pub fn pack_packed_tokens_into(
+    trees: &[&TokenTree],
+    p_bucket: usize,
+    out: &mut HostTensor,
+) {
+    let buf = out.reset_i32(&[p_bucket]);
+    let mut g = 0usize;
+    for tree in trees {
+        for j in 0..tree.len() {
+            debug_assert!(g < p_bucket, "packed total exceeds bucket");
+            buf[g] = tree.node(j).token as i32;
+            g += 1;
+        }
+    }
+}
+
+/// Pack per-lane node positions into `tree_pos [p_bucket]` (i32): each
+/// lane's committed length plus node depth, exactly as the padded
+/// `pack_tree_positions_into` writes for live rows.
+pub fn pack_packed_positions_into(
+    trees: &[&TokenTree],
+    seq_lens: &[usize],
+    p_bucket: usize,
+    out: &mut HostTensor,
+) {
+    let buf = out.reset_i32(&[p_bucket]);
+    let mut g = 0usize;
+    for (lane, tree) in trees.iter().enumerate() {
+        let base = seq_lens[lane];
+        for j in 0..tree.len() {
+            debug_assert!(g < p_bucket, "packed total exceeds bucket");
+            buf[g] = (base + tree.node(j).depth) as i32;
+            g += 1;
+        }
+    }
+}
+
+/// Pack per-lane ancestor bitsets into `tree_mask [p_bucket, 2]` (i32):
+/// row `g`'s lane-local u64 bitset split into (lo, hi) i32 halves.  Only
+/// each mask's `live()` rows are consumed; live-row bits never exceed the
+/// live prefix (`TreeMask` ragged contract), so the packed mask is
+/// block-diagonal across lanes by construction.
+pub fn pack_packed_masks_into(
+    masks: &[&TreeMask],
+    p_bucket: usize,
+    out: &mut HostTensor,
+) {
+    let buf = out.reset_i32(&[p_bucket, 2]);
+    let mut g = 0usize;
+    for mask in masks {
+        for i in 0..mask.live() {
+            debug_assert!(g < p_bucket, "packed total exceeds bucket");
+            let bits = mask.row(i);
+            buf[g * 2] = (bits & 0xffff_ffff) as u32 as i32;
+            buf[g * 2 + 1] = (bits >> 32) as u32 as i32;
+            g += 1;
+        }
+    }
+}
+
+/// Pack the row→lane table `row_lane [p_bucket]` (i32) from per-lane
+/// live sizes; bucket-padding rows carry `-1`.
+pub fn pack_row_lanes_into(
+    sizes: &[usize],
+    p_bucket: usize,
+    out: &mut HostTensor,
+) {
+    let buf = out.reset_i32(&[p_bucket]);
+    buf.fill(-1);
+    let mut g = 0usize;
+    for (lane, &s) in sizes.iter().enumerate() {
+        for _ in 0..s {
+            debug_assert!(g < p_bucket, "packed total exceeds bucket");
+            buf[g] = lane as i32;
+            g += 1;
+        }
+    }
+}
+
+/// Pack committed lengths into `seq_len [b_key]` (i32), where `b_key` is
+/// the batch bucket the packed artifacts were lowered at (their KV-lane
+/// capacity).  Lanes past the real batch stay 0 — no packed row names
+/// them.
+pub fn pack_packed_seq_lens_into(
+    seq_lens: &[usize],
+    b_key: usize,
+    out: &mut HostTensor,
+) {
+    let buf = out.reset_i32(&[b_key]);
+    for (x, &s) in buf.iter_mut().zip(seq_lens) {
+        *x = s as i32;
+    }
+}
+
+/// Compact the packed early-stage hidden states `[p, d]` into the
+/// post-pruning packed layout `[p_next, d]`: lane `i`'s surviving node
+/// `nj` (original index `keeps[i][nj]`) moves from row
+/// `offsets[i] + keeps[i][nj]` to row `next_offsets[i] + nj`.  Padding
+/// rows are zeros.
+pub fn compact_hidden_packed_into(
+    hidden: &HostTensor,
+    offsets: &[usize],
+    keeps: &[Vec<usize>],
+    next_offsets: &[usize],
+    p_bucket: usize,
+    out: &mut HostTensor,
+) {
+    let d = hidden.shape[hidden.shape.len() - 1];
+    let src = hidden.as_f32();
+    let buf = out.reset_f32(&[p_bucket, d]);
+    for (lane, keep) in keeps.iter().enumerate() {
+        for (nj, &oj) in keep.iter().enumerate() {
+            let s = (offsets[lane] + oj) * d;
+            let o = (next_offsets[lane] + nj) * d;
+            debug_assert!(o + d <= buf.len(), "packed total exceeds bucket");
+            buf[o..o + d].copy_from_slice(&src[s..s + d]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::node::TokenTree;
+
+    #[test]
+    fn offsets_are_prefix_sums() {
+        let mut off = Vec::new();
+        let total = lane_offsets_into(&[3, 1, 5], &mut off);
+        assert_eq!(off, vec![0, 3, 4]);
+        assert_eq!(total, 9);
+        // Reuse clears, never accumulates.
+        let total = lane_offsets_into(&[2], &mut off);
+        assert_eq!(off, vec![0]);
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn packed_tensors_concatenate_live_rows() {
+        let deep = TokenTree::chain(&[5, 6, 7]);
+        let shallow = TokenTree::chain(&[9]);
+        let trees = [&deep, &shallow];
+        let p = 6;
+        let mut tok = HostTensor::i32(vec![0], Vec::new());
+        pack_packed_tokens_into(&trees, p, &mut tok);
+        assert_eq!(tok.shape, vec![6]);
+        assert_eq!(tok.as_i32(), &[5, 6, 7, 9, 0, 0]);
+        let mut pos = HostTensor::i32(vec![0], Vec::new());
+        pack_packed_positions_into(&trees, &[10, 20], p, &mut pos);
+        assert_eq!(pos.as_i32(), &[10, 11, 12, 20, 0, 0]);
+        let mut rl = HostTensor::i32(vec![0], Vec::new());
+        pack_row_lanes_into(&[3, 1], p, &mut rl);
+        assert_eq!(rl.as_i32(), &[0, 0, 0, 1, -1, -1]);
+        let mut sl = HostTensor::i32(vec![0], Vec::new());
+        pack_packed_seq_lens_into(&[10, 20], 4, &mut sl);
+        assert_eq!(sl.as_i32(), &[10, 20, 0, 0]);
+    }
+
+    #[test]
+    fn packed_masks_are_lane_local_bitsets() {
+        use crate::tree::TreeMask;
+        let deep = TokenTree::chain(&[5, 6, 7]);
+        let shallow = TokenTree::chain(&[9]);
+        let m1 = TreeMask::build(&deep, 4);
+        let m2 = TreeMask::build(&shallow, 4);
+        let mut tm = HostTensor::i32(vec![0], Vec::new());
+        pack_packed_masks_into(&[&m1, &m2], 6, &mut tm);
+        let b = tm.as_i32();
+        // Lane 0 chain rows: {0}, {0,1}, {0,1,2}; lane 1 root row: {0}.
+        assert_eq!(&b[0..2], &[0b001, 0]);
+        assert_eq!(&b[2..4], &[0b011, 0]);
+        assert_eq!(&b[4..6], &[0b111, 0]);
+        assert_eq!(&b[6..8], &[0b001, 0]);
+        // Padding rows untouched (zero bitset).
+        assert_eq!(&b[8..12], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn compact_hidden_moves_rows_through_offset_tables() {
+        // Two lanes, d=2: lane 0 has rows [0..3), lane 1 rows [3..4).
+        let h = HostTensor::f32(
+            vec![5, 2],
+            vec![1., 1., 2., 2., 3., 3., 9., 9., 0., 0.],
+        );
+        let mut out = HostTensor::f32(vec![0], Vec::new());
+        // Lane 0 keeps nodes {0, 2}, lane 1 keeps {0}.
+        compact_hidden_packed_into(
+            &h,
+            &[0, 3],
+            &[vec![0, 2], vec![0]],
+            &[0, 2],
+            4,
+            &mut out,
+        );
+        assert_eq!(out.as_f32(), &[1., 1., 3., 3., 9., 9., 0., 0.]);
+    }
+}

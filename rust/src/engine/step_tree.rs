@@ -36,10 +36,15 @@ use super::inputs::{
     pack_seq_lens_into, pack_tree_masks_into, pack_tree_positions_into,
     pack_tree_tokens_into,
 };
+use super::pack::{
+    compact_hidden_packed_into, lane_offsets_into, pack_packed_masks_into,
+    pack_packed_positions_into, pack_packed_seq_lens_into,
+    pack_packed_tokens_into, pack_row_lanes_into,
+};
 use super::requests::LaneMode;
 use super::{DecodeMode, EngineKind};
 use crate::estimator::alloc::{allocate_budget, allocation_gain, donor_cap};
-use crate::estimator::BudgetMode;
+use crate::estimator::{BudgetMode, Packing};
 use crate::manifest::Entry;
 use crate::runtime::registry::DynArg;
 use crate::tree::accept::accept_path;
@@ -322,12 +327,26 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Run one tree-verification iteration over `lanes` (active-set
-    /// indices).  The batch bucket is keyed on the *sub-batch* size, so a
-    /// step where half the lanes are demoted to AR pads half the tensor —
-    /// that shrinkage is the decode-mode switch's wall-clock win.
+    /// indices), dispatching on the `planner.packing` knob: token-packed
+    /// ragged execution when the manifest carries packed entries, the
+    /// padded `(batch, tree)` grid otherwise.  Both paths are
+    /// byte-identical on greedy output (CONTRIBUTING.md invariant 5).
+    pub(super) fn step_tree(&mut self, lanes: &[usize]) -> Result<()> {
+        if self.cfg.planner.packing == Packing::Packed
+            && !self.packed_buckets.is_empty()
+        {
+            self.step_tree_packed(lanes)
+        } else {
+            self.step_tree_padded(lanes)
+        }
+    }
+
+    /// Padded-grid tree step: every lane padded to the common tree
+    /// bucket, entry keyed on the `(batch, tree)` cross-product.  Kept as
+    /// the ground-truth ablation baseline for the packed path.
     // lint: allow(hot_path_alloc) the ragged tree step keeps small
     // per-lane structures; O(b·t²) tensors live in the StepArena slabs
-    pub(super) fn step_tree(&mut self, lanes: &[usize]) -> Result<()> {
+    pub(super) fn step_tree_padded(&mut self, lanes: &[usize]) -> Result<()> {
         let t0 = Instant::now();
         let b_real = lanes.len();
         let b = crate::manifest::bucket_for(b_real, &self.batch_buckets);
@@ -612,6 +631,339 @@ impl<'rt> Engine<'rt> {
         // growing when no candidate has positive probability).
         let live: usize = trees.iter().map(|t| t.len()).sum();
         self.metrics.verify_tokens += live as u64;
+        // Padding-waste accounting: rows the two verify stages actually
+        // carried live work in vs rows the padded entry computed.
+        let live_late: usize = pruned.iter().map(|t| t.len()).sum();
+        self.metrics.verify_rows_live += (live + live_late) as u64;
+        self.metrics.verify_rows_computed +=
+            (b * t_bucket + b * tp_bucket) as u64;
+        for t in &trees {
+            self.metrics.tree_alloc_lane_size.record(t.len() as f64);
+        }
+        self.metrics.tree_alloc_budget.record(alloc.budget as f64);
+        self.metrics
+            .tree_alloc_util
+            .record(live as f64 / alloc.budget.max(1) as f64);
+        if let Some(g) = alloc.gain {
+            self.metrics.tree_alloc_gain.record(g);
+        }
+        self.metrics.assembly_bytes.record(asm.bytes_copied as f64);
+        self.metrics.assembly_bytes_copied += asm.bytes_copied;
+        self.metrics.assembly_bytes_full += asm.bytes_full;
+        let _ = committed_total;
+        Ok(())
+    }
+
+    /// Token-packed (ragged) tree step: every lane's live nodes flattened
+    /// into one `[Σ live]` token axis with a per-lane offset table, the
+    /// entry keyed on the *total-packed-token* bucket.  A skewed batch
+    /// (one deep tree, many stragglers) runs at `bucket_of(Σ live)` rows
+    /// instead of the padded grid's `b_bucket × max-lane bucket`.
+    ///
+    /// Planning, tree generation, pruning, acceptance and KV commits are
+    /// shared with [`step_tree_padded`](Self::step_tree_padded) —
+    /// verification is exact either way, so greedy output is
+    /// byte-identical between the two layouts (CONTRIBUTING.md
+    /// invariant 5); only the row layout and the batch assembly differ:
+    ///
+    /// - no dummy lanes: the KV batch tensor carries exactly the real
+    ///   lanes (the entry's KV arg is capacity-shaped, and the sim reads
+    ///   per-lane strides, not the batch dim);
+    /// - `tree_mask` is a per-row lane-local ancestor *bitset* (two i32
+    ///   halves) instead of the dense `[b, t, t]` block — block-diagonal
+    ///   across lanes by construction;
+    /// - KV commits index the block tensors at `(stage_layers, 1,
+    ///   p_bucket)` with global packed rows.
+    // lint: allow(hot_path_alloc) same contract as the padded step:
+    // per-lane planning structures are small; packed tensors reuse slabs
+    pub(super) fn step_tree_packed(&mut self, lanes: &[usize]) -> Result<()> {
+        let t0 = Instant::now();
+        let b_real = lanes.len();
+        let b = crate::manifest::bucket_for(b_real, &self.batch_buckets);
+        let n = self.cfg.prune_layer;
+        let size = self.cfg.size.clone();
+        let v = self.model.vocab;
+        let layers = self.model.n_layers;
+        let m_heads = self.model.n_medusa;
+        let pb = self.packed_batch;
+
+        // ------------------------------------------------- 1. generation
+        // The planner still keys its batch condition on the padded batch
+        // bucket (its re-plan triggers are layout-independent); only the
+        // perf model below is fed packed totals.
+        let mut alloc = self.plan_allocation(lanes, b);
+        let t_bucket = alloc.bucket;
+        let trees: Vec<TokenTree> = match alloc.prebuilt.take() {
+            Some(full) => full
+                .iter()
+                .zip(&alloc.sizes)
+                .map(|(t, &s)| t.truncated(s))
+                .collect(),
+            None => lanes
+                .iter()
+                .enumerate()
+                .map(|(i, &li)| self.build_tree(li, alloc.sizes[i]))
+                .collect(),
+        };
+        // Per-lane masks at the lane bucket: the bitset export reads only
+        // live rows, and prune-stage subsampling reuses them (§4.1).
+        let masks: Vec<TreeMask> =
+            trees.iter().map(|t| TreeMask::build(t, t_bucket)).collect();
+        let seq_lens_real: Vec<usize> = lanes
+            .iter()
+            .map(|&li| self.active[li].seq_len())
+            .collect();
+        let sizes_live: Vec<usize> = trees.iter().map(|t| t.len()).collect();
+        let p_live = lane_offsets_into(&sizes_live, &mut self.arena.pk_off);
+        let p_bucket =
+            crate::manifest::bucket_for(p_live, &self.packed_buckets);
+
+        // Real lanes only — no dummy-lane replication anywhere in the
+        // packed step; padding rows past `Σ live` name no lane.
+        self.arena.lanes.clear();
+        self.arena
+            .lanes
+            .extend(lanes.iter().map(|&li| self.active[li].slot));
+        let tr: Vec<&TokenTree> = trees.iter().collect();
+        let mr: Vec<&TreeMask> = masks.iter().collect();
+        pack_packed_tokens_into(&tr, p_bucket, &mut self.arena.pk_tok);
+        pack_packed_positions_into(
+            &tr,
+            &seq_lens_real,
+            p_bucket,
+            &mut self.arena.pk_pos,
+        );
+        pack_packed_masks_into(&mr, p_bucket, &mut self.arena.pk_mask);
+        pack_row_lanes_into(&sizes_live, p_bucket, &mut self.arena.pk_lane);
+        pack_packed_seq_lens_into(&seq_lens_real, pb, &mut self.arena.pk_seq);
+        let (kv_buf, asm) =
+            self.assembler.assemble(&mut self.kv, &self.arena.lanes);
+        let host_prep = t0.elapsed().as_secs_f64();
+
+        // ------------------------------------------------ 2. early stage
+        let t1 = Instant::now();
+        let early_key = crate::manifest::Manifest::key_for(
+            &size, Entry::VerifyEarlyPacked, Some(n), pb, Some(p_bucket));
+        self.rt
+            .executable(&early_key)?
+            .run_mixed_into(
+                &[
+                    DynArg::Host(&self.arena.pk_tok),
+                    DynArg::Host(&self.arena.pk_pos),
+                    DynArg::Host(&self.arena.pk_mask),
+                    DynArg::Host(&self.arena.pk_lane),
+                    DynArg::Host(&self.arena.pk_seq),
+                    DynArg::Buf(kv_buf),
+                ],
+                &mut self.arena.early_outs,
+            )
+            .context("verify_early_packed")?;
+        let early_secs = t1.elapsed().as_secs_f64();
+        // early_outs: [0] hidden [p, d], [1] early logits [p, V],
+        // [2] early tree_kv [n, 2, 1, p, H, Dh].
+
+        // ---------------------------------------------------- 3. pruning
+        let th = Instant::now();
+        let (pruned, keeps): (Vec<TokenTree>, Vec<Vec<usize>>) = if self
+            .cfg
+            .early_prune
+        {
+            let mut ptrees = Vec::with_capacity(b_real);
+            let mut keeps = Vec::with_capacity(b_real);
+            for (i, tree) in trees.iter().enumerate() {
+                // Each lane's rows start at its packed offset — the live
+                // span, no bucket stride.
+                let rows = self.arena.early_outs[1]
+                    .f32_chunk(self.arena.pk_off[i] * v, tree.len() * v);
+                let out = prune_tree(tree, rows, v, self.cfg.prune_top_k);
+                ptrees.push(out.tree);
+                keeps.push(out.keep);
+            }
+            (ptrees, keeps)
+        } else {
+            (
+                trees.clone(),
+                trees.iter().map(|t| (0..t.len()).collect()).collect(),
+            )
+        };
+        let sizes_late: Vec<usize> =
+            pruned.iter().map(|t| t.len()).collect();
+        let p2_live = lane_offsets_into(&sizes_late, &mut self.arena.pk_off2);
+        let p2_bucket =
+            crate::manifest::bucket_for(p2_live, &self.packed_buckets);
+        // Subsample cached masks (§4.1) at the lane bucket; the packed
+        // export reads live rows only.
+        let pmasks: Vec<TreeMask> = masks
+            .iter()
+            .zip(&keeps)
+            .map(|(m, k)| m.subsample(k, t_bucket))
+            .collect();
+        compact_hidden_packed_into(
+            &self.arena.early_outs[0],
+            &self.arena.pk_off,
+            &keeps,
+            &self.arena.pk_off2,
+            p2_bucket,
+            &mut self.arena.pk_hidden,
+        );
+        let pmr: Vec<&TreeMask> = pmasks.iter().collect();
+        let ptr: Vec<&TokenTree> = pruned.iter().collect();
+        pack_packed_positions_into(
+            &ptr,
+            &seq_lens_real,
+            p2_bucket,
+            &mut self.arena.pk_lpos,
+        );
+        pack_packed_masks_into(&pmr, p2_bucket, &mut self.arena.pk_lmask);
+        pack_row_lanes_into(&sizes_late, p2_bucket, &mut self.arena.pk_llane);
+        let host_mid = th.elapsed().as_secs_f64();
+
+        // ------------------------------------------------- 4. late stage
+        let t2 = Instant::now();
+        let late_key = crate::manifest::Manifest::key_for(
+            &size, Entry::VerifyLatePacked, Some(n), pb, Some(p2_bucket));
+        self.rt
+            .executable(&late_key)?
+            .run_mixed_into(
+                &[
+                    DynArg::Host(&self.arena.pk_hidden),
+                    DynArg::Host(&self.arena.pk_lpos),
+                    DynArg::Host(&self.arena.pk_lmask),
+                    DynArg::Host(&self.arena.pk_llane),
+                    DynArg::Host(&self.arena.pk_seq),
+                    DynArg::Buf(kv_buf),
+                ],
+                &mut self.arena.late_outs,
+            )
+            .context("verify_late_packed")?;
+        let late_secs = t2.elapsed().as_secs_f64();
+        // late_outs: [0] logits [p', V], [1] medusa [p', M, V],
+        // [2] late tree_kv [L-n, 2, 1, p', H, Dh].
+
+        // ------------------------------------------- 5. accept + commit
+        let t3 = Instant::now();
+        let mut committed_total = 0usize;
+        for (i, &li) in lanes.iter().enumerate() {
+            let ptree = &pruned[i];
+            let off = self.arena.pk_off[i];
+            let off2 = self.arena.pk_off2[i];
+            let room = self.room(&self.active[li]);
+            let mut res = {
+                let rows = self.arena.late_outs[0]
+                    .f32_chunk(off2 * v, ptree.len() * v);
+                accept_path(ptree, rows, v)
+            };
+            // Respect the generation budget: truncate over-acceptance.
+            let mut cut = res.path.len().min(room.max(1));
+            // Also cut at the stop sequence (byte-identity with AR).
+            {
+                let mut prev =
+                    self.active[li].generated_tokens().last().copied();
+                for (l, &t) in res.tokens.iter().take(cut).enumerate() {
+                    if self.tokenizer.is_stop_step(prev, t) {
+                        cut = l + 1;
+                        break;
+                    }
+                    prev = Some(t);
+                }
+            }
+            if res.path.len() > cut {
+                res.path.truncate(cut);
+                res.tokens.truncate(cut);
+                let last = res.path.last().copied().unwrap_or(0);
+                let row = self.arena.late_outs[0]
+                    .f32_chunk((off2 + last) * v, v);
+                res.bonus = crate::tree::accept::argmax(row) as u32;
+            }
+            let base_pos = self.active[li].seq_len();
+            // KV commits: the packed block tensors are `[stage_layers, 2,
+            // 1, p, H, Dh]` — lane 0 of a one-lane batch, columns indexed
+            // by *global packed row* (lane offset + node index).
+            let pairs_early: Vec<(usize, usize)> = res
+                .path
+                .iter()
+                .enumerate()
+                .map(|(d, &pi)| (off + keeps[i][pi], base_pos + d))
+                .collect();
+            let pairs_late: Vec<(usize, usize)> = res
+                .path
+                .iter()
+                .enumerate()
+                .map(|(d, &pi)| (off2 + pi, base_pos + d))
+                .collect();
+            let slot = self.active[li].slot;
+            self.kv.commit_columns(
+                slot,
+                self.arena.early_outs[2].as_f32(),
+                (n, 1, p_bucket),
+                0,
+                0,
+                &pairs_early,
+            ).context("early packed kv commit")?;
+            self.kv.commit_columns(
+                slot,
+                self.arena.late_outs[2].as_f32(),
+                (layers - n, 1, p2_bucket),
+                n,
+                0,
+                &pairs_late,
+            ).context("late packed kv commit")?;
+            // Book-keeping (identical to the padded path).
+            let deepest = res.path.last().copied().unwrap_or(0);
+            let med_rows = self.arena.late_outs[1]
+                .f32_chunk((off2 + deepest) * m_heads * v, m_heads * v)
+                .to_vec();
+            let accept_len = res.path.len();
+            {
+                let req = &mut self.active[li];
+                req.tokens.extend(&res.tokens);
+                req.pending_root = res.bonus;
+                req.medusa_rows = med_rows;
+                req.steps += 1;
+                req.remember_prediction(v);
+            }
+            self.kv
+                .freeze_prefix(self.active[li].slot, &self.active[li].tokens);
+            let mut updates: Vec<(usize, usize)> = Vec::new();
+            self.active[li]
+                .resolve_predictions(|h, rank| updates.push((h, rank)));
+            for (h, rank) in updates {
+                self.tracker.record(h, Some(rank));
+                self.active[li].tracker.record(h, Some(rank));
+            }
+            committed_total += accept_len;
+            self.metrics.accept_len.record(accept_len as f64);
+            self.metrics.tokens_generated += accept_len as u64;
+            let t_live = trees[i].len().max(1);
+            self.metrics
+                .prune_rate
+                .record(1.0 - (pruned[i].len() as f64 / t_live as f64));
+            self.check_done(li);
+            self.emit_progress(li, &res.tokens);
+        }
+        let host_post = t3.elapsed().as_secs_f64();
+
+        // ----------------------------------- 6. estimator + metrics upkeep
+        let total = t0.elapsed().as_secs_f64();
+        // §4.2.1 keyed on the step's total verified tokens — here the
+        // early stage's packed bucket, the block actually computed.
+        self.perf.record(p_bucket, total);
+        self.metrics.step_time.record(total);
+        self.metrics.early_time.record(early_secs);
+        self.metrics.late_time.record(late_secs);
+        self.metrics
+            .host_time
+            .record(host_prep + host_mid + host_post);
+        self.metrics.tree_size.record(t_bucket as f64);
+        self.metrics
+            .pruned_size
+            .record(sizes_late.iter().copied().max().unwrap_or(1) as f64);
+        let live: usize = sizes_live.iter().sum();
+        self.metrics.verify_tokens += live as u64;
+        // Padding-waste accounting: the packed buckets are the rows the
+        // two stages computed; live rows are the ragged totals.
+        self.metrics.verify_rows_live += (p_live + p2_live) as u64;
+        self.metrics.verify_rows_computed += (p_bucket + p2_bucket) as u64;
         for t in &trees {
             self.metrics.tree_alloc_lane_size.record(t.len() as f64);
         }

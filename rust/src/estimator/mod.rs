@@ -21,4 +21,4 @@ pub mod planner;
 pub use acceptance::AcceptanceTracker;
 pub use alloc::{allocate_budget, allocation_gain, gain_at};
 pub use perf_model::PerfModel;
-pub use planner::{BudgetMode, Planner, PlannerConfig};
+pub use planner::{BudgetMode, Packing, Planner, PlannerConfig};

@@ -51,6 +51,39 @@ impl BudgetMode {
     }
 }
 
+/// How the verification batch is laid out on the token axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Packing {
+    /// Token-packed ragged verification: all lanes' live nodes flattened
+    /// into one `[Σ live]` axis, executed at the total-packed-token
+    /// bucket.  A skewed batch pays for what is live, not
+    /// `batch × max-lane bucket`.
+    Packed,
+    /// Pad every lane to the common tree bucket and run the
+    /// `(batch, tree)` grid entry — the ground-truth ablation baseline
+    /// the packed path must match byte-for-byte.
+    Padded,
+}
+
+impl Packing {
+    /// Canonical knob string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Packing::Packed => "packed",
+            Packing::Padded => "padded",
+        }
+    }
+
+    /// Parse the `planner.packing` knob.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "packed" => Some(Packing::Packed),
+            "padded" => Some(Packing::Padded),
+            _ => None,
+        }
+    }
+}
+
 /// Planner section of the config (`planner.*`).
 #[derive(Debug, Clone)]
 pub struct PlannerConfig {
@@ -73,6 +106,9 @@ pub struct PlannerConfig {
     /// While demoted, run one cheap smallest-bucket probe tree every this
     /// many AR steps to re-measure acceptance.
     pub probe_interval: u64,
+    /// Verification batch layout: token-packed ragged execution (default)
+    /// or the padded `(batch, tree)` grid ablation baseline.
+    pub packing: Packing,
 }
 
 impl Default for PlannerConfig {
@@ -85,6 +121,7 @@ impl Default for PlannerConfig {
             demote_below: 0.3,
             promote_above: 0.6,
             probe_interval: 16,
+            packing: Packing::Packed,
         }
     }
 }
@@ -182,11 +219,22 @@ impl Planner {
         // sizes, and the paper explicitly avoids offline
         // pre-characterization — so the first re-plans visit each
         // still-unobserved bucket once before exploiting the model.
+        //
+        // Exploration key: in padded mode the artifact grid is the
+        // `(batch, tree)` cross-product, so each `(lanes, bucket)` pair is
+        // its own cell.  Packed execution is keyed on the *total* token
+        // bucket alone — two batch shapes with the same `lanes × bucket`
+        // total land on the same packed entry — so the key collapses to
+        // `(0, total)` and the cross-product exploration sweep with it.
+        let key = |lanes: usize, b: usize| match self.cfg.packing {
+            Packing::Packed => (0, lanes * b),
+            Packing::Padded => (lanes, b),
+        };
         if let Some(&unseen) = self.cfg.buckets.iter().find(|&&b| {
             perf.observed(lanes * b).is_none()
-                && !self.explored.contains(&(lanes, b))
+                && !self.explored.contains(&key(lanes, b))
         }) {
-            self.explored.insert((lanes, unseen));
+            self.explored.insert(key(lanes, unseen));
             self.cached = Some(unseen);
             self.last_batch = batch;
             self.last_seq = mean_seq;
@@ -359,6 +407,15 @@ mod tests {
         assert_eq!(BudgetMode::parse("per_lane"), Some(BudgetMode::PerLane));
         assert_eq!(BudgetMode::parse("warp"), None);
     }
+
+    #[test]
+    fn packing_roundtrip() {
+        for m in [Packing::Packed, Packing::Padded] {
+            assert_eq!(Packing::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(Packing::parse("ragged"), None);
+        assert_eq!(PlannerConfig::default().packing, Packing::Packed);
+    }
 }
 
 #[cfg(test)]
@@ -406,5 +463,36 @@ mod exploration_tests {
         // Afterwards: exploitation, stable (no renewed exploration).
         let tail = &visits[buckets.len()..];
         assert!(tail.iter().all(|&b| b == tail[0]), "{visits:?}");
+    }
+
+    #[test]
+    fn packed_mode_collapses_exploration_across_batch_shapes() {
+        // Packed entries are keyed on the total-token bucket alone, so
+        // exploring bucket b at batch 2 also covers bucket b/2 at batch 4
+        // (the same `lanes × bucket` total).  Padded mode keeps the full
+        // per-(batch, bucket) cross-product.
+        let perf = PerfModel::default(); // nothing ever recorded
+        let curve = vec![1.0, 1.5];
+        let buckets = PlannerConfig::default().buckets.clone();
+        let mk = |packing| PlannerConfig {
+            replan_interval: 1,
+            packing,
+            ..Default::default()
+        };
+        // Finish batch-2 exploration: totals {8, 16, 32, 64, 128}.
+        let mut p = Planner::new(mk(Packing::Packed), 512);
+        for _ in 0..buckets.len() {
+            p.plan(2, 10.0, &curve, &perf);
+        }
+        // Batch 4: buckets {4, 8, 16, 32} map to already-explored totals
+        // {16, 32, 64, 128}; only bucket 64 (total 256) is new.
+        assert_eq!(p.plan(4, 10.0, &curve, &perf), 64);
+        // Padded mode restarts the sweep from the first bucket — the
+        // cross-product cost the packed re-keying deletes.
+        let mut q = Planner::new(mk(Packing::Padded), 512);
+        for _ in 0..buckets.len() {
+            q.plan(2, 10.0, &curve, &perf);
+        }
+        assert_eq!(q.plan(4, 10.0, &curve, &perf), buckets[0]);
     }
 }

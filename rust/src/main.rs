@@ -58,6 +58,9 @@ const FLAGS: &[(&str, Option<&str>, &str)] = &[
     ("--tree-budget", Some("mode"),
      "planner.budget_mode: per-lane (water-filled, default) | uniform \
       (ablation)"),
+    ("--packing", Some("mode"),
+     "planner.packing: packed (token-packed ragged verification, \
+      default) | padded (grid ablation baseline)"),
     ("--decode-mode", Some("mode"),
      "engine.decode_mode: auto (per-lane serial<->parallel switching, \
       default) | spec (always tree) | ar (always serial)"),
@@ -185,6 +188,10 @@ fn parse_args_from(mut it: impl Iterator<Item = String>) -> Result<Args> {
             "--tree-budget" => {
                 let v = val("--tree-budget")?;
                 a.sets.push(format!("planner.budget_mode=\"{v}\""));
+            }
+            "--packing" => {
+                let v = val("--packing")?;
+                a.sets.push(format!("planner.packing=\"{v}\""));
             }
             "--decode-mode" => {
                 let v = val("--decode-mode")?;

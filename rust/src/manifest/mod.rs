@@ -69,6 +69,12 @@ pub enum Entry {
     VerifyEarly,
     /// Tree verification from the pruning layer to the logits.
     VerifyLate,
+    /// Packed (ragged) early verification: all lanes' live tree nodes
+    /// flattened into one token axis, keyed on the total-packed-token
+    /// bucket instead of the (batch, tree) cross-product.
+    VerifyEarlyPacked,
+    /// Packed (ragged) late verification over the flattened token axis.
+    VerifyLatePacked,
 }
 
 impl Entry {
@@ -78,6 +84,8 @@ impl Entry {
             "decode" => Entry::Decode,
             "verify_early" => Entry::VerifyEarly,
             "verify_late" => Entry::VerifyLate,
+            "verify_early_packed" => Entry::VerifyEarlyPacked,
+            "verify_late_packed" => Entry::VerifyLatePacked,
             other => bail!("unknown entry {other:?}"),
         })
     }
@@ -89,6 +97,8 @@ impl Entry {
             Entry::Decode => "decode",
             Entry::VerifyEarly => "verify_early",
             Entry::VerifyLate => "verify_late",
+            Entry::VerifyEarlyPacked => "verify_early_packed",
+            Entry::VerifyLatePacked => "verify_late_packed",
         }
     }
 }
@@ -357,6 +367,27 @@ impl Manifest {
             .collect()
     }
 
+    /// The total-packed-token buckets available for a size/n combination
+    /// (packed verify entries are lowered at the manifest's largest batch
+    /// bucket; the `tree` field carries the packed-token bucket).  Empty
+    /// when the artifact set predates the packed path — the engine then
+    /// falls back to padded verification regardless of `planner.packing`.
+    pub fn available_packed_buckets(&self, size: &str, n: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.size == size
+                    && a.entry == Entry::VerifyEarlyPacked
+                    && a.n_layer == Some(n)
+            })
+            .filter_map(|a| a.tree)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
     /// Path of a size's packed weights binary.
     pub fn weights_path(&self, size: &str) -> PathBuf {
         self.root.join(size).join("weights.bin")
@@ -381,6 +412,22 @@ pub fn bucket_for(value: usize, buckets: &[usize]) -> usize {
         }
     }
     *buckets.last().expect("empty bucket list")
+}
+
+/// The packed-token bucket ladder: geometric-ish steps (×1.5) from the
+/// smallest tree bucket up to — and always including, exactly — the
+/// worst-case total `max_batch × max_tree` tokens.  The top rung must be
+/// the exact worst case because [`bucket_for`] clamps to the largest
+/// bucket: a ladder topping out below `Σ live` would silently truncate.
+pub fn packed_bucket_ladder(min_bucket: usize, max_total: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut v = min_bucket.max(1);
+    while v < max_total {
+        out.push(v);
+        v += (v / 2).max(1);
+    }
+    out.push(max_total);
+    out
 }
 
 #[cfg(test)]
@@ -472,6 +519,35 @@ pub mod tests {
         let m = test_manifest();
         assert_eq!(m.available_tree_buckets("micro", 1, 1), vec![4]);
         assert!(m.available_tree_buckets("micro", 2, 1).is_empty());
+    }
+
+    #[test]
+    fn packed_ladder_tops_out_at_exact_worst_case() {
+        let l = packed_bucket_ladder(4, 512);
+        assert_eq!(l.first(), Some(&4));
+        assert_eq!(l.last(), Some(&512));
+        for w in l.windows(2) {
+            assert!(w[0] < w[1], "ladder not strictly increasing: {l:?}");
+        }
+        // Degenerate: min >= max collapses to the single worst-case rung.
+        assert_eq!(packed_bucket_ladder(8, 8), vec![8]);
+        assert_eq!(packed_bucket_ladder(16, 8), vec![8]);
+    }
+
+    #[test]
+    fn packed_entry_names_roundtrip() {
+        for e in [Entry::VerifyEarlyPacked, Entry::VerifyLatePacked] {
+            assert_eq!(Entry::parse(e.as_str()).unwrap(), e);
+        }
+        let k = Manifest::key_for(
+            "micro", Entry::VerifyEarlyPacked, Some(1), 4, Some(96));
+        assert_eq!(k, "micro/verify_early_packed_n1_b4_t96");
+    }
+
+    #[test]
+    fn legacy_manifest_has_no_packed_buckets() {
+        let m = test_manifest();
+        assert!(m.available_packed_buckets("micro", 1).is_empty());
     }
 
     #[test]

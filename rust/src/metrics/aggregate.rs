@@ -173,6 +173,15 @@ impl MetricsHub {
                 sum(keys::TOKENS_GENERATED) / verified
             },
         );
+        let rows_computed = sum(keys::VERIFY_ROWS_COMPUTED);
+        totals.insert(
+            keys::VERIFY_ROWS_UTIL.into(),
+            if rows_computed <= 0.0 {
+                0.0
+            } else {
+                sum(keys::VERIFY_ROWS_LIVE) / rows_computed
+            },
+        );
         let full = sum(keys::ASSEMBLY_BYTES_FULL_TOTAL);
         totals.insert(
             keys::ASSEMBLY_SAVINGS_RATIO.into(),
@@ -285,6 +294,31 @@ mod tests {
         assert!((agg.total("assembly_savings_ratio") - 0.75).abs() < 1e-12);
         // occupancy: (2+8)/(10+10) = 0.5.
         assert!((agg.total("kv_page_occupancy") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn verify_rows_roll_up_as_ratio_of_sums() {
+        // One efficient (packed) replica, one padded straggler: the
+        // fleet utilization is live-sum over computed-sum, not a mean of
+        // the per-replica ratios.
+        let hub = MetricsHub::new(2);
+        let a = EngineMetrics {
+            verify_rows_live: 90,
+            verify_rows_computed: 100,
+            ..Default::default()
+        };
+        let b = EngineMetrics {
+            verify_rows_live: 30,
+            verify_rows_computed: 300,
+            ..Default::default()
+        };
+        hub.publish(0, 0, 0, &a);
+        hub.publish(1, 0, 0, &b);
+        let agg = hub.aggregate();
+        assert_eq!(agg.total("verify_rows_live"), 120.0);
+        assert_eq!(agg.total("verify_rows_computed"), 400.0);
+        // (90+30)/(100+300) = 0.3 — a mean of ratios would say 0.5.
+        assert!((agg.total("verify_rows_util") - 0.3).abs() < 1e-12);
     }
 
     #[test]

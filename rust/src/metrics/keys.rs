@@ -104,6 +104,15 @@ pub const TREE_ALLOC_GAIN_MEAN: &str = "tree_alloc_gain_mean";
 pub const VERIFY_TOKENS_TOTAL: &str = "verify_tokens_total";
 /// Accepted tokens per verified token (ratio of sums at the fleet).
 pub const ACCEPT_PER_VERIFIED: &str = "accept_per_verified";
+/// Verify-stage rows that carried live tree nodes (both stages, real
+/// lanes only).
+pub const VERIFY_ROWS_LIVE: &str = "verify_rows_live";
+/// Verify-stage rows the lowered entries actually computed (padded or
+/// packed buckets, both stages).
+pub const VERIFY_ROWS_COMPUTED: &str = "verify_rows_computed";
+/// Fraction of computed verify rows that were live — the padding-waste
+/// rollup the packed layout exists to raise (ratio of sums).
+pub const VERIFY_ROWS_UTIL: &str = "verify_rows_util";
 /// Mean request latency, submit → completion (s).
 pub const REQUEST_LATENCY_MEAN_S: &str = "request_latency_mean_s";
 /// Median request latency (s; fleet value pools replica reservoirs).
@@ -224,6 +233,9 @@ pub const REGISTRY: &[KeyDef] = &[
     KeyDef { name: TREE_ALLOC_GAIN_MEAN, rollup: Rollup::WeightedBySteps },
     KeyDef { name: VERIFY_TOKENS_TOTAL, rollup: Rollup::Sum },
     KeyDef { name: ACCEPT_PER_VERIFIED, rollup: Rollup::Derived },
+    KeyDef { name: VERIFY_ROWS_LIVE, rollup: Rollup::Sum },
+    KeyDef { name: VERIFY_ROWS_COMPUTED, rollup: Rollup::Sum },
+    KeyDef { name: VERIFY_ROWS_UTIL, rollup: Rollup::Derived },
     KeyDef {
         name: REQUEST_LATENCY_MEAN_S,
         rollup: Rollup::WeightedByCompletions,

@@ -65,6 +65,13 @@ pub struct EngineMetrics {
     /// Total live tree nodes verified across steps (real lanes only) —
     /// the denominator of `accept_per_verified`.
     pub verify_tokens: u64,
+    /// Verify-stage rows that carried live tree nodes, summed over both
+    /// stages (real lanes only).
+    pub verify_rows_live: u64,
+    /// Verify-stage rows the lowered entries actually computed — padded
+    /// `b × t_bucket` blocks or packed total-token buckets.  The gap to
+    /// `verify_rows_live` is the padding waste the packed layout cuts.
+    pub verify_rows_computed: u64,
     /// Requests finished.
     pub requests_completed: u64,
     /// Prefill calls.
@@ -172,6 +179,16 @@ impl EngineMetrics {
         }
     }
 
+    /// Fraction of computed verify rows that carried live nodes (0 when
+    /// no verify stage ran, e.g. the autoregressive engine).
+    pub fn verify_rows_util(&self) -> f64 {
+        if self.verify_rows_computed == 0 {
+            0.0
+        } else {
+            self.verify_rows_live as f64 / self.verify_rows_computed as f64
+        }
+    }
+
     /// Fraction of prompt/prefix tokens served from the shared-prefix
     /// cache (0 when nothing was prefilled yet or the cache is off).
     pub fn kv_prefix_hit_rate(&self) -> f64 {
@@ -231,6 +248,11 @@ impl EngineMetrics {
                  self.verify_tokens as f64);
         m.insert(keys::ACCEPT_PER_VERIFIED.into(),
                  self.accept_per_verified());
+        m.insert(keys::VERIFY_ROWS_LIVE.into(),
+                 self.verify_rows_live as f64);
+        m.insert(keys::VERIFY_ROWS_COMPUTED.into(),
+                 self.verify_rows_computed as f64);
+        m.insert(keys::VERIFY_ROWS_UTIL.into(), self.verify_rows_util());
         m.insert(keys::REQUEST_LATENCY_MEAN_S.into(),
                  self.request_latency.mean());
         m.insert(keys::REQUEST_LATENCY_P50_S.into(),
@@ -321,6 +343,9 @@ mod tests {
             "tree_alloc_gain_mean",
             "verify_tokens_total",
             "accept_per_verified",
+            "verify_rows_live",
+            "verify_rows_computed",
+            "verify_rows_util",
             "ttft_mean_s",
             "ttft_steps_mean",
             "itl_mean_s",
@@ -392,6 +417,16 @@ mod tests {
         m.verify_tokens = 120;
         assert!((m.accept_per_verified() - 0.25).abs() < 1e-12);
         assert!((m.report()["accept_per_verified"] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn verify_rows_util_ratio() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.verify_rows_util(), 0.0);
+        m.verify_rows_live = 30;
+        m.verify_rows_computed = 40;
+        assert!((m.verify_rows_util() - 0.75).abs() < 1e-12);
+        assert!((m.report()["verify_rows_util"] - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -121,6 +121,141 @@ pub fn for_each_row2<F>(
     });
 }
 
+/// One lane's contiguous row range in a packed (ragged) batch: rows
+/// `start..start + len` of the flattened token axis belong to `lane`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Lane index the rows belong to.
+    pub lane: usize,
+    /// First global row of the span.
+    pub start: usize,
+    /// Rows in the span.
+    pub len: usize,
+}
+
+/// Run `f(span, rows)` for every span, fanning whole spans out across up
+/// to `threads` scoped threads.  Spans must be contiguous from row 0 in
+/// order (`spans[i].start == Σ spans[..i].len`); each worker gets a
+/// disjoint `&mut` band of whole spans, so output bytes are identical to
+/// the serial loop at any thread count.  Rows of `out` past the last
+/// span (packed-bucket padding) are never touched.
+pub fn for_each_span<F>(
+    threads: usize,
+    spans: &[Span],
+    row_len: usize,
+    out: &mut [f32],
+    f: F,
+) where
+    F: Fn(&Span, &mut [f32]) + Sync,
+{
+    if row_len == 0 || spans.is_empty() {
+        return;
+    }
+    let total: usize = spans.iter().map(|s| s.len).sum();
+    debug_assert!(out.len() >= total * row_len, "out smaller than spans");
+    let t = threads.max(1).min(spans.len());
+    if t <= 1 {
+        let mut rest = out;
+        for sp in spans {
+            let (chunk, tail) =
+                std::mem::take(&mut rest).split_at_mut(sp.len * row_len);
+            f(sp, chunk);
+            rest = tail;
+        }
+        return;
+    }
+    let per = spans.len().div_ceil(t);
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for group in spans.chunks(per) {
+            let rows: usize = group.iter().map(|sp| sp.len).sum();
+            let (band, tail) =
+                std::mem::take(&mut rest).split_at_mut(rows * row_len);
+            rest = tail;
+            s.spawn(move || {
+                let mut r = band;
+                for sp in group {
+                    let (chunk, tail2) =
+                        std::mem::take(&mut r).split_at_mut(sp.len * row_len);
+                    f(sp, chunk);
+                    r = tail2;
+                }
+            });
+        }
+    });
+}
+
+/// Two-slab span variant: `f(span, a_rows, b_rows)` over paired bands of
+/// two packed outputs sharing the token axis (e.g. logits and medusa).
+/// `b_row = 0` passes an empty `b` band.
+pub fn for_each_span2<F>(
+    threads: usize,
+    spans: &[Span],
+    a_row: usize,
+    a: &mut [f32],
+    b_row: usize,
+    b: &mut [f32],
+    f: F,
+) where
+    F: Fn(&Span, &mut [f32], &mut [f32]) + Sync,
+{
+    if a_row == 0 || spans.is_empty() {
+        return;
+    }
+    if b_row == 0 {
+        return for_each_span(threads, spans, a_row, a, |sp, ra| {
+            f(sp, ra, &mut [])
+        });
+    }
+    let total: usize = spans.iter().map(|s| s.len).sum();
+    debug_assert!(a.len() >= total * a_row, "a smaller than spans");
+    debug_assert!(b.len() >= total * b_row, "b smaller than spans");
+    let t = threads.max(1).min(spans.len());
+    if t <= 1 {
+        let mut ra = a;
+        let mut rb = b;
+        for sp in spans {
+            let (ca, ta) =
+                std::mem::take(&mut ra).split_at_mut(sp.len * a_row);
+            let (cb, tb) =
+                std::mem::take(&mut rb).split_at_mut(sp.len * b_row);
+            f(sp, ca, cb);
+            ra = ta;
+            rb = tb;
+        }
+        return;
+    }
+    let per = spans.len().div_ceil(t);
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut ra = a;
+        let mut rb = b;
+        for group in spans.chunks(per) {
+            let rows: usize = group.iter().map(|sp| sp.len).sum();
+            let (band_a, ta) =
+                std::mem::take(&mut ra).split_at_mut(rows * a_row);
+            let (band_b, tb) =
+                std::mem::take(&mut rb).split_at_mut(rows * b_row);
+            ra = ta;
+            rb = tb;
+            s.spawn(move || {
+                let mut wa = band_a;
+                let mut wb = band_b;
+                for sp in group {
+                    let (ca, ta2) =
+                        std::mem::take(&mut wa).split_at_mut(sp.len * a_row);
+                    let (cb, tb2) =
+                        std::mem::take(&mut wb).split_at_mut(sp.len * b_row);
+                    f(sp, ca, cb);
+                    wa = ta2;
+                    wb = tb2;
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +303,60 @@ mod tests {
         for_each_row2(4, ar, &mut a4, br, &mut b4, fill);
         assert_eq!(a4, a1);
         assert_eq!(b4, b1);
+    }
+
+    fn ragged_spans() -> Vec<Span> {
+        let lens = [5usize, 1, 9, 2, 7];
+        let mut spans = Vec::new();
+        let mut start = 0usize;
+        for (lane, &len) in lens.iter().enumerate() {
+            spans.push(Span { lane, start, len });
+            start += len;
+        }
+        spans
+    }
+
+    #[test]
+    fn span_rows_match_serial_and_leave_padding_untouched() {
+        let spans = ragged_spans();
+        let total: usize = spans.iter().map(|s| s.len).sum();
+        let row_len = 3;
+        let pad_rows = 4;
+        let fill = |sp: &Span, rows: &mut [f32]| {
+            for (j, row) in rows.chunks_mut(row_len).enumerate() {
+                row.fill((sp.lane * 100 + j) as f32);
+            }
+        };
+        let mut serial = vec![-1f32; (total + pad_rows) * row_len];
+        for_each_span(1, &spans, row_len, &mut serial, fill);
+        assert!(serial[total * row_len..].iter().all(|&x| x == -1.0),
+                "padding rows were written");
+        for t in [2, 3, 8, 64] {
+            let mut par = vec![-1f32; (total + pad_rows) * row_len];
+            for_each_span(t, &spans, row_len, &mut par, fill);
+            assert_eq!(par, serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn paired_span_rows_match_serial() {
+        let spans = ragged_spans();
+        let total: usize = spans.iter().map(|s| s.len).sum();
+        let (ar, br) = (4, 6);
+        let fill = |sp: &Span, ra: &mut [f32], rb: &mut [f32]| {
+            ra.fill(sp.start as f32);
+            rb.fill(-(sp.lane as f32) - 1.0);
+        };
+        let mut a1 = vec![0f32; total * ar];
+        let mut b1 = vec![0f32; total * br];
+        for_each_span2(1, &spans, ar, &mut a1, br, &mut b1, fill);
+        for t in [2, 5, 64] {
+            let mut at = vec![0f32; total * ar];
+            let mut bt = vec![0f32; total * br];
+            for_each_span2(t, &spans, ar, &mut at, br, &mut bt, fill);
+            assert_eq!(at, a1, "threads={t}");
+            assert_eq!(bt, b1, "threads={t}");
+        }
     }
 
     #[test]

@@ -172,6 +172,26 @@ impl SimConfig {
                 }
             }
         }
+        // Packed (ragged) verification entries: keyed on the
+        // total-packed-token bucket ladder instead of the (batch, tree)
+        // cross-product.  Lowered once at the largest batch bucket — the
+        // KV tensor is per-lane-indexed, so one kv spec covers any live
+        // lane subset.
+        let b_max =
+            self.batch_buckets.iter().copied().max().unwrap_or(1);
+        let t_max = self.tree_buckets.iter().copied().max().unwrap_or(1);
+        let t_min = self.tree_buckets.iter().copied().min().unwrap_or(1);
+        let kv_max =
+            tensor("kv", DType::F32, vec![l, 2, b_max, b_kv, h, dh]);
+        for &n in &self.early_layers {
+            let ladder =
+                crate::manifest::packed_bucket_ladder(t_min, b_max * t_max);
+            for &p in &ladder {
+                artifacts.extend(
+                    self.verify_pair_packed(n, b_max, p, &kv_max),
+                );
+            }
+        }
         let default_prune_layer =
             self.early_layers.get(self.early_layers.len() / 2).copied()
                 .unwrap_or(1);
@@ -224,6 +244,56 @@ impl SimConfig {
                 tensor("hidden", DType::F32, vec![b, t, self.d_model]),
                 tree_pos,
                 tree_mask,
+                seq_len,
+                kv.clone(),
+            ],
+            vec!["logits", "medusa", "tree_kv"],
+        );
+        [early, late]
+    }
+
+    /// Packed-entry pair for one (prune layer, packed bucket) rung: every
+    /// live tree node of every lane flattened into one `[P]` token axis.
+    /// The ancestor mask is a per-row lane-local u64 bitset carried as
+    /// two i32 halves (block-diagonal by construction — a row can only
+    /// name ancestors inside its own lane's span), and `row_lane` maps
+    /// each packed row to its KV lane (-1 = bucket padding).
+    fn verify_pair_packed(
+        &self,
+        n: usize,
+        b: usize,
+        p: usize,
+        kv: &TensorMeta,
+    ) -> [ArtifactMeta; 2] {
+        let tree_pos = tensor("tree_pos", DType::I32, vec![p]);
+        let tree_mask = tensor("tree_mask", DType::I32, vec![p, 2]);
+        let row_lane = tensor("row_lane", DType::I32, vec![p]);
+        let seq_len = tensor("seq_len", DType::I32, vec![b]);
+        let early = self.art(
+            Entry::VerifyEarlyPacked,
+            Some(n),
+            b,
+            Some(p),
+            vec![
+                tensor("tree_tok", DType::I32, vec![p]),
+                tree_pos.clone(),
+                tree_mask.clone(),
+                row_lane.clone(),
+                seq_len.clone(),
+                kv.clone(),
+            ],
+            vec!["hidden", "early_logits", "tree_kv"],
+        );
+        let late = self.art(
+            Entry::VerifyLatePacked,
+            Some(n),
+            b,
+            Some(p),
+            vec![
+                tensor("hidden", DType::F32, vec![p, self.d_model]),
+                tree_pos,
+                tree_mask,
+                row_lane,
                 seq_len,
                 kv.clone(),
             ],
@@ -431,6 +501,12 @@ impl Sim {
             }
             Entry::VerifyLate => {
                 self.verify_late_into(meta, model, inputs, outs)
+            }
+            Entry::VerifyEarlyPacked => {
+                self.verify_early_packed_into(meta, model, inputs, outs)
+            }
+            Entry::VerifyLatePacked => {
+                self.verify_late_packed_into(meta, model, inputs, outs)
             }
         }
     }
@@ -658,6 +734,162 @@ impl Sim {
         Ok(())
     }
 
+    /// Fold one packed row's ancestor chain into `ctx`.  The packed mask
+    /// carries a lane-local u64 ancestor bitset (self-inclusive) as two
+    /// i32 halves; set bits are lane-local node indices, mapped to global
+    /// rows through the span's start and then ordered by position —
+    /// exactly the ancestor set the dense padded mask encodes, so the
+    /// resulting context (and therefore every logit byte) is identical.
+    fn fold_packed_path(
+        ctx: &mut Ctx,
+        anc: &mut Vec<usize>,
+        tm: &[i32],
+        tp: &[i32],
+        sp: &pool::Span,
+        j: usize,
+        node_tok: impl Fn(usize) -> u32,
+    ) {
+        let g = sp.start + j;
+        let lo = tm[g * 2] as u32 as u64;
+        let hi = tm[g * 2 + 1] as u32 as u64;
+        let mut bits = lo | (hi << 32);
+        anc.clear();
+        while bits != 0 {
+            anc.push(sp.start + bits.trailing_zeros() as usize);
+            bits &= bits - 1;
+        }
+        anc.sort_unstable_by_key(|&gi| tp[gi]);
+        for &gi in anc.iter() {
+            ctx.push(node_tok(gi));
+        }
+    }
+
+    fn verify_early_packed_into(
+        &self,
+        meta: &ArtifactMeta,
+        model: &ModelMeta,
+        inputs: &[&HostTensor],
+        outs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
+        let p = match meta.tree {
+            Some(p) => p,
+            None => bail!("{}: packed verify without token bucket", meta.key),
+        };
+        let n = meta.n_layer.unwrap_or(1);
+        let (v, d, s) = (model.vocab, model.d_model, model.max_seq);
+        let col = model.n_heads * model.head_dim;
+        let tt = inputs[0].as_i32();
+        let tp = inputs[1].as_i32();
+        let tm = inputs[2].as_i32();
+        let rl = inputs[3].as_i32();
+        let lens = inputs[4].as_i32();
+        let kv = inputs[5].as_f32();
+        let spans = packed_spans(rl);
+        let (o_hidden, o_early, o_kv) = out3(outs);
+        let early = o_early.reset_f32(&[p, v]);
+        pool::for_each_span(self.threads, &spans, v, early, |sp, rows| {
+            let len = lens[sp.lane].max(0) as usize;
+            let prefix = self.kv_prefix_ctx(kv, s, col, sp.lane, len, v);
+            let mut anc: Vec<usize> = Vec::with_capacity(sp.len);
+            for (j, row) in rows.chunks_mut(v).enumerate() {
+                let mut ctx = prefix;
+                Self::fold_packed_path(&mut ctx, &mut anc, tm, tp, sp, j,
+                                       |g| tt[g] as u32);
+                self.row_into(ctx, row);
+            }
+        });
+        let hidden = o_hidden.reset_f32(&[p, d]);
+        let tree_kv = o_kv
+            .reset_f32(&[n, 2, 1, p, model.n_heads, model.head_dim]);
+        for sp in &spans {
+            for j in 0..sp.len {
+                let g = sp.start + j;
+                hidden[g * d] = tt[g] as f32;
+                for li in 0..n {
+                    for c in 0..2 {
+                        tree_kv[((li * 2 + c) * p + g) * col] = tt[g] as f32;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn verify_late_packed_into(
+        &self,
+        meta: &ArtifactMeta,
+        model: &ModelMeta,
+        inputs: &[&HostTensor],
+        outs: &mut Vec<HostTensor>,
+    ) -> Result<()> {
+        let p = match meta.tree {
+            Some(p) => p,
+            None => bail!("{}: packed verify without token bucket", meta.key),
+        };
+        let n = meta.n_layer.unwrap_or(1);
+        let rest = model.n_layers.saturating_sub(n).max(1);
+        let (v, d, s, m) =
+            (model.vocab, model.d_model, model.max_seq, model.n_medusa);
+        let col = model.n_heads * model.head_dim;
+        let hid = inputs[0].as_f32();
+        let tp = inputs[1].as_i32();
+        let tm = inputs[2].as_i32();
+        let rl = inputs[3].as_i32();
+        let lens = inputs[4].as_i32();
+        let kv = inputs[5].as_f32();
+        let spans = packed_spans(rl);
+        let node_token = |g: usize| -> u32 {
+            let x = hid[g * d];
+            (x.round().max(0.0) as usize).min(v - 1) as u32
+        };
+        let (o_logits, o_medusa, o_kv) = out3(outs);
+        let logits = o_logits.reset_f32(&[p, v]);
+        let medusa = o_medusa.reset_f32(&[p, m, v]);
+        pool::for_each_span2(
+            self.threads,
+            &spans,
+            v,
+            logits,
+            m * v,
+            medusa,
+            |sp, lband, mband| {
+                let len = lens[sp.lane].max(0) as usize;
+                let prefix = self.kv_prefix_ctx(kv, s, col, sp.lane, len, v);
+                let mut anc: Vec<usize> = Vec::with_capacity(sp.len);
+                for j in 0..sp.len {
+                    let mut ctx = prefix;
+                    Self::fold_packed_path(&mut ctx, &mut anc, tm, tp, sp, j,
+                                           node_token);
+                    let mrow = if m == 0 {
+                        &mut mband[0..0]
+                    } else {
+                        &mut mband[j * m * v..(j + 1) * m * v]
+                    };
+                    self.base_and_medusa_into(
+                        ctx,
+                        v,
+                        &mut lband[j * v..(j + 1) * v],
+                        mrow,
+                    );
+                }
+            },
+        );
+        let tree_kv = o_kv
+            .reset_f32(&[rest, 2, 1, p, model.n_heads, model.head_dim]);
+        for sp in &spans {
+            for j in 0..sp.len {
+                let g = sp.start + j;
+                let tok = node_token(g) as f32;
+                for li in 0..rest {
+                    for c in 0..2 {
+                        tree_kv[((li * 2 + c) * p + g) * col] = tok;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Allocating row oracle — kept for tests that poke the oracle
     /// directly with slice contexts.
     #[cfg(test)]
@@ -687,6 +919,32 @@ impl Sim {
         self.base_and_medusa_into(c, vocab, &mut base, &mut medusa);
         (base, medusa)
     }
+}
+
+/// Derive the contiguous per-lane spans of a packed batch from its
+/// `row_lane` input: rows run lane-major from row 0; the first `-1`
+/// starts the bucket-padding tail.  The small per-call `Vec` is fine
+/// here — the packed entries fan work across spans, not rows, and
+/// `sim.rs` is not on the engine's zero-alloc hot path (the engine-side
+/// packing helpers in `engine/pack.rs` are the allocation-free ones).
+fn packed_spans(row_lane: &[i32]) -> Vec<pool::Span> {
+    let mut spans: Vec<pool::Span> = Vec::new();
+    for (g, &l) in row_lane.iter().enumerate() {
+        if l < 0 {
+            break;
+        }
+        match spans.last_mut() {
+            Some(sp) if sp.lane == l as usize && sp.start + sp.len == g => {
+                sp.len += 1;
+            }
+            _ => spans.push(pool::Span {
+                lane: l as usize,
+                start: g,
+                len: 1,
+            }),
+        }
+    }
+    spans
 }
 
 /// Ensure `outs` holds exactly three reusable tensors and hand back
@@ -914,6 +1172,141 @@ mod tests {
             .unwrap();
         for (x, y) in la.iter().zip(&lb) {
             assert_eq!(x.as_f32(), y.as_f32());
+        }
+    }
+
+    #[test]
+    fn packed_verify_bit_equals_padded_at_every_early_layer() {
+        // A ragged two-lane batch (3 + 2 live chain nodes) run through the
+        // padded (b=2, t=4) and packed (bucket_of(5) rows) entries must
+        // produce bit-identical logits and medusa rows for every live
+        // node, at every valid prune layer.
+        let cfg = SimConfig::default();
+        let m = cfg.manifest();
+        let model = m.model(&cfg.size).unwrap().clone();
+        let sim = Sim { threads: 3, ..Sim::of(&cfg) };
+        let (v, mh) = (model.vocab, model.n_medusa);
+        let (s, col) = (model.max_seq, model.n_heads * model.head_dim);
+        let b_max = cfg.batch_buckets.iter().copied().max().unwrap();
+        let t_min = cfg.tree_buckets.iter().copied().min().unwrap();
+        let t_max = cfg.tree_buckets.iter().copied().max().unwrap();
+        let live = [3usize, 2];
+        let total: usize = live.iter().sum();
+        let (b, t) = (2usize, 4usize);
+        // One KV buffer serves both paths: the oracle reads only the
+        // layer-0/key block, whose per-lane stride (lane * S * col) is
+        // independent of the tensor's batch dimension.
+        let mut kvbuf = vec![0f32; model.n_layers * 2 * b_max * s * col];
+        for lane in 0..b {
+            for pos in 0..3 {
+                kvbuf[(lane * s + pos) * col] = (110 + lane * 7 + pos) as f32;
+            }
+        }
+        let kv = HostTensor::f32(
+            vec![model.n_layers, 2, b_max, s, model.n_heads, model.head_dim],
+            kvbuf,
+        );
+        let ladder =
+            crate::manifest::packed_bucket_ladder(t_min, b_max * t_max);
+        let p = crate::manifest::bucket_for(total, &ladder);
+        let mut tok_p = vec![0i32; b * t];
+        let mut pos_p = vec![0i32; b * t];
+        let mut mask_p = vec![crate::runtime::literal::NEG_INF; b * t * t];
+        let mut tok_k = vec![0i32; p];
+        let mut pos_k = vec![0i32; p];
+        let mut mask_k = vec![0i32; p * 2];
+        let mut lane_k = vec![-1i32; p];
+        let mut g = 0usize;
+        for lane in 0..b {
+            for j in 0..t {
+                tok_p[lane * t + j] = (40 + lane * t + j) as i32;
+                pos_p[lane * t + j] = (3 + j) as i32;
+                if j < live[lane] {
+                    for i in 0..=j {
+                        mask_p[(lane * t + j) * t + i] = 0.0;
+                    }
+                } else {
+                    // Bucket padding: self-attending, as TreeMask::build
+                    // emits for rows past the live size.
+                    mask_p[(lane * t + j) * t + j] = 0.0;
+                }
+            }
+            for j in 0..live[lane] {
+                tok_k[g] = tok_p[lane * t + j];
+                pos_k[g] = pos_p[lane * t + j];
+                let bits: u64 = (1u64 << (j + 1)) - 1;
+                mask_k[g * 2] = (bits & 0xffff_ffff) as u32 as i32;
+                mask_k[g * 2 + 1] = (bits >> 32) as u32 as i32;
+                lane_k[g] = lane as i32;
+                g += 1;
+            }
+        }
+        let tt = HostTensor::i32(vec![b, t], tok_p);
+        let tpp = HostTensor::i32(vec![b, t], pos_p);
+        let tmp = HostTensor::f32(vec![b, t, t], mask_p);
+        let sl = HostTensor::i32(vec![b], vec![3; b]);
+        let ktt = HostTensor::i32(vec![p], tok_k);
+        let ktp = HostTensor::i32(vec![p], pos_k);
+        let ktm = HostTensor::i32(vec![p, 2], mask_k);
+        let krl = HostTensor::i32(vec![p], lane_k);
+        let mut packed_lens = vec![0i32; b_max];
+        packed_lens[..b].fill(3);
+        let ksl = HostTensor::i32(vec![b_max], packed_lens);
+        for &n in &cfg.early_layers {
+            let ve = m
+                .find(&cfg.size, Entry::VerifyEarly, Some(n), b, Some(t))
+                .unwrap();
+            let pe = m
+                .find(&cfg.size, Entry::VerifyEarlyPacked, Some(n), b_max,
+                      Some(p))
+                .unwrap();
+            let pad = sim
+                .execute(ve, &model, &[&tt, &tpp, &tmp, &sl, &kv])
+                .unwrap();
+            let pk = sim
+                .execute(pe, &model, &[&ktt, &ktp, &ktm, &krl, &ksl, &kv])
+                .unwrap();
+            let (pad_e, pk_e) = (pad[1].as_f32(), pk[1].as_f32());
+            let mut g = 0usize;
+            for lane in 0..b {
+                for j in 0..live[lane] {
+                    let r = lane * t + j;
+                    assert_eq!(
+                        &pad_e[r * v..(r + 1) * v],
+                        &pk_e[g * v..(g + 1) * v],
+                        "early logits diverge: n={n} lane={lane} node={j}"
+                    );
+                    g += 1;
+                }
+            }
+            let vl = m
+                .find(&cfg.size, Entry::VerifyLate, Some(n), b, Some(t))
+                .unwrap();
+            let pl = m
+                .find(&cfg.size, Entry::VerifyLatePacked, Some(n), b_max,
+                      Some(p))
+                .unwrap();
+            let lpad = sim
+                .execute(vl, &model, &[&pad[0], &tpp, &tmp, &sl, &kv])
+                .unwrap();
+            let lpk = sim
+                .execute(pl, &model, &[&pk[0], &ktp, &ktm, &krl, &ksl, &kv])
+                .unwrap();
+            let (a, z) = (lpad[0].as_f32(), lpk[0].as_f32());
+            let (am, zm) = (lpad[1].as_f32(), lpk[1].as_f32());
+            let mut g = 0usize;
+            for lane in 0..b {
+                for j in 0..live[lane] {
+                    let r = lane * t + j;
+                    assert_eq!(&a[r * v..(r + 1) * v],
+                               &z[g * v..(g + 1) * v],
+                               "late logits diverge: n={n} lane={lane}");
+                    assert_eq!(&am[r * mh * v..(r + 1) * mh * v],
+                               &zm[g * mh * v..(g + 1) * mh * v],
+                               "medusa rows diverge: n={n} lane={lane}");
+                    g += 1;
+                }
+            }
         }
     }
 

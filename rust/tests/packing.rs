@@ -1,0 +1,248 @@
+//! Token-packed ragged verification (DESIGN.md § Packed verification):
+//! the packed path is a pure cost optimization, so greedy output must be
+//! byte-identical to the padded grid across every engine kind, decode
+//! mode, and budget mode — the fifth byte-identity invariant
+//! (CONTRIBUTING.md) — while computing strictly fewer verify rows on a
+//! skewed batch.  Packed-vs-padded logits bit-equality at every early
+//! layer is unit-tested next to the sim kernels in `runtime/sim.rs`;
+//! the packing-layout property tests here drive the offset-table and
+//! block-diagonal contracts with arbitrary live-size vectors.
+
+use propd::engine::pack::{
+    lane_offsets_into, pack_packed_masks_into, pack_packed_tokens_into,
+    pack_row_lanes_into,
+};
+use propd::engine::{DecodeMode, Engine, EngineConfig, EngineKind};
+use propd::estimator::{BudgetMode, Packing};
+use propd::runtime::{HostTensor, Runtime, SimConfig};
+use propd::tree::{TokenTree, TreeMask};
+
+/// Skewed-acceptance sim: prompts starting with an uppercase byte get
+/// deterministic-junk medusa heads; lowercase prompts keep the oracle's
+/// near-perfect heads.  Greedy text is unaffected either way, but the
+/// planner hands the lanes very different tree budgets — the workload
+/// packing exists for.
+fn skewed_sim() -> SimConfig {
+    SimConfig { medusa_flaky_below: 97, ..Default::default() }
+}
+
+const HOT_PROMPT: &str = "user: Explain how the batch engine balances \
+                          decode throughput.\nassistant:";
+const COLD_PROMPTS: [&str; 3] = [
+    "User: FIRST straggler with junk speculation.\nassistant:",
+    "User: SECOND straggler with junk speculation.\nassistant:",
+    "User: THIRD straggler with junk speculation.\nassistant:",
+];
+
+fn skewed_requests() -> Vec<(String, usize)> {
+    let mut reqs = vec![(HOT_PROMPT.to_string(), 48)];
+    for p in COLD_PROMPTS {
+        reqs.push((p.to_string(), 48));
+    }
+    reqs
+}
+
+fn decode_all(
+    rt: &Runtime,
+    mut cfg: EngineConfig,
+    reqs: &[(String, usize)],
+) -> Vec<Vec<u32>> {
+    cfg.max_batch = reqs.len().max(1);
+    let mut engine = Engine::new(rt, cfg).expect("engine");
+    for (p, m) in reqs {
+        engine.submit(p, *m);
+    }
+    let mut done = engine.run_to_completion().expect("run");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.tokens).collect()
+}
+
+/// The fifth byte-identity invariant: `planner.packing = packed` decodes
+/// the exact same greedy tokens as the padded grid for every engine kind
+/// × decode mode × budget mode, on the skewed workload where the packed
+/// layout genuinely differs (heterogeneous live tree sizes per lane).
+#[test]
+fn packed_is_byte_identical_across_kinds_modes_and_budgets() {
+    let sim = skewed_sim();
+    let rt = Runtime::sim(&sim);
+    let reqs = skewed_requests();
+    for kind in [
+        EngineKind::Autoregressive,
+        EngineKind::Bpd,
+        EngineKind::Medusa,
+        EngineKind::ProPD,
+    ] {
+        for budget in [BudgetMode::Uniform, BudgetMode::PerLane] {
+            for mode in [DecodeMode::Auto, DecodeMode::Spec, DecodeMode::Ar] {
+                let mut cfg = EngineConfig::new(&sim.size, kind);
+                cfg.planner.budget_mode = budget;
+                cfg.decode_mode = mode;
+                // Fast adaptation so the budgets skew well within a
+                // 48-token request.
+                cfg.accept_alpha = 0.3;
+                let mut padded = cfg.clone();
+                padded.planner.packing = Packing::Padded;
+                let reference = decode_all(&rt, padded, &reqs);
+                assert!(reference.iter().all(|t| !t.is_empty()));
+                let mut packed = cfg;
+                packed.planner.packing = Packing::Packed;
+                let out = decode_all(&rt, packed, &reqs);
+                assert_eq!(
+                    out,
+                    reference,
+                    "{} budget={} decode_mode={} diverged packed vs padded",
+                    kind.as_str(),
+                    budget.as_str(),
+                    mode.as_str()
+                );
+            }
+        }
+    }
+}
+
+fn run_skewed(packing: Packing) -> std::collections::BTreeMap<String, f64> {
+    let sim = skewed_sim();
+    let rt = Runtime::sim(&sim);
+    let mut cfg = EngineConfig::new(&sim.size, EngineKind::ProPD);
+    cfg.max_batch = 4;
+    cfg.accept_alpha = 0.3;
+    cfg.decode_mode = DecodeMode::Spec; // keep all lanes tree-verifying
+    cfg.planner.packing = packing;
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    engine.submit(HOT_PROMPT, 56);
+    for p in COLD_PROMPTS {
+        engine.submit(p, 56);
+    }
+    engine.run_to_completion().expect("run");
+    engine.metrics.report()
+}
+
+/// The economics of packing, deterministically: both modes make
+/// identical tree decisions (live rows match exactly), but the padded
+/// grid pays `batch_bucket × tree_bucket` rows per stage while the
+/// packed path pays one total-token bucket — at least the 1.5× the
+/// bench gate enforces on this same fixture, with strictly better
+/// row utilization.
+#[test]
+fn packed_computes_fewer_verify_rows_on_skewed_batches() {
+    let padded = run_skewed(Packing::Padded);
+    let packed = run_skewed(Packing::Packed);
+    // Same decisions, same completed output, same live verify work.
+    assert_eq!(padded["tokens_generated"], packed["tokens_generated"]);
+    assert_eq!(padded["requests_completed"], packed["requests_completed"]);
+    assert_eq!(padded["verify_rows_live"], packed["verify_rows_live"]);
+    assert!(packed["verify_rows_live"] > 0.0);
+    // The packed path actually engaged and paid for fewer rows.
+    assert!(
+        padded["verify_rows_computed"]
+            >= 1.5 * packed["verify_rows_computed"],
+        "padded computed {} rows, packed {} — ratio below 1.5",
+        padded["verify_rows_computed"],
+        packed["verify_rows_computed"]
+    );
+    assert!(packed["verify_rows_util"] > padded["verify_rows_util"]);
+    assert!(packed["verify_rows_util"] <= 1.0 + 1e-12);
+}
+
+/// Tiny deterministic PRNG for the layout property tests (no external
+/// crates; xorshift is plenty for coverage).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// Offset-table round-trip: packing arbitrary live-size vectors through
+/// `lane_offsets_into` and reading each lane back out of the flat token
+/// axis is the identity, and the `row_lane` table names exactly the rows
+/// of each lane's span (padding rows -1).
+#[test]
+fn offset_table_round_trips_arbitrary_live_sizes() {
+    let mut rng = Rng(0x9e3779b97f4a7c15);
+    let mut offsets = Vec::new();
+    for _ in 0..200 {
+        let lanes = 1 + rng.below(6) as usize;
+        let mut trees = Vec::new();
+        for _ in 0..lanes {
+            let len = 1 + rng.below(8) as usize;
+            let toks: Vec<u32> =
+                (0..len).map(|_| rng.below(50_000) as u32).collect();
+            trees.push(TokenTree::chain(&toks));
+        }
+        let sizes: Vec<usize> = trees.iter().map(|t| t.len()).collect();
+        let total = lane_offsets_into(&sizes, &mut offsets);
+        assert_eq!(total, sizes.iter().sum::<usize>());
+        let p_bucket = total + rng.below(5) as usize; // arbitrary padding
+        let tree_refs: Vec<&TokenTree> = trees.iter().collect();
+        let mut tok = HostTensor::i32(vec![0], Vec::new());
+        pack_packed_tokens_into(&tree_refs, p_bucket, &mut tok);
+        let mut rl = HostTensor::i32(vec![0], Vec::new());
+        pack_row_lanes_into(&sizes, p_bucket, &mut rl);
+        // Unpack: each lane's span reproduces its tree's node tokens.
+        for (lane, tree) in trees.iter().enumerate() {
+            for j in 0..tree.len() {
+                let g = offsets[lane] + j;
+                assert_eq!(tok.as_i32()[g], tree.node(j).token as i32);
+                assert_eq!(rl.as_i32()[g], lane as i32);
+            }
+        }
+        for g in total..p_bucket {
+            assert_eq!(rl.as_i32()[g], -1);
+        }
+    }
+}
+
+/// Block-diagonal isolation: every packed mask row's ancestor bitset
+/// stays inside its own lane's local span — after offsetting, no row can
+/// attend to another lane's rows, for arbitrary per-lane live sizes.
+#[test]
+fn packed_masks_never_cross_lane_boundaries() {
+    let mut rng = Rng(0xdeadbeefcafef00d);
+    for _ in 0..200 {
+        let lanes = 1 + rng.below(6) as usize;
+        let mut trees = Vec::new();
+        for _ in 0..lanes {
+            let len = 1 + rng.below(8) as usize;
+            let toks: Vec<u32> =
+                (0..len).map(|_| rng.below(50_000) as u32).collect();
+            trees.push(TokenTree::chain(&toks));
+        }
+        let masks: Vec<TreeMask> =
+            trees.iter().map(|t| TreeMask::build(t, t.len())).collect();
+        let sizes: Vec<usize> = masks.iter().map(|m| m.live()).collect();
+        let total: usize = sizes.iter().sum();
+        let mask_refs: Vec<&TreeMask> = masks.iter().collect();
+        let mut tm = HostTensor::i32(vec![0], Vec::new());
+        pack_packed_masks_into(&mask_refs, total + 2, &mut tm);
+        let buf = tm.as_i32();
+        let mut g = 0usize;
+        for &live in &sizes {
+            for row in 0..live {
+                let lo = buf[g * 2] as u32 as u64;
+                let hi = buf[g * 2 + 1] as u32 as u64;
+                let bits = lo | (hi << 32);
+                // Self-inclusive, ancestors only, lane-local.
+                assert!(bits & (1 << row) != 0, "row {row} not self-visible");
+                assert_eq!(
+                    bits >> live,
+                    0,
+                    "row {row} names bits past its lane's {live} live rows"
+                );
+                g += 1;
+            }
+        }
+        // Bucket-padding rows carry empty bitsets.
+        assert_eq!(&buf[g * 2..], &[0, 0, 0, 0]);
+    }
+}
